@@ -1,0 +1,14 @@
+//! Convex convergence demo — Theorems 1–3 in action on the quadratic suite
+//! with the exact local norm test (Algorithm A.1).
+//!
+//! Run: `cargo run --release --example convex_convergence -- [--rounds 600]`
+
+use adaloco::exp::theory;
+use adaloco::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rounds: u64 = args.parse_or("rounds", 600).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("{}", theory::theory_table(rounds));
+    Ok(())
+}

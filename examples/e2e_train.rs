@@ -1,0 +1,106 @@
+//! End-to-end driver (DESIGN.md deliverable): prove all three layers compose.
+//!
+//! Trains the `tinylm` decoder-only transformer — JAX model (L2) with Pallas
+//! fused-linear kernels (L1), AOT-lowered to HLO, executed by the Rust
+//! coordinator (L3) through the PJRT CPU client — with 4 local-AdamW workers,
+//! H-step model averaging, and the paper's adaptive norm-test batch schedule
+//! (Algorithm A.2, with the sync-time statistic computed by the Pallas
+//! `norm_stat` kernel). Logs the loss curve and writes CSVs to results/e2e/.
+//!
+//! Run:  make artifacts && cargo run --release --example e2e_train
+//! Flags: --steps <local steps budget, default 300> --h 8 --eta 0.8
+//!
+//! Scale note: the paper's MicroLlama-300M is replaced by a 469k-parameter
+//! transformer of identical architecture — interpret-mode Pallas on a CPU PJRT
+//! runs ~10^4x slower than the paper's A40s, so parameter count is scaled to
+//! keep the run in CI-friendly time. EXPERIMENTS.md records this run.
+
+use adaloco::config::{BatchStrategy, DataSpec, ModelSpec, RunConfig, SyncSpec};
+use adaloco::exp::run_config;
+use adaloco::optim::OptimKind;
+use adaloco::util::cli::Args;
+use adaloco::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let steps: u64 = args.parse_or("steps", 300).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let h: u32 = args.parse_or("h", 8).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let eta: f64 = args.parse_or("eta", 0.8).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let model = args.str_or("model", "tinylm");
+
+    // Budget in sequences: `steps` local steps at the initial batch size; the
+    // adaptive schedule grows batches, so actual steps may be fewer.
+    let b0 = 8u64;
+    let m = 4u64;
+    let total_samples = steps * m * b0;
+
+    let mut cfg = RunConfig::default();
+    cfg.label = format!("e2e_{model}");
+    cfg.model = ModelSpec::Artifact { name: model.clone() };
+    cfg.data = DataSpec::MarkovZipf {
+        vocab: if model == "lm_m" { 2048 } else { 512 },
+        seq_len: if model == "lm_m" { 128 } else { 64 },
+        determinism: 0.7,
+        eval_size: if model == "lm_m" { 8 } else { 64 },
+    };
+    cfg.optim_kind = OptimKind::AdamW;
+    cfg.weight_decay = 0.1;
+    cfg.grad_clip = Some(1.0);
+    cfg.lr_peak = 0.002;
+    cfg.lr_base = 0.0002;
+    cfg.warmup_frac = 0.05;
+    cfg.m_workers = m as usize;
+    cfg.total_samples = total_samples;
+    cfg.eval_every_samples = (total_samples / 25).max(1);
+    cfg.b_max_local = 64;
+    cfg.sync = SyncSpec::FixedH { h };
+    cfg.strategy = BatchStrategy::NormTest { eta, b0, b_max: 64 };
+
+    println!("=== end-to-end: L1 Pallas + L2 JAX + L3 Rust/PJRT ===");
+    println!(
+        "model={model} workers={m} H={h} eta={eta} budget={total_samples} sequences"
+    );
+    println!("(python is NOT running: executing AOT artifacts via PJRT)\n");
+
+    let t0 = std::time::Instant::now();
+    let rec = run_config(&cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "{:>9} {:>7} {:>8} {:>11} {:>11} {:>9}",
+        "samples", "step", "b_local", "train loss", "val loss", "tok acc%"
+    );
+    for p in &rec.points {
+        println!(
+            "{:>9} {:>7} {:>8} {:>11.4} {:>11.4} {:>9.2}",
+            p.samples,
+            p.step,
+            p.b_local,
+            p.train_loss,
+            p.val_loss,
+            p.val_acc * 100.0
+        );
+    }
+    let first = rec.points.first().map(|p| p.val_loss).unwrap_or(f64::NAN);
+    let last = rec.points.last().map(|p| p.val_loss).unwrap_or(f64::NAN);
+    println!("\n=== e2e summary ===");
+    println!("local steps          : {}", rec.total_steps);
+    println!("communication rounds : {}", rec.total_rounds);
+    println!("avg local batch      : {:.1}", rec.avg_local_batch);
+    println!("val loss             : {first:.4} -> {last:.4}");
+    println!("wall-clock           : {}", stats::fmt_duration(wall));
+    println!(
+        "all-reduces          : {} ({} moved)",
+        rec.comm.allreduce_calls,
+        stats::fmt_bytes(rec.comm.bytes_moved)
+    );
+    rec.write_to(std::path::Path::new("results/e2e"))?;
+    println!("series written to results/e2e/");
+    anyhow::ensure!(!rec.diverged, "run diverged");
+    anyhow::ensure!(
+        last < first,
+        "loss did not decrease ({first:.4} -> {last:.4})"
+    );
+    println!("OK: loss decreased; all three layers compose.");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: train a small classifier with 4 local-SGD workers and the
+//! paper's adaptive norm-test batch schedule, entirely through the public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use adaloco::config::{BatchStrategy, DataSpec, ModelSpec, RunConfig, SyncSpec};
+use adaloco::exp::run_config;
+use adaloco::optim::OptimKind;
+use adaloco::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Describe the run: model, data, optimizer, and the adaptive strategy.
+    let mut cfg = RunConfig::default();
+    cfg.label = "quickstart".into();
+    cfg.model = ModelSpec::Logistic { feat: 64, classes: 10, l2: 1e-4 };
+    cfg.data = DataSpec::GaussianMixture {
+        feat: 64,
+        classes: 10,
+        separation: 2.5,
+        noise: 1.2,
+        eval_size: 1024,
+    };
+    cfg.m_workers = 4; // the paper's M=4 testbed
+    cfg.sync = SyncSpec::FixedH { h: 16 }; // synchronize every 16 local steps
+    cfg.strategy = BatchStrategy::NormTest { eta: 0.8, b0: 32, b_max: 2048 };
+    cfg.b_max_local = 2048;
+    cfg.optim_kind = OptimKind::Shb;
+    cfg.lr_peak = 0.05;
+    cfg.lr_base = 0.005;
+    cfg.total_samples = 400_000;
+    cfg.eval_every_samples = 20_000;
+
+    // 2. Run it (native substrate; swap `model` for ModelSpec::Artifact to run
+    //    the JAX/Pallas artifacts through PJRT instead).
+    let rec = run_config(&cfg)?;
+
+    // 3. Inspect what the adaptive schedule did.
+    println!("\n=== quickstart results ===");
+    println!("global steps        : {}", rec.total_steps);
+    println!("communication rounds: {}", rec.total_rounds);
+    println!("samples processed   : {}", rec.total_samples);
+    println!("avg local batch     : {:.0}", rec.avg_local_batch);
+    println!("best val accuracy   : {:.2}%", rec.best_val_acc() * 100.0);
+    println!("simulated wall-clock: {}", stats::fmt_duration(rec.sim_time_s));
+    println!(
+        "communication       : {} all-reduces, {}",
+        rec.comm.allreduce_calls,
+        stats::fmt_bytes(rec.comm.bytes_moved)
+    );
+    println!("\nbatch-size trace (round, samples, b_local):");
+    let stride = (rec.batch_trace.len() / 12).max(1);
+    for (i, (r, s, b)) in rec.batch_trace.iter().enumerate() {
+        if i % stride == 0 {
+            println!("  round {r:>4}  samples {s:>8}  b={b}");
+        }
+    }
+    Ok(())
+}

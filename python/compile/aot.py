@@ -1,0 +1,149 @@
+"""AOT lowering: JAX (L2 + L1 Pallas) -> HLO text artifacts + meta.json manifest.
+
+Run once at build time (`make artifacts`); Python is never on the training path.
+
+Interchange is HLO *text*, not a serialized HloModuleProto: jax >= 0.5 emits protos
+with 64-bit instruction ids which the xla crate's XLA (xla_extension 0.5.1) rejects
+(`proto.id() <= INT_MAX`); `HloModuleProto::from_text_file` re-parses and reassigns
+ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Every lowered entry returns a tuple (lowered with return_tuple=True); the Rust
+runtime unpacks with Literal::to_tuple().
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--config all]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Number of workers the norm_stat artifact is lowered for; matches the paper's
+# 4-GPU testbed and the default L3 topology. Additional M values can be added to
+# EXTRA_NORM_STAT_M without touching the rust side (manifest-driven).
+DEFAULT_M = 4
+EXTRA_NORM_STAT_M: list[int] = []
+
+# ---------------------------------------------------------------------------
+# Model registry: one entry per experiment substrate (see DESIGN.md §4).
+# ---------------------------------------------------------------------------
+
+CONFIGS = {
+    # CIFAR-10 analogue classifier (Table 1 / Figures 1,3,4,5 PJRT substrate)
+    "mlp_s": M.MlpClassifierConfig(
+        name="mlp_s", input_dim=3072, hidden=(256, 128), num_classes=10,
+        micro_batch=32, eval_batch=256,
+    ),
+    # ImageNet analogue classifier (Table 8 / Figures 8-10): more classes, wider.
+    "mlp_l": M.MlpClassifierConfig(
+        name="mlp_l", input_dim=3072, hidden=(512, 256), num_classes=100,
+        micro_batch=32, eval_batch=256,
+    ),
+    # C4 analogue LM (Table 2 / Figures 2,6,7): MicroLlama scaled to the CPU testbed.
+    "tinylm": M.TransformerLMConfig(
+        name="tinylm", vocab=512, seq_len=64, d_model=128, n_layers=2,
+        n_heads=4, d_ff=384, micro_batch=8, eval_batch=16,
+    ),
+    # Larger LM for the end-to-end example (examples/e2e_train.rs).
+    "lm_m": M.TransformerLMConfig(
+        name="lm_m", vocab=2048, seq_len=128, d_model=256, n_layers=4,
+        n_heads=8, d_ff=768, micro_batch=4, eval_batch=8,
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def emit_config(cfg, out_dir: str, use_pallas: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    d = cfg.dim
+    pspec = jax.ShapeDtypeStruct((d,), jnp.float32)
+    entries = {}
+
+    def emit(name, fn, args):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = lower_entry(fn, args)
+        with open(path, "w") as f:
+            f.write(text)
+        entries[name] = os.path.basename(path)
+        print(f"  {cfg.name}/{name}: {len(text)} chars")
+
+    emit("init", M.build_init_fn(cfg), (jax.ShapeDtypeStruct((), jnp.uint32),))
+    xs, ys = cfg.example_batch(cfg.micro_batch)
+    emit("grad", M.build_grad_fn(cfg, use_pallas), (pspec, xs, ys))
+    xe, ye = cfg.example_batch(cfg.eval_batch)
+    emit("eval", M.build_eval_fn(cfg, use_pallas), (pspec, xe, ye))
+    for m in [DEFAULT_M, *EXTRA_NORM_STAT_M]:
+        emit(
+            f"norm_stat_m{m}",
+            M.build_norm_stat_fn(),
+            (jax.ShapeDtypeStruct((m, d), jnp.float32),),
+        )
+
+    meta = {
+        "name": cfg.name,
+        "kind": cfg.kind,
+        "dim": d,
+        "micro_batch": cfg.micro_batch,
+        "eval_batch": cfg.eval_batch,
+        "layout": [[n, list(s)] for n, s in cfg.layout()],
+        "entries": entries,
+        "norm_stat_workers": [DEFAULT_M, *EXTRA_NORM_STAT_M],
+        "use_pallas": use_pallas,
+    }
+    if cfg.kind == "classifier":
+        meta.update(
+            input_dim=cfg.input_dim, num_classes=cfg.num_classes,
+            x_dtype="f32", y_dtype="i32",
+        )
+    else:
+        meta.update(
+            vocab=cfg.vocab, seq_len=cfg.seq_len, x_dtype="i32", y_dtype="i32",
+        )
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--config", default="all", help="config name or 'all'")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower with pure-jnp matmuls (debug/ablation)")
+    args = ap.parse_args()
+
+    names = list(CONFIGS) if args.config == "all" else [args.config]
+    manifest = {"models": {}}
+    for name in names:
+        cfg = CONFIGS[name]
+        print(f"lowering {name} (dim={cfg.dim}) ...")
+        meta = emit_config(cfg, os.path.join(args.out_dir, name), not args.no_pallas)
+        manifest["models"][name] = {"dim": meta["dim"], "kind": meta["kind"]}
+    if args.config == "all":
+        with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

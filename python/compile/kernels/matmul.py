@@ -1,0 +1,170 @@
+"""Pallas tiled matmul / fused linear kernel (L1 hot path).
+
+TPU-shaped tiling (see DESIGN.md §Hardware-Adaptation): the (bm, bk, bn) blocks are
+staged HBM->VMEM by BlockSpec, the MXU sees dense `jnp.dot` tiles accumulated in f32
+in the output block across the k-grid, and the bias + activation epilogue is fused
+into the final k step. The CUDA analogue in the paper's stack is a WMMA matmul with
+an epilogue functor; here the HBM<->VMEM schedule that threadblocks+shared memory
+would express is carried by the BlockSpec index maps.
+
+Lowered with interpret=True: the CPU PJRT plugin cannot execute Mosaic custom calls,
+so the kernel is traced to plain HLO (same numerics, same block structure). Real-TPU
+VMEM footprint / MXU utilization estimates live in EXPERIMENTS.md §Perf.
+
+`linear_pallas` is differentiable via a custom VJP whose backward pass reuses the
+same Pallas matmul kernel (dx = dz @ w^T, dw = x^T @ dz), so the whole training step
+lowers through this kernel in the AOT artifact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default tile sizes: MXU-aligned 128 lanes; small problems shrink to the padded dim.
+DEFAULT_BM = 128
+DEFAULT_BK = 128
+DEFAULT_BN = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad2(a: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, y_ref, z_ref, *, nk: int, activation: str):
+    """Grid = (m/bm, n/bn, k/bk), k innermost (sequential accumulation).
+
+    z_ref accumulates x@w in f32; on the last k step the bias is added and the
+    activation epilogue writes y_ref. z (pre-activation) is kept as a second output
+    so the custom VJP can form act'(z) without recomputing the matmul.
+    """
+    kstep = pl.program_id(2)
+
+    @pl.when(kstep == 0)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    z_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kstep == nk - 1)
+    def _epilogue():
+        z = z_ref[...] + b_ref[...]
+        z_ref[...] = z
+        y_ref[...] = ref.apply_activation(z, activation)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "bm", "bk", "bn"))
+def linear_fwd_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    activation: str = "none",
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+):
+    """act(x @ w + b) via the Pallas kernel; returns (y, z) with z = x@w+b.
+
+    Shapes: x [m, k], w [k, n], b [n] -> y, z [m, n] (f32).
+    Arbitrary shapes are zero-padded up to tile multiples and sliced back.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {w.shape}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    bm_ = min(bm, _ceil_to(m, 8))
+    bk_ = min(bk, _ceil_to(k, 128))
+    bn_ = min(bn, _ceil_to(n, 128))
+    mp, kp, np_ = _ceil_to(m, bm_), _ceil_to(k, bk_), _ceil_to(n, bn_)
+
+    xp = _pad2(x.astype(jnp.float32), mp, kp)
+    wp = _pad2(w.astype(jnp.float32), kp, np_)
+    bp = jnp.pad(b.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
+
+    nk = kp // bk_
+    grid = (mp // bm_, np_ // bn_, nk)
+    kernel = functools.partial(_matmul_kernel, nk=nk, activation=activation)
+
+    y, z = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, s: (s, j)),
+            pl.BlockSpec((1, bn_), lambda i, j, s: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm_, bn_), lambda i, j, s: (i, j)),
+            pl.BlockSpec((bm_, bn_), lambda i, j, s: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        ],
+        interpret=True,
+    )(xp, wp, bp)
+    return y[:m, :n], z[:m, :n]
+
+
+def matmul_pallas(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain Pallas matmul (no bias / activation) — used by the VJP backward."""
+    n = w.shape[1]
+    y, _ = linear_fwd_pallas(x, w, jnp.zeros((n,), jnp.float32), activation="none")
+    return y
+
+
+def _act_grad_from_z(z: jnp.ndarray, activation: str) -> jnp.ndarray:
+    """d act(z) / dz, elementwise."""
+    if activation == "none":
+        return jnp.ones_like(z)
+    if activation == "relu":
+        return (z > 0).astype(z.dtype)
+    if activation == "silu":
+        s = jnp.reciprocal(1.0 + jnp.exp(-z))
+        return s * (1.0 + z * (1.0 - s))
+    if activation == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+        u = c * (z + 0.044715 * z**3)
+        t = jnp.tanh(u)
+        du = c * (1.0 + 3 * 0.044715 * z**2)
+        return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t**2) * du
+    raise ValueError(f"unknown activation: {activation}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear_pallas(x, w, b, activation="none"):
+    """Differentiable fused linear layer: act(x @ w + b) through the Pallas kernel."""
+    y, _ = linear_fwd_pallas(x, w, b, activation)
+    return y
+
+
+def _linear_fwd(x, w, b, activation):
+    y, z = linear_fwd_pallas(x, w, b, activation)
+    return y, (x, w, z)
+
+
+def _linear_bwd(activation, res, dy):
+    x, w, z = res
+    dz = dy * _act_grad_from_z(z, activation)
+    dx = matmul_pallas(dz, w.T)
+    dw = matmul_pallas(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+linear_pallas.defvjp(_linear_fwd, _linear_bwd)

@@ -1,0 +1,85 @@
+"""Pallas kernel for the norm-test statistic (Algorithm A.2 sync-time hot path).
+
+Given the stacked per-worker batch gradients G in [M, D] (already all-gathered by
+the L3 coordinator), one pass computes everything the approximate norm test of
+eq. (13)/(14) needs:
+
+    gbar         = (1/M) sum_m G[m]          -> [D]   (also the averaged gradient)
+    var_sum      = sum_m ||G[m] - gbar||^2   -> scalar
+    gbar_norm_sq = ||gbar||^2                -> scalar
+
+TPU shaping (DESIGN.md §Hardware-Adaptation): the D axis is streamed through VMEM in
+(M, bd) tiles — one HBM read of the gradients total; the worker axis M (typically
+4-64) stays resident. The two scalars are accumulated across the sequential grid in
+(1,1) output blocks, the idiom for cross-tile reductions on the TPU's sequential
+grid. This replaces what the paper's PyTorch implementation does with a chain of
+`torch.norm` calls after the all-gather (K extra HBM passes).
+
+interpret=True for CPU-PJRT executability; numerics identical to ref.norm_test_stats_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BD = 512
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _norm_test_kernel(g_ref, gbar_ref, var_ref, nsq_ref):
+    """Grid = (D/bd,). Sequential accumulation into the scalar blocks."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        var_ref[...] = jnp.zeros_like(var_ref)
+        nsq_ref[...] = jnp.zeros_like(nsq_ref)
+
+    g = g_ref[...]  # [M, bd] tile in VMEM
+    gbar = jnp.mean(g, axis=0)  # [bd]
+    diffs = g - gbar[None, :]
+    gbar_ref[...] = gbar.reshape(1, -1)
+    var_ref[...] += jnp.sum(diffs * diffs)
+    nsq_ref[...] += jnp.sum(gbar * gbar)
+
+
+@jax.jit
+def norm_test_stats_pallas(grads: jnp.ndarray):
+    """Norm-test statistics over stacked worker gradients.
+
+    Args:
+      grads: [M, D] float32.
+
+    Returns:
+      (gbar [D], var_sum scalar, gbar_norm_sq scalar) — see module docstring.
+    """
+    m, d = grads.shape
+    bd = min(DEFAULT_BD, _ceil_to(d, 128))
+    dp = _ceil_to(d, bd)
+    gp = jnp.pad(grads.astype(jnp.float32), ((0, 0), (0, dp - d)))
+
+    gbar, var_sum, nsq = pl.pallas_call(
+        _norm_test_kernel,
+        grid=(dp // bd,),
+        in_specs=[pl.BlockSpec((m, bd), lambda s: (0, s))],
+        out_specs=[
+            pl.BlockSpec((1, bd), lambda s: (0, s)),
+            pl.BlockSpec((1, 1), lambda s: (0, 0)),
+            pl.BlockSpec((1, 1), lambda s: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, dp), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(gp)
+    # Zero-padding contributes zero to both sums (padded gbar lanes are 0).
+    return gbar[0, :d], var_sum[0, 0], nsq[0, 0]

@@ -1,0 +1,57 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has an exact counterpart here; pytest +
+hypothesis assert allclose between the two over shape/dtype sweeps. The refs are
+also the autodiff (VJP) path inside model.py, while the Pallas kernels provide the
+forward hot path lowered into the same HLO artifact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain f32-accumulated matmul: [m, k] @ [k, n] -> [m, n]."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+def apply_activation(y: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation == "none":
+        return y
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "silu":
+        return y * jnp.reciprocal(1.0 + jnp.exp(-y))
+    if activation == "gelu":
+        # tanh approximation (matches the kernel epilogue exactly)
+        c = jnp.sqrt(2.0 / jnp.pi).astype(y.dtype)
+        return 0.5 * y * (1.0 + jnp.tanh(c * (y + 0.044715 * y**3)))
+    raise ValueError(f"unknown activation: {activation}")
+
+
+def linear_ref(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, activation: str = "none"
+) -> jnp.ndarray:
+    """Fused linear layer oracle: act(x @ w + b)."""
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b
+    return apply_activation(y, activation)
+
+
+def norm_test_stats_ref(grads: jnp.ndarray):
+    """Norm-test statistic oracle over stacked worker gradients.
+
+    Args:
+      grads: [M, D] — one flattened batch gradient per worker.
+
+    Returns:
+      (gbar [D], var_sum scalar, gbar_norm_sq scalar) where
+        gbar         = (1/M) sum_m g_m
+        var_sum      = sum_m ||g_m - gbar||^2  (caller divides by M-1, scales by b_k)
+        gbar_norm_sq = ||gbar||^2
+    """
+    gbar = jnp.mean(grads, axis=0)
+    diffs = grads - gbar[None, :]
+    var_sum = jnp.sum(diffs * diffs)
+    gbar_norm_sq = jnp.sum(gbar * gbar)
+    return gbar, var_sum, gbar_norm_sq

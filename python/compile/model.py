@@ -1,0 +1,299 @@
+"""L2: JAX models lowered AOT into HLO artifacts consumed by the Rust coordinator.
+
+Two model families mirror the paper's workloads (§6):
+
+  * `MlpClassifierConfig` — image classifier on flattened images; the ResNet-50/-101
+    CIFAR/ImageNet analogue for the synthetic-image substrate (DESIGN.md lists the
+    substitution).
+  * `TransformerLMConfig` — decoder-only LM (MicroLlama-300M analogue, scaled to the
+    CPU testbed) for the C4-analogue token stream.
+
+Interface contract with L3 (the part that makes the PJRT boundary trivial):
+parameters live in ONE flat f32[D] vector. Each model defines a `layout` (ordered
+(name, shape) segments); `unpack` slices the flat vector into weights inside the
+traced function, so `jax.grad` w.r.t. the flat vector directly yields the flat
+gradient the coordinator's optimizers / norm test consume.
+
+Exported entries (see aot.py):
+  init(seed u32)                  -> params f32[D]
+  grad(params, x, y)              -> (loss f32[], grad f32[D])        @ micro-batch
+  eval(params, x, y)              -> (loss_sum f32[], correct f32[])  @ eval batch
+  norm_stat(G f32[M,D])           -> (gbar f32[D], var_sum, gbar_norm_sq)
+
+Matmul hot paths go through the Pallas `linear_pallas` kernel (L1); everything else
+is plain jnp that XLA fuses around the kernel calls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import norm_test as nt
+from .kernels import ref
+from .kernels.matmul import linear_pallas
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter layout helpers
+# ---------------------------------------------------------------------------
+
+
+def layout_dim(layout: list[tuple[str, tuple[int, ...]]]) -> int:
+    d = 0
+    for _, shape in layout:
+        n = 1
+        for s in shape:
+            n *= s
+        d += n
+    return d
+
+
+def unpack(flat: jnp.ndarray, layout: list[tuple[str, tuple[int, ...]]]):
+    """Slice a flat f32[D] vector into a dict of named weights."""
+    params = {}
+    off = 0
+    for name, shape in layout:
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = flat[off : off + n].reshape(shape)
+        off += n
+    assert off == flat.shape[0], f"layout covers {off}, flat has {flat.shape[0]}"
+    return params
+
+
+def _linear(x, w, b, activation, use_pallas: bool):
+    if use_pallas:
+        return linear_pallas(x, w, b, activation)
+    return ref.linear_ref(x, w, b, activation)
+
+
+# ---------------------------------------------------------------------------
+# MLP classifier (ResNet-on-CIFAR/ImageNet analogue for the synthetic substrate)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpClassifierConfig:
+    name: str = "mlp_s"
+    input_dim: int = 3072          # 32*32*3 flattened image
+    hidden: tuple[int, ...] = (256, 128)
+    num_classes: int = 10
+    micro_batch: int = 32          # fixed micro-batch the grad artifact is lowered at
+    eval_batch: int = 256
+    activation: str = "relu"
+    init_scale: float = 1.0
+
+    kind: str = "classifier"
+
+    def layout(self):
+        dims = (self.input_dim,) + self.hidden + (self.num_classes,)
+        out = []
+        for i in range(len(dims) - 1):
+            out.append((f"w{i}", (dims[i], dims[i + 1])))
+            out.append((f"b{i}", (dims[i + 1],)))
+        return out
+
+    @property
+    def dim(self) -> int:
+        return layout_dim(self.layout())
+
+    def logits(self, flat, x, use_pallas=True):
+        p = unpack(flat, self.layout())
+        nl = len(self.hidden) + 1
+        h = x
+        for i in range(nl):
+            act = self.activation if i < nl - 1 else "none"
+            h = _linear(h, p[f"w{i}"], p[f"b{i}"], act, use_pallas)
+        return h
+
+    def loss(self, flat, x, y, use_pallas=True):
+        logits = self.logits(flat, x, use_pallas)
+        return _softmax_xent(logits, y)
+
+    def eval_stats(self, flat, x, y, use_pallas=True):
+        logits = self.logits(flat, x, use_pallas)
+        loss_sum = _softmax_xent(logits, y) * x.shape[0]
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return loss_sum, correct
+
+    def init(self, seed):
+        key = jax.random.PRNGKey(seed)
+        parts = []
+        for name, shape in self.layout():
+            key, sub = jax.random.split(key)
+            if name.startswith("w"):
+                scale = self.init_scale / jnp.sqrt(jnp.float32(shape[0]))
+                parts.append((jax.random.normal(sub, shape) * scale).reshape(-1))
+            else:
+                parts.append(jnp.zeros(shape).reshape(-1))
+        return jnp.concatenate(parts)
+
+    def example_batch(self, batch):
+        return (
+            jax.ShapeDtypeStruct((batch, self.input_dim), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+        )
+
+
+def _softmax_xent(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only transformer LM (MicroLlama analogue)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerLMConfig:
+    name: str = "tinylm"
+    vocab: int = 512
+    seq_len: int = 64
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 384
+    micro_batch: int = 8
+    eval_batch: int = 16
+
+    kind: str = "lm"
+
+    def layout(self):
+        d, f, v, s = self.d_model, self.d_ff, self.vocab, self.seq_len
+        out = [("embed", (v, d)), ("pos", (s, d))]
+        for i in range(self.n_layers):
+            out += [
+                (f"l{i}.ln1", (d,)),
+                (f"l{i}.wq", (d, d)),
+                (f"l{i}.wk", (d, d)),
+                (f"l{i}.wv", (d, d)),
+                (f"l{i}.wo", (d, d)),
+                (f"l{i}.ln2", (d,)),
+                (f"l{i}.w_up", (d, f)),
+                (f"l{i}.b_up", (f,)),
+                (f"l{i}.w_down", (f, d)),
+                (f"l{i}.b_down", (d,)),
+            ]
+        out += [("ln_f", (d,)), ("head", (d, v))]
+        return out
+
+    @property
+    def dim(self) -> int:
+        return layout_dim(self.layout())
+
+    def _rmsnorm(self, x, scale):
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+    def logits(self, flat, tokens, use_pallas=True):
+        """tokens: [B, S] int32 -> logits [B, S, V]."""
+        p = unpack(flat, self.layout())
+        b, s = tokens.shape
+        d, nh = self.d_model, self.n_heads
+        hd = d // nh
+        h = p["embed"][tokens] + p["pos"][None, :s, :]
+        mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+        neg = jnp.float32(-1e9)
+        for i in range(self.n_layers):
+            # --- attention block (jnp; the matmul-heavy FFN uses the Pallas kernel)
+            hn = self._rmsnorm(h, p[f"l{i}.ln1"])
+            x2 = hn.reshape(b * s, d)
+            q = _linear(x2, p[f"l{i}.wq"], jnp.zeros((d,), jnp.float32), "none", use_pallas)
+            k = _linear(x2, p[f"l{i}.wk"], jnp.zeros((d,), jnp.float32), "none", use_pallas)
+            v = _linear(x2, p[f"l{i}.wv"], jnp.zeros((d,), jnp.float32), "none", use_pallas)
+            q = q.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+            k = k.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+            v = v.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+            att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+            att = jnp.where(mask[None, None, :, :] > 0, att, neg)
+            att = jax.nn.softmax(att, axis=-1)
+            o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+            o = o.transpose(0, 2, 1, 3).reshape(b * s, d)
+            o = _linear(o, p[f"l{i}.wo"], jnp.zeros((d,), jnp.float32), "none", use_pallas)
+            h = h + o.reshape(b, s, d)
+            # --- FFN block through the fused Pallas linear
+            hn = self._rmsnorm(h, p[f"l{i}.ln2"]).reshape(b * s, d)
+            u = _linear(hn, p[f"l{i}.w_up"], p[f"l{i}.b_up"], "silu", use_pallas)
+            o = _linear(u, p[f"l{i}.w_down"], p[f"l{i}.b_down"], "none", use_pallas)
+            h = h + o.reshape(b, s, d)
+        h = self._rmsnorm(h, p["ln_f"]).reshape(b * s, d)
+        logits = _linear(
+            h, p["head"], jnp.zeros((self.vocab,), jnp.float32), "none", use_pallas
+        )
+        return logits.reshape(b, s, self.vocab)
+
+    def loss(self, flat, tokens, targets, use_pallas=True):
+        """Mean next-token cross entropy. tokens/targets: [B, S] int32."""
+        logits = self.logits(flat, tokens, use_pallas)
+        b, s, v = logits.shape
+        return _softmax_xent(logits.reshape(b * s, v), targets.reshape(b * s))
+
+    def eval_stats(self, flat, tokens, targets, use_pallas=True):
+        logits = self.logits(flat, tokens, use_pallas)
+        b, s, v = logits.shape
+        fl = logits.reshape(b * s, v)
+        ft = targets.reshape(b * s)
+        loss_sum = _softmax_xent(fl, ft) * (b * s)
+        correct = jnp.sum((jnp.argmax(fl, axis=-1) == ft).astype(jnp.float32))
+        return loss_sum, correct
+
+    def init(self, seed):
+        key = jax.random.PRNGKey(seed)
+        parts = []
+        for name, shape in self.layout():
+            key, sub = jax.random.split(key)
+            base = name.split(".")[-1]
+            if base.startswith(("ln", "b_")):
+                fill = jnp.ones if base.startswith("ln") else jnp.zeros
+                parts.append(fill(shape, jnp.float32).reshape(-1))
+            else:
+                scale = 1.0 / jnp.sqrt(jnp.float32(shape[0]))
+                parts.append((jax.random.normal(sub, shape) * scale).reshape(-1))
+        return jnp.concatenate(parts)
+
+    def example_batch(self, batch):
+        return (
+            jax.ShapeDtypeStruct((batch, self.seq_len), jnp.int32),
+            jax.ShapeDtypeStruct((batch, self.seq_len), jnp.int32),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Entry-point builders (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def build_grad_fn(cfg, use_pallas=True) -> Callable:
+    def grad_fn(flat, x, y):
+        loss, g = jax.value_and_grad(lambda p: cfg.loss(p, x, y, use_pallas))(flat)
+        return loss, g
+
+    return grad_fn
+
+
+def build_eval_fn(cfg, use_pallas=True) -> Callable:
+    def eval_fn(flat, x, y):
+        return cfg.eval_stats(flat, x, y, use_pallas)
+
+    return eval_fn
+
+
+def build_init_fn(cfg) -> Callable:
+    def init_fn(seed):
+        return (cfg.init(seed),)
+
+    return init_fn
+
+
+def build_norm_stat_fn() -> Callable:
+    def norm_stat_fn(grads):
+        return nt.norm_test_stats_pallas(grads)
+
+    return norm_stat_fn

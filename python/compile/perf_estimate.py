@@ -1,0 +1,128 @@
+"""L1 performance estimator: VMEM footprint + MXU utilization for the Pallas
+kernels' BlockSpec tilings (DESIGN.md §8 / EXPERIMENTS.md §Perf).
+
+interpret=True timings are CPU-numpy and NOT a TPU proxy; per the perf plan we
+optimize kernel *structure* and report the analytic roofline quantities a real
+TPU run would see. Model: TPUv4-lite numbers (MXU 128x128 bf16/f32-acc,
+~16 MiB VMEM/core, ~1.2 TB/s HBM).
+
+Usage: python -m compile.perf_estimate
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+VMEM_BYTES = 16 * 2**20
+HBM_BW = 1.2e12  # B/s
+MXU_FLOPS = 2 * 128 * 128 * 940e6  # ~2*128*128 per cycle @ 940 MHz ≈ 30.8 TFLOP/s f32
+
+
+@dataclasses.dataclass
+class MatmulTile:
+    m: int
+    k: int
+    n: int
+    bm: int
+    bk: int
+    bn: int
+
+    def vmem_bytes(self) -> int:
+        # x tile + w tile + two output blocks (y and z, see matmul.py) resident.
+        return 4 * (self.bm * self.bk + self.bk * self.bn + 2 * self.bm * self.bn)
+
+    def mxu_utilization(self) -> float:
+        """Fraction of MXU lanes fed by the tile shapes (padding waste only)."""
+        eff_m = self.bm / _ceil_to(self.bm, 8) if self.bm < 128 else 1.0
+        eff_k = min(self.bk, 128) / 128
+        eff_n = min(self.bn, 128) / 128
+        # Partial edge tiles from problem-shape padding:
+        pad_waste = (
+            (self.m / _ceil_to(self.m, self.bm))
+            * (self.k / _ceil_to(self.k, self.bk))
+            * (self.n / _ceil_to(self.n, self.bn))
+        )
+        return eff_m * eff_k * eff_n * pad_waste
+
+    def arithmetic_intensity(self) -> float:
+        """FLOPs per HBM byte with this blocking (k-innermost accumulation)."""
+        flops = 2 * self.m * self.k * self.n
+        # each x tile is read n/bn times, each w tile m/bm times, y written once
+        nbm = _ceil_to(self.m, self.bm) // self.bm
+        nbn = _ceil_to(self.n, self.bn) // self.bn
+        bytes_moved = 4 * (self.m * self.k * nbn + self.k * self.n * nbm + 2 * self.m * self.n)
+        return flops / bytes_moved
+
+    def roofline_tflops(self) -> float:
+        ai = self.arithmetic_intensity()
+        return min(MXU_FLOPS, ai * HBM_BW) / 1e12
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def report_matmul(name: str, m: int, k: int, n: int, bm=128, bk=128, bn=128) -> dict:
+    t = MatmulTile(m, k, n, min(bm, _ceil_to(m, 8)), min(bk, _ceil_to(k, 128)), min(bn, _ceil_to(n, 128)))
+    d = {
+        "name": name,
+        "shape": f"[{m}x{k}]@[{k}x{n}]",
+        "tile": f"({t.bm},{t.bk},{t.bn})",
+        "vmem_KiB": t.vmem_bytes() / 1024,
+        "vmem_ok": t.vmem_bytes() <= VMEM_BYTES,
+        "mxu_util": t.mxu_utilization(),
+        "ai_flops_per_byte": t.arithmetic_intensity(),
+        "roofline_tflops": t.roofline_tflops(),
+        "mxu_efficiency": t.roofline_tflops() * 1e12 / MXU_FLOPS,
+    }
+    return d
+
+
+def report_norm_stat(m_workers: int, d: int, bd: int = 512) -> dict:
+    # streaming [M, bd] tiles: one HBM read of M*d floats, VPU-bound
+    vmem = 4 * (m_workers * bd + bd + 2)
+    bytes_moved = 4 * m_workers * d
+    # 3 flops per element (diff, square, add) + mean
+    flops = 4 * m_workers * d
+    t_mem = bytes_moved / HBM_BW
+    return {
+        "name": f"norm_stat m={m_workers} d={d}",
+        "vmem_KiB": vmem / 1024,
+        "vmem_ok": vmem <= VMEM_BYTES,
+        "hbm_passes": 1.0,
+        "est_time_us": t_mem * 1e6,
+        "flops_per_byte": flops / bytes_moved,
+    }
+
+
+def main() -> None:
+    print("L1 Pallas kernel perf estimates (analytic; see module docstring)\n")
+    rows = [
+        # tinylm FFN: [B*S, d] @ [d, f] and the head [B*S, d] @ [d, V]
+        report_matmul("tinylm ffn up", 8 * 64, 128, 384),
+        report_matmul("tinylm head", 8 * 64, 128, 512),
+        # lm_m FFN
+        report_matmul("lm_m ffn up", 4 * 128, 256, 768),
+        # mlp_s layer 1
+        report_matmul("mlp_s layer1", 32, 3072, 256),
+        # hypothetical paper-scale (MicroLlama d=1024, f=5632, B*S=16k)
+        report_matmul("microllama ffn (paper scale)", 16384, 1024, 5632),
+    ]
+    for r in rows:
+        print(
+            f"{r['name']:<32} {r['shape']:<22} tile {r['tile']:<15} "
+            f"VMEM {r['vmem_KiB']:7.1f} KiB ok={r['vmem_ok']} "
+            f"MXU util {r['mxu_util']:.2f}  AI {r['ai_flops_per_byte']:.1f} F/B  "
+            f"roofline {r['roofline_tflops']:.2f} TFLOP/s ({r['mxu_efficiency']*100:.0f}% MXU)"
+        )
+    print()
+    for r in [report_norm_stat(4, 468_608), report_norm_stat(4, 25_000_000)]:
+        print(
+            f"{r['name']:<32} VMEM {r['vmem_KiB']:7.1f} KiB ok={r['vmem_ok']} "
+            f"HBM passes {r['hbm_passes']:.0f}  est {r['est_time_us']:.1f} us "
+            f"(AI {r['flops_per_byte']:.2f} F/B, bandwidth-bound)"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal of the compile path: hypothesis sweeps
+shapes/dtypes and asserts allclose between kernel and reference, including the
+custom-VJP backward path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, norm_test, ref
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+ACTIVATIONS = ["none", "relu", "silu", "gelu"]
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# fused linear forward
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    act=st.sampled_from(ACTIVATIONS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_matches_ref_shapes(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    y = matmul.linear_pallas(x, w, b, act)
+    yr = ref.linear_ref(x, w, b, act)
+    assert y.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("act", ACTIVATIONS)
+def test_linear_tile_boundary_shapes(act):
+    # Exactly at / just past the 128-tile boundaries.
+    rng = np.random.default_rng(0)
+    for (m, k, n) in [(128, 128, 128), (129, 127, 128), (1, 256, 1), (257, 1, 129)]:
+        x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+        y = matmul.linear_pallas(x, w, b, act)
+        yr = ref.linear_ref(x, w, b, act)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=3e-4, atol=3e-4)
+
+
+def test_matmul_pallas_plain():
+    rng = np.random.default_rng(1)
+    x, w = rand(rng, 33, 65), rand(rng, 65, 17)
+    np.testing.assert_allclose(
+        np.asarray(matmul.matmul_pallas(x, w)),
+        np.asarray(ref.matmul_ref(x, w)),
+        rtol=2e-4,
+        atol=2e-4,
+    )
+
+
+def test_linear_fwd_returns_preactivation():
+    rng = np.random.default_rng(2)
+    x, w, b = rand(rng, 8, 16), rand(rng, 16, 12), rand(rng, 12)
+    y, z = matmul.linear_fwd_pallas(x, w, b, "relu")
+    np.testing.assert_allclose(
+        np.asarray(z), np.asarray(ref.linear_ref(x, w, b, "none")), rtol=2e-4, atol=2e-4
+    )
+    np.testing.assert_allclose(np.asarray(y), np.maximum(np.asarray(z), 0.0), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# custom VJP backward
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(1, 24),
+    n=st.integers(1, 24),
+    act=st.sampled_from(ACTIVATIONS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_vjp_matches_ref_grad(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+
+    def loss_k(x, w, b):
+        return jnp.sum(jnp.tanh(matmul.linear_pallas(x, w, b, act)))
+
+    def loss_r(x, w, b):
+        return jnp.sum(jnp.tanh(ref.linear_ref(x, w, b, act)))
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(x, w, b)
+    for a, bb in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb), rtol=1e-3, atol=1e-3)
+
+
+def test_vjp_under_jit():
+    rng = np.random.default_rng(3)
+    x, w, b = rand(rng, 16, 32), rand(rng, 32, 8), rand(rng, 8)
+
+    @jax.jit
+    def g(x, w, b):
+        return jax.grad(lambda p: jnp.sum(matmul.linear_pallas(x, p, b, "silu") ** 2))(w)
+
+    gw = g(x, w, b)
+    gw_ref = jax.grad(lambda p: jnp.sum(ref.linear_ref(x, p, b, "silu") ** 2))(w)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(gw_ref), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# norm-test statistic kernel
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(2, 16),
+    d=st.integers(1, 3000),
+    scale=st.floats(0.01, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_norm_stats_matches_ref(m, d, scale, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((m, d)) * scale, jnp.float32)
+    gbar, var_sum, nsq = norm_test.norm_test_stats_pallas(g)
+    gbar_r, var_r, nsq_r = ref.norm_test_stats_ref(g)
+    np.testing.assert_allclose(np.asarray(gbar), np.asarray(gbar_r), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(var_sum), float(var_r), rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(float(nsq), float(nsq_r), rtol=1e-3, atol=1e-5)
+
+
+def test_norm_stats_identical_workers_zero_variance():
+    g1 = jnp.ones((1, 100), jnp.float32) * 0.5
+    g = jnp.tile(g1, (4, 1))
+    gbar, var_sum, nsq = norm_test.norm_test_stats_pallas(g)
+    assert float(var_sum) < 1e-8
+    np.testing.assert_allclose(np.asarray(gbar), np.asarray(g1[0]), rtol=1e-6)
+    np.testing.assert_allclose(float(nsq), 25.0, rtol=1e-5)
+
+
+def test_norm_stats_known_values():
+    # two workers, d=2: g0=(1,0), g1=(0,1) -> gbar=(.5,.5), var=4*0.25=1, nsq=0.5
+    g = jnp.asarray([[1.0, 0.0], [0.0, 1.0]], jnp.float32)
+    gbar, var_sum, nsq = norm_test.norm_test_stats_pallas(g)
+    np.testing.assert_allclose(np.asarray(gbar), [0.5, 0.5], rtol=1e-6)
+    np.testing.assert_allclose(float(var_sum), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(float(nsq), 0.5, rtol=1e-6)
+
+
+def test_norm_stats_padding_boundary():
+    # d exactly at and just past the 512 tile
+    rng = np.random.default_rng(4)
+    for d in [511, 512, 513, 1024, 1025]:
+        g = jnp.asarray(rng.standard_normal((4, d)), jnp.float32)
+        _, var_sum, nsq = norm_test.norm_test_stats_pallas(g)
+        _, var_r, nsq_r = ref.norm_test_stats_ref(g)
+        np.testing.assert_allclose(float(var_sum), float(var_r), rtol=1e-3)
+        np.testing.assert_allclose(float(nsq), float(nsq_r), rtol=1e-3)

@@ -1,0 +1,130 @@
+"""L2 correctness: model shapes, flat-parameter layout, gradient consistency
+between the Pallas path and the pure-jnp path, and loss sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def mlp():
+    return M.MlpClassifierConfig(
+        name="t", input_dim=12, hidden=(16, 8), num_classes=5, micro_batch=4, eval_batch=8
+    )
+
+
+@pytest.fixture(scope="module")
+def lm():
+    return M.TransformerLMConfig(
+        name="t", vocab=64, seq_len=8, d_model=16, n_layers=2, n_heads=2, d_ff=32,
+        micro_batch=2, eval_batch=2,
+    )
+
+
+def test_layout_dim_consistency(mlp, lm):
+    for cfg in (mlp, lm):
+        assert cfg.dim == M.layout_dim(cfg.layout())
+        flat = cfg.init(0)
+        assert flat.shape == (cfg.dim,)
+        p = M.unpack(flat, cfg.layout())
+        assert len(p) == len(cfg.layout())
+
+
+def test_unpack_rejects_wrong_size(mlp):
+    with pytest.raises(AssertionError):
+        M.unpack(jnp.zeros(mlp.dim + 1), mlp.layout())
+
+
+def test_mlp_logits_shape_and_loss(mlp):
+    flat = mlp.init(1)
+    x = jnp.zeros((4, 12), jnp.float32)
+    y = jnp.zeros((4,), jnp.int32)
+    logits = mlp.logits(flat, x)
+    assert logits.shape == (4, 5)
+    loss = mlp.loss(flat, x, y)
+    # zero input, zero bias -> uniform logits -> ln(5)
+    np.testing.assert_allclose(float(loss), np.log(5.0), rtol=1e-5)
+
+
+def test_mlp_grad_pallas_vs_jnp(mlp):
+    rng = np.random.default_rng(0)
+    flat = mlp.init(2)
+    x = jnp.asarray(rng.standard_normal((4, 12)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 5, 4), jnp.int32)
+    lp, gp = M.build_grad_fn(mlp, use_pallas=True)(flat, x, y)
+    lr_, gr_ = M.build_grad_fn(mlp, use_pallas=False)(flat, x, y)
+    np.testing.assert_allclose(float(lp), float(lr_), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(gr_), rtol=2e-3, atol=2e-3)
+
+
+def test_lm_logits_shape_and_initial_loss(lm):
+    flat = lm.init(3)
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, 64, (2, 8)), jnp.int32)
+    logits = lm.logits(flat, toks)
+    assert logits.shape == (2, 8, 64)
+    loss = lm.loss(flat, toks, toks)
+    assert 2.0 < float(loss) < 6.5  # near ln(64)=4.16 at init
+
+
+def test_lm_grad_pallas_vs_jnp(lm):
+    rng = np.random.default_rng(2)
+    flat = lm.init(4)
+    toks = jnp.asarray(rng.integers(0, 64, (2, 8)), jnp.int32)
+    tgts = jnp.asarray(rng.integers(0, 64, (2, 8)), jnp.int32)
+    lp, gp = M.build_grad_fn(lm, use_pallas=True)(flat, toks, tgts)
+    lr_, gr_ = M.build_grad_fn(lm, use_pallas=False)(flat, toks, tgts)
+    np.testing.assert_allclose(float(lp), float(lr_), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(gr_), rtol=5e-3, atol=5e-3)
+
+
+def test_lm_causality(lm):
+    # Changing a future token must not change logits at earlier positions.
+    flat = lm.init(5)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, 64, (1, 8)), jnp.int32)
+    toks2 = toks.at[0, 7].set((toks[0, 7] + 1) % 64)
+    l1 = lm.logits(flat, toks)
+    l2 = lm.logits(flat, toks2)
+    np.testing.assert_allclose(np.asarray(l1[0, :7]), np.asarray(l2[0, :7]), atol=1e-5)
+    assert not np.allclose(np.asarray(l1[0, 7]), np.asarray(l2[0, 7]))
+
+
+def test_eval_stats_counts(mlp):
+    flat = mlp.init(6)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((8, 12)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 5, 8), jnp.int32)
+    loss_sum, correct = mlp.eval_stats(flat, x, y)
+    assert 0 <= float(correct) <= 8
+    assert float(loss_sum) > 0
+
+
+def test_grad_descends_one_sgd_step(mlp):
+    rng = np.random.default_rng(5)
+    flat = mlp.init(7)
+    x = jnp.asarray(rng.standard_normal((8, 12)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 5, 8), jnp.int32)
+    grad_fn = M.build_grad_fn(mlp)
+    l0, g = grad_fn(flat, x, y)
+    l1, _ = grad_fn(flat - 0.1 * g, x, y)
+    assert float(l1) < float(l0)
+
+
+def test_init_deterministic_and_seed_sensitive(mlp):
+    a = mlp.init(11)
+    b = mlp.init(11)
+    c = mlp.init(12)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.allclose(np.asarray(a), np.asarray(c))
+
+
+def test_norm_stat_builder():
+    fn = M.build_norm_stat_fn()
+    g = jnp.asarray(np.random.default_rng(6).standard_normal((4, 100)), jnp.float32)
+    gbar, var_sum, nsq = fn(g)
+    assert gbar.shape == (100,)
+    assert float(var_sum) > 0 and float(nsq) > 0

@@ -1,0 +1,46 @@
+//! All-reduce benchmarks: serial reference vs threaded ring, across worker
+//! counts and payload sizes; plus the α–β simulated-cost cross-check.
+
+use adaloco::bench::Bencher;
+use adaloco::collective::{allreduce_mean_serial, RingAllReduce, Topology};
+use adaloco::util::rng::Pcg64;
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut rng = Pcg64::new(2, 0);
+    for &m in &[2usize, 4, 8] {
+        for &d in &[65_536usize, 1_048_576] {
+            let make = |rng: &mut Pcg64| -> Vec<Vec<f32>> {
+                (0..m)
+                    .map(|_| (0..d).map(|_| rng.normal_f32()).collect())
+                    .collect()
+            };
+            let mut bufs = make(&mut rng);
+            b.run(&format!("serial/m={m}/d={d}"), || {
+                let mut refs: Vec<&mut [f32]> =
+                    bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+                allreduce_mean_serial(&mut refs);
+            })
+            .report_throughput("B", (m * d * 4) as f64);
+
+            let ring = RingAllReduce::new(m);
+            let proto = make(&mut rng);
+            b.run(&format!("ring_threaded/m={m}/d={d}"), || {
+                let out = ring.run(proto.clone());
+                std::hint::black_box(&out);
+            })
+            .report_throughput("B", (m * d * 4) as f64);
+        }
+    }
+    // Simulated distributed cost for the same payloads (what the tables charge).
+    println!("\nsimulated ring all-reduce cost (alpha-beta model):");
+    for topo in [Topology::homogeneous(4), Topology::multi_node(4)] {
+        for &d in &[65_536usize, 1_048_576, 25_000_000] {
+            println!(
+                "  m=4 d={d:>9}: {:.3} ms ({})",
+                topo.allreduce_time(d) * 1e3,
+                if topo.bandwidth_bps > 10e9 { "nvlink-class" } else { "10GbE" }
+            );
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Engine benchmarks: per-round cost of the Local SGD loop on the native
+//! substrates, and (artifact-gated) the PJRT grad step — the end-to-end step
+//! costs behind every table's wall-clock column.
+
+use adaloco::bench::{black_box, Bencher};
+use adaloco::config::{BatchStrategy, DataSpec, ModelSpec, RunConfig, SyncSpec};
+use adaloco::data::Dataset;
+use adaloco::model::GradModel;
+use adaloco::optim::OptimKind;
+use adaloco::util::rng::Pcg64;
+
+fn main() {
+    let b = Bencher::from_env();
+
+    // Logistic grad step (the T1/T8 inner loop) at several batch sizes.
+    {
+        let mut model = adaloco::model::logistic::Logistic::new(128, 10, 1e-4);
+        let mut data = adaloco::data::synth_image::GaussianMixture::new(
+            adaloco::data::synth_image::GaussianMixtureSpec {
+                feat: 128,
+                classes: 10,
+                ..Default::default()
+            },
+            Pcg64::new(1, 0),
+        );
+        let mut rng = Pcg64::new(2, 0);
+        let params = model.init_params(&mut rng);
+        let mut g = vec![0.0f32; model.dim()];
+        for &bs in &[64usize, 512, 1562] {
+            let batch = data.sample(bs);
+            b.run(&format!("logistic_grad/b={bs}"), || {
+                black_box(model.grad(&params, &batch, &mut g));
+            })
+            .report_throughput("sample", bs as f64);
+        }
+    }
+
+    // Bigram-LM grad step (the T2 inner loop).
+    {
+        let mut model = adaloco::model::bigram_lm::BigramLm::new(128);
+        let mut data = adaloco::data::synth_text::MarkovZipf::new(
+            adaloco::data::synth_text::MarkovZipfSpec {
+                vocab: 128,
+                seq_len: 32,
+                ..Default::default()
+            },
+            Pcg64::new(3, 0),
+        );
+        let mut rng = Pcg64::new(4, 0);
+        let params = model.init_params(&mut rng);
+        let mut g = vec![0.0f32; model.dim()];
+        for &bs in &[32usize, 128, 512] {
+            let batch = data.sample(bs);
+            b.run(&format!("bigram_grad/b={bs}"), || {
+                black_box(model.grad(&params, &batch, &mut g));
+            })
+            .report_throughput("seq", bs as f64);
+        }
+    }
+
+    // Full engine round throughput (tiny run, normalized per round).
+    {
+        let mut cfg = RunConfig::default();
+        cfg.model = ModelSpec::Logistic { feat: 128, classes: 10, l2: 1e-4 };
+        cfg.data = DataSpec::GaussianMixture {
+            feat: 128,
+            classes: 10,
+            separation: 2.0,
+            noise: 1.6,
+            eval_size: 256,
+        };
+        cfg.optim_kind = OptimKind::Shb;
+        cfg.sync = SyncSpec::FixedH { h: 8 };
+        cfg.strategy = BatchStrategy::NormTest { eta: 0.8, b0: 64, b_max: 1562 };
+        cfg.total_samples = 100_000;
+        cfg.eval_every_samples = 0;
+        let r = b.run("engine_round/logistic_h8_m4", || {
+            let rec = adaloco::exp::run_config(&cfg).expect("run");
+            black_box(rec.total_rounds);
+        });
+        // normalize per communication round
+        let rec = adaloco::exp::run_config(&cfg).expect("run");
+        println!(
+            "  -> {:.3} ms per communication round ({} rounds per run)",
+            r.mean_ns / 1e6 / rec.total_rounds as f64,
+            rec.total_rounds
+        );
+    }
+
+    // PJRT transformer grad step (artifact-gated): micro step + accumulation.
+    if adaloco::runtime::artifacts_root().join("tinylm/meta.json").exists() {
+        let mut rt = adaloco::runtime::PjrtRuntime::cpu().expect("pjrt");
+        let mut model = adaloco::runtime::PjrtModel::load(&mut rt, "tinylm", 4).expect("load");
+        let mut data = adaloco::data::synth_text::MarkovZipf::new(
+            adaloco::data::synth_text::MarkovZipfSpec {
+                vocab: 512,
+                seq_len: 64,
+                eval_size: 16,
+                ..Default::default()
+            },
+            Pcg64::new(5, 0),
+        );
+        let mut rng = Pcg64::new(6, 0);
+        let params = model.init_params(&mut rng);
+        let mut g = vec![0.0f32; model.dim()];
+        for &chunks in &[1usize, 4] {
+            let bs = model.micro_batch() * chunks;
+            let batch = data.sample(bs);
+            b.run(&format!("pjrt_tinylm_grad/b={bs}"), || {
+                black_box(model.grad(&params, &batch, &mut g));
+            })
+            .report_throughput("seq", bs as f64);
+        }
+    } else {
+        println!("(pjrt benchmarks skipped: run `make artifacts` first)");
+    }
+}

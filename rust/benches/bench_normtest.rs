@@ -1,0 +1,52 @@
+//! Norm-test statistic benchmarks — the paper's claimed overhead source
+//! ("16% more training time due to extra computations from the norm test",
+//! §6.1). Measures the native fused single-pass statistic, the naive
+//! two-pass reference, and (when artifacts are built) the Pallas kernel
+//! through PJRT.
+
+use adaloco::bench::{black_box, Bencher};
+use adaloco::model::GradModel;
+use adaloco::tensor;
+use adaloco::util::rng::Pcg64;
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut rng = Pcg64::new(3, 0);
+    let m = 4usize;
+    for &d in &[65_536usize, 1_048_576, 8_388_608] {
+        let rows: Vec<Vec<f32>> = (0..m)
+            .map(|_| (0..d).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut center = vec![0.0f32; d];
+
+        b.run(&format!("fused_chunked/m={m}/d={d}"), || {
+            black_box(tensor::norm_test_stats(&refs, &mut center));
+        })
+        .report_throughput("elem", (m * d) as f64);
+
+        // §Perf baseline: the multi-pass pipeline (2M+2 memory sweeps)
+        b.run(&format!("naive_multipass/m={m}/d={d}"), || {
+            black_box(tensor::norm_test_stats_naive(&refs, &mut center));
+        })
+        .report_throughput("elem", (m * d) as f64);
+    }
+
+    // Pallas kernel through PJRT (artifact-gated).
+    if adaloco::runtime::artifacts_root().join("tinylm/meta.json").exists() {
+        let mut rt = adaloco::runtime::PjrtRuntime::cpu().expect("pjrt");
+        let mut model = adaloco::runtime::PjrtModel::load(&mut rt, "tinylm", 4).expect("load");
+        let d = model.dim();
+        let rows: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..d).map(|_| rng.normal_f32() * 0.1).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut center = vec![0.0f32; d];
+        b.run(&format!("pallas_pjrt/m=4/d={d}"), || {
+            black_box(model.norm_stats(&refs, &mut center));
+        })
+        .report_throughput("elem", (4 * d) as f64);
+    } else {
+        println!("(pallas_pjrt benchmark skipped: run `make artifacts` first)");
+    }
+}

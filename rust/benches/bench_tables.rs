@@ -1,0 +1,78 @@
+//! End-to-end table benchmarks: time one representative cell of each paper
+//! table at a reduced scale, and verify the qualitative orderings (who wins)
+//! that the full `adaloco table` harness reproduces at scale. One bench per
+//! paper table, per the benchmark-harness deliverable.
+
+use adaloco::bench::Bencher;
+use adaloco::config::BatchStrategy;
+use adaloco::exp::run_config;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    // table cells are seconds-long; one timed sample each is enough
+    b.budget = std::time::Duration::from_millis(1);
+    b.warmup = std::time::Duration::from_millis(0);
+    b.min_iters = 1;
+
+    // --- Table 1 cell (synthetic-CIFAR, H=16, eta=0.85) ---------------------
+    {
+        let (mut cfg, ..) = adaloco::exp::tables_t1_base_for_bench(0.05);
+        cfg.strategy = BatchStrategy::NormTest { eta: 0.85, b0: 64, b_max: 1562 };
+        cfg.label = "bench_t1_cell".into();
+        b.run("table1_cell/eta0.85_H16/scale0.05", || {
+            let rec = run_config(&cfg).expect("t1 cell");
+            std::hint::black_box(rec.total_steps);
+        })
+        .report();
+    }
+
+    // --- Table 2 cell (synthetic-C4, H=16, eta=0.8) --------------------------
+    {
+        let (mut cfg, ..) = adaloco::exp::tables_t2_base_for_bench(0.05);
+        cfg.strategy = BatchStrategy::NormTest { eta: 0.8, b0: 16, b_max: 512 };
+        cfg.label = "bench_t2_cell".into();
+        b.run("table2_cell/eta0.8_H16/scale0.05", || {
+            let rec = run_config(&cfg).expect("t2 cell");
+            std::hint::black_box(rec.total_steps);
+        })
+        .report();
+    }
+
+    // --- Qualitative ordering check (the tables' headline shape) ------------
+    {
+        let (mut small, ..) = adaloco::exp::tables_t1_base_for_bench(0.1);
+        small.strategy = BatchStrategy::Constant { b: 512 };
+        small.label = "ord_small".into();
+        let (mut large, ..) = adaloco::exp::tables_t1_base_for_bench(0.1);
+        large.strategy = BatchStrategy::Constant { b: 1562 };
+        large.label = "ord_large".into();
+        let (mut adapt, ..) = adaloco::exp::tables_t1_base_for_bench(0.1);
+        adapt.strategy = BatchStrategy::NormTest { eta: 0.85, b0: 64, b_max: 1562 };
+        adapt.label = "ord_adapt".into();
+        let rs = run_config(&small).unwrap();
+        let rl = run_config(&large).unwrap();
+        let ra = run_config(&adapt).unwrap();
+        println!("\nordering check (scale 0.1, H=16):");
+        println!(
+            "  const-small: steps={:<6} acc={:.2}%",
+            rs.total_steps,
+            rs.best_val_acc() * 100.0
+        );
+        println!(
+            "  adaptive   : steps={:<6} acc={:.2}%",
+            ra.total_steps,
+            ra.best_val_acc() * 100.0
+        );
+        println!(
+            "  const-large: steps={:<6} acc={:.2}%",
+            rl.total_steps,
+            rl.best_val_acc() * 100.0
+        );
+        let ok_steps = ra.total_steps <= rs.total_steps;
+        let ok_acc = ra.best_val_acc() >= rl.best_val_acc();
+        println!(
+            "  paper shape holds: adaptive fewer steps than const-small: {ok_steps}, \
+             better acc than const-large: {ok_acc}"
+        );
+    }
+}

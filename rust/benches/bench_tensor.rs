@@ -1,0 +1,48 @@
+//! Flat-tensor-op micro-benchmarks — the L3 hot path (optimizer updates,
+//! gradient accumulation, norm-test reductions). Perf-pass targets are
+//! recorded in EXPERIMENTS.md §Perf.
+
+use adaloco::bench::{black_box, Bencher};
+use adaloco::tensor;
+use adaloco::util::rng::Pcg64;
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut rng = Pcg64::new(1, 0);
+    for &d in &[4_096usize, 262_144, 4_194_304] {
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mut y: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let label = |op: &str| format!("{op}/d={d}");
+
+        b.run(&label("axpy"), || {
+            tensor::axpy(0.001, &x, &mut y);
+        })
+        .report_throughput("elem", d as f64);
+
+        b.run(&label("dot"), || {
+            black_box(tensor::dot(&x, &y));
+        })
+        .report_throughput("elem", d as f64);
+
+        b.run(&label("norm_sq"), || {
+            black_box(tensor::norm_sq(&x));
+        })
+        .report_throughput("elem", d as f64);
+
+        b.run(&label("dist_sq"), || {
+            black_box(tensor::dist_sq(&x, &y));
+        })
+        .report_throughput("elem", d as f64);
+
+        // 4-worker mean (the model-averaging inner loop)
+        let rows: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..d).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut center = vec![0.0f32; d];
+        b.run(&label("mean_rows_m4"), || {
+            tensor::mean_rows(&refs, &mut center);
+        })
+        .report_throughput("elem", (4 * d) as f64);
+    }
+}

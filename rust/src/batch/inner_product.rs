@@ -1,0 +1,145 @@
+//! (Augmented) inner-product test — Bollapragada, Byrd & Nocedal (2018),
+//! adapted to local gradient methods.
+//!
+//! The paper (§4.1) notes the norm test can escalate batch sizes quickly and
+//! cites the inner-product test as the moderating alternative, deferring the
+//! local variant to future work; we provide it as an extension (ablation AB2).
+//!
+//! Conditions, estimated from the across-worker gradients at a sync point:
+//!
+//!   (IP)   Var_m(⟨g_m, ḡ⟩) · b/M ≤ θ² ‖ḡ‖⁴
+//!   (AUG)  E‖g_m − (⟨g_m,ḡ⟩/‖ḡ‖²) ḡ‖² · b/M ≤ ν² ‖ḡ‖²   (orthogonality part)
+//!
+//! The batch grows to make the violated condition hold, taking the max of the
+//! two implied sizes; like the norm test, the schedule is monotone and capped.
+
+use super::{clamp_monotone, BatchDecision, BatchSizeController, SyncEvent};
+
+#[derive(Debug, Clone)]
+pub struct InnerProductTest {
+    pub theta: f64,
+    /// ν for the augmented orthogonality condition; `None` disables it.
+    pub nu: Option<f64>,
+    pub b0: u64,
+    pub b_max: u64,
+}
+
+impl InnerProductTest {
+    pub fn new(theta: f64, nu: Option<f64>, b0: u64, b_max: u64) -> Self {
+        assert!(theta > 0.0, "theta must be positive");
+        if let Some(nu) = nu {
+            assert!(nu > 0.0, "nu must be positive");
+        }
+        assert!(b0 >= 1 && b_max >= b0, "need 1 <= b0 <= b_max");
+        InnerProductTest { theta, nu, b0, b_max }
+    }
+
+    pub fn statistic(&self, ev: &SyncEvent) -> u64 {
+        if ev.gbar_norm_sq <= 0.0 || ev.m_workers < 2 {
+            return ev.b_local;
+        }
+        let m = ev.m_workers as f64;
+        let b = ev.b_local as f64;
+        // Inner-product condition: required batch so that the scaled variance of
+        // ⟨g_m, ḡ⟩ sits below θ²‖ḡ‖⁴.
+        let ip_required =
+            b * ev.inner_product_var / (m * self.theta * self.theta * ev.gbar_norm_sq.powi(2));
+        let mut t = ip_required;
+        if let Some(nu) = self.nu {
+            // Orthogonal scatter = total scatter − projection scatter:
+            // Σ‖g_m − ḡ‖² − Var(⟨g_m,ḡ⟩)/‖ḡ‖² (both per-worker averages).
+            let orth = (ev.worker_scatter / (m - 1.0)
+                - ev.inner_product_var / ev.gbar_norm_sq)
+                .max(0.0);
+            let aug_required = b * orth / (m * nu * nu * ev.gbar_norm_sq);
+            t = t.max(aug_required);
+        }
+        t.ceil().min(u64::MAX as f64) as u64
+    }
+}
+
+impl BatchSizeController for InnerProductTest {
+    fn on_sync(&mut self, ev: &SyncEvent) -> BatchDecision {
+        let t = self.statistic(ev);
+        BatchDecision {
+            b_next: clamp_monotone(t, ev.b_local, self.b_max),
+            test_violated: t > ev.b_local,
+        }
+    }
+
+    fn b0(&self) -> u64 {
+        self.b0
+    }
+
+    fn name(&self) -> String {
+        match self.nu {
+            Some(nu) => format!("aug_inner_product(theta={},nu={})", self.theta, nu),
+            None => format!("inner_product(theta={})", self.theta),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::tests::ev;
+
+    #[test]
+    fn aligned_gradients_keep_batch() {
+        // All worker gradients equal -> zero inner-product variance and scatter.
+        let mut c = InnerProductTest::new(0.9, Some(5.0), 32, 1 << 30);
+        let d = c.on_sync(&ev(32, 0.0, 4.0, 4));
+        assert!(!d.test_violated);
+        assert_eq!(d.b_next, 32);
+    }
+
+    #[test]
+    fn high_ip_variance_grows_batch() {
+        let mut e = ev(32, 0.0, 1.0, 4);
+        e.inner_product_var = 100.0;
+        let mut c = InnerProductTest::new(0.5, None, 32, 1 << 30);
+        let d = c.on_sync(&e);
+        // required = 32*100/(4*0.25*1) = 3200
+        assert_eq!(d.b_next, 3200);
+        assert!(d.test_violated);
+    }
+
+    #[test]
+    fn augmented_condition_catches_orthogonal_noise() {
+        // No variance along ḡ but large orthogonal scatter: plain IP passes,
+        // augmented test fires.
+        let mut e = ev(32, 120.0, 1.0, 4);
+        e.inner_product_var = 0.0;
+        let mut plain = InnerProductTest::new(0.5, None, 32, 1 << 30);
+        let mut aug = InnerProductTest::new(0.5, Some(0.5), 32, 1 << 30);
+        assert!(!plain.on_sync(&e).test_violated);
+        let d = aug.on_sync(&e);
+        assert!(d.test_violated);
+        // orth = 120/3 = 40; required = 32*40/(4*0.25*1) = 1280
+        assert_eq!(d.b_next, 1280);
+    }
+
+    #[test]
+    fn moderates_vs_norm_test() {
+        // The canonical motivation: variance mostly orthogonal to ḡ but the
+        // descent direction already reliable — the IP test grows batches slower
+        // than the norm test for the same event.
+        let mut e = ev(64, 50.0, 1.0, 4);
+        e.inner_product_var = 0.5;
+        let mut nt = crate::batch::ApproxNormTest::new(0.8, 64, 1 << 30);
+        let mut ip = InnerProductTest::new(0.8, None, 64, 1 << 30);
+        let bn = nt.on_sync(&e).b_next;
+        let bi = ip.on_sync(&e).b_next;
+        assert!(bi < bn, "ip {bi} should grow slower than norm {bn}");
+    }
+
+    #[test]
+    fn monotone_and_capped() {
+        let mut e = ev(100, 0.0, 1.0, 4);
+        e.inner_product_var = 1e9;
+        let mut c = InnerProductTest::new(0.1, None, 32, 500);
+        assert_eq!(c.on_sync(&e).b_next, 500);
+        e.inner_product_var = 0.0;
+        assert_eq!(c.on_sync(&e).b_next, 100);
+    }
+}

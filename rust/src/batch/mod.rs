@@ -1,0 +1,109 @@
+//! Adaptive batch-size controllers — the paper's contribution (§4).
+//!
+//! A [`BatchSizeController`] observes a [`SyncEvent`] at every synchronization
+//! point (every H local steps, §4.3: "we only perform the test every H local
+//! gradient steps ... at the same time and frequency" as model averaging) and
+//! returns the next local batch size.
+//!
+//! Implemented strategies:
+//! - [`norm_test::ApproxNormTest`]   — Algorithm A.2 (across-worker gradient
+//!   variance; what the paper actually runs).
+//! - [`norm_test::ExactNormTest`]    — Algorithm A.1 (per-sample variance; used
+//!   on substrates with cheap per-sample gradients; `exact-vs-approx` ablation).
+//! - [`inner_product::InnerProductTest`] — Bollapragada et al. (2018) local
+//!   variant (+ augmented condition); paper defers this to future work, provided
+//!   here as an extension.
+//! - [`schedules::ConstantSchedule`] / [`schedules::StagedSchedule`] /
+//!   [`schedules::GeometricSchedule`] — the baselines (constant with linear LR
+//!   scaling; GPT-3-style stagewise ramp; AdaBatch-style geometric growth).
+
+pub mod inner_product;
+pub mod norm_test;
+pub mod schedules;
+
+pub use inner_product::InnerProductTest;
+pub use norm_test::{ApproxNormTest, ExactNormTest};
+pub use schedules::{ConstantSchedule, GeometricSchedule, StagedSchedule};
+
+/// Everything a controller may observe at a sync point.
+#[derive(Debug, Clone)]
+pub struct SyncEvent {
+    /// Communication round index k.
+    pub round: u64,
+    /// Samples processed so far (global counter B).
+    pub samples: u64,
+    /// Current local batch size b_k.
+    pub b_local: u64,
+    /// Number of workers M.
+    pub m_workers: usize,
+    /// Σ_m ‖g_m − ḡ‖² over the workers' last local batch gradients.
+    pub worker_scatter: f64,
+    /// ‖ḡ‖² of the averaged gradient.
+    pub gbar_norm_sq: f64,
+    /// Mean over workers of the per-sample gradient variance
+    /// (1/(b−1))Σ_i‖g_i−ḡ_m‖², when the substrate provides it (Alg. A.1 path).
+    pub per_sample_var: Option<f64>,
+    /// Mean over workers of ‖g_m‖² (needed by the exact test denominator).
+    pub mean_worker_norm_sq: f64,
+    /// Variance over workers of ⟨g_m, ḡ⟩ (inner-product test statistic).
+    pub inner_product_var: f64,
+}
+
+/// Decision returned by a controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchDecision {
+    pub b_next: u64,
+    /// Whether the underlying test failed (batch forced to grow) — logged for
+    /// the figures that trace batch-size growth.
+    pub test_violated: bool,
+}
+
+pub trait BatchSizeController: Send {
+    fn on_sync(&mut self, ev: &SyncEvent) -> BatchDecision;
+
+    /// Initial local batch size b_0.
+    fn b0(&self) -> u64;
+
+    fn name(&self) -> String;
+
+    /// Whether this controller needs the extra gradient all-reduce at sync time
+    /// (comm accounting: Alg. A.2 adds one all-reduce of d floats per round).
+    fn needs_grad_allreduce(&self) -> bool {
+        true
+    }
+}
+
+/// Shared clamping: b_{k+1} = min(max(T, b_k), b_max) — the paper's monotone
+/// non-decreasing schedule (Algorithms A.1/A.2 use max with the current size;
+/// b_max is the per-device memory cap, Table 3/5 "maximum local batch size").
+pub fn clamp_monotone(t: u64, b_cur: u64, b_max: u64) -> u64 {
+    t.max(b_cur).min(b_max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamp_monotone_behaviour() {
+        assert_eq!(clamp_monotone(10, 32, 1000), 32); // never shrinks
+        assert_eq!(clamp_monotone(64, 32, 1000), 64); // grows to T
+        assert_eq!(clamp_monotone(5000, 32, 1000), 1000); // capped
+        assert_eq!(clamp_monotone(0, 1, 1), 1);
+    }
+
+    /// Helper for controller tests: a sync event with the given statistics.
+    pub(crate) fn ev(b: u64, scatter: f64, nsq: f64, m: usize) -> SyncEvent {
+        SyncEvent {
+            round: 0,
+            samples: 0,
+            b_local: b,
+            m_workers: m,
+            worker_scatter: scatter,
+            gbar_norm_sq: nsq,
+            per_sample_var: None,
+            mean_worker_norm_sq: nsq,
+            inner_product_var: 0.0,
+        }
+    }
+}

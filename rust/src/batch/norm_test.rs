@@ -1,0 +1,226 @@
+//! The norm test controllers (the paper's Algorithms A.1 and A.2).
+
+use super::{clamp_monotone, BatchDecision, BatchSizeController, SyncEvent};
+
+/// **Algorithm A.2** — the approximate norm test for local gradient methods
+/// (what the paper's experiments run).
+///
+/// At a sync point the coordinator has the workers' last local batch gradients
+/// g_m (one extra all-reduce) and forms
+///
+///   Var_{i∈B_k}(∇f) ≈ b_k · (1/(M−1)) Σ_m ‖g_m − ḡ‖²                 (§4.3)
+///   T = ⌈ Var / (M η² ‖ḡ‖²) ⌉                                        (eq. 14)
+///   b_{k+1} = min(max(T, b_k), b_max)
+///
+/// The `M η²` denominator (vs `η²` in the single-worker test) reflects that the
+/// M-worker averaged gradient has variance reduced by M.
+#[derive(Debug, Clone)]
+pub struct ApproxNormTest {
+    pub eta: f64,
+    pub b0: u64,
+    pub b_max: u64,
+}
+
+impl ApproxNormTest {
+    pub fn new(eta: f64, b0: u64, b_max: u64) -> Self {
+        assert!(eta > 0.0 && eta < 1.0, "eta must be in (0,1), got {eta}");
+        assert!(b0 >= 1 && b_max >= b0, "need 1 <= b0 <= b_max");
+        ApproxNormTest { eta, b0, b_max }
+    }
+
+    /// The raw statistic T of eq. (14); exposed for tests and ablations.
+    pub fn statistic(&self, ev: &SyncEvent) -> u64 {
+        let m = ev.m_workers as f64;
+        if ev.gbar_norm_sq <= 0.0 || ev.m_workers < 2 {
+            // Degenerate: a zero averaged gradient means we are at a stationary
+            // point of the sampled batch — no information; keep the batch size.
+            return ev.b_local;
+        }
+        let var = ev.b_local as f64 * ev.worker_scatter / (m - 1.0);
+        let t = var / (m * self.eta * self.eta * ev.gbar_norm_sq);
+        t.ceil().min(u64::MAX as f64) as u64
+    }
+
+    /// Whether the approximate norm test (eq. 13) is violated at this event.
+    pub fn violated(&self, ev: &SyncEvent) -> bool {
+        self.statistic(ev) > ev.b_local
+    }
+}
+
+impl BatchSizeController for ApproxNormTest {
+    fn on_sync(&mut self, ev: &SyncEvent) -> BatchDecision {
+        let t = self.statistic(ev);
+        BatchDecision {
+            b_next: clamp_monotone(t, ev.b_local, self.b_max),
+            test_violated: t > ev.b_local,
+        }
+    }
+
+    fn b0(&self) -> u64 {
+        self.b0
+    }
+
+    fn name(&self) -> String {
+        format!("norm_test(eta={})", self.eta)
+    }
+}
+
+/// **Algorithm A.1** — the exact (per-sample) local norm test, usable when the
+/// substrate exposes per-sample gradient variance (native models):
+///
+///   T_m = ⌈ Var_{i∈B}(∇f_m) / (η² ‖∇F_{B_m}‖²) ⌉        (eq. 11)
+///   b_{k+1} = min(max(max_m T_m, b_k), b_max)
+///
+/// We receive the across-worker mean of Var and ‖g_m‖² (homogeneous setting;
+/// §4.2 takes the max over workers, which for i.i.d. shards coincides in
+/// expectation — the engine feeds worker-mean statistics).
+#[derive(Debug, Clone)]
+pub struct ExactNormTest {
+    pub eta: f64,
+    pub b0: u64,
+    pub b_max: u64,
+}
+
+impl ExactNormTest {
+    pub fn new(eta: f64, b0: u64, b_max: u64) -> Self {
+        assert!(eta > 0.0 && eta < 1.0, "eta must be in (0,1), got {eta}");
+        assert!(b0 >= 1 && b_max >= b0, "need 1 <= b0 <= b_max");
+        ExactNormTest { eta, b0, b_max }
+    }
+
+    pub fn statistic(&self, ev: &SyncEvent) -> Option<u64> {
+        let var = ev.per_sample_var?;
+        if ev.mean_worker_norm_sq <= 0.0 {
+            return Some(ev.b_local);
+        }
+        let t = var / (self.eta * self.eta * ev.mean_worker_norm_sq);
+        Some(t.ceil().min(u64::MAX as f64) as u64)
+    }
+}
+
+impl BatchSizeController for ExactNormTest {
+    fn on_sync(&mut self, ev: &SyncEvent) -> BatchDecision {
+        match self.statistic(ev) {
+            Some(t) => BatchDecision {
+                b_next: clamp_monotone(t, ev.b_local, self.b_max),
+                test_violated: t > ev.b_local,
+            },
+            None => BatchDecision { b_next: ev.b_local, test_violated: false },
+        }
+    }
+
+    fn b0(&self) -> u64 {
+        self.b0
+    }
+
+    fn name(&self) -> String {
+        format!("exact_norm_test(eta={})", self.eta)
+    }
+
+    fn needs_grad_allreduce(&self) -> bool {
+        // The exact test is purely local (per-sample variance within a worker):
+        // no extra gradient all-reduce is required.
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::tests::ev;
+
+    #[test]
+    fn high_variance_grows_batch() {
+        let mut c = ApproxNormTest::new(0.8, 32, 100_000);
+        // scatter huge relative to ||gbar||² -> T large
+        let d = c.on_sync(&ev(32, 1000.0, 0.1, 4));
+        assert!(d.test_violated);
+        assert!(d.b_next > 32);
+        // T = ceil(32 * 1000/3 / (4 * 0.64 * 0.1)) = ceil(41666.7) = 41667
+        assert_eq!(d.b_next, 41_667);
+    }
+
+    #[test]
+    fn low_variance_keeps_batch() {
+        let mut c = ApproxNormTest::new(0.8, 32, 100_000);
+        let d = c.on_sync(&ev(32, 1e-6, 10.0, 4));
+        assert!(!d.test_violated);
+        assert_eq!(d.b_next, 32);
+    }
+
+    #[test]
+    fn never_shrinks_and_caps() {
+        let mut c = ApproxNormTest::new(0.8, 32, 64);
+        let d = c.on_sync(&ev(50, 1000.0, 0.1, 4));
+        assert_eq!(d.b_next, 64); // capped at b_max
+        let d2 = c.on_sync(&ev(50, 0.0, 10.0, 4));
+        assert_eq!(d2.b_next, 50); // unchanged, never below current
+    }
+
+    #[test]
+    fn smaller_eta_grows_faster() {
+        let e = ev(32, 5.0, 1.0, 4);
+        let mut a = ApproxNormTest::new(0.5, 32, 1_000_000);
+        let mut b = ApproxNormTest::new(0.9, 32, 1_000_000);
+        let ba = a.on_sync(&e).b_next;
+        let bb = b.on_sync(&e).b_next;
+        assert!(ba >= bb, "eta=0.5 -> {ba}, eta=0.9 -> {bb}");
+    }
+
+    #[test]
+    fn statistic_scales_with_m_denominator() {
+        // Same scatter/norm, more workers -> smaller statistic (variance of the
+        // M-averaged gradient shrinks): T ~ b*scatter/((M-1) * M * eta² nsq).
+        let c = ApproxNormTest::new(0.8, 32, 1 << 40);
+        let t4 = c.statistic(&ev(128, 10.0, 1.0, 4));
+        let t8 = c.statistic(&ev(128, 10.0, 1.0, 8));
+        assert!(t8 < t4, "t4={t4} t8={t8}");
+    }
+
+    #[test]
+    fn degenerate_zero_gradient_keeps_batch() {
+        let mut c = ApproxNormTest::new(0.8, 32, 1000);
+        let d = c.on_sync(&ev(32, 1.0, 0.0, 4));
+        assert_eq!(d.b_next, 32);
+        assert!(!d.test_violated);
+    }
+
+    #[test]
+    fn single_worker_degenerates_gracefully() {
+        let mut c = ApproxNormTest::new(0.8, 32, 1000);
+        let d = c.on_sync(&ev(32, 0.0, 1.0, 1));
+        assert_eq!(d.b_next, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "eta must be in (0,1)")]
+    fn rejects_bad_eta() {
+        ApproxNormTest::new(1.5, 32, 64);
+    }
+
+    #[test]
+    fn exact_test_uses_per_sample_var() {
+        let mut c = ExactNormTest::new(0.8, 32, 1 << 40);
+        let mut e = ev(32, 0.0, 1.0, 4);
+        e.per_sample_var = Some(640.0);
+        e.mean_worker_norm_sq = 1.0;
+        let d = c.on_sync(&e);
+        // T = ceil(640 / (0.64 * 1.0)) = 1000
+        assert_eq!(d.b_next, 1000);
+        assert!(d.test_violated);
+    }
+
+    #[test]
+    fn exact_test_without_variance_is_noop() {
+        let mut c = ExactNormTest::new(0.8, 32, 1000);
+        let d = c.on_sync(&ev(32, 99.0, 1.0, 4));
+        assert_eq!(d.b_next, 32);
+        assert!(!d.test_violated);
+    }
+
+    #[test]
+    fn exact_test_needs_no_extra_comm() {
+        assert!(!ExactNormTest::new(0.8, 1, 2).needs_grad_allreduce());
+        assert!(ApproxNormTest::new(0.8, 1, 2).needs_grad_allreduce());
+    }
+}

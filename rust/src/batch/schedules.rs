@@ -1,0 +1,173 @@
+//! Non-adaptive batch-size schedules — the baselines of the paper's tables and
+//! of the batch-ramp heuristics it cites (§2 "batch size scheduling" in GPT-3,
+//! Nemotron-4, OLMo, DeepSeek-V2; geometric growth as in AdaBatch/SimiGrad).
+
+use super::{clamp_monotone, BatchDecision, BatchSizeController, SyncEvent};
+
+/// Constant local batch size (rows 1–3 of every paper table). Pair with the
+/// linear LR scaling rule via `LrSchedule::linear_scaled`.
+#[derive(Debug, Clone)]
+pub struct ConstantSchedule {
+    pub b: u64,
+}
+
+impl ConstantSchedule {
+    pub fn new(b: u64) -> Self {
+        assert!(b >= 1);
+        ConstantSchedule { b }
+    }
+}
+
+impl BatchSizeController for ConstantSchedule {
+    fn on_sync(&mut self, _ev: &SyncEvent) -> BatchDecision {
+        BatchDecision { b_next: self.b, test_violated: false }
+    }
+
+    fn b0(&self) -> u64 {
+        self.b
+    }
+
+    fn name(&self) -> String {
+        format!("constant({})", self.b)
+    }
+
+    fn needs_grad_allreduce(&self) -> bool {
+        false
+    }
+}
+
+/// GPT-3-style stagewise ramp: batch size jumps at fixed sample thresholds.
+#[derive(Debug, Clone)]
+pub struct StagedSchedule {
+    /// (samples_threshold, local_batch) pairs, thresholds strictly increasing.
+    pub stages: Vec<(u64, u64)>,
+    pub b0: u64,
+}
+
+impl StagedSchedule {
+    pub fn new(b0: u64, stages: Vec<(u64, u64)>) -> Self {
+        assert!(b0 >= 1);
+        for w in stages.windows(2) {
+            assert!(w[0].0 < w[1].0, "stage thresholds must increase");
+        }
+        StagedSchedule { stages, b0 }
+    }
+
+    fn at(&self, samples: u64) -> u64 {
+        let mut b = self.b0;
+        for &(thresh, bs) in &self.stages {
+            if samples >= thresh {
+                b = bs;
+            }
+        }
+        b
+    }
+}
+
+impl BatchSizeController for StagedSchedule {
+    fn on_sync(&mut self, ev: &SyncEvent) -> BatchDecision {
+        BatchDecision { b_next: self.at(ev.samples), test_violated: false }
+    }
+
+    fn b0(&self) -> u64 {
+        self.b0
+    }
+
+    fn name(&self) -> String {
+        format!("staged({} stages)", self.stages.len())
+    }
+
+    fn needs_grad_allreduce(&self) -> bool {
+        false
+    }
+}
+
+/// Geometric growth every `every_samples` samples (AdaBatch-style heuristic).
+#[derive(Debug, Clone)]
+pub struct GeometricSchedule {
+    pub b0: u64,
+    pub b_max: u64,
+    pub growth: f64,
+    pub every_samples: u64,
+}
+
+impl GeometricSchedule {
+    pub fn new(b0: u64, b_max: u64, growth: f64, every_samples: u64) -> Self {
+        assert!(b0 >= 1 && b_max >= b0 && growth >= 1.0 && every_samples >= 1);
+        GeometricSchedule { b0, b_max, growth, every_samples }
+    }
+}
+
+impl BatchSizeController for GeometricSchedule {
+    fn on_sync(&mut self, ev: &SyncEvent) -> BatchDecision {
+        let doublings = (ev.samples / self.every_samples) as i32;
+        let b = (self.b0 as f64 * self.growth.powi(doublings)).round() as u64;
+        BatchDecision {
+            b_next: clamp_monotone(b, ev.b_local, self.b_max),
+            test_violated: false,
+        }
+    }
+
+    fn b0(&self) -> u64 {
+        self.b0
+    }
+
+    fn name(&self) -> String {
+        format!("geometric(x{} per {} samples)", self.growth, self.every_samples)
+    }
+
+    fn needs_grad_allreduce(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::tests::ev;
+
+    #[test]
+    fn constant_is_constant() {
+        let mut c = ConstantSchedule::new(512);
+        for s in [0u64, 100, 100_000] {
+            let mut e = ev(512, 100.0, 0.001, 4);
+            e.samples = s;
+            assert_eq!(c.on_sync(&e).b_next, 512);
+        }
+        assert!(!c.needs_grad_allreduce());
+    }
+
+    #[test]
+    fn staged_ramps_at_thresholds() {
+        let mut c = StagedSchedule::new(64, vec![(1000, 128), (5000, 512)]);
+        let b_at = |c: &mut StagedSchedule, s: u64| {
+            let mut e = ev(64, 0.0, 1.0, 4);
+            e.samples = s;
+            c.on_sync(&e).b_next
+        };
+        assert_eq!(b_at(&mut c, 0), 64);
+        assert_eq!(b_at(&mut c, 999), 64);
+        assert_eq!(b_at(&mut c, 1000), 128);
+        assert_eq!(b_at(&mut c, 10_000), 512);
+    }
+
+    #[test]
+    #[should_panic(expected = "thresholds must increase")]
+    fn staged_rejects_unsorted() {
+        StagedSchedule::new(64, vec![(5000, 128), (1000, 512)]);
+    }
+
+    #[test]
+    fn geometric_doubles_and_caps() {
+        let mut c = GeometricSchedule::new(64, 300, 2.0, 1000);
+        let b_at = |c: &mut GeometricSchedule, s: u64, cur: u64| {
+            let mut e = ev(cur, 0.0, 1.0, 4);
+            e.samples = s;
+            c.on_sync(&e).b_next
+        };
+        assert_eq!(b_at(&mut c, 0, 64), 64);
+        assert_eq!(b_at(&mut c, 1000, 64), 128);
+        assert_eq!(b_at(&mut c, 2000, 128), 256);
+        assert_eq!(b_at(&mut c, 3000, 256), 300); // capped
+    }
+}

@@ -1,0 +1,141 @@
+//! Micro-benchmark harness (offline build has no criterion).
+//!
+//! Used by every `[[bench]]` target (`harness = false`): warms up, runs timed
+//! batches until a target wall budget, and reports median/mean ns per iteration
+//! plus optional throughput. Output format is stable so `cargo bench` logs diff
+//! cleanly across the perf-pass iterations recorded in EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_millis(800),
+            min_iters: 10,
+        }
+    }
+}
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} {:>12} ns/iter (median {:>12}, p95 {:>12}, n={})",
+            self.name,
+            fmt(self.mean_ns),
+            fmt(self.median_ns),
+            fmt(self.p95_ns),
+            self.iters
+        );
+    }
+
+    /// Report with a throughput figure, e.g. bytes or elements per iteration.
+    pub fn report_throughput(&self, unit: &str, per_iter: f64) {
+        let per_sec = per_iter / (self.mean_ns * 1e-9);
+        println!(
+            "bench {:<44} {:>12} ns/iter ({:.3e} {}/s, n={})",
+            self.name,
+            fmt(self.mean_ns),
+            per_sec,
+            unit,
+            self.iters
+        );
+    }
+}
+
+fn fmt(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3}us", ns / 1e3)
+    } else {
+        format!("{:.1}ns", ns)
+    }
+}
+
+impl Bencher {
+    /// Quick-mode factory: honours ADALOCO_BENCH_FAST=1 for CI-speed runs.
+    pub fn from_env() -> Self {
+        if std::env::var("ADALOCO_BENCH_FAST").as_deref() == Ok("1") {
+            Bencher {
+                warmup: Duration::from_millis(20),
+                budget: Duration::from_millis(100),
+                min_iters: 3,
+            }
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Time `f`, which performs ONE logical iteration per call.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // Timed samples
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget || (samples_ns.len() as u64) < self.min_iters {
+            let t = Instant::now();
+            f();
+            samples_ns.push(t.elapsed().as_nanos() as f64);
+            if samples_ns.len() > 5_000_000 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let mean = samples_ns.iter().sum::<f64>() / n as f64;
+        BenchResult {
+            name: name.to_string(),
+            iters: n as u64,
+            mean_ns: mean,
+            median_ns: samples_ns[n / 2],
+            p95_ns: samples_ns[(n as f64 * 0.95) as usize % n.max(1)],
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(5),
+            min_iters: 3,
+        };
+        let mut acc = 0u64;
+        let r = b.run("noop", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.median_ns <= r.p95_ns * 1.5 + 1.0);
+    }
+}

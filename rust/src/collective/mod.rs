@@ -1,0 +1,68 @@
+//! In-process collectives over worker buffers + communication accounting.
+//!
+//! The paper's testbed synchronizes 4 GPU workers with NCCL all-reduce; here the
+//! "workers" are in-process parameter buffers and the collective is exercised
+//! for real (including a threaded ring implementation used by the larger
+//! models), while *costs* are charged through [`crate::sim`]'s α–β model so the
+//! tables' wall-clock columns reflect a distributed deployment rather than this
+//! process's memory bandwidth.
+
+pub mod allreduce;
+pub mod topology;
+
+pub use allreduce::{allreduce_mean_serial, allreduce_mean_threaded, RingAllReduce};
+pub use topology::Topology;
+
+/// Byte / round counters, the communication-efficiency bookkeeping behind the
+/// paper's headline claim (fewer syncs + larger batches => less communication).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CommCounters {
+    /// All-reduce invocations (model averaging + norm-test gradient reduces).
+    pub allreduce_calls: u64,
+    /// Total bytes moved by this worker set under a ring all-reduce:
+    /// 2·(M−1)/M · payload_bytes · M  (all workers combined).
+    pub bytes_moved: u64,
+    /// Communication rounds (sync points).
+    pub rounds: u64,
+}
+
+impl CommCounters {
+    /// Charge one all-reduce of `elems` f32 over `m` workers (ring algorithm).
+    pub fn charge_allreduce(&mut self, elems: usize, m: usize) {
+        self.allreduce_calls += 1;
+        let payload = (elems * std::mem::size_of::<f32>()) as u64;
+        if m > 1 {
+            self.bytes_moved += 2 * (m as u64 - 1) * payload;
+        }
+    }
+
+    pub fn merge(&mut self, other: &CommCounters) {
+        self.allreduce_calls += other.allreduce_calls;
+        self.bytes_moved += other.bytes_moved;
+        self.rounds += other.rounds;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_formula() {
+        let mut c = CommCounters::default();
+        c.charge_allreduce(1000, 4);
+        // 2*(4-1)*4000 = 24000 bytes
+        assert_eq!(c.bytes_moved, 24_000);
+        assert_eq!(c.allreduce_calls, 1);
+        c.charge_allreduce(1000, 1); // single worker moves nothing
+        assert_eq!(c.bytes_moved, 24_000);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = CommCounters { allreduce_calls: 1, bytes_moved: 10, rounds: 2 };
+        let b = CommCounters { allreduce_calls: 2, bytes_moved: 5, rounds: 1 };
+        a.merge(&b);
+        assert_eq!(a, CommCounters { allreduce_calls: 3, bytes_moved: 15, rounds: 3 });
+    }
+}

@@ -1,0 +1,117 @@
+//! Worker topology: counts, speeds, and link parameters.
+//!
+//! The paper's testbed is 4 homogeneous GPUs on one node; the topology type also
+//! models the heterogeneous-device setting the paper motivates in §1 ("workers
+//! are heterogeneous devices with different computational speeds and memories")
+//! via per-worker speed multipliers — stragglers then dominate the simulated
+//! round time (max over workers), which is exactly the effect the equalized
+//! `max_m T_m` batch rule of §4.2 avoids.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    pub m_workers: usize,
+    /// Relative compute speed per worker (1.0 = reference; samples/sec scale).
+    pub speeds: Vec<f64>,
+    /// All-reduce latency per call (seconds) — the α term.
+    pub latency_s: f64,
+    /// Link bandwidth (bytes/second) — the β term.
+    pub bandwidth_bps: f64,
+}
+
+impl Topology {
+    /// Homogeneous M-worker node with NVLink-class interconnect defaults.
+    pub fn homogeneous(m: usize) -> Self {
+        assert!(m >= 1);
+        Topology {
+            m_workers: m,
+            speeds: vec![1.0; m],
+            latency_s: 20e-6,
+            bandwidth_bps: 50e9,
+        }
+    }
+
+    /// Paper testbed analogue: 4 workers, one node.
+    pub fn paper_default() -> Self {
+        Topology::homogeneous(4)
+    }
+
+    /// Multi-node variant with slower inter-node links (ethernet-class).
+    pub fn multi_node(m: usize) -> Self {
+        Topology {
+            m_workers: m,
+            speeds: vec![1.0; m],
+            latency_s: 200e-6,
+            bandwidth_bps: 1.25e9, // ~10 GbE
+        }
+    }
+
+    /// Heterogeneous worker speeds (straggler modelling).
+    pub fn heterogeneous(speeds: Vec<f64>) -> Self {
+        assert!(!speeds.is_empty() && speeds.iter().all(|&s| s > 0.0));
+        let m = speeds.len();
+        Topology {
+            m_workers: m,
+            speeds,
+            latency_s: 20e-6,
+            bandwidth_bps: 50e9,
+        }
+    }
+
+    /// Slowest worker's speed — round compute time is gated on it.
+    pub fn min_speed(&self) -> f64 {
+        self.speeds.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Ring all-reduce time for `elems` f32 across this topology:
+    /// α·(M−1)·2 (latency per ring step) + 2·(M−1)/M · bytes / bandwidth.
+    pub fn allreduce_time(&self, elems: usize) -> f64 {
+        let m = self.m_workers as f64;
+        if self.m_workers <= 1 {
+            return 0.0;
+        }
+        let bytes = (elems * 4) as f64;
+        2.0 * (m - 1.0) * self.latency_s + 2.0 * (m - 1.0) / m * bytes / self.bandwidth_bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_defaults() {
+        let t = Topology::paper_default();
+        assert_eq!(t.m_workers, 4);
+        assert_eq!(t.speeds, vec![1.0; 4]);
+        assert_eq!(t.min_speed(), 1.0);
+    }
+
+    #[test]
+    fn allreduce_time_scales_with_payload() {
+        let t = Topology::homogeneous(4);
+        let t1 = t.allreduce_time(1_000_000);
+        let t2 = t.allreduce_time(2_000_000);
+        assert!(t2 > t1);
+        // bandwidth term: 2*(3/4)*8MB/50GB/s = 0.24 ms for 2M elems
+        assert!((t2 - (6.0 * 20e-6 + 1.5 * 8_000_000.0 / 50e9)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_worker_no_comm() {
+        assert_eq!(Topology::homogeneous(1).allreduce_time(1_000_000), 0.0);
+    }
+
+    #[test]
+    fn multi_node_slower() {
+        let a = Topology::homogeneous(4).allreduce_time(1 << 20);
+        let b = Topology::multi_node(4).allreduce_time(1 << 20);
+        assert!(b > a * 5.0);
+    }
+
+    #[test]
+    fn heterogeneous_min_speed() {
+        let t = Topology::heterogeneous(vec![1.0, 0.5, 2.0]);
+        assert_eq!(t.min_speed(), 0.5);
+        assert_eq!(t.m_workers, 3);
+    }
+}

@@ -1,0 +1,671 @@
+//! Typed run configuration + JSON round-trip.
+//!
+//! A [`RunConfig`] fully determines one training run: substrate (which model,
+//! native or PJRT artifact), data spec, optimizer, LR schedule, batch-size
+//! strategy, sync scheduler, topology, and budget. The experiment harness
+//! ([`crate::exp`]) builds grids of these; the CLI loads/saves them as JSON so
+//! runs are reproducible artifacts.
+
+use crate::batch::{
+    ApproxNormTest, BatchSizeController, ConstantSchedule, ExactNormTest, GeometricSchedule,
+    InnerProductTest, StagedSchedule,
+};
+use crate::engine::{FixedH, PostLocal, Qsr, SyncScheduler};
+use crate::optim::{LrSchedule, OptimKind, OptimParams};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelSpec {
+    /// Native multinomial logistic regression (fast table sweeps).
+    Logistic { feat: usize, classes: usize, l2: f64 },
+    /// Native MLP.
+    Mlp { sizes: Vec<usize> },
+    /// Native bigram LM over a [V, V] logit table (fast LM-table substrate).
+    BigramLm { vocab: usize },
+    /// Native MLP language model (nonconvex LM substrate for Table 2/6).
+    MlpLm { vocab: usize, hidden: usize },
+    /// Convex quadratic (theory validation).
+    Quadratic { dim: usize, mu: f64, l: f64, noise: f64 },
+    /// PJRT artifact by name under artifacts/ (e.g. "mlp_s", "tinylm").
+    Artifact { name: String },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum DataSpec {
+    GaussianMixture {
+        feat: usize,
+        classes: usize,
+        separation: f64,
+        noise: f64,
+        eval_size: usize,
+    },
+    MarkovZipf {
+        vocab: usize,
+        seq_len: usize,
+        determinism: f64,
+        eval_size: usize,
+    },
+    /// Placeholder stream for models that synthesize their own noise
+    /// (the quadratic suite only uses the batch SIZE).
+    Synthetic,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchStrategy {
+    Constant { b: u64 },
+    NormTest { eta: f64, b0: u64, b_max: u64 },
+    ExactNormTest { eta: f64, b0: u64, b_max: u64 },
+    InnerProduct { theta: f64, nu: Option<f64>, b0: u64, b_max: u64 },
+    Staged { b0: u64, stages: Vec<(u64, u64)> },
+    Geometric { b0: u64, b_max: u64, growth: f64, every_samples: u64 },
+}
+
+impl BatchStrategy {
+    pub fn build(&self) -> Box<dyn BatchSizeController> {
+        match self {
+            BatchStrategy::Constant { b } => Box::new(ConstantSchedule::new(*b)),
+            BatchStrategy::NormTest { eta, b0, b_max } => {
+                Box::new(ApproxNormTest::new(*eta, *b0, *b_max))
+            }
+            BatchStrategy::ExactNormTest { eta, b0, b_max } => {
+                Box::new(ExactNormTest::new(*eta, *b0, *b_max))
+            }
+            BatchStrategy::InnerProduct { theta, nu, b0, b_max } => {
+                Box::new(InnerProductTest::new(*theta, *nu, *b0, *b_max))
+            }
+            BatchStrategy::Staged { b0, stages } => {
+                Box::new(StagedSchedule::new(*b0, stages.clone()))
+            }
+            BatchStrategy::Geometric { b0, b_max, growth, every_samples } => {
+                Box::new(GeometricSchedule::new(*b0, *b_max, *growth, *every_samples))
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            BatchStrategy::Constant { b } => format!("const{b}"),
+            BatchStrategy::NormTest { eta, .. } => format!("eta{eta}"),
+            BatchStrategy::ExactNormTest { eta, .. } => format!("exact_eta{eta}"),
+            BatchStrategy::InnerProduct { theta, nu, .. } => match nu {
+                Some(nu) => format!("aug_ip{theta}_{nu}"),
+                None => format!("ip{theta}"),
+            },
+            BatchStrategy::Staged { .. } => "staged".into(),
+            BatchStrategy::Geometric { growth, .. } => format!("geo{growth}"),
+        }
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        matches!(
+            self,
+            BatchStrategy::NormTest { .. }
+                | BatchStrategy::ExactNormTest { .. }
+                | BatchStrategy::InnerProduct { .. }
+        )
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum SyncSpec {
+    FixedH { h: u32 },
+    PostLocal { h_after: u32, switch_samples: u64 },
+    Qsr { h_base: u32, h_max: u32, c: f64 },
+}
+
+impl SyncSpec {
+    pub fn build(&self) -> Box<dyn SyncScheduler> {
+        match self {
+            SyncSpec::FixedH { h } => Box::new(FixedH::new(*h)),
+            SyncSpec::PostLocal { h_after, switch_samples } => {
+                Box::new(PostLocal::new(*h_after, *switch_samples))
+            }
+            SyncSpec::Qsr { h_base, h_max, c } => Box::new(Qsr::new(*h_base, *h_max, *c)),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    pub label: String,
+    pub model: ModelSpec,
+    pub data: DataSpec,
+    pub strategy: BatchStrategy,
+    pub sync: SyncSpec,
+    pub optim_kind: OptimKind,
+    pub lr_peak: f64,
+    pub lr_base: f64,
+    pub warmup_frac: f64,
+    /// Apply the linear LR scaling rule relative to this base batch size
+    /// (constant-batch baselines only, as in the paper).
+    pub lr_scaling_base_batch: Option<u64>,
+    pub m_workers: usize,
+    pub total_samples: u64,
+    pub eval_every_samples: u64,
+    pub b_max_local: u64,
+    pub seed: u64,
+    pub grad_clip: Option<f64>,
+    pub weight_decay: f64,
+    pub momentum: f64,
+}
+
+impl RunConfig {
+    pub fn lr_schedule(&self) -> LrSchedule {
+        let s = LrSchedule::paper_default(
+            self.lr_peak,
+            self.lr_base,
+            self.total_samples,
+            self.warmup_frac,
+        );
+        match (&self.strategy, self.lr_scaling_base_batch) {
+            (BatchStrategy::Constant { b }, Some(base)) => {
+                s.linear_scaled(*b * self.m_workers as u64, base)
+            }
+            _ => s,
+        }
+    }
+
+    pub fn optim_params(&self) -> OptimParams {
+        let mut p = match self.optim_kind {
+            OptimKind::AdamW => OptimParams::paper_adamw(),
+            OptimKind::Shb => OptimParams::paper_shb(),
+            _ => OptimParams::plain_sgd(),
+        };
+        p.kind = self.optim_kind;
+        p.grad_clip = self.grad_clip;
+        p.weight_decay = self.weight_decay;
+        p.momentum = self.momentum;
+        p
+    }
+
+    // ---------------------------------------------------------------- JSON --
+
+    pub fn to_json(&self) -> Json {
+        let model = match &self.model {
+            ModelSpec::Logistic { feat, classes, l2 } => Json::obj(vec![
+                ("type", Json::str("logistic")),
+                ("feat", Json::num(*feat as f64)),
+                ("classes", Json::num(*classes as f64)),
+                ("l2", Json::num(*l2)),
+            ]),
+            ModelSpec::Mlp { sizes } => Json::obj(vec![
+                ("type", Json::str("mlp")),
+                ("sizes", Json::arr(sizes.iter().map(|&s| Json::num(s as f64)))),
+            ]),
+            ModelSpec::BigramLm { vocab } => Json::obj(vec![
+                ("type", Json::str("bigram_lm")),
+                ("vocab", Json::num(*vocab as f64)),
+            ]),
+            ModelSpec::MlpLm { vocab, hidden } => Json::obj(vec![
+                ("type", Json::str("mlp_lm")),
+                ("vocab", Json::num(*vocab as f64)),
+                ("hidden", Json::num(*hidden as f64)),
+            ]),
+            ModelSpec::Quadratic { dim, mu, l, noise } => Json::obj(vec![
+                ("type", Json::str("quadratic")),
+                ("dim", Json::num(*dim as f64)),
+                ("mu", Json::num(*mu)),
+                ("l", Json::num(*l)),
+                ("noise", Json::num(*noise)),
+            ]),
+            ModelSpec::Artifact { name } => Json::obj(vec![
+                ("type", Json::str("artifact")),
+                ("name", Json::str(name)),
+            ]),
+        };
+        let data = match &self.data {
+            DataSpec::GaussianMixture { feat, classes, separation, noise, eval_size } => {
+                Json::obj(vec![
+                    ("type", Json::str("gaussian_mixture")),
+                    ("feat", Json::num(*feat as f64)),
+                    ("classes", Json::num(*classes as f64)),
+                    ("separation", Json::num(*separation)),
+                    ("noise", Json::num(*noise)),
+                    ("eval_size", Json::num(*eval_size as f64)),
+                ])
+            }
+            DataSpec::MarkovZipf { vocab, seq_len, determinism, eval_size } => Json::obj(vec![
+                ("type", Json::str("markov_zipf")),
+                ("vocab", Json::num(*vocab as f64)),
+                ("seq_len", Json::num(*seq_len as f64)),
+                ("determinism", Json::num(*determinism)),
+                ("eval_size", Json::num(*eval_size as f64)),
+            ]),
+            DataSpec::Synthetic => Json::obj(vec![("type", Json::str("synthetic"))]),
+        };
+        let strategy = match &self.strategy {
+            BatchStrategy::Constant { b } => Json::obj(vec![
+                ("type", Json::str("constant")),
+                ("b", Json::num(*b as f64)),
+            ]),
+            BatchStrategy::NormTest { eta, b0, b_max } => Json::obj(vec![
+                ("type", Json::str("norm_test")),
+                ("eta", Json::num(*eta)),
+                ("b0", Json::num(*b0 as f64)),
+                ("b_max", Json::num(*b_max as f64)),
+            ]),
+            BatchStrategy::ExactNormTest { eta, b0, b_max } => Json::obj(vec![
+                ("type", Json::str("exact_norm_test")),
+                ("eta", Json::num(*eta)),
+                ("b0", Json::num(*b0 as f64)),
+                ("b_max", Json::num(*b_max as f64)),
+            ]),
+            BatchStrategy::InnerProduct { theta, nu, b0, b_max } => Json::obj(vec![
+                ("type", Json::str("inner_product")),
+                ("theta", Json::num(*theta)),
+                (
+                    "nu",
+                    nu.map(Json::num).unwrap_or(Json::Null),
+                ),
+                ("b0", Json::num(*b0 as f64)),
+                ("b_max", Json::num(*b_max as f64)),
+            ]),
+            BatchStrategy::Staged { b0, stages } => Json::obj(vec![
+                ("type", Json::str("staged")),
+                ("b0", Json::num(*b0 as f64)),
+                (
+                    "stages",
+                    Json::arr(stages.iter().map(|(s, b)| {
+                        Json::arr(vec![Json::num(*s as f64), Json::num(*b as f64)])
+                    })),
+                ),
+            ]),
+            BatchStrategy::Geometric { b0, b_max, growth, every_samples } => Json::obj(vec![
+                ("type", Json::str("geometric")),
+                ("b0", Json::num(*b0 as f64)),
+                ("b_max", Json::num(*b_max as f64)),
+                ("growth", Json::num(*growth)),
+                ("every_samples", Json::num(*every_samples as f64)),
+            ]),
+        };
+        let sync = match &self.sync {
+            SyncSpec::FixedH { h } => Json::obj(vec![
+                ("type", Json::str("fixed")),
+                ("h", Json::num(*h as f64)),
+            ]),
+            SyncSpec::PostLocal { h_after, switch_samples } => Json::obj(vec![
+                ("type", Json::str("post_local")),
+                ("h_after", Json::num(*h_after as f64)),
+                ("switch_samples", Json::num(*switch_samples as f64)),
+            ]),
+            SyncSpec::Qsr { h_base, h_max, c } => Json::obj(vec![
+                ("type", Json::str("qsr")),
+                ("h_base", Json::num(*h_base as f64)),
+                ("h_max", Json::num(*h_max as f64)),
+                ("c", Json::num(*c)),
+            ]),
+        };
+        Json::obj(vec![
+            ("label", Json::str(&self.label)),
+            ("model", model),
+            ("data", data),
+            ("strategy", strategy),
+            ("sync", sync),
+            ("optim", Json::str(self.optim_kind.name())),
+            ("lr_peak", Json::num(self.lr_peak)),
+            ("lr_base", Json::num(self.lr_base)),
+            ("warmup_frac", Json::num(self.warmup_frac)),
+            (
+                "lr_scaling_base_batch",
+                self.lr_scaling_base_batch
+                    .map(|b| Json::num(b as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            ("m_workers", Json::num(self.m_workers as f64)),
+            ("total_samples", Json::num(self.total_samples as f64)),
+            ("eval_every_samples", Json::num(self.eval_every_samples as f64)),
+            ("b_max_local", Json::num(self.b_max_local as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "grad_clip",
+                self.grad_clip.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("weight_decay", Json::num(self.weight_decay)),
+            ("momentum", Json::num(self.momentum)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig, String> {
+        let get_usize = |j: &Json, k: &str| {
+            j.get(k).as_usize().ok_or_else(|| format!("missing/invalid {k}"))
+        };
+        let get_u64 =
+            |j: &Json, k: &str| j.get(k).as_u64().ok_or_else(|| format!("missing/invalid {k}"));
+        let get_f64 =
+            |j: &Json, k: &str| j.get(k).as_f64().ok_or_else(|| format!("missing/invalid {k}"));
+
+        let mj = j.get("model");
+        let model = match mj.get("type").as_str() {
+            Some("logistic") => ModelSpec::Logistic {
+                feat: get_usize(mj, "feat")?,
+                classes: get_usize(mj, "classes")?,
+                l2: get_f64(mj, "l2")?,
+            },
+            Some("mlp") => ModelSpec::Mlp {
+                sizes: mj
+                    .get("sizes")
+                    .as_arr()
+                    .ok_or("mlp sizes")?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or("mlp size"))
+                    .collect::<Result<_, _>>()?,
+            },
+            Some("bigram_lm") => ModelSpec::BigramLm { vocab: get_usize(mj, "vocab")? },
+            Some("mlp_lm") => ModelSpec::MlpLm {
+                vocab: get_usize(mj, "vocab")?,
+                hidden: get_usize(mj, "hidden")?,
+            },
+            Some("quadratic") => ModelSpec::Quadratic {
+                dim: get_usize(mj, "dim")?,
+                mu: get_f64(mj, "mu")?,
+                l: get_f64(mj, "l")?,
+                noise: get_f64(mj, "noise")?,
+            },
+            Some("artifact") => ModelSpec::Artifact {
+                name: mj.get("name").as_str().ok_or("artifact name")?.to_string(),
+            },
+            other => return Err(format!("unknown model type {other:?}")),
+        };
+
+        let dj = j.get("data");
+        let data = match dj.get("type").as_str() {
+            Some("gaussian_mixture") => DataSpec::GaussianMixture {
+                feat: get_usize(dj, "feat")?,
+                classes: get_usize(dj, "classes")?,
+                separation: get_f64(dj, "separation")?,
+                noise: get_f64(dj, "noise")?,
+                eval_size: get_usize(dj, "eval_size")?,
+            },
+            Some("markov_zipf") => DataSpec::MarkovZipf {
+                vocab: get_usize(dj, "vocab")?,
+                seq_len: get_usize(dj, "seq_len")?,
+                determinism: get_f64(dj, "determinism")?,
+                eval_size: get_usize(dj, "eval_size")?,
+            },
+            Some("synthetic") => DataSpec::Synthetic,
+            other => return Err(format!("unknown data type {other:?}")),
+        };
+
+        let sj = j.get("strategy");
+        let strategy = match sj.get("type").as_str() {
+            Some("constant") => BatchStrategy::Constant { b: get_u64(sj, "b")? },
+            Some("norm_test") => BatchStrategy::NormTest {
+                eta: get_f64(sj, "eta")?,
+                b0: get_u64(sj, "b0")?,
+                b_max: get_u64(sj, "b_max")?,
+            },
+            Some("exact_norm_test") => BatchStrategy::ExactNormTest {
+                eta: get_f64(sj, "eta")?,
+                b0: get_u64(sj, "b0")?,
+                b_max: get_u64(sj, "b_max")?,
+            },
+            Some("inner_product") => BatchStrategy::InnerProduct {
+                theta: get_f64(sj, "theta")?,
+                nu: sj.get("nu").as_f64(),
+                b0: get_u64(sj, "b0")?,
+                b_max: get_u64(sj, "b_max")?,
+            },
+            Some("staged") => BatchStrategy::Staged {
+                b0: get_u64(sj, "b0")?,
+                stages: sj
+                    .get("stages")
+                    .as_arr()
+                    .ok_or("stages")?
+                    .iter()
+                    .map(|p| {
+                        let a = p.as_arr().ok_or("stage pair")?;
+                        Ok((
+                            a[0].as_u64().ok_or("stage samples")?,
+                            a[1].as_u64().ok_or("stage batch")?,
+                        ))
+                    })
+                    .collect::<Result<_, String>>()?,
+            },
+            Some("geometric") => BatchStrategy::Geometric {
+                b0: get_u64(sj, "b0")?,
+                b_max: get_u64(sj, "b_max")?,
+                growth: get_f64(sj, "growth")?,
+                every_samples: get_u64(sj, "every_samples")?,
+            },
+            other => return Err(format!("unknown strategy type {other:?}")),
+        };
+
+        let yj = j.get("sync");
+        let sync = match yj.get("type").as_str() {
+            Some("fixed") => SyncSpec::FixedH { h: get_u64(yj, "h")? as u32 },
+            Some("post_local") => SyncSpec::PostLocal {
+                h_after: get_u64(yj, "h_after")? as u32,
+                switch_samples: get_u64(yj, "switch_samples")?,
+            },
+            Some("qsr") => SyncSpec::Qsr {
+                h_base: get_u64(yj, "h_base")? as u32,
+                h_max: get_u64(yj, "h_max")? as u32,
+                c: get_f64(yj, "c")?,
+            },
+            other => return Err(format!("unknown sync type {other:?}")),
+        };
+
+        Ok(RunConfig {
+            label: j.get("label").as_str().unwrap_or("run").to_string(),
+            model,
+            data,
+            strategy,
+            sync,
+            optim_kind: OptimKind::parse(j.get("optim").as_str().unwrap_or("sgd"))
+                .ok_or("bad optim")?,
+            lr_peak: get_f64(j, "lr_peak")?,
+            lr_base: get_f64(j, "lr_base")?,
+            warmup_frac: get_f64(j, "warmup_frac")?,
+            lr_scaling_base_batch: j.get("lr_scaling_base_batch").as_u64(),
+            m_workers: get_usize(j, "m_workers")?,
+            total_samples: get_u64(j, "total_samples")?,
+            eval_every_samples: get_u64(j, "eval_every_samples")?,
+            b_max_local: get_u64(j, "b_max_local")?,
+            seed: get_u64(j, "seed")?,
+            grad_clip: j.get("grad_clip").as_f64(),
+            weight_decay: get_f64(j, "weight_decay")?,
+            momentum: get_f64(j, "momentum")?,
+        })
+    }
+
+    /// Validate internal consistency; returns a list of problems (empty = ok).
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        if self.m_workers == 0 {
+            errs.push("m_workers must be >= 1".into());
+        }
+        if self.total_samples == 0 {
+            errs.push("total_samples must be positive".into());
+        }
+        if !(self.lr_peak > 0.0) {
+            errs.push("lr_peak must be positive".into());
+        }
+        if self.warmup_frac < 0.0 || self.warmup_frac >= 1.0 {
+            errs.push("warmup_frac must be in [0,1)".into());
+        }
+        match &self.strategy {
+            BatchStrategy::NormTest { eta, b0, b_max }
+            | BatchStrategy::ExactNormTest { eta, b0, b_max } => {
+                if !(*eta > 0.0 && *eta < 1.0) {
+                    errs.push(format!("eta {eta} must be in (0,1)"));
+                }
+                if b0 > b_max {
+                    errs.push("b0 > b_max".into());
+                }
+                if *b_max > self.b_max_local {
+                    errs.push("strategy b_max exceeds engine b_max_local".into());
+                }
+            }
+            BatchStrategy::Constant { b } => {
+                if *b > self.b_max_local {
+                    errs.push("constant batch exceeds b_max_local".into());
+                }
+            }
+            _ => {}
+        }
+        if matches!(self.model, ModelSpec::Quadratic { .. })
+            && !matches!(self.data, DataSpec::Synthetic)
+        {
+            errs.push("quadratic model requires synthetic data spec".into());
+        }
+        errs
+    }
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            label: "default".into(),
+            model: ModelSpec::Logistic { feat: 64, classes: 10, l2: 1e-4 },
+            data: DataSpec::GaussianMixture {
+                feat: 64,
+                classes: 10,
+                separation: 2.5,
+                noise: 1.2,
+                eval_size: 1024,
+            },
+            strategy: BatchStrategy::NormTest { eta: 0.8, b0: 32, b_max: 4096 },
+            sync: SyncSpec::FixedH { h: 16 },
+            optim_kind: OptimKind::Shb,
+            lr_peak: 0.05,
+            lr_base: 0.005,
+            warmup_frac: 0.1,
+            lr_scaling_base_batch: None,
+            m_workers: 4,
+            total_samples: 1_000_000,
+            eval_every_samples: 50_000,
+            b_max_local: 12_500,
+            seed: 1,
+            grad_clip: None,
+            weight_decay: 1e-4,
+            momentum: 0.9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn default_validates() {
+        assert!(RunConfig::default().validate().is_empty());
+    }
+
+    #[test]
+    fn json_roundtrip_default() {
+        let c = RunConfig::default();
+        let j = c.to_json();
+        let c2 = RunConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn json_roundtrip_all_variants() {
+        let mut c = RunConfig::default();
+        let models = vec![
+            ModelSpec::Mlp { sizes: vec![8, 16, 4] },
+            ModelSpec::Quadratic { dim: 10, mu: 0.1, l: 5.0, noise: 0.2 },
+            ModelSpec::Artifact { name: "tinylm".into() },
+        ];
+        let strategies = vec![
+            BatchStrategy::Constant { b: 128 },
+            BatchStrategy::ExactNormTest { eta: 0.9, b0: 8, b_max: 1000 },
+            BatchStrategy::InnerProduct { theta: 0.9, nu: Some(5.0), b0: 8, b_max: 1000 },
+            BatchStrategy::InnerProduct { theta: 0.9, nu: None, b0: 8, b_max: 1000 },
+            BatchStrategy::Staged { b0: 16, stages: vec![(100, 32), (200, 64)] },
+            BatchStrategy::Geometric { b0: 16, b_max: 512, growth: 2.0, every_samples: 1000 },
+        ];
+        let syncs = vec![
+            SyncSpec::PostLocal { h_after: 8, switch_samples: 500 },
+            SyncSpec::Qsr { h_base: 1, h_max: 64, c: 0.01 },
+        ];
+        for m in models {
+            c.model = m;
+            c.data = DataSpec::Synthetic;
+            for s in &strategies {
+                c.strategy = s.clone();
+                for y in &syncs {
+                    c.sync = y.clone();
+                    let j = c.to_json().to_string();
+                    let c2 = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+                    assert_eq!(c, c2, "roundtrip failed for {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_json_roundtrip_random_configs() {
+        prop::check(60, |rng: &mut Pcg64| {
+            let mut c = RunConfig::default();
+            c.seed = rng.next_u64() % 1_000_000;
+            c.m_workers = 1 + rng.below(8) as usize;
+            c.lr_peak = 0.001 + rng.next_f64();
+            c.total_samples = 1 + rng.below(1 << 30);
+            c.strategy = match rng.below(3) {
+                0 => BatchStrategy::Constant { b: 1 + rng.below(4096) },
+                1 => BatchStrategy::NormTest {
+                    eta: 0.1 + 0.8 * rng.next_f64(),
+                    b0: 1 + rng.below(64),
+                    b_max: 100 + rng.below(10_000),
+                },
+                _ => BatchStrategy::Geometric {
+                    b0: 1 + rng.below(64),
+                    b_max: 100 + rng.below(10_000),
+                    growth: 1.0 + rng.next_f64(),
+                    every_samples: 1 + rng.below(100_000),
+                },
+            };
+            let j = c.to_json().to_string();
+            let c2 = RunConfig::from_json(&Json::parse(&j).unwrap())
+                .map_err(|e| format!("parse: {e}"))?;
+            prop::assert_prop(c == c2, format!("mismatch for {j}"))
+        });
+    }
+
+    #[test]
+    fn validation_catches_errors() {
+        let mut c = RunConfig::default();
+        c.m_workers = 0;
+        c.strategy = BatchStrategy::NormTest { eta: 1.2, b0: 100, b_max: 10 };
+        let errs = c.validate();
+        assert!(errs.iter().any(|e| e.contains("m_workers")));
+        assert!(errs.iter().any(|e| e.contains("eta")));
+        assert!(errs.iter().any(|e| e.contains("b0 > b_max")));
+    }
+
+    #[test]
+    fn lr_scaling_applies_only_to_constant() {
+        let mut c = RunConfig::default();
+        c.lr_scaling_base_batch = Some(256);
+        c.strategy = BatchStrategy::Constant { b: 1024 };
+        c.m_workers = 4;
+        // global batch 4096 / base 256 = 16x
+        match c.lr_schedule() {
+            LrSchedule::WarmupCosine { peak, .. } => {
+                assert!((peak - 0.05 * 16.0).abs() < 1e-9)
+            }
+            _ => panic!(),
+        }
+        c.strategy = BatchStrategy::NormTest { eta: 0.8, b0: 32, b_max: 4096 };
+        match c.lr_schedule() {
+            LrSchedule::WarmupCosine { peak, .. } => assert!((peak - 0.05).abs() < 1e-12),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn optim_params_reflect_config() {
+        let mut c = RunConfig::default();
+        c.optim_kind = OptimKind::AdamW;
+        c.grad_clip = Some(1.0);
+        c.weight_decay = 0.1;
+        let p = c.optim_params();
+        assert_eq!(p.kind, OptimKind::AdamW);
+        assert_eq!(p.grad_clip, Some(1.0));
+        assert_eq!(p.weight_decay, 0.1);
+    }
+}

@@ -1,0 +1,128 @@
+//! Synthetic data substrates.
+//!
+//! The paper trains on CIFAR-10 / ImageNet / C4; none are available in this
+//! environment (repro band 0/5), so per DESIGN.md §4 we substitute generators
+//! that exercise the same code paths with controllable difficulty:
+//!
+//! - [`synth_image::GaussianMixture`] — C-class Gaussian mixture over `feat`
+//!   dimensions (flattened-image analogue). Class separation / noise control the
+//!   achievable accuracy so validation-accuracy curves are non-trivial.
+//! - [`synth_text::MarkovZipf`] — token stream with a learnable bigram backbone
+//!   mixed with Zipfian noise (C4 analogue): LM cross-entropy starts near
+//!   `ln(vocab)` and decreases with training toward the mixture entropy.
+//!
+//! Datasets are *virtual*: samples are generated on demand from a seeded RNG so a
+//! "30M-sample" training budget (paper Table 3) costs no memory. Sharding gives
+//! each worker an independent stream (i.i.d. setting of §5) or a disjoint
+//! class-skewed shard (heterogeneous extension).
+
+pub mod sampler;
+pub mod synth_image;
+pub mod synth_text;
+
+pub use sampler::ShardSpec;
+
+/// A materialized batch handed to `GradModel::grad`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Batch {
+    /// Dense features + integer labels: x is row-major [n, feat].
+    Dense { x: Vec<f32>, y: Vec<i32>, n: usize, feat: usize },
+    /// Token sequences: inputs and next-token targets, row-major [n, seq].
+    Tokens { x: Vec<i32>, y: Vec<i32>, n: usize, seq: usize },
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        match self {
+            Batch::Dense { n, .. } | Batch::Tokens { n, .. } => *n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Slice out rows [lo, hi) as a new batch (used for gradient accumulation).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Batch {
+        assert!(lo <= hi && hi <= self.len(), "bad slice [{lo},{hi}) of {}", self.len());
+        match self {
+            Batch::Dense { x, y, feat, .. } => Batch::Dense {
+                x: x[lo * feat..hi * feat].to_vec(),
+                y: y[lo..hi].to_vec(),
+                n: hi - lo,
+                feat: *feat,
+            },
+            Batch::Tokens { x, y, seq, .. } => Batch::Tokens {
+                x: x[lo * seq..hi * seq].to_vec(),
+                y: y[lo * seq..hi * seq].to_vec(),
+                n: hi - lo,
+                seq: *seq,
+            },
+        }
+    }
+}
+
+/// A data source a worker samples local batches from.
+pub trait Dataset: Send {
+    /// Draw a batch of exactly `b` samples (with replacement; the virtual
+    /// datasets are effectively infinite, matching the paper's multi-epoch
+    /// sampling over a finite set).
+    fn sample(&mut self, b: usize) -> Batch;
+
+    /// A fixed held-out evaluation set (same across workers and rounds).
+    fn eval_set(&self) -> &Batch;
+
+    /// Human-readable name for logs.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_slice_dense() {
+        let b = Batch::Dense {
+            x: (0..12).map(|i| i as f32).collect(),
+            y: vec![0, 1, 2, 3],
+            n: 4,
+            feat: 3,
+        };
+        let s = b.slice_rows(1, 3);
+        match s {
+            Batch::Dense { x, y, n, feat } => {
+                assert_eq!(n, 2);
+                assert_eq!(feat, 3);
+                assert_eq!(x, vec![3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+                assert_eq!(y, vec![1, 2]);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn batch_slice_tokens() {
+        let b = Batch::Tokens {
+            x: (0..8).collect(),
+            y: (10..18).collect(),
+            n: 4,
+            seq: 2,
+        };
+        let s = b.slice_rows(2, 4);
+        match s {
+            Batch::Tokens { x, y, n, .. } => {
+                assert_eq!(n, 2);
+                assert_eq!(x, vec![4, 5, 6, 7]);
+                assert_eq!(y, vec![14, 15, 16, 17]);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bad slice")]
+    fn batch_slice_oob() {
+        let b = Batch::Dense { x: vec![], y: vec![], n: 0, feat: 1 };
+        b.slice_rows(0, 1);
+    }
+}

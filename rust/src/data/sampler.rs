@@ -1,0 +1,95 @@
+//! Data sharding across workers.
+//!
+//! The paper's analysis (§5) assumes the i.i.d. homogeneous setting — every
+//! worker samples from the same distribution. The heterogeneous extension the
+//! paper motivates in §3.1 (non-i.i.d. `P_m`) is supported through `ShardSpec`:
+//! a per-worker class-probability reweighting (Dirichlet-style label skew, the
+//! standard federated-learning heterogeneity model).
+
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShardSpec {
+    /// Uniform over all classes — the paper's homogeneous setting.
+    Iid,
+    /// Class-weighted sampling (weights need not be normalized).
+    Weighted(Vec<f64>),
+}
+
+impl ShardSpec {
+    pub fn iid() -> Self {
+        ShardSpec::Iid
+    }
+
+    /// Label-skew shard: worker `w` of `m` sees its "own" classes boosted by
+    /// `skew >= 1` (skew = 1 is i.i.d.; large skew approaches disjoint shards).
+    pub fn label_skew(worker: usize, m_workers: usize, classes: usize, skew: f64) -> Self {
+        assert!(m_workers > 0 && classes > 0);
+        let mut w = vec![1.0f64; classes];
+        for (c, wc) in w.iter_mut().enumerate() {
+            if c % m_workers == worker % m_workers {
+                *wc = skew;
+            }
+        }
+        ShardSpec::Weighted(w)
+    }
+
+    pub fn draw_class(&self, rng: &mut Pcg64, classes: usize) -> usize {
+        match self {
+            ShardSpec::Iid => rng.below(classes as u64) as usize,
+            ShardSpec::Weighted(w) => {
+                assert_eq!(w.len(), classes, "shard weights length");
+                let total: f64 = w.iter().sum();
+                let mut u = rng.next_f64() * total;
+                for (c, wc) in w.iter().enumerate() {
+                    if u < *wc {
+                        return c;
+                    }
+                    u -= wc;
+                }
+                classes - 1
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iid_covers_all_classes() {
+        let s = ShardSpec::iid();
+        let mut rng = Pcg64::new(3, 0);
+        let mut seen = vec![false; 5];
+        for _ in 0..500 {
+            seen[s.draw_class(&mut rng, 5)] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn label_skew_biases_own_classes() {
+        let s = ShardSpec::label_skew(0, 4, 8, 50.0); // worker 0 owns classes 0, 4
+        let mut rng = Pcg64::new(3, 0);
+        let mut counts = vec![0usize; 8];
+        for _ in 0..4000 {
+            counts[s.draw_class(&mut rng, 8)] += 1;
+        }
+        let own = counts[0] + counts[4];
+        assert!(own > 3000, "own-class draws {own}/4000");
+    }
+
+    #[test]
+    fn skew_one_is_uniform() {
+        let s = ShardSpec::label_skew(1, 4, 4, 1.0);
+        let mut rng = Pcg64::new(9, 0);
+        let mut counts = vec![0usize; 4];
+        for _ in 0..8000 {
+            counts[s.draw_class(&mut rng, 4)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 2000.0).abs() < 300.0, "count {c}");
+        }
+    }
+}

@@ -1,0 +1,407 @@
+//! The Local SGD engine — Algorithm A.2 of the paper, generalized over model,
+//! dataset, optimizer, batch-size controller, and sync scheduler.
+//!
+//! One communication round k:
+//!   1. each worker m runs H local steps: sample B^m of size b_k, compute the
+//!      batch gradient, inner-optimizer update with lr α(B) (sample-indexed);
+//!   2. all-reduce **average the model parameters** (eq. 3) and, when the
+//!      controller requires it, the workers' last batch gradients ḡ (the one
+//!      extra all-reduce of §4.3);
+//!   3. evaluate the norm-test statistics and ask the controller for b_{k+1};
+//!   4. advance the processed-samples counter B += H·M·b_k; stop when B ≥ N.
+//!
+//! Workers execute sequentially in-process (deterministic); the *simulated*
+//! wall-clock ([`crate::sim::TimeModel`]) charges them as parallel devices with
+//! a straggler max, which is what the tables report.
+
+use crate::batch::{BatchSizeController, SyncEvent};
+use crate::collective::{allreduce_mean_serial, allreduce_mean_threaded};
+use crate::data::Dataset;
+use crate::engine::sync::SyncScheduler;
+use crate::metrics::{EvalPoint, RunRecord};
+use crate::model::GradModel;
+use crate::optim::{LrSchedule, OptimParams};
+use crate::sim::TimeModel;
+use crate::tensor;
+use crate::util::rng::Pcg64;
+
+pub struct EngineOpts {
+    pub scheduler: Box<dyn SyncScheduler>,
+    pub controller: Box<dyn BatchSizeController>,
+    pub optim: OptimParams,
+    pub lr: LrSchedule,
+    /// Total training budget N in samples (global, across workers).
+    pub total_samples: u64,
+    /// Evaluate every this many processed samples (0 = only at the end).
+    pub eval_every_samples: u64,
+    /// Hard cap on the local batch size (device memory; engine-level guard in
+    /// addition to the controller's own cap).
+    pub b_max_local: u64,
+    pub seed: u64,
+    pub time_model: TimeModel,
+    pub label: String,
+    /// Safety valve for property tests.
+    pub max_rounds: u64,
+    /// Use the threaded ring all-reduce for parameter averaging (exercised for
+    /// large d; serial reference otherwise).
+    pub threaded_allreduce: bool,
+}
+
+impl EngineOpts {
+    pub fn quick_defaults(label: &str, total_samples: u64) -> Self {
+        EngineOpts {
+            scheduler: Box::new(crate::engine::sync::FixedH::new(4)),
+            controller: Box::new(crate::batch::ConstantSchedule::new(32)),
+            optim: OptimParams::plain_sgd(),
+            lr: LrSchedule::Constant { lr: 0.05 },
+            total_samples,
+            eval_every_samples: total_samples / 8,
+            b_max_local: 1 << 20,
+            seed: 1,
+            time_model: TimeModel::paper_vision(crate::collective::Topology::paper_default()),
+            label: label.to_string(),
+            max_rounds: 1_000_000,
+            threaded_allreduce: false,
+        }
+    }
+}
+
+/// Run Local SGD over `workers` (one model+dataset pair per worker).
+pub fn run_local_sgd(
+    models: &mut [Box<dyn GradModel>],
+    datasets: &mut [Box<dyn Dataset>],
+    mut opts: EngineOpts,
+) -> RunRecord {
+    let m = models.len();
+    assert!(m >= 1, "need at least one worker");
+    assert_eq!(m, datasets.len(), "models/datasets count mismatch");
+    assert_eq!(
+        m, opts.time_model.topo.m_workers,
+        "topology workers != engine workers"
+    );
+    let d = models[0].dim();
+    for mm in models.iter() {
+        assert_eq!(mm.dim(), d, "heterogeneous model dims");
+    }
+    let micro = models.iter().map(|mm| mm.micro_batch()).max().unwrap().max(1) as u64;
+
+    let wall_start = std::time::Instant::now();
+    let mut rng = Pcg64::new(opts.seed, 0);
+    // Same x_0 on every worker (Algorithm A.2 input).
+    let x0 = models[0].init_params(&mut rng);
+    let mut params: Vec<Vec<f32>> = (0..m).map(|_| x0.clone()).collect();
+    let mut opt_states: Vec<_> = (0..m).map(|_| opts.optim.build(d)).collect();
+    let mut grads: Vec<Vec<f32>> = (0..m).map(|_| vec![0.0f32; d]).collect();
+    let mut gbar = vec![0.0f32; d];
+
+    let mut rec = RunRecord {
+        label: opts.label.clone(),
+        ..Default::default()
+    };
+    let mut b_local = opts.controller.b0().min(opts.b_max_local).max(1);
+    let mut samples: u64 = 0;
+    let mut steps: u64 = 0;
+    let mut sim_time = 0f64;
+    let mut next_eval = if opts.eval_every_samples == 0 {
+        u64::MAX
+    } else {
+        opts.eval_every_samples
+    };
+    let mut weighted_b: f64 = 0.0; // Σ h_k · b_k (per-worker step-weighted)
+    let mut total_local_steps: f64 = 0.0;
+    let mut last_losses = vec![0f64; m];
+    let mut last_psv: Vec<Option<f64>> = vec![None; m];
+    let needs_grad_ar = opts.controller.needs_grad_allreduce();
+
+    let mut round: u64 = 0;
+    while samples < opts.total_samples && round < opts.max_rounds {
+        let lr_now = opts.lr.at(samples);
+        let h = opts.scheduler.h_for_round(round, samples, lr_now);
+        // Quantize to the artifact micro-batch (gradient accumulation granularity).
+        let b_eff = b_local.div_ceil(micro) * micro;
+
+        // ---- H local steps on each worker ---------------------------------
+        for hs in 0..h {
+            // lr indexed by samples processed so far this round
+            let lr = opts.lr.at(samples + hs as u64 * (m as u64) * b_eff);
+            for w in 0..m {
+                let batch = datasets[w].sample(b_eff as usize);
+                let stats = models[w].grad(&params[w], &batch, &mut grads[w]);
+                opt_states[w].step(&mut params[w], &grads[w], lr);
+                last_losses[w] = stats.loss;
+                last_psv[w] = stats.per_sample_var;
+            }
+        }
+        steps += h as u64;
+        samples += h as u64 * m as u64 * b_eff;
+        weighted_b += h as f64 * b_eff as f64;
+        total_local_steps += h as f64;
+
+        // ---- synchronization: average parameters (eq. 3) -------------------
+        {
+            let mut bufs: Vec<&mut [f32]> = params.iter_mut().map(|p| p.as_mut_slice()).collect();
+            if opts.threaded_allreduce && m > 1 {
+                allreduce_mean_threaded(&mut bufs);
+            } else {
+                allreduce_mean_serial(&mut bufs);
+            }
+        }
+        rec.comm.charge_allreduce(d, m);
+        rec.comm.rounds += 1;
+
+        // ---- norm-test statistics over last local gradients ----------------
+        // (the gradient all-reduce of §4.3 — charged only when needed)
+        let grad_refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let (scatter, nsq) = match models[0].norm_stats(&grad_refs, &mut gbar) {
+            Some(x) => x,
+            None => tensor::norm_test_stats(&grad_refs, &mut gbar),
+        };
+        if needs_grad_ar {
+            rec.comm.charge_allreduce(d, m);
+        }
+        let mean_worker_norm_sq =
+            grad_refs.iter().map(|g| tensor::norm_sq(g)).sum::<f64>() / m as f64;
+        let ip_var = if m > 1 {
+            let dots: Vec<f64> = grad_refs.iter().map(|g| tensor::dot(g, &gbar)).collect();
+            let mean_dot = dots.iter().sum::<f64>() / m as f64;
+            dots.iter().map(|t| (t - mean_dot).powi(2)).sum::<f64>() / (m - 1) as f64
+        } else {
+            0.0
+        };
+        let psv = {
+            let vals: Vec<f64> = last_psv.iter().filter_map(|v| *v).collect();
+            if vals.len() == m {
+                Some(vals.iter().sum::<f64>() / m as f64)
+            } else {
+                None
+            }
+        };
+
+        let ev = SyncEvent {
+            round,
+            samples,
+            b_local: b_eff,
+            m_workers: m,
+            worker_scatter: scatter,
+            gbar_norm_sq: nsq,
+            per_sample_var: psv,
+            mean_worker_norm_sq,
+            inner_product_var: ip_var,
+        };
+        let decision = opts.controller.on_sync(&ev);
+        b_local = decision.b_next.min(opts.b_max_local).max(1);
+        rec.batch_trace.push((round, samples, b_eff));
+
+        // ---- simulated wall-clock ------------------------------------------
+        sim_time += opts.time_model.round_compute_time(b_eff, h);
+        sim_time += opts.time_model.sync_time(d, needs_grad_ar);
+
+        // ---- evaluation ------------------------------------------------------
+        if samples >= next_eval || samples >= opts.total_samples {
+            let evs = models[0].eval(&params[0], datasets[0].eval_set());
+            rec.points.push(EvalPoint {
+                step: steps,
+                round,
+                samples,
+                sim_time_s: sim_time,
+                b_local: b_eff,
+                train_loss: last_losses.iter().sum::<f64>() / m as f64,
+                val_loss: evs.loss,
+                val_acc: evs.accuracy,
+                val_top5: evs.top5,
+            });
+            while next_eval <= samples {
+                next_eval = next_eval.saturating_add(opts.eval_every_samples.max(1));
+            }
+        }
+
+        if !tensor::all_finite(&params[0]) {
+            rec.diverged = true;
+            break;
+        }
+        round += 1;
+    }
+
+    rec.total_steps = steps;
+    rec.total_rounds = round;
+    rec.total_samples = samples;
+    rec.sim_time_s = sim_time;
+    rec.wall_time_s = wall_start.elapsed().as_secs_f64();
+    rec.avg_local_batch = if total_local_steps > 0.0 {
+        weighted_b / total_local_steps
+    } else {
+        0.0
+    };
+    rec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::{ApproxNormTest, ConstantSchedule, ExactNormTest};
+    use crate::collective::Topology;
+    use crate::data::synth_image::{GaussianMixture, GaussianMixtureSpec};
+    use crate::engine::sync::FixedH;
+    use crate::model::convex::Quadratic;
+    use crate::model::logistic::Logistic;
+
+    fn quad_workers(m: usize, noise: f64) -> (Vec<Box<dyn GradModel>>, Vec<Box<dyn Dataset>>) {
+        // Shared problem (seed 100) — the homogeneous setting; only the
+        // gradient-noise streams differ per worker.
+        let models: Vec<Box<dyn GradModel>> = (0..m)
+            .map(|w| {
+                let mut q = Quadratic::new(16, 0.5, 5.0, noise, 100);
+                q.set_noise_stream(100, w as u64);
+                Box::new(q) as _
+            })
+            .collect();
+        let datasets: Vec<Box<dyn Dataset>> = (0..m)
+            .map(|w| {
+                Box::new(GaussianMixture::new(
+                    GaussianMixtureSpec { feat: 4, classes: 2, eval_size: 8, ..Default::default() },
+                    Pcg64::new(7, w as u64),
+                )) as _
+            })
+            .collect();
+        (models, datasets)
+    }
+
+    fn opts(m: usize, n: u64) -> EngineOpts {
+        let mut o = EngineOpts::quick_defaults("t", n);
+        o.time_model = TimeModel::paper_vision(Topology::homogeneous(m));
+        o.lr = LrSchedule::Constant { lr: 0.02 };
+        o
+    }
+
+    #[test]
+    fn quadratic_converges_under_local_sgd() {
+        let (mut models, mut data) = quad_workers(4, 0.1);
+        let mut o = opts(4, 40_000);
+        o.scheduler = Box::new(FixedH::new(8));
+        o.controller = Box::new(ConstantSchedule::new(16));
+        let rec = run_local_sgd(&mut models, &mut data, o);
+        assert!(!rec.diverged);
+        let first = rec.points.first().unwrap().val_loss;
+        let last = rec.points.last().unwrap().val_loss;
+        assert!(last < first * 0.1, "no convergence: {first} -> {last}");
+    }
+
+    #[test]
+    fn sample_accounting_exact_for_constant() {
+        let (mut models, mut data) = quad_workers(2, 0.0);
+        let mut o = opts(2, 10_000);
+        o.scheduler = Box::new(FixedH::new(4));
+        o.controller = Box::new(ConstantSchedule::new(25));
+        let rec = run_local_sgd(&mut models, &mut data, o);
+        // each round: 4 steps * 2 workers * 25 = 200 samples
+        assert_eq!(rec.total_samples % 200, 0);
+        assert!(rec.total_samples >= 10_000);
+        assert_eq!(rec.total_steps, rec.total_rounds * 4);
+        assert_eq!(rec.avg_local_batch, 25.0);
+    }
+
+    #[test]
+    fn adaptive_batches_are_monotone() {
+        let (mut models, mut data) = quad_workers(4, 1.0);
+        let mut o = opts(4, 60_000);
+        o.scheduler = Box::new(FixedH::new(4));
+        o.controller = Box::new(ApproxNormTest::new(0.8, 8, 512));
+        let rec = run_local_sgd(&mut models, &mut data, o);
+        let mut prev = 0u64;
+        for &(_, _, b) in &rec.batch_trace {
+            assert!(b >= prev, "batch shrank: {prev} -> {b}");
+            prev = b;
+        }
+        assert!(prev <= 512);
+        // noisy gradients must trigger growth at some point
+        assert!(prev > 8, "batch never grew");
+    }
+
+    #[test]
+    fn exact_test_grows_batches_on_logistic() {
+        let m = 4;
+        let spec = GaussianMixtureSpec {
+            feat: 12,
+            classes: 3,
+            separation: 2.0,
+            noise: 1.2,
+            eval_size: 128,
+            data_seed: 33,
+        };
+        let mut models: Vec<Box<dyn GradModel>> = (0..m)
+            .map(|_| Box::new(Logistic::new(12, 3, 1e-4)) as _)
+            .collect();
+        let mut data: Vec<Box<dyn Dataset>> = (0..m)
+            .map(|w| Box::new(GaussianMixture::new(spec.clone(), Pcg64::new(9, w as u64))) as _)
+            .collect();
+        let mut o = opts(m, 40_000);
+        o.lr = LrSchedule::Constant { lr: 0.05 };
+        o.scheduler = Box::new(FixedH::new(4));
+        o.controller = Box::new(ExactNormTest::new(0.7, 4, 4096));
+        let rec = run_local_sgd(&mut models, &mut data, o);
+        let last_b = rec.batch_trace.last().unwrap().2;
+        assert!(last_b > 4, "exact test never grew the batch");
+        assert!(!rec.diverged);
+    }
+
+    #[test]
+    fn comm_accounting_matches_controller_needs() {
+        let (mut models, mut data) = quad_workers(2, 0.1);
+        let mut o = opts(2, 5_000);
+        o.controller = Box::new(ConstantSchedule::new(16));
+        let rec_const = run_local_sgd(&mut models, &mut data, o);
+        // constant: exactly one all-reduce per round
+        assert_eq!(rec_const.comm.allreduce_calls, rec_const.total_rounds);
+
+        let (mut models, mut data) = quad_workers(2, 0.1);
+        let mut o = opts(2, 5_000);
+        o.controller = Box::new(ApproxNormTest::new(0.9, 16, 64));
+        let rec_nt = run_local_sgd(&mut models, &mut data, o);
+        // norm test: two all-reduces per round
+        assert_eq!(rec_nt.comm.allreduce_calls, 2 * rec_nt.total_rounds);
+    }
+
+    #[test]
+    fn h1_equals_minibatch_semantics() {
+        // With H=1 every step synchronizes: parameters across workers are
+        // identical after every round.
+        let (mut models, mut data) = quad_workers(3, 0.2);
+        let mut o = opts(3, 3_000);
+        o.scheduler = Box::new(FixedH::new(1));
+        o.controller = Box::new(ConstantSchedule::new(8));
+        let rec = run_local_sgd(&mut models, &mut data, o);
+        assert_eq!(rec.total_steps, rec.total_rounds);
+        assert!(!rec.diverged);
+    }
+
+    #[test]
+    fn threaded_allreduce_path_works() {
+        let (mut models, mut data) = quad_workers(4, 0.1);
+        let mut o = opts(4, 8_000);
+        o.threaded_allreduce = true;
+        o.controller = Box::new(ConstantSchedule::new(16));
+        let rec = run_local_sgd(&mut models, &mut data, o);
+        assert!(!rec.diverged);
+        assert!(rec.points.last().unwrap().val_loss.is_finite());
+    }
+
+    #[test]
+    fn max_rounds_guard() {
+        let (mut models, mut data) = quad_workers(2, 0.0);
+        let mut o = opts(2, u64::MAX);
+        o.max_rounds = 5;
+        let rec = run_local_sgd(&mut models, &mut data, o);
+        assert_eq!(rec.total_rounds, 5);
+    }
+
+    #[test]
+    fn sim_time_accumulates() {
+        let (mut models, mut data) = quad_workers(2, 0.1);
+        let mut o = opts(2, 5_000);
+        o.controller = Box::new(ConstantSchedule::new(16));
+        let rec = run_local_sgd(&mut models, &mut data, o);
+        assert!(rec.sim_time_s > 0.0);
+        let per_round = rec.sim_time_s / rec.total_rounds as f64;
+        assert!(per_round > 0.0 && per_round.is_finite());
+    }
+}

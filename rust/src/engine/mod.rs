@@ -1,0 +1,8 @@
+//! Distributed training engine: Local SGD (Algorithm A.2), synchronization
+//! schedulers, and the worker/leader loop.
+
+pub mod local_sgd;
+pub mod sync;
+
+pub use local_sgd::{run_local_sgd, EngineOpts};
+pub use sync::{FixedH, PostLocal, Qsr, SyncScheduler};

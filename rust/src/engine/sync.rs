@@ -1,0 +1,136 @@
+//! Synchronization schedulers: how many local steps H before the next
+//! model-averaging round.
+//!
+//! - [`FixedH`] — the paper's setting (H ∈ {32, 16, 4, 1}; H = 1 is synchronized
+//!   minibatch SGD).
+//! - [`PostLocal`] — Lin et al. (2020): frequent sync early (H = 1), switch to
+//!   Local SGD after a sample threshold.
+//! - [`Qsr`] — Gu et al. (2024) Quadratic Synchronization Rule: H grows as the
+//!   learning rate decays, H_k = max(H_base, ⌈(c / lr_k)^(2/3)⌉) per the paper's
+//!   growth exponent (H ∝ η^{-2/3} in their parameterization; we expose the
+//!   exponent).
+//!
+//! These drive the sync-scheduler ablation (AB3 in DESIGN.md §4).
+
+pub trait SyncScheduler: Send {
+    /// Number of local steps for round `round` starting at `samples` processed,
+    /// given the current learning rate.
+    fn h_for_round(&mut self, round: u64, samples: u64, lr: f64) -> u32;
+
+    fn name(&self) -> String;
+}
+
+#[derive(Debug, Clone)]
+pub struct FixedH {
+    pub h: u32,
+}
+
+impl FixedH {
+    pub fn new(h: u32) -> Self {
+        assert!(h >= 1, "H must be >= 1");
+        FixedH { h }
+    }
+}
+
+impl SyncScheduler for FixedH {
+    fn h_for_round(&mut self, _round: u64, _samples: u64, _lr: f64) -> u32 {
+        self.h
+    }
+
+    fn name(&self) -> String {
+        format!("H={}", self.h)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PostLocal {
+    pub h_after: u32,
+    pub switch_samples: u64,
+}
+
+impl PostLocal {
+    pub fn new(h_after: u32, switch_samples: u64) -> Self {
+        assert!(h_after >= 1);
+        PostLocal { h_after, switch_samples }
+    }
+}
+
+impl SyncScheduler for PostLocal {
+    fn h_for_round(&mut self, _round: u64, samples: u64, _lr: f64) -> u32 {
+        if samples < self.switch_samples {
+            1
+        } else {
+            self.h_after
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("post_local(H={} after {})", self.h_after, self.switch_samples)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Qsr {
+    pub h_base: u32,
+    pub h_max: u32,
+    /// Growth coefficient c: H = max(h_base, (c / lr)^exponent).
+    pub c: f64,
+    pub exponent: f64,
+}
+
+impl Qsr {
+    pub fn new(h_base: u32, h_max: u32, c: f64) -> Self {
+        assert!(h_base >= 1 && h_max >= h_base && c > 0.0);
+        Qsr { h_base, h_max, c, exponent: 2.0 / 3.0 }
+    }
+}
+
+impl SyncScheduler for Qsr {
+    fn h_for_round(&mut self, _round: u64, _samples: u64, lr: f64) -> u32 {
+        if lr <= 0.0 {
+            return self.h_max;
+        }
+        let h = (self.c / lr).powf(self.exponent).ceil();
+        (h as u32).clamp(self.h_base, self.h_max)
+    }
+
+    fn name(&self) -> String {
+        format!("qsr(c={},base={},max={})", self.c, self.h_base, self.h_max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_is_fixed() {
+        let mut s = FixedH::new(16);
+        assert_eq!(s.h_for_round(0, 0, 0.1), 16);
+        assert_eq!(s.h_for_round(99, 1 << 30, 1e-9), 16);
+    }
+
+    #[test]
+    fn post_local_switches() {
+        let mut s = PostLocal::new(8, 1000);
+        assert_eq!(s.h_for_round(0, 0, 0.1), 1);
+        assert_eq!(s.h_for_round(5, 999, 0.1), 1);
+        assert_eq!(s.h_for_round(6, 1000, 0.1), 8);
+    }
+
+    #[test]
+    fn qsr_grows_as_lr_decays() {
+        let mut s = Qsr::new(1, 64, 0.01);
+        let h_hi = s.h_for_round(0, 0, 0.1);
+        let h_lo = s.h_for_round(0, 0, 0.001);
+        assert!(h_lo > h_hi, "H should grow as lr decays: {h_hi} -> {h_lo}");
+        assert!(h_lo <= 64);
+        assert_eq!(s.h_for_round(0, 0, 0.0), 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "H must be >= 1")]
+    fn fixed_rejects_zero() {
+        FixedH::new(0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Figure regenerators — validation-metric and local-batch-size curves per
+//! (H, η), matching the panel layout of the paper's Figures 1/3/4/5 (CIFAR),
+//! 2/6/7 (C4) and 8–10 (ImageNet).
+//!
+//! Each harness runs the corresponding table grid (adaptive schedules only,
+//! plus the small/large constant references), writes the series CSVs under
+//! `results/<figure>/`, and prints compact ASCII sparkline summaries so the
+//! curve *shape* is reviewable from the terminal (EXPERIMENTS.md embeds these).
+
+use crate::config::{BatchStrategy, RunConfig, SyncSpec};
+use crate::exp::run_config;
+use crate::exp::tables::{t1_base, t2_base};
+use crate::metrics::RunRecord;
+use std::path::Path;
+
+/// Unicode sparkline of a numeric series (8 levels).
+pub fn sparkline(xs: &[f64]) -> String {
+    const TICKS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if xs.is_empty() {
+        return String::new();
+    }
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &x in xs {
+        if x.is_finite() {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+    }
+    if !lo.is_finite() || hi - lo < 1e-12 {
+        return TICKS[0].to_string().repeat(xs.len());
+    }
+    xs.iter()
+        .map(|&x| {
+            let t = ((x - lo) / (hi - lo) * 7.0).round().clamp(0.0, 7.0) as usize;
+            TICKS[t]
+        })
+        .collect()
+}
+
+/// Downsample a series to at most `n` points (uniform stride).
+fn thin(xs: &[f64], n: usize) -> Vec<f64> {
+    if xs.len() <= n {
+        return xs.to_vec();
+    }
+    let stride = xs.len() as f64 / n as f64;
+    (0..n).map(|i| xs[(i as f64 * stride) as usize]).collect()
+}
+
+fn describe(rec: &RunRecord, vision: bool) -> String {
+    let metric: Vec<f64> = rec
+        .points
+        .iter()
+        .map(|p| if vision { p.val_acc * 100.0 } else { p.val_loss })
+        .collect();
+    let bsz: Vec<f64> = rec.batch_trace.iter().map(|&(_, _, b)| b as f64).collect();
+    format!(
+        "{:<22} {} {}  [{} -> {:.2}]   bsz {} [{} -> {}]\n",
+        rec.label,
+        if vision { "acc" } else { "loss" },
+        sparkline(&thin(&metric, 40)),
+        metric.first().map(|v| format!("{v:.2}")).unwrap_or_default(),
+        metric.last().copied().unwrap_or(f64::NAN),
+        sparkline(&thin(&bsz, 40)),
+        bsz.first().map(|v| format!("{v:.0}")).unwrap_or_default(),
+        bsz.last().map(|v| format!("{v:.0}")).unwrap_or_default(),
+    )
+}
+
+fn run_grid(
+    base: &RunConfig,
+    hs: &[u32],
+    strategies: &[(String, BatchStrategy)],
+    vision: bool,
+    out_dir: &Path,
+    title: &str,
+) -> anyhow::Result<String> {
+    let mut out = format!("## {title}\n\n");
+    for &h in hs {
+        out.push_str(&format!("### H = {h}\n"));
+        for (name, strat) in strategies {
+            let mut c = base.clone();
+            c.sync = SyncSpec::FixedH { h };
+            c.strategy = strat.clone();
+            c.label = format!("{}_H{}", name.replace([' ', '='], "_"), h);
+            let rec = run_config(&c)?;
+            rec.write_to(out_dir)?;
+            out.push_str(&describe(&rec, vision));
+            eprintln!("  done {}", rec.label);
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!("series CSVs written under {}\n", out_dir.display()));
+    Ok(out)
+}
+
+/// Figure 1 (+3,4,5): validation accuracy & local batch sizes, CIFAR analogue.
+pub fn figure1(scale: f64, out_dir: &Path) -> anyhow::Result<String> {
+    let (base, _, _, b_max) = t1_base(scale);
+    let strategies = vec![
+        ("const 512".to_string(), BatchStrategy::Constant { b: 512 }),
+        ("const 1562".to_string(), BatchStrategy::Constant { b: 1562 }),
+        ("eta=0.8".to_string(), BatchStrategy::NormTest { eta: 0.8, b0: 64, b_max }),
+        ("eta=0.85".to_string(), BatchStrategy::NormTest { eta: 0.85, b0: 64, b_max }),
+        ("eta=0.9".to_string(), BatchStrategy::NormTest { eta: 0.9, b0: 64, b_max }),
+    ];
+    run_grid(
+        &base,
+        &[32, 16, 4, 1],
+        &strategies,
+        true,
+        out_dir,
+        "Figure 1 — val acc & local batch size curves (synthetic-CIFAR, Local SHB)",
+    )
+}
+
+/// Figure 2 (+6,7): validation loss & local batch sizes, C4 analogue.
+pub fn figure2(scale: f64, out_dir: &Path) -> anyhow::Result<String> {
+    let (base, _, _, b_max) = t2_base(scale);
+    let strategies = vec![
+        ("const 128".to_string(), BatchStrategy::Constant { b: 128 }),
+        ("const 512".to_string(), BatchStrategy::Constant { b: 512 }),
+        ("eta=0.8".to_string(), BatchStrategy::NormTest { eta: 0.8, b0: 16, b_max }),
+        ("eta=0.9".to_string(), BatchStrategy::NormTest { eta: 0.9, b0: 16, b_max }),
+    ];
+    run_grid(
+        &base,
+        &[32, 16, 4],
+        &strategies,
+        false,
+        out_dir,
+        "Figure 2 — val loss & local batch size curves (synthetic-C4, Local AdamW)",
+    )
+}
+
+/// Figures 8–10: ImageNet-analogue accuracy/top-5/batch curves per H.
+pub fn figure8(scale: f64, out_dir: &Path) -> anyhow::Result<String> {
+    let n = (1_500_000f64 * scale).max(1.0) as u64;
+    let b_max = 812u64;
+    let mut base = RunConfig::default();
+    base.strategy = BatchStrategy::Constant { b: 64 }; // grid overrides per cell
+    base.model = crate::config::ModelSpec::Mlp { sizes: vec![96, 64, 100] };
+    base.data = crate::config::DataSpec::GaussianMixture {
+        feat: 96,
+        classes: 100,
+        separation: 2.8,
+        noise: 1.0,
+        eval_size: 4096,
+    };
+    base.optim_kind = crate::optim::OptimKind::Shb;
+    base.lr_peak = 0.05;
+    base.lr_base = 0.005;
+    base.warmup_frac = 0.025;
+    base.lr_scaling_base_batch = Some(32);
+    base.total_samples = n;
+    base.eval_every_samples = (n / 40).max(1);
+    base.b_max_local = b_max;
+    let strategies = vec![
+        ("const 375".to_string(), BatchStrategy::Constant { b: 375 }),
+        ("const 812".to_string(), BatchStrategy::Constant { b: 812 }),
+        ("eta=0.9".to_string(), BatchStrategy::NormTest { eta: 0.9, b0: 32, b_max }),
+        ("eta=0.95".to_string(), BatchStrategy::NormTest { eta: 0.95, b0: 32, b_max }),
+    ];
+    run_grid(
+        &base,
+        &[32, 16, 4],
+        &strategies,
+        true,
+        out_dir,
+        "Figures 8-10 — acc/top-5/batch curves (synthetic-ImageNet, Local SHB)",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparkline_shapes() {
+        assert_eq!(sparkline(&[]), "");
+        assert_eq!(sparkline(&[1.0, 1.0, 1.0]), "▁▁▁");
+        let s = sparkline(&[0.0, 0.5, 1.0]);
+        assert_eq!(s.chars().count(), 3);
+        assert!(s.starts_with('▁') && s.ends_with('█'));
+    }
+
+    #[test]
+    fn sparkline_monotone_series() {
+        let xs: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        let s: Vec<char> = sparkline(&xs).chars().collect();
+        for w in s.windows(2) {
+            assert!(w[1] as u32 >= w[0] as u32);
+        }
+    }
+
+    #[test]
+    fn thin_preserves_len_bound() {
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        assert_eq!(thin(&xs, 40).len(), 40);
+        assert_eq!(thin(&xs[..10], 40).len(), 10);
+    }
+
+    #[test]
+    fn figure1_smoke() {
+        let dir = std::env::temp_dir().join("adaloco_fig_smoke");
+        let (mut base, _, _, b_max) = t1_base(0.004);
+        base.eval_every_samples = 2_000;
+        let strategies =
+            vec![("eta=0.8".to_string(), BatchStrategy::NormTest { eta: 0.8, b0: 64, b_max })];
+        let s = run_grid(&base, &[4], &strategies, true, &dir, "smoke").unwrap();
+        assert!(s.contains("H = 4"));
+        assert!(s.contains("eta_0.8_H4"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,256 @@
+//! Experiment harness: build workers from a [`RunConfig`], run it, and
+//! regenerate every table and figure of the paper (see DESIGN.md §4 for the
+//! experiment index and the substitutions).
+
+pub mod figures;
+pub mod tables;
+pub mod theory;
+
+use crate::config::{DataSpec, ModelSpec, RunConfig};
+use crate::data::synth_image::{GaussianMixture, GaussianMixtureSpec};
+use crate::data::synth_text::{MarkovZipf, MarkovZipfSpec};
+use crate::data::{Batch, Dataset};
+use crate::engine::{run_local_sgd, EngineOpts};
+use crate::metrics::RunRecord;
+use crate::model::bigram_lm::BigramLm;
+use crate::model::mlp_lm::MlpLm;
+use crate::model::convex::Quadratic;
+use crate::model::logistic::Logistic;
+use crate::model::mlp::Mlp;
+use crate::model::GradModel;
+use crate::runtime::{PjrtModel, PjrtRuntime};
+use crate::sim::TimeModel;
+use crate::util::rng::Pcg64;
+
+/// Dataset that only conveys a batch SIZE (models that synthesize their own
+/// stochasticity, i.e. the quadratic suite).
+pub struct NullDataset {
+    eval: Batch,
+}
+
+impl Default for NullDataset {
+    fn default() -> Self {
+        NullDataset { eval: Batch::Dense { x: vec![], y: vec![], n: 1, feat: 0 } }
+    }
+}
+
+impl Dataset for NullDataset {
+    fn sample(&mut self, b: usize) -> Batch {
+        Batch::Dense { x: vec![], y: vec![], n: b, feat: 0 }
+    }
+
+    fn eval_set(&self) -> &Batch {
+        &self.eval
+    }
+
+    fn name(&self) -> &'static str {
+        "null"
+    }
+}
+
+fn build_datasets(cfg: &RunConfig) -> Vec<Box<dyn Dataset>> {
+    (0..cfg.m_workers)
+        .map(|w| -> Box<dyn Dataset> {
+            let rng = Pcg64::new(cfg.seed.wrapping_mul(1009).wrapping_add(77), w as u64);
+            match &cfg.data {
+                DataSpec::GaussianMixture { feat, classes, separation, noise, eval_size } => {
+                    Box::new(GaussianMixture::new(
+                        GaussianMixtureSpec {
+                            feat: *feat,
+                            classes: *classes,
+                            separation: *separation as f32,
+                            noise: *noise as f32,
+                            eval_size: *eval_size,
+                            data_seed: 1234, // shared across seeds: same task
+                        },
+                        rng,
+                    ))
+                }
+                DataSpec::MarkovZipf { vocab, seq_len, determinism, eval_size } => {
+                    Box::new(MarkovZipf::new(
+                        MarkovZipfSpec {
+                            vocab: *vocab,
+                            seq_len: *seq_len,
+                            determinism: *determinism,
+                            zipf_alpha: 1.3,
+                            eval_size: *eval_size,
+                            data_seed: 4321,
+                        },
+                        rng,
+                    ))
+                }
+                DataSpec::Synthetic => Box::new(NullDataset::default()),
+            }
+        })
+        .collect()
+}
+
+fn build_native_models(cfg: &RunConfig) -> Vec<Box<dyn GradModel>> {
+    (0..cfg.m_workers)
+        .map(|w| -> Box<dyn GradModel> {
+            match &cfg.model {
+                ModelSpec::Logistic { feat, classes, l2 } => {
+                    Box::new(Logistic::new(*feat, *classes, *l2 as f32))
+                }
+                ModelSpec::Mlp { sizes } => Box::new(Mlp::new(sizes.clone())),
+                ModelSpec::BigramLm { vocab } => Box::new(BigramLm::new(*vocab)),
+                ModelSpec::MlpLm { vocab, hidden } => Box::new(MlpLm::new(*vocab, *hidden)),
+                ModelSpec::Quadratic { dim, mu, l, noise } => {
+                    let mut q = Quadratic::new(*dim, *mu, *l, *noise, 1000);
+                    q.set_noise_stream(cfg.seed, w as u64);
+                    Box::new(q)
+                }
+                ModelSpec::Artifact { .. } => unreachable!("artifact handled separately"),
+            }
+        })
+        .collect()
+}
+
+/// Time-model selection per workload family.
+fn time_model(cfg: &RunConfig) -> TimeModel {
+    let topo = crate::collective::Topology::homogeneous(cfg.m_workers);
+    match cfg.data {
+        DataSpec::MarkovZipf { .. } => TimeModel::paper_lm(topo),
+        _ => TimeModel::paper_vision(topo),
+    }
+}
+
+fn engine_opts(cfg: &RunConfig) -> EngineOpts {
+    EngineOpts {
+        scheduler: cfg.sync.build(),
+        controller: cfg.strategy.build(),
+        optim: cfg.optim_params(),
+        lr: cfg.lr_schedule(),
+        total_samples: cfg.total_samples,
+        eval_every_samples: cfg.eval_every_samples,
+        b_max_local: cfg.b_max_local,
+        seed: cfg.seed,
+        time_model: time_model(cfg),
+        label: cfg.label.clone(),
+        max_rounds: 10_000_000,
+        threaded_allreduce: false,
+    }
+}
+
+/// Run a config end-to-end, returning the full record.
+pub fn run_config(cfg: &RunConfig) -> anyhow::Result<RunRecord> {
+    let errs = cfg.validate();
+    anyhow::ensure!(errs.is_empty(), "invalid config: {}", errs.join("; "));
+    let mut datasets = build_datasets(cfg);
+    let opts = engine_opts(cfg);
+    let rec = match &cfg.model {
+        ModelSpec::Artifact { name } => {
+            let mut rt = PjrtRuntime::cpu()?;
+            let mut models: Vec<Box<dyn GradModel>> = (0..cfg.m_workers)
+                .map(|_| {
+                    PjrtModel::load(&mut rt, name, cfg.m_workers)
+                        .map(|m| Box::new(m) as Box<dyn GradModel>)
+                })
+                .collect::<anyhow::Result<_>>()?;
+            run_local_sgd(&mut models, &mut datasets, opts)
+        }
+        _ => {
+            let mut models = build_native_models(cfg);
+            run_local_sgd(&mut models, &mut datasets, opts)
+        }
+    };
+    Ok(rec)
+}
+
+/// Bench access to the Table-1 base config (pub(crate) internals otherwise).
+pub fn tables_t1_base_for_bench(scale: f64) -> (RunConfig, Vec<u64>, Vec<f64>, u64) {
+    tables::t1_base(scale)
+}
+
+/// Bench access to the Table-2 base config.
+pub fn tables_t2_base_for_bench(scale: f64) -> (RunConfig, Vec<u64>, Vec<f64>, u64) {
+    tables::t2_base(scale)
+}
+
+/// Run a config for several seeds, returning all records.
+pub fn run_seeds(cfg: &RunConfig, seeds: &[u64]) -> anyhow::Result<Vec<RunRecord>> {
+    seeds
+        .iter()
+        .map(|&s| {
+            let mut c = cfg.clone();
+            c.seed = s;
+            c.label = format!("{}_seed{s}", cfg.label);
+            run_config(&c)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BatchStrategy, SyncSpec};
+
+    fn tiny_cfg() -> RunConfig {
+        let mut c = RunConfig::default();
+        c.model = ModelSpec::Logistic { feat: 16, classes: 4, l2: 1e-4 };
+        c.data = DataSpec::GaussianMixture {
+            feat: 16,
+            classes: 4,
+            separation: 2.5,
+            noise: 1.0,
+            eval_size: 128,
+        };
+        c.total_samples = 40_000;
+        c.eval_every_samples = 10_000;
+        c.strategy = BatchStrategy::NormTest { eta: 0.8, b0: 8, b_max: 1024 };
+        c.b_max_local = 1024;
+        c.sync = SyncSpec::FixedH { h: 8 };
+        c.lr_peak = 0.05;
+        c.lr_base = 0.005;
+        c
+    }
+
+    #[test]
+    fn run_config_end_to_end() {
+        let rec = run_config(&tiny_cfg()).unwrap();
+        assert!(!rec.diverged);
+        assert!(rec.total_samples >= 40_000);
+        assert!(rec.points.len() >= 3);
+        assert!(rec.best_val_acc() > 0.4, "acc {}", rec.best_val_acc());
+    }
+
+    #[test]
+    fn runs_are_deterministic_per_seed() {
+        let a = run_config(&tiny_cfg()).unwrap();
+        let b = run_config(&tiny_cfg()).unwrap();
+        assert_eq!(a.total_steps, b.total_steps);
+        assert_eq!(a.batch_trace, b.batch_trace);
+        assert_eq!(a.points.last().unwrap().val_acc, b.points.last().unwrap().val_acc);
+    }
+
+    #[test]
+    fn seeds_change_trajectories() {
+        let recs = run_seeds(&tiny_cfg(), &[1, 2]).unwrap();
+        assert_ne!(recs[0].batch_trace, recs[1].batch_trace);
+    }
+
+    #[test]
+    fn quadratic_config_runs() {
+        let mut c = tiny_cfg();
+        c.model = ModelSpec::Quadratic { dim: 16, mu: 0.5, l: 5.0, noise: 0.5 };
+        c.data = DataSpec::Synthetic;
+        c.optim_kind = crate::optim::OptimKind::Sgd;
+        c.momentum = 0.0;
+        c.weight_decay = 0.0;
+        c.lr_peak = 0.02;
+        c.lr_base = 0.02;
+        c.strategy = BatchStrategy::ExactNormTest { eta: 0.8, b0: 4, b_max: 1024 };
+        let rec = run_config(&c).unwrap();
+        assert!(!rec.diverged);
+        let first = rec.points.first().unwrap().val_loss;
+        let last = rec.points.last().unwrap().val_loss;
+        assert!(last < first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let mut c = tiny_cfg();
+        c.m_workers = 0;
+        assert!(run_config(&c).is_err());
+    }
+}

@@ -1,0 +1,33 @@
+//! # AdaLoco
+//!
+//! Communication-efficient **adaptive batch size strategies for distributed local
+//! gradient methods** — a three-layer Rust + JAX + Pallas reproduction of
+//! Lau, Li, Xu, Liu & Kolar (2024).
+//!
+//! Layers:
+//! - **L3 (this crate)** — the distributed-training coordinator: worker topology,
+//!   Local SGD engine with H-step synchronization ([`engine`]), collectives with a
+//!   communication cost model ([`collective`], [`sim`]), and the paper's
+//!   contribution, adaptive batch-size controllers driven by the norm test
+//!   ([`batch`]).
+//! - **L2/L1 (python/compile)** — JAX models + Pallas kernels, AOT-lowered to HLO
+//!   text artifacts executed through [`runtime`] (PJRT CPU client); Python never
+//!   runs on the training path.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results of every table and figure.
+
+pub mod batch;
+pub mod bench;
+pub mod collective;
+pub mod config;
+pub mod data;
+pub mod engine;
+pub mod exp;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;

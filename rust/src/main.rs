@@ -1,0 +1,192 @@
+//! `adaloco` — CLI for the AdaLoco distributed-training framework.
+//!
+//! Subcommands:
+//!   train    Run a single training run from a JSON config (or the default).
+//!   table    Regenerate a paper table: t1 t2 t4 t6 t8 t1-pjrt t2-pjrt theory ab2 ab3.
+//!   figure   Regenerate a paper figure's series: f1 f2 f8.
+//!   inspect  Show artifact manifests and runtime info.
+//!
+//! Common flags: --scale <f64> (sample-budget multiplier), --out <dir>,
+//! --seeds 1,2,3, --config <json>, --save <json>.
+
+use adaloco::config::RunConfig;
+use adaloco::exp::{figures, tables, theory};
+use adaloco::util::cli::Args;
+use adaloco::util::json::Json;
+use adaloco::util::stats;
+use std::path::PathBuf;
+
+const USAGE: &str = r#"adaloco — adaptive batch size strategies for local gradient methods
+
+USAGE:
+  adaloco train  [--config cfg.json] [--save out.json] [--seed N]
+  adaloco table  --id <t1|t2|t4|t6|t8|t1-pjrt|t2-pjrt|theory|ab2|ab3>
+                 [--scale S] [--seeds 1,2,3] [--out results]
+  adaloco figure --id <f1|f2|f8> [--scale S] [--out results]
+  adaloco inspect [--model name]
+
+EXAMPLES:
+  adaloco table --id t1 --scale 0.25       # quick Table-1 reproduction
+  adaloco table --id t4 --seeds 1,2,3      # 3-seed mean(std) variant
+  adaloco figure --id f2                   # Figure-2 series -> results/f2/
+  adaloco train --config my_run.json
+"#;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let result = match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "table" => cmd_table(&args),
+        "figure" => cmd_figure(&args),
+        "inspect" => cmd_inspect(&args),
+        "" | "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            RunConfig::from_json(&j).map_err(|e| anyhow::anyhow!("{path}: {e}"))?
+        }
+        None => RunConfig::default(),
+    };
+    if let Some(seed) = args.get("seed") {
+        cfg.seed = seed.parse()?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    if let Some(path) = args.get("save") {
+        std::fs::write(path, cfg.to_json().to_string_pretty())?;
+        println!("config written to {path}");
+    }
+    println!("running '{}' ...", cfg.label);
+    let rec = adaloco::exp::run_config(&cfg)?;
+    let out = PathBuf::from(args.str_or("out", "results"));
+    rec.write_to(&out)?;
+    println!(
+        "steps={} rounds={} samples={} avg_bsz={:.0} sim_time={} wall={} \
+         best_acc={:.2}% best_loss={:.4} allreduces={} bytes={}",
+        rec.total_steps,
+        rec.total_rounds,
+        rec.total_samples,
+        rec.avg_local_batch,
+        stats::fmt_duration(rec.sim_time_s),
+        stats::fmt_duration(rec.wall_time_s),
+        rec.best_val_acc() * 100.0,
+        rec.best_val_loss(),
+        rec.comm.allreduce_calls,
+        stats::fmt_bytes(rec.comm.bytes_moved),
+    );
+    if rec.diverged {
+        anyhow::bail!("run diverged (non-finite parameters)");
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> anyhow::Result<()> {
+    let id = args.require("id").map_err(|e| anyhow::anyhow!("{e}"))?.to_string();
+    let scale: f64 = args.parse_or("scale", 1.0).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let seeds: Vec<u64> = args.list_or("seeds", &[1u64]).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let out = PathBuf::from(args.str_or("out", "results")).join(&id);
+    std::fs::create_dir_all(&out)?;
+    eprintln!("table {id} (scale={scale}, seeds={seeds:?}) -> {}", out.display());
+    let three_seeds = [1u64, 2, 3];
+    let text = match id.as_str() {
+        "t1" => tables::table1(scale, &seeds, &out)?,
+        "t4" => tables::table1(scale, if seeds.len() > 1 { &seeds } else { &three_seeds }, &out)?,
+        "t2" => tables::table2(scale, &seeds, &out)?,
+        "t6" => tables::table2(scale, if seeds.len() > 1 { &seeds } else { &three_seeds }, &out)?,
+        "t8" => tables::table8(scale, &seeds, &out)?,
+        "t1-pjrt" => tables::table1_pjrt(scale, &out)?,
+        "t2-pjrt" => tables::table2_pjrt(scale, &out)?,
+        "theory" => theory::theory_table(args.parse_or("rounds", 600u64).unwrap_or(600)),
+        "ab2" => tables::ablation_controllers(scale, &out)?,
+        "ab3" => tables::ablation_sync(scale, &out)?,
+        other => anyhow::bail!("unknown table id '{other}'"),
+    };
+    println!("{text}");
+    std::fs::write(out.join("table.txt"), &text)?;
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> anyhow::Result<()> {
+    let id = args.require("id").map_err(|e| anyhow::anyhow!("{e}"))?.to_string();
+    let scale: f64 = args.parse_or("scale", 1.0).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let out = PathBuf::from(args.str_or("out", "results")).join(&id);
+    std::fs::create_dir_all(&out)?;
+    let text = match id.as_str() {
+        "f1" => figures::figure1(scale, &out)?,
+        "f2" => figures::figure2(scale, &out)?,
+        "f8" => figures::figure8(scale, &out)?,
+        other => anyhow::bail!("unknown figure id '{other}'"),
+    };
+    println!("{text}");
+    std::fs::write(out.join("figure.txt"), &text)?;
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let root = adaloco::runtime::artifacts_root();
+    println!("artifacts root: {}", root.display());
+    let filter = args.get("model");
+    let mut found = false;
+    if root.exists() {
+        for entry in std::fs::read_dir(&root)? {
+            let dir = entry?.path();
+            if !dir.join("meta.json").exists() {
+                continue;
+            }
+            let name = dir.file_name().unwrap().to_string_lossy().to_string();
+            if let Some(f) = filter {
+                if f != name {
+                    continue;
+                }
+            }
+            found = true;
+            match adaloco::runtime::ModelMeta::load(&dir) {
+                Ok(m) => {
+                    println!(
+                        "  {:<10} kind={:?} dim={} micro_batch={} entries={:?}",
+                        m.name,
+                        m.kind,
+                        m.dim,
+                        m.micro_batch,
+                        m.entries.keys().collect::<Vec<_>>()
+                    );
+                }
+                Err(e) => println!("  {name}: INVALID manifest: {e}"),
+            }
+        }
+    }
+    if !found {
+        println!("  (no artifacts found — run `make artifacts`)");
+    }
+    match adaloco::runtime::PjrtRuntime::cpu() {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT unavailable: {e:#}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,203 @@
+//! Run metrics: series recording, counters, CSV/JSON emission, run summaries.
+
+use crate::collective::CommCounters;
+use crate::util::json::Json;
+use std::io::Write;
+
+/// One evaluation point along a training run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalPoint {
+    pub step: u64,
+    pub round: u64,
+    pub samples: u64,
+    pub sim_time_s: f64,
+    pub b_local: u64,
+    pub train_loss: f64,
+    pub val_loss: f64,
+    pub val_acc: f64,
+    pub val_top5: f64,
+}
+
+/// Full record of one training run.
+#[derive(Debug, Clone, Default)]
+pub struct RunRecord {
+    pub label: String,
+    pub points: Vec<EvalPoint>,
+    /// (round, b_local) trace at every sync — the batch-size growth curves of
+    /// Figures 1/2/8-10.
+    pub batch_trace: Vec<(u64, u64, u64)>, // (round, samples, b_local)
+    pub comm: CommCounters,
+    pub total_steps: u64,
+    pub total_rounds: u64,
+    pub total_samples: u64,
+    pub sim_time_s: f64,
+    pub wall_time_s: f64,
+    /// Sample-weighted average local batch size (the paper's "bsz." column).
+    pub avg_local_batch: f64,
+    pub diverged: bool,
+}
+
+impl RunRecord {
+    pub fn best_val_acc(&self) -> f64 {
+        self.points.iter().map(|p| p.val_acc).fold(0.0, f64::max)
+    }
+
+    pub fn best_val_top5(&self) -> f64 {
+        self.points.iter().map(|p| p.val_top5).fold(0.0, f64::max)
+    }
+
+    pub fn best_val_loss(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|p| p.val_loss)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn final_val_loss(&self) -> f64 {
+        self.points.last().map(|p| p.val_loss).unwrap_or(f64::NAN)
+    }
+
+    /// CSV of the evaluation series (one row per eval point).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "step,round,samples,sim_time_s,b_local,train_loss,val_loss,val_acc,val_top5\n",
+        );
+        for p in &self.points {
+            out.push_str(&format!(
+                "{},{},{},{:.6},{},{:.6},{:.6},{:.6},{:.6}\n",
+                p.step, p.round, p.samples, p.sim_time_s, p.b_local, p.train_loss, p.val_loss,
+                p.val_acc, p.val_top5
+            ));
+        }
+        out
+    }
+
+    /// CSV of the batch-size trace (the figures' second panel).
+    pub fn batch_trace_csv(&self) -> String {
+        let mut out = String::from("round,samples,b_local\n");
+        for (r, s, b) in &self.batch_trace {
+            out.push_str(&format!("{r},{s},{b}\n"));
+        }
+        out
+    }
+
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(&self.label)),
+            ("steps", Json::num(self.total_steps as f64)),
+            ("rounds", Json::num(self.total_rounds as f64)),
+            ("samples", Json::num(self.total_samples as f64)),
+            ("sim_time_s", Json::num(self.sim_time_s)),
+            ("wall_time_s", Json::num(self.wall_time_s)),
+            ("avg_local_batch", Json::num(self.avg_local_batch)),
+            ("best_val_acc", Json::num(self.best_val_acc())),
+            ("best_val_loss", Json::num(if self.points.is_empty() { f64::NAN } else { self.best_val_loss() })),
+            ("allreduce_calls", Json::num(self.comm.allreduce_calls as f64)),
+            ("bytes_moved", Json::num(self.comm.bytes_moved as f64)),
+            ("diverged", Json::Bool(self.diverged)),
+        ])
+    }
+
+    /// Write series + trace + summary under `dir/<label>.*`.
+    pub fn write_to(&self, dir: &std::path::Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let base = self.label.replace(['/', ' '], "_");
+        std::fs::File::create(dir.join(format!("{base}.eval.csv")))?
+            .write_all(self.to_csv().as_bytes())?;
+        std::fs::File::create(dir.join(format!("{base}.batch.csv")))?
+            .write_all(self.batch_trace_csv().as_bytes())?;
+        std::fs::File::create(dir.join(format!("{base}.summary.json")))?
+            .write_all(self.summary_json().to_string_pretty().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record() -> RunRecord {
+        RunRecord {
+            label: "test run".into(),
+            points: vec![
+                EvalPoint {
+                    step: 10,
+                    round: 1,
+                    samples: 100,
+                    sim_time_s: 1.0,
+                    b_local: 32,
+                    train_loss: 2.0,
+                    val_loss: 2.1,
+                    val_acc: 0.4,
+                    val_top5: 0.8,
+                },
+                EvalPoint {
+                    step: 20,
+                    round: 2,
+                    samples: 200,
+                    sim_time_s: 2.0,
+                    b_local: 64,
+                    train_loss: 1.5,
+                    val_loss: 1.4,
+                    val_acc: 0.6,
+                    val_top5: 0.9,
+                },
+            ],
+            batch_trace: vec![(1, 100, 32), (2, 200, 64)],
+            total_steps: 20,
+            total_rounds: 2,
+            total_samples: 200,
+            sim_time_s: 2.0,
+            avg_local_batch: 48.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn best_metrics() {
+        let r = record();
+        assert_eq!(r.best_val_acc(), 0.6);
+        assert_eq!(r.best_val_loss(), 1.4);
+        assert_eq!(r.best_val_top5(), 0.9);
+        assert_eq!(r.final_val_loss(), 1.4);
+    }
+
+    #[test]
+    fn csv_shapes() {
+        let r = record();
+        let csv = r.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("step,round"));
+        let bt = r.batch_trace_csv();
+        assert_eq!(bt.lines().count(), 3);
+    }
+
+    #[test]
+    fn summary_json_roundtrips() {
+        let r = record();
+        let j = r.summary_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("steps").as_u64(), Some(20));
+        assert_eq!(parsed.get("label").as_str(), Some("test run"));
+        assert_eq!(parsed.get("diverged").as_bool(), Some(false));
+    }
+
+    #[test]
+    fn write_to_disk() {
+        let dir = std::env::temp_dir().join("adaloco_metrics_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        record().write_to(&dir).unwrap();
+        assert!(dir.join("test_run.eval.csv").exists());
+        assert!(dir.join("test_run.batch.csv").exists());
+        assert!(dir.join("test_run.summary.json").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_record_is_safe() {
+        let r = RunRecord::default();
+        assert_eq!(r.best_val_acc(), 0.0);
+        assert!(r.final_val_loss().is_nan());
+        assert_eq!(r.to_csv().lines().count(), 1);
+    }
+}

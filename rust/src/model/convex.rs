@@ -1,0 +1,355 @@
+//! Convex test problems for validating Theorems 1–3.
+//!
+//! - [`Quadratic`]: F(x) = ½ xᵀ A x − bᵀx with a diagonal spectrum in [μ, L] —
+//!   μ-strongly convex, L-smooth; stochastic gradients are the exact gradient
+//!   plus per-sample Gaussian noise whose scale *decays with proximity to x\**
+//!   (interpolation-style noise), the regime where the norm test provably keeps
+//!   batch sizes bounded.
+//! - [`LeastSquares`]: finite-sum ½‖Xw − y‖²/n over a synthetic design — convex
+//!   (μ = 0 when X is rank-deficient), exact per-sample gradients.
+//!
+//! Both expose per-sample gradient variance, so the exact norm test of
+//! Algorithm A.1 runs unapproximated — these substrates generate the theory
+//! figures in `adaloco table --id theory`.
+
+use super::{EvalStats, GradModel, StepStats};
+use crate::data::Batch;
+use crate::tensor;
+use crate::util::rng::Pcg64;
+
+/// Diagonal quadratic with controllable conditioning and gradient noise.
+pub struct Quadratic {
+    pub dim: usize,
+    pub mu: f64,
+    pub l: f64,
+    /// Per-sample gradient noise scale at x (σ(x) = noise * (1 + ||x - x*||)).
+    pub noise: f64,
+    diag: Vec<f32>,
+    xstar: Vec<f32>,
+    rng: Pcg64,
+    scratch: Vec<f32>,
+}
+
+impl Quadratic {
+    pub fn new(dim: usize, mu: f64, l: f64, noise: f64, seed: u64) -> Self {
+        assert!(l >= mu && mu >= 0.0 && dim >= 1);
+        let mut drng = Pcg64::new(seed, 0x9AD);
+        let mut diag = vec![0.0f32; dim];
+        for (i, d) in diag.iter_mut().enumerate() {
+            // log-spaced spectrum in [mu, l] (endpoints pinned)
+            let t = if dim == 1 { 0.0 } else { i as f64 / (dim - 1) as f64 };
+            *d = if mu > 0.0 {
+                (mu * (l / mu).powf(t)) as f32
+            } else {
+                (l * t) as f32 // includes a zero eigenvalue: merely convex
+            };
+        }
+        let mut xstar = vec![0.0f32; dim];
+        drng.fill_normal(&mut xstar, 1.0);
+        Quadratic {
+            dim,
+            mu,
+            l,
+            noise,
+            diag,
+            xstar,
+            rng: Pcg64::new(seed, 0x90AD),
+            scratch: vec![0.0f32; dim],
+        }
+    }
+
+    /// Re-seed the gradient-noise stream (per-worker streams in the engine;
+    /// the *problem* — spectrum, x* — stays shared, the homogeneous setting).
+    pub fn set_noise_stream(&mut self, seed: u64, stream: u64) {
+        self.rng = Pcg64::new(seed, stream);
+    }
+
+    /// F(x) − F* = ½ Σ d_i (x_i − x*_i)²
+    pub fn suboptimality(&self, x: &[f32]) -> f64 {
+        let mut acc = 0f64;
+        for i in 0..self.dim {
+            let d = (x[i] - self.xstar[i]) as f64;
+            acc += 0.5 * self.diag[i] as f64 * d * d;
+        }
+        acc
+    }
+
+    pub fn grad_exact(&self, x: &[f32], out: &mut [f32]) {
+        for i in 0..self.dim {
+            out[i] = self.diag[i] * (x[i] - self.xstar[i]);
+        }
+    }
+
+    pub fn distance_sq_to_opt(&self, x: &[f32]) -> f64 {
+        tensor::dist_sq(x, &self.xstar)
+    }
+}
+
+impl GradModel for Quadratic {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn init_params(&mut self, rng: &mut Pcg64) -> Vec<f32> {
+        let mut x = vec![0.0f32; self.dim];
+        rng.fill_normal(&mut x, 2.0);
+        x
+    }
+
+    fn grad(&mut self, params: &[f32], batch: &Batch, out: &mut [f32]) -> StepStats {
+        let b = batch.len().max(1);
+        let mut scratch = std::mem::take(&mut self.scratch);
+        self.grad_exact(params, &mut scratch);
+        tensor::copy(&scratch, out);
+        self.scratch = scratch;
+        // Per-sample noise: g_i = ∇F + σ ε_i, so the batch mean adds σ/√b noise
+        // and the per-sample variance is σ² · dim (in expectation). We draw the
+        // actual batch noise so the statistic is stochastic, as in practice.
+        let sigma = (self.noise * (1.0 + self.distance_sq_to_opt(params).sqrt())) as f32;
+        let mut var_sum = 0f64;
+        let mut mean_noise = vec![0.0f32; self.dim];
+        let mut noises: Vec<Vec<f32>> = Vec::with_capacity(b.min(64));
+        // For large b we sample min(b, 64) representative per-sample noises and
+        // scale — exact enough for the statistic while keeping O(dim) per step.
+        let reps = b.min(64);
+        for _ in 0..reps {
+            let mut e = vec![0.0f32; self.dim];
+            self.rng.fill_normal(&mut e, sigma);
+            tensor::axpy(1.0 / reps as f32, &e, &mut mean_noise);
+            noises.push(e);
+        }
+        for e in &noises {
+            var_sum += tensor::dist_sq(e, &mean_noise);
+        }
+        // unbiased sample variance scaled from reps to b samples
+        let per_sample_var = if reps > 1 { var_sum / (reps - 1) as f64 } else { 0.0 };
+        // batch gradient = exact + mean noise / sqrt(scaling): mean of b samples
+        // has std σ/√b; mean_noise has std σ/√reps, rescale accordingly.
+        let rescale = ((reps as f64) / (b as f64)).sqrt() as f32;
+        tensor::axpy(rescale, &mean_noise, out);
+        StepStats {
+            loss: self.suboptimality(params),
+            per_sample_var: Some(per_sample_var),
+        }
+    }
+
+    fn eval(&mut self, params: &[f32], _eval: &Batch) -> EvalStats {
+        EvalStats {
+            loss: self.suboptimality(params),
+            accuracy: 0.0,
+            top5: 0.0,
+            n: 1,
+        }
+    }
+
+    fn smoothness(&self) -> Option<f64> {
+        Some(self.l)
+    }
+
+    fn name(&self) -> String {
+        format!("quadratic(d={},mu={},L={})", self.dim, self.mu, self.l)
+    }
+}
+
+/// Finite-sum least squares ½‖Xw − y‖²/n with stored design matrix.
+pub struct LeastSquares {
+    pub n: usize,
+    pub dim: usize,
+    x: Vec<f32>, // [n, dim]
+    y: Vec<f32>,
+    #[allow(dead_code)] // kept for diagnostics; read by tests
+    wstar: Vec<f32>,
+    rng: Pcg64,
+    l_cached: f64,
+}
+
+impl LeastSquares {
+    pub fn new(n: usize, dim: usize, label_noise: f32, seed: u64) -> Self {
+        let mut drng = Pcg64::new(seed, 0x15);
+        let mut x = vec![0.0f32; n * dim];
+        drng.fill_normal(&mut x, 1.0);
+        let mut wstar = vec![0.0f32; dim];
+        drng.fill_normal(&mut wstar, 1.0);
+        let mut y = vec![0.0f32; n];
+        for i in 0..n {
+            y[i] = tensor::dot(&x[i * dim..(i + 1) * dim], &wstar) as f32
+                + label_noise * drng.normal_f32();
+        }
+        // L = λ_max(XᵀX/n) ≤ max_i ‖x_i‖² (crude but valid upper bound); a few
+        // power-iteration steps give a tight estimate.
+        let mut v = vec![1.0f32; dim];
+        let mut l_est = 0f64;
+        for _ in 0..20 {
+            let mut av = vec![0.0f32; dim];
+            for i in 0..n {
+                let xi = &x[i * dim..(i + 1) * dim];
+                let c = tensor::dot(xi, &v) as f32 / n as f32;
+                tensor::axpy(c, xi, &mut av);
+            }
+            l_est = tensor::norm(&av);
+            let nv = l_est.max(1e-12) as f32;
+            for j in 0..dim {
+                v[j] = av[j] / nv;
+            }
+        }
+        LeastSquares {
+            n,
+            dim,
+            x,
+            y,
+            wstar,
+            rng: Pcg64::new(seed, 0x51),
+            l_cached: l_est,
+        }
+    }
+
+    pub fn full_loss(&self, w: &[f32]) -> f64 {
+        let mut acc = 0f64;
+        for i in 0..self.n {
+            let r = tensor::dot(&self.x[i * self.dim..(i + 1) * self.dim], w) as f64
+                - self.y[i] as f64;
+            acc += 0.5 * r * r;
+        }
+        acc / self.n as f64
+    }
+}
+
+impl GradModel for LeastSquares {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn init_params(&mut self, rng: &mut Pcg64) -> Vec<f32> {
+        let mut w = vec![0.0f32; self.dim];
+        rng.fill_normal(&mut w, 1.0);
+        w
+    }
+
+    fn grad(&mut self, params: &[f32], batch: &Batch, out: &mut [f32]) -> StepStats {
+        let b = batch.len().max(1);
+        tensor::fill(out, 0.0);
+        let mut loss = 0f64;
+        let mut sum_gsq = 0f64; // Σ ||g_i||² for streaming variance
+        let inv_b = 1.0 / b as f32;
+        for _ in 0..b {
+            let i = self.rng.below(self.n as u64) as usize;
+            let xi = &self.x[i * self.dim..(i + 1) * self.dim];
+            let r = (tensor::dot(xi, params) - self.y[i] as f64) as f32;
+            loss += 0.5 * (r as f64) * (r as f64);
+            // g_i = r * x_i; ||g_i||² = r² ||x_i||²
+            sum_gsq += (r as f64) * (r as f64) * tensor::norm_sq(xi);
+            tensor::axpy(r * inv_b, xi, out);
+        }
+        let gbar_sq = tensor::norm_sq(out);
+        // Σ‖g_i − ḡ‖² = Σ‖g_i‖² − b‖ḡ‖² (single pass identity)
+        let var_sum = (sum_gsq - b as f64 * gbar_sq).max(0.0);
+        StepStats {
+            loss: loss / b as f64,
+            per_sample_var: Some(if b > 1 { var_sum / (b - 1) as f64 } else { 0.0 }),
+        }
+    }
+
+    fn eval(&mut self, params: &[f32], _eval: &Batch) -> EvalStats {
+        EvalStats { loss: self.full_loss(params), accuracy: 0.0, top5: 0.0, n: self.n }
+    }
+
+    fn smoothness(&self) -> Option<f64> {
+        Some(self.l_cached)
+    }
+
+    fn name(&self) -> String {
+        format!("least_squares(n={},d={})", self.n, self.dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_spectrum_bounds() {
+        let q = Quadratic::new(32, 0.1, 10.0, 0.0, 1);
+        for &d in &q.diag {
+            assert!(d >= 0.1 - 1e-6 && d <= 10.0 + 1e-5);
+        }
+        assert_eq!(q.diag[0], 0.1);
+        assert!((q.diag[31] - 10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn quadratic_exact_grad_zero_at_opt() {
+        let q = Quadratic::new(8, 1.0, 2.0, 0.0, 2);
+        let mut g = vec![0.0f32; 8];
+        q.grad_exact(&q.xstar.clone(), &mut g);
+        assert!(tensor::norm(&g) < 1e-6);
+        assert!(q.suboptimality(&q.xstar.clone()) < 1e-12);
+    }
+
+    #[test]
+    fn quadratic_noiseless_batch_grad_is_exact() {
+        let mut q = Quadratic::new(8, 1.0, 2.0, 0.0, 3);
+        let x = vec![1.0f32; 8];
+        let mut g = vec![0.0f32; 8];
+        let batch = Batch::Dense { x: vec![], y: vec![], n: 16, feat: 0 };
+        let stats = q.grad(&x, &batch, &mut g);
+        let mut ge = vec![0.0f32; 8];
+        q.grad_exact(&x, &mut ge);
+        assert!(crate::util::prop::max_abs_diff(&g, &ge) < 1e-6);
+        assert_eq!(stats.per_sample_var, Some(0.0));
+    }
+
+    #[test]
+    fn quadratic_gd_converges_linearly() {
+        let mut q = Quadratic::new(16, 0.5, 5.0, 0.0, 4);
+        let mut x = {
+            let mut r = Pcg64::new(7, 0);
+            q.init_params(&mut r)
+        };
+        let mut g = vec![0.0f32; 16];
+        let f0 = q.suboptimality(&x);
+        for _ in 0..100 {
+            q.grad_exact(&x, &mut g);
+            tensor::axpy(-(1.0 / 5.0) as f32, &g, &mut x);
+        }
+        // contraction (1 - mu/L)^100 = 0.9^100 ~ 2.6e-5
+        assert!(q.suboptimality(&x) < f0 * 1e-3);
+    }
+
+    #[test]
+    fn least_squares_grad_descends() {
+        let mut ls = LeastSquares::new(200, 16, 0.0, 5);
+        let mut rng = Pcg64::new(6, 0);
+        let mut w = ls.init_params(&mut rng);
+        let l = ls.smoothness().unwrap();
+        let mut g = vec![0.0f32; 16];
+        let f0 = ls.full_loss(&w);
+        let batch = Batch::Dense { x: vec![], y: vec![], n: 200, feat: 0 };
+        for _ in 0..200 {
+            ls.grad(&w, &batch, &mut g);
+            tensor::axpy(-(0.9 / l) as f32, &g, &mut w);
+        }
+        let f1 = ls.full_loss(&w);
+        assert!(f1 < f0 * 0.05, "f0={f0} f1={f1}");
+    }
+
+    #[test]
+    fn least_squares_variance_decreases_with_fit() {
+        let mut ls = LeastSquares::new(100, 8, 0.0, 8);
+        let far = vec![5.0f32; 8];
+        let near = ls.wstar.clone();
+        let mut g = vec![0.0f32; 8];
+        let batch = Batch::Dense { x: vec![], y: vec![], n: 64, feat: 0 };
+        let v_far = ls.grad(&far, &batch, &mut g).per_sample_var.unwrap();
+        let v_near = ls.grad(&near, &batch, &mut g).per_sample_var.unwrap();
+        assert!(v_near < v_far * 1e-3, "v_near={v_near} v_far={v_far}");
+    }
+
+    #[test]
+    fn power_iteration_l_is_sane() {
+        let ls = LeastSquares::new(500, 10, 0.1, 9);
+        let l = ls.smoothness().unwrap();
+        // For standard normal design, λ_max(XᵀX/n) concentrates near (1+√(d/n))².
+        let expect = (1.0 + (10f64 / 500.0).sqrt()).powi(2);
+        assert!(l > 0.5 * expect && l < 2.5 * expect, "L={l}, expect≈{expect}");
+    }
+}

@@ -1,0 +1,262 @@
+//! Multinomial logistic regression over dense features.
+//!
+//! The fast native substrate for the image-classification tables (T1/T4/T8
+//! sweeps run hundreds of training runs; the PJRT MLP artifact validates the
+//! same pipeline end-to-end at smaller scale). Per-sample gradients have the
+//! rank-1 structure g_i = (p_i − e_{y_i}) ⊗ x_i, so the per-sample variance for
+//! the exact norm test is computed streaming in O(b·(C+feat)) extra work via
+//! Σ‖g_i−ḡ‖² = Σ‖g_i‖² − b‖ḡ‖², with ‖g_i‖² = ‖p_i − e_{y_i}‖²·‖x_i‖².
+
+use super::{softmax_xent_grad, topk_hit, EvalStats, GradModel, StepStats};
+use crate::data::Batch;
+use crate::tensor;
+use crate::util::rng::Pcg64;
+
+pub struct Logistic {
+    pub feat: usize,
+    pub classes: usize,
+    /// L2 regularization (adds λ to smoothness, keeps optimum bounded).
+    pub l2: f32,
+    logits: Vec<f32>,
+    dlogits: Vec<f32>,
+}
+
+impl Logistic {
+    pub fn new(feat: usize, classes: usize, l2: f32) -> Self {
+        Logistic {
+            feat,
+            classes,
+            l2,
+            logits: vec![0.0; classes],
+            dlogits: vec![0.0; classes],
+        }
+    }
+
+    fn forward(&mut self, params: &[f32], xi: &[f32]) {
+        // params layout: W [classes, feat] row-major, then bias [classes]
+        let (w, bias) = params.split_at(self.classes * self.feat);
+        for c in 0..self.classes {
+            self.logits[c] =
+                tensor::dot(&w[c * self.feat..(c + 1) * self.feat], xi) as f32 + bias[c];
+        }
+    }
+}
+
+impl GradModel for Logistic {
+    fn dim(&self) -> usize {
+        self.classes * self.feat + self.classes
+    }
+
+    fn init_params(&mut self, _rng: &mut Pcg64) -> Vec<f32> {
+        vec![0.0; self.dim()] // zero init is the standard convex start
+    }
+
+    fn grad(&mut self, params: &[f32], batch: &Batch, out: &mut [f32]) -> StepStats {
+        let (x, y, n, feat) = match batch {
+            Batch::Dense { x, y, n, feat } => (x, y, *n, *feat),
+            _ => panic!("Logistic expects Dense batches"),
+        };
+        assert_eq!(feat, self.feat, "feature dim mismatch");
+        assert!(n > 0, "empty batch");
+        tensor::fill(out, 0.0);
+        let inv_b = 1.0 / n as f32;
+        let mut loss = 0f64;
+        let mut sum_gsq = 0f64;
+        let wlen = self.classes * self.feat;
+        for i in 0..n {
+            let xi = &x[i * feat..(i + 1) * feat];
+            self.forward(params, xi);
+            let li = softmax_xent_grad(&self.logits, self.classes, y[i] as usize, &mut self.dlogits);
+            loss += li;
+            // accumulate (1/b) dlogits ⊗ xi into W-grad and dlogits into b-grad
+            let xi_sq = tensor::norm_sq(xi);
+            let mut dl_sq = 0f64;
+            for c in 0..self.classes {
+                let d = self.dlogits[c];
+                dl_sq += (d as f64) * (d as f64);
+                if d != 0.0 {
+                    tensor::axpy(d * inv_b, xi, &mut out[c * feat..(c + 1) * feat]);
+                }
+                out[wlen + c] += d * inv_b;
+            }
+            // ‖g_i‖² = ‖dlogits‖²(‖x_i‖² + 1)   (the +1 is the bias column)
+            sum_gsq += dl_sq * (xi_sq + 1.0);
+        }
+        loss *= inv_b as f64;
+        // L2 term (applied to W only, as usual)
+        if self.l2 > 0.0 {
+            loss += 0.5 * self.l2 as f64 * tensor::norm_sq(&params[..wlen]);
+            tensor::axpy(self.l2, &params[..wlen], &mut out[..wlen]);
+        }
+        let gbar_sq = tensor::norm_sq(out);
+        let var_sum = (sum_gsq - n as f64 * gbar_sq).max(0.0);
+        StepStats {
+            loss,
+            per_sample_var: Some(if n > 1 { var_sum / (n - 1) as f64 } else { 0.0 }),
+        }
+    }
+
+    fn eval(&mut self, params: &[f32], eval: &Batch) -> EvalStats {
+        let (x, y, n, feat) = match eval {
+            Batch::Dense { x, y, n, feat } => (x, y, *n, *feat),
+            _ => panic!("Logistic expects Dense batches"),
+        };
+        let mut loss = 0f64;
+        let (mut hit1, mut hit5) = (0usize, 0usize);
+        for i in 0..n {
+            let xi = &x[i * feat..(i + 1) * feat];
+            self.forward(params, xi);
+            let li = softmax_xent_grad(&self.logits, self.classes, y[i] as usize, &mut self.dlogits);
+            loss += li;
+            if topk_hit(&self.logits, y[i] as usize, 1) {
+                hit1 += 1;
+            }
+            if topk_hit(&self.logits, y[i] as usize, 5.min(self.classes)) {
+                hit5 += 1;
+            }
+        }
+        EvalStats {
+            loss: loss / n as f64,
+            accuracy: hit1 as f64 / n as f64,
+            top5: hit5 as f64 / n as f64,
+            n,
+        }
+    }
+
+    fn smoothness(&self) -> Option<f64> {
+        // For logistic regression L ≤ ½ λ_max(XᵀX/n) + λ; with unit-variance
+        // features E‖x‖² = feat, so L ≈ feat/2 is the practical bound we use.
+        Some(0.5 * self.feat as f64 + self.l2 as f64)
+    }
+
+    fn name(&self) -> String {
+        format!("logistic(feat={},classes={})", self.feat, self.classes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_image::{GaussianMixture, GaussianMixtureSpec};
+    use crate::data::Dataset;
+
+    fn spec() -> GaussianMixtureSpec {
+        GaussianMixtureSpec {
+            feat: 24,
+            classes: 5,
+            separation: 3.0,
+            noise: 0.8,
+            eval_size: 256,
+            data_seed: 11,
+        }
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let mut m = Logistic::new(6, 3, 0.01);
+        let mut rng = Pcg64::new(1, 0);
+        let batch = Batch::Dense {
+            x: (0..24).map(|_| rng.normal_f32()).collect(),
+            y: vec![0, 1, 2, 1],
+            n: 4,
+            feat: 6,
+        };
+        let mut params: Vec<f32> = (0..m.dim()).map(|_| 0.1 * rng.normal_f32()).collect();
+        let mut g = vec![0.0f32; m.dim()];
+        m.grad(&params, &batch, &mut g);
+        let eps = 1e-3f32;
+        for idx in [0usize, 5, 10, m.dim() - 1] {
+            let orig = params[idx];
+            params[idx] = orig + eps;
+            let lp = m.grad(&params, &batch, &mut vec![0.0; m.dim()]).loss;
+            params[idx] = orig - eps;
+            let lm = m.grad(&params, &batch, &mut vec![0.0; m.dim()]).loss;
+            params[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            assert!(
+                (fd - g[idx] as f64).abs() < 1e-3,
+                "idx {idx}: fd={fd} analytic={}",
+                g[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn per_sample_variance_matches_naive() {
+        let mut m = Logistic::new(5, 3, 0.0);
+        let mut rng = Pcg64::new(2, 0);
+        let n = 8;
+        let batch = Batch::Dense {
+            x: (0..n * 5).map(|_| rng.normal_f32()).collect(),
+            y: (0..n).map(|i| (i % 3) as i32).collect(),
+            n,
+            feat: 5,
+        };
+        let params: Vec<f32> = (0..m.dim()).map(|_| 0.2 * rng.normal_f32()).collect();
+        let mut g = vec![0.0f32; m.dim()];
+        let stats = m.grad(&params, &batch, &mut g);
+
+        // naive: per-sample grads via b=1 calls
+        let mut per: Vec<Vec<f32>> = Vec::new();
+        for i in 0..n {
+            let bi = batch.slice_rows(i, i + 1);
+            let mut gi = vec![0.0f32; m.dim()];
+            m.grad(&params, &bi, &mut gi);
+            per.push(gi);
+        }
+        let mut mean = vec![0.0f32; m.dim()];
+        let rows: Vec<&[f32]> = per.iter().map(|r| r.as_slice()).collect();
+        tensor::mean_rows(&rows, &mut mean);
+        let var_naive: f64 =
+            rows.iter().map(|r| tensor::dist_sq(r, &mean)).sum::<f64>() / (n - 1) as f64;
+        let v = stats.per_sample_var.unwrap();
+        assert!(
+            crate::util::prop::close(v, var_naive, 1e-3, 1e-6),
+            "streaming={v} naive={var_naive}"
+        );
+    }
+
+    #[test]
+    fn trains_to_high_accuracy_on_separable_mixture() {
+        let mut data = GaussianMixture::new(spec(), Pcg64::new(3, 0));
+        let mut m = Logistic::new(24, 5, 1e-4);
+        let mut rng = Pcg64::new(4, 0);
+        let mut w = m.init_params(&mut rng);
+        let mut g = vec![0.0f32; m.dim()];
+        for _ in 0..300 {
+            let b = data.sample(32);
+            m.grad(&w, &b, &mut g);
+            tensor::axpy(-0.05, &g, &mut w);
+        }
+        let ev = m.eval(&w, data.eval_set());
+        assert!(ev.accuracy > 0.85, "accuracy {}", ev.accuracy);
+        assert!(ev.top5 >= ev.accuracy);
+        assert!(ev.loss < (5f64).ln());
+    }
+
+    #[test]
+    fn eval_counts_consistent() {
+        let mut m = Logistic::new(4, 10, 0.0);
+        let batch = Batch::Dense {
+            x: vec![0.0; 12],
+            y: vec![0, 1, 2],
+            n: 3,
+            feat: 4,
+        };
+        let w = vec![0.0; m.dim()];
+        let ev = m.eval(&w, &batch);
+        assert_eq!(ev.n, 3);
+        // uniform logits: top-1 hits only class argmax-tie=0; top-5 hits classes 0..5
+        assert!(ev.top5 >= ev.accuracy);
+        assert!((ev.loss - (10f64).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "feature dim mismatch")]
+    fn wrong_feat_panics() {
+        let mut m = Logistic::new(4, 3, 0.0);
+        let batch = Batch::Dense { x: vec![0.0; 6], y: vec![0, 1], n: 2, feat: 3 };
+        let w = vec![0.0; m.dim()];
+        m.grad(&w, &batch, &mut vec![0.0; m.dim()]);
+    }
+}

@@ -1,0 +1,265 @@
+//! Native MLP language model — nonconvex LM substrate for the Table 2/6
+//! sweeps (the convex bigram table converges for every schedule under the
+//! linear-scaling rule and flattens the table; the paper's large-batch
+//! degradation needs curvature).
+//!
+//! Architecture per token: one-hot(cur) -> W1 row lookup -> ReLU hidden ->
+//! logits over the vocab (a tiny neural bigram model, Bengio-style with
+//! context 1). The one-hot input makes the forward a row lookup, so per-token
+//! cost is O(hidden·vocab) in the output layer only.
+//!
+//! Per-sequence gradient variance for the exact norm test uses the diagonal
+//! (per-token independent) approximation as in `bigram_lm.rs` — AB1 in
+//! DESIGN.md quantifies the approximation against the across-worker statistic.
+
+use super::{softmax_xent_grad, EvalStats, GradModel, StepStats};
+use crate::data::Batch;
+use crate::tensor;
+use crate::util::rng::Pcg64;
+
+pub struct MlpLm {
+    pub vocab: usize,
+    pub hidden: usize,
+    // scratch
+    h: Vec<f32>,
+    dh: Vec<f32>,
+    logits: Vec<f32>,
+    dlogits: Vec<f32>,
+}
+
+impl MlpLm {
+    pub fn new(vocab: usize, hidden: usize) -> Self {
+        MlpLm {
+            vocab,
+            hidden,
+            h: vec![0.0; hidden],
+            dh: vec![0.0; hidden],
+            logits: vec![0.0; vocab],
+            dlogits: vec![0.0; vocab],
+        }
+    }
+
+    // layout: W1 [V, Hd] | b1 [Hd] | W2 [Hd, V] | b2 [V]
+    fn off_b1(&self) -> usize {
+        self.vocab * self.hidden
+    }
+    fn off_w2(&self) -> usize {
+        self.off_b1() + self.hidden
+    }
+    fn off_b2(&self) -> usize {
+        self.off_w2() + self.hidden * self.vocab
+    }
+
+    /// Forward one token; fills self.h and self.logits.
+    fn forward(&mut self, params: &[f32], cur: usize) {
+        let (v, hd) = (self.vocab, self.hidden);
+        let w1 = &params[cur * hd..(cur + 1) * hd];
+        let b1 = &params[self.off_b1()..self.off_b1() + hd];
+        for i in 0..hd {
+            self.h[i] = (w1[i] + b1[i]).max(0.0);
+        }
+        let w2 = &params[self.off_w2()..self.off_w2() + hd * v];
+        let b2 = &params[self.off_b2()..self.off_b2() + v];
+        // logits = h @ W2 + b2, W2 row-major [Hd, V]
+        self.logits.copy_from_slice(b2);
+        for i in 0..hd {
+            let hi = self.h[i];
+            if hi != 0.0 {
+                tensor::axpy(hi, &w2[i * v..(i + 1) * v], &mut self.logits);
+            }
+        }
+    }
+}
+
+impl GradModel for MlpLm {
+    fn dim(&self) -> usize {
+        self.vocab * self.hidden + self.hidden + self.hidden * self.vocab + self.vocab
+    }
+
+    fn init_params(&mut self, rng: &mut Pcg64) -> Vec<f32> {
+        let (v, hd) = (self.vocab, self.hidden);
+        let mut p = vec![0.0f32; self.dim()];
+        // He-ish init for W1 rows, small W2
+        for x in p[..v * hd].iter_mut() {
+            *x = rng.normal_f32() * 0.5;
+        }
+        let w2o = self.off_w2();
+        let scale = (1.0 / hd as f64).sqrt() as f32;
+        for x in p[w2o..w2o + hd * v].iter_mut() {
+            *x = rng.normal_f32() * scale;
+        }
+        p
+    }
+
+    fn grad(&mut self, params: &[f32], batch: &Batch, out: &mut [f32]) -> StepStats {
+        let (x, y, n, seq) = match batch {
+            Batch::Tokens { x, y, n, seq } => (x, y, *n, *seq),
+            _ => panic!("MlpLm expects Tokens batches"),
+        };
+        assert!(n > 0, "empty batch");
+        let (v, hd) = (self.vocab, self.hidden);
+        tensor::fill(out, 0.0);
+        let w = 1.0f32 / (n * seq) as f32;
+        let (b1o, w2o, b2o) = (self.off_b1(), self.off_w2(), self.off_b2());
+        let mut loss = 0f64;
+        let mut sum_gsq = 0f64;
+        for i in 0..n {
+            let mut seq_gsq = 0f64;
+            for t in 0..seq {
+                let cur = x[i * seq + t] as usize;
+                let tgt = y[i * seq + t] as usize;
+                self.forward(params, cur);
+                loss += softmax_xent_grad(&self.logits, v, tgt, &mut self.dlogits);
+                // output layer grads
+                let mut dl_sq = 0f64;
+                for c in 0..v {
+                    let d = self.dlogits[c];
+                    dl_sq += (d as f64) * (d as f64);
+                    out[b2o + c] += d * w;
+                }
+                // dW2[i,:] += h[i] * dlogits; dh[i] = <W2[i,:], dlogits> (ReLU')
+                let w2 = &params[w2o..w2o + hd * v];
+                let mut h_sq = 0f64;
+                for iu in 0..hd {
+                    let hi = self.h[iu];
+                    if hi > 0.0 {
+                        h_sq += (hi as f64) * (hi as f64);
+                        tensor::axpy(hi * w, &self.dlogits, &mut out[w2o + iu * v..w2o + (iu + 1) * v]);
+                        self.dh[iu] = tensor::dot(&w2[iu * v..(iu + 1) * v], &self.dlogits) as f32;
+                    } else {
+                        self.dh[iu] = 0.0;
+                    }
+                }
+                // hidden grads: dW1[cur,:] += dh, db1 += dh
+                let dh_sq = tensor::norm_sq(&self.dh);
+                tensor::axpy(w, &self.dh, &mut out[cur * hd..(cur + 1) * hd]);
+                tensor::axpy(w, &self.dh, &mut out[b1o..b1o + hd]);
+                // per-token ‖g_t‖²: output layer (1+‖h‖²)·‖dl‖² + hidden 2·‖dh‖²
+                let tok = dl_sq * (1.0 + h_sq) + 2.0 * dh_sq;
+                seq_gsq += tok / (seq as f64) / (seq as f64);
+            }
+            sum_gsq += seq_gsq;
+        }
+        loss /= (n * seq) as f64;
+        let gbar_sq = tensor::norm_sq(out);
+        // g accumulated with weight 1/(n·seq); per-sequence grads have weight
+        // 1/seq, so rescale: out holds mean over sequences already.
+        let var_sum = (sum_gsq - n as f64 * gbar_sq).max(0.0);
+        StepStats {
+            loss,
+            per_sample_var: Some(if n > 1 { var_sum / (n - 1) as f64 } else { 0.0 }),
+        }
+    }
+
+    fn eval(&mut self, params: &[f32], eval: &Batch) -> EvalStats {
+        let (x, y, n, seq) = match eval {
+            Batch::Tokens { x, y, n, seq } => (x, y, *n, *seq),
+            _ => panic!("MlpLm expects Tokens batches"),
+        };
+        let v = self.vocab;
+        let mut loss = 0f64;
+        let mut correct = 0usize;
+        let mut dl = vec![0.0f32; v];
+        for i in 0..n {
+            for t in 0..seq {
+                let cur = x[i * seq + t] as usize;
+                let tgt = y[i * seq + t] as usize;
+                self.forward(params, cur);
+                loss += softmax_xent_grad(&self.logits, v, tgt, &mut dl);
+                let mut best = 0usize;
+                for (c, &val) in self.logits.iter().enumerate() {
+                    if val > self.logits[best] {
+                        best = c;
+                    }
+                }
+                if best == tgt {
+                    correct += 1;
+                }
+            }
+        }
+        let tokens = (n * seq) as f64;
+        EvalStats {
+            loss: loss / tokens,
+            accuracy: correct as f64 / tokens,
+            top5: correct as f64 / tokens,
+            n: n * seq,
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("mlp_lm(V={},H={})", self.vocab, self.hidden)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_text::{MarkovZipf, MarkovZipfSpec};
+    use crate::data::Dataset;
+
+    fn data(vocab: usize) -> MarkovZipf {
+        MarkovZipf::new(
+            MarkovZipfSpec { vocab, seq_len: 8, eval_size: 64, ..Default::default() },
+            Pcg64::new(3, 0),
+        )
+    }
+
+    #[test]
+    fn dim_layout() {
+        let m = MlpLm::new(32, 16);
+        assert_eq!(m.dim(), 32 * 16 + 16 + 16 * 32 + 32);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let mut m = MlpLm::new(12, 6);
+        let mut d = data(12);
+        let b = d.sample(3);
+        let mut rng = Pcg64::new(4, 0);
+        let mut params = m.init_params(&mut rng);
+        let mut g = vec![0.0f32; m.dim()];
+        m.grad(&params, &b, &mut g);
+        let eps = 1e-3f32;
+        for idx in [0usize, 30, m.off_b1() + 2, m.off_w2() + 5, m.off_b2() + 3] {
+            let orig = params[idx];
+            params[idx] = orig + eps;
+            let lp = m.grad(&params, &b, &mut vec![0.0; m.dim()]).loss;
+            params[idx] = orig - eps;
+            let lm = m.grad(&params, &b, &mut vec![0.0; m.dim()]).loss;
+            params[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            assert!((fd - g[idx] as f64).abs() < 2e-3, "idx {idx}: {fd} vs {}", g[idx]);
+        }
+    }
+
+    #[test]
+    fn learns_bigram_structure() {
+        let mut m = MlpLm::new(32, 24);
+        let mut d = data(32);
+        let mut rng = Pcg64::new(5, 0);
+        let mut params = m.init_params(&mut rng);
+        let mut g = vec![0.0f32; m.dim()];
+        let e0 = m.eval(&params, d.eval_set());
+        for _ in 0..400 {
+            let b = d.sample(16);
+            m.grad(&params, &b, &mut g);
+            tensor::axpy(-1.0, &g, &mut params);
+        }
+        let e1 = m.eval(&params, d.eval_set());
+        assert!(e1.loss < e0.loss - 0.5, "loss {} -> {}", e0.loss, e1.loss);
+        assert!(e1.accuracy > 0.4, "token accuracy {}", e1.accuracy);
+    }
+
+    #[test]
+    fn variance_is_finite_positive() {
+        let mut m = MlpLm::new(16, 8);
+        let mut d = data(16);
+        let b = d.sample(6);
+        let mut rng = Pcg64::new(6, 0);
+        let params = m.init_params(&mut rng);
+        let mut g = vec![0.0f32; m.dim()];
+        let s = m.grad(&params, &b, &mut g);
+        let v = s.per_sample_var.unwrap();
+        assert!(v.is_finite() && v >= 0.0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Model abstraction + native (pure-Rust) model substrates.
+//!
+//! [`GradModel`] is the boundary the Local SGD engine trains against. Two
+//! families implement it:
+//!
+//! - **Native models** (this module): quadratic / least-squares (the convex
+//!   suite validating Theorems 1–3), multinomial logistic regression and an MLP
+//!   (fast substrates for the table sweeps). These expose *per-sample* gradient
+//!   variance, enabling the exact norm test of Algorithm A.1.
+//! - **PJRT models** ([`crate::runtime::PjrtModel`]): the JAX/Pallas artifacts
+//!   (transformer LM, MLP classifier) executed through the PJRT CPU client —
+//!   only batch gradients are available, exactly the constraint that motivates
+//!   the paper's Algorithm A.2 approximation (§4.3).
+
+pub mod bigram_lm;
+pub mod convex;
+pub mod logistic;
+pub mod mlp;
+pub mod mlp_lm;
+
+use crate::data::Batch;
+use crate::util::rng::Pcg64;
+
+/// Statistics from one batch-gradient computation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepStats {
+    pub loss: f64,
+    /// Sample variance of per-sample gradients: (1/(b-1)) Σ_i ||g_i - ḡ||².
+    /// `None` when per-sample gradients are unavailable (PJRT models) — the
+    /// engine then falls back to the across-worker approximation (Alg. A.2).
+    pub per_sample_var: Option<f64>,
+}
+
+/// Evaluation metrics on the held-out set.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvalStats {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub top5: f64,
+    pub n: usize,
+}
+
+pub trait GradModel: Send {
+    /// Flat parameter dimension D.
+    fn dim(&self) -> usize;
+
+    /// Initial parameter vector.
+    fn init_params(&mut self, rng: &mut Pcg64) -> Vec<f32>;
+
+    /// Batch gradient at `params` into `out` (len D). Returns loss and, when the
+    /// substrate supports it, the per-sample gradient variance for the exact
+    /// norm test.
+    fn grad(&mut self, params: &[f32], batch: &Batch, out: &mut [f32]) -> StepStats;
+
+    /// Evaluate on a held-out batch.
+    fn eval(&mut self, params: &[f32], eval: &Batch) -> EvalStats;
+
+    /// Micro-batch granularity: batch sizes are realized as multiples of this
+    /// via gradient accumulation. Native models accept any size (1).
+    fn micro_batch(&self) -> usize {
+        1
+    }
+
+    /// Optional offload of the norm-test statistic to an accelerator artifact
+    /// (the Pallas `norm_stat` kernel). Returns (var_sum, ||gbar||²) and writes
+    /// gbar into `center`; `None` means "compute natively".
+    fn norm_stats(&mut self, _grads: &[&[f32]], _center: &mut [f32]) -> Option<(f64, f64)> {
+        None
+    }
+
+    /// Smoothness constant L when known analytically (convex suite); drives the
+    /// theory-validation experiments' learning-rate bound α ≤ 1/(10L(HM+η²)).
+    fn smoothness(&self) -> Option<f64> {
+        None
+    }
+
+    fn name(&self) -> String;
+}
+
+/// Softmax cross-entropy helpers shared by the native classifiers.
+pub(crate) fn softmax_xent_grad(
+    logits: &[f32],
+    classes: usize,
+    target: usize,
+    dlogits: &mut [f32],
+) -> f64 {
+    debug_assert_eq!(logits.len(), classes);
+    let maxv = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let mut z = 0f64;
+    for &v in logits {
+        z += ((v - maxv) as f64).exp();
+    }
+    let logz = z.ln() + maxv as f64;
+    for c in 0..classes {
+        let p = ((logits[c] as f64 - logz).exp()) as f32;
+        dlogits[c] = p - if c == target { 1.0 } else { 0.0 };
+    }
+    logz - logits[target] as f64
+}
+
+/// Top-1 / top-5 membership for accuracy metrics.
+pub(crate) fn topk_hit(logits: &[f32], target: usize, k: usize) -> bool {
+    let t = logits[target];
+    let mut better = 0;
+    for (c, &v) in logits.iter().enumerate() {
+        if v > t || (v == t && c < target) {
+            better += 1;
+            if better >= k {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_grad_sums_to_zero_and_loss_positive() {
+        let logits = vec![1.0f32, 2.0, 0.5, -1.0];
+        let mut d = vec![0.0f32; 4];
+        let loss = softmax_xent_grad(&logits, 4, 1, &mut d);
+        assert!(loss > 0.0);
+        let s: f32 = d.iter().sum();
+        assert!(s.abs() < 1e-5, "grad sum {s}");
+        assert!(d[1] < 0.0); // target prob - 1 < 0
+    }
+
+    #[test]
+    fn softmax_loss_is_nll() {
+        // Uniform logits -> loss = ln(C)
+        let logits = vec![0.0f32; 8];
+        let mut d = vec![0.0f32; 8];
+        let loss = softmax_xent_grad(&logits, 8, 3, &mut d);
+        assert!((loss - (8f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_numerically_stable() {
+        let logits = vec![1000.0f32, -1000.0];
+        let mut d = vec![0.0f32; 2];
+        let loss = softmax_xent_grad(&logits, 2, 0, &mut d);
+        assert!(loss.is_finite() && loss < 1e-6);
+        assert!(d.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn topk() {
+        let logits = vec![0.1f32, 0.9, 0.5, 0.3];
+        assert!(topk_hit(&logits, 1, 1));
+        assert!(!topk_hit(&logits, 0, 1));
+        assert!(topk_hit(&logits, 2, 2));
+        assert!(topk_hit(&logits, 0, 4));
+        assert!(!topk_hit(&logits, 0, 3));
+    }
+
+    #[test]
+    fn topk_tie_breaking_deterministic() {
+        let logits = vec![0.5f32, 0.5, 0.5];
+        assert!(topk_hit(&logits, 0, 1)); // lowest index wins ties
+        assert!(!topk_hit(&logits, 2, 2));
+        assert!(topk_hit(&logits, 2, 3));
+    }
+}

@@ -1,0 +1,155 @@
+//! Learning-rate schedules.
+//!
+//! The paper indexes schedules by **samples processed** (not steps) so constant and
+//! adaptive batch-size runs see the same schedule shape (§6.1: "10% linear warmup
+//! and cosine decay, peaking at 0.05 and bottoming out at 0.005"). The linear
+//! scaling rule (Krizhevsky 2014; Goyal et al. 2017) used for the constant-batch
+//! baselines is `scaled_peak = peak * batch / base_batch`.
+
+/// A learning-rate schedule over the sample-processed axis.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LrSchedule {
+    /// Constant learning rate.
+    Constant { lr: f64 },
+    /// Linear warmup to `peak` over `warmup_samples`, then cosine decay to `base`
+    /// at `total_samples`.
+    WarmupCosine {
+        peak: f64,
+        base: f64,
+        warmup_samples: u64,
+        total_samples: u64,
+    },
+    /// Linear warmup then inverse-sqrt decay (common LLM alternative; ablations).
+    WarmupInvSqrt {
+        peak: f64,
+        warmup_samples: u64,
+    },
+}
+
+impl LrSchedule {
+    /// The paper's default shape: warmup fraction of the budget, cosine to base.
+    pub fn paper_default(peak: f64, base: f64, total_samples: u64, warmup_frac: f64) -> Self {
+        LrSchedule::WarmupCosine {
+            peak,
+            base,
+            warmup_samples: ((total_samples as f64) * warmup_frac) as u64,
+            total_samples,
+        }
+    }
+
+    /// Learning rate after `samples` samples have been processed.
+    pub fn at(&self, samples: u64) -> f64 {
+        match *self {
+            LrSchedule::Constant { lr } => lr,
+            LrSchedule::WarmupCosine { peak, base, warmup_samples, total_samples } => {
+                if warmup_samples > 0 && samples < warmup_samples {
+                    return peak * (samples as f64 / warmup_samples as f64);
+                }
+                let decay_len = total_samples.saturating_sub(warmup_samples).max(1);
+                let t = (samples.saturating_sub(warmup_samples)) as f64 / decay_len as f64;
+                let t = t.min(1.0);
+                base + 0.5 * (peak - base) * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+            LrSchedule::WarmupInvSqrt { peak, warmup_samples } => {
+                if warmup_samples > 0 && samples < warmup_samples {
+                    peak * (samples as f64 / warmup_samples as f64)
+                } else {
+                    peak * ((warmup_samples.max(1) as f64) / (samples.max(1) as f64)).sqrt()
+                }
+            }
+        }
+    }
+
+    /// Apply the linear scaling rule used by constant-batch baselines: multiply
+    /// peak/base by `batch / base_batch` (capped to avoid divergence; the paper
+    /// caps implicitly by its choice of maximum batch sizes).
+    pub fn linear_scaled(&self, batch: u64, base_batch: u64) -> LrSchedule {
+        let k = batch as f64 / base_batch.max(1) as f64;
+        match *self {
+            LrSchedule::Constant { lr } => LrSchedule::Constant { lr: lr * k },
+            LrSchedule::WarmupCosine { peak, base, warmup_samples, total_samples } => {
+                LrSchedule::WarmupCosine {
+                    peak: peak * k,
+                    base: base * k,
+                    warmup_samples,
+                    total_samples,
+                }
+            }
+            LrSchedule::WarmupInvSqrt { peak, warmup_samples } => {
+                LrSchedule::WarmupInvSqrt { peak: peak * k, warmup_samples }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_is_linear() {
+        let s = LrSchedule::WarmupCosine {
+            peak: 1.0,
+            base: 0.1,
+            warmup_samples: 100,
+            total_samples: 1000,
+        };
+        assert_eq!(s.at(0), 0.0);
+        assert!((s.at(50) - 0.5).abs() < 1e-12);
+        assert!((s.at(100) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_hits_base_at_end() {
+        let s = LrSchedule::WarmupCosine {
+            peak: 1.0,
+            base: 0.1,
+            warmup_samples: 100,
+            total_samples: 1000,
+        };
+        assert!((s.at(1000) - 0.1).abs() < 1e-9);
+        assert!((s.at(5000) - 0.1).abs() < 1e-9); // clamped past the end
+        // midpoint of decay: (peak+base)/2
+        assert!((s.at(550) - 0.55).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = LrSchedule::paper_default(0.05, 0.005, 30_000_000, 0.10);
+        let mut prev = f64::INFINITY;
+        for k in 0..40 {
+            let samples = 3_000_000 + k * 600_000;
+            let lr = s.at(samples);
+            assert!(lr <= prev + 1e-12, "not monotone at {samples}");
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn linear_scaling_rule() {
+        let s = LrSchedule::paper_default(0.05, 0.005, 1000, 0.1);
+        let s2 = s.linear_scaled(8192, 256);
+        match s2 {
+            LrSchedule::WarmupCosine { peak, base, .. } => {
+                assert!((peak - 0.05 * 32.0).abs() < 1e-12);
+                assert!((base - 0.005 * 32.0).abs() < 1e-12);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn invsqrt_decays() {
+        let s = LrSchedule::WarmupInvSqrt { peak: 1.0, warmup_samples: 100 };
+        assert!((s.at(100) - 1.0).abs() < 1e-9);
+        assert!((s.at(400) - 0.5).abs() < 1e-9);
+        assert!(s.at(10_000) < s.at(400));
+    }
+
+    #[test]
+    fn constant_ignores_samples() {
+        let s = LrSchedule::Constant { lr: 0.3 };
+        assert_eq!(s.at(0), 0.3);
+        assert_eq!(s.at(u64::MAX), 0.3);
+    }
+}

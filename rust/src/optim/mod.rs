@@ -1,0 +1,338 @@
+//! Inner optimizers for the local gradient steps (§4.2: "local variants of
+//! minibatch stochastic gradient optimizers beyond SGD").
+//!
+//! Each worker owns an independent optimizer instance operating on the flat f32
+//! parameter vector; the Local SGD engine averages **model parameters only** at
+//! sync time — optimizer state (momentum, Adam moments) stays local, matching the
+//! paper's PyTorch implementation.
+
+pub mod lr;
+
+pub use lr::LrSchedule;
+
+use crate::tensor;
+
+/// Which optimizer a config requests (paper: SHB for vision, AdamW for LM).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimKind {
+    Sgd,
+    /// Momentum SGD / stochastic heavy ball (Sutskever et al. 2013).
+    Shb,
+    AdamW,
+    Adagrad,
+}
+
+impl OptimKind {
+    pub fn parse(s: &str) -> Option<OptimKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "sgd" => Some(OptimKind::Sgd),
+            "shb" | "momentum" | "msgd" => Some(OptimKind::Shb),
+            "adamw" => Some(OptimKind::AdamW),
+            "adagrad" => Some(OptimKind::Adagrad),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimKind::Sgd => "sgd",
+            OptimKind::Shb => "shb",
+            OptimKind::AdamW => "adamw",
+            OptimKind::Adagrad => "adagrad",
+        }
+    }
+}
+
+/// Hyper-parameters shared across optimizer kinds (unused fields ignored).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptimParams {
+    pub kind: OptimKind,
+    pub momentum: f64,     // SHB
+    pub beta1: f64,        // AdamW
+    pub beta2: f64,        // AdamW
+    pub eps: f64,          // AdamW / Adagrad
+    pub weight_decay: f64, // decoupled (AdamW) or L2 (SGD/SHB)
+    pub grad_clip: Option<f64>,
+}
+
+impl OptimParams {
+    /// Paper Table 3: SHB with momentum 0.9, weight decay 1e-4.
+    pub fn paper_shb() -> Self {
+        OptimParams {
+            kind: OptimKind::Shb,
+            momentum: 0.9,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 1e-4,
+            grad_clip: None,
+        }
+    }
+
+    /// Paper Table 5: AdamW with (0.9, 0.95), weight decay 0.1, grad clip 1.0.
+    pub fn paper_adamw() -> Self {
+        OptimParams {
+            kind: OptimKind::AdamW,
+            momentum: 0.9,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.1,
+            grad_clip: Some(1.0),
+        }
+    }
+
+    pub fn plain_sgd() -> Self {
+        OptimParams {
+            kind: OptimKind::Sgd,
+            momentum: 0.0,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            grad_clip: None,
+        }
+    }
+
+    pub fn build(&self, dim: usize) -> Optimizer {
+        Optimizer::new(self.clone(), dim)
+    }
+}
+
+/// A concrete optimizer instance with its state buffers.
+#[derive(Debug, Clone)]
+pub struct Optimizer {
+    pub params: OptimParams,
+    t: u64,
+    m: Vec<f32>, // momentum / first moment
+    v: Vec<f32>, // second moment / adagrad accumulator
+    scratch: Vec<f32>,
+}
+
+impl Optimizer {
+    pub fn new(params: OptimParams, dim: usize) -> Self {
+        let needs_m = !matches!(params.kind, OptimKind::Sgd | OptimKind::Adagrad);
+        let needs_v = matches!(params.kind, OptimKind::AdamW | OptimKind::Adagrad);
+        Optimizer {
+            params,
+            t: 0,
+            m: if needs_m { vec![0.0; dim] } else { Vec::new() },
+            v: if needs_v { vec![0.0; dim] } else { Vec::new() },
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.t = 0;
+        tensor::fill(&mut self.m, 0.0);
+        tensor::fill(&mut self.v, 0.0);
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.t
+    }
+
+    /// Bytes of optimizer state (memory-efficiency accounting in the tables).
+    pub fn state_bytes(&self) -> u64 {
+        ((self.m.len() + self.v.len()) * std::mem::size_of::<f32>()) as u64
+    }
+
+    /// One update: params <- params - lr * direction(grad). `grad` may be clipped
+    /// in-place via the scratch copy (caller's buffer is not modified).
+    pub fn step(&mut self, x: &mut [f32], grad: &[f32], lr: f64) {
+        assert_eq!(x.len(), grad.len(), "optimizer step length mismatch");
+        self.t += 1;
+        let lr = lr as f32;
+
+        // Gradient clipping (global norm), on a scratch copy to keep `grad` const.
+        let g: &[f32] = if let Some(max_norm) = self.params.grad_clip {
+            if tensor::norm(grad) > max_norm {
+                self.scratch.clear();
+                self.scratch.extend_from_slice(grad);
+                tensor::clip_by_norm(&mut self.scratch, max_norm);
+                &self.scratch
+            } else {
+                grad
+            }
+        } else {
+            grad
+        };
+
+        match self.params.kind {
+            OptimKind::Sgd => {
+                let wd = self.params.weight_decay as f32;
+                if wd != 0.0 {
+                    // coupled L2: g + wd * x folded into the update
+                    for i in 0..x.len() {
+                        x[i] -= lr * (g[i] + wd * x[i]);
+                    }
+                } else {
+                    tensor::axpy(-lr, g, x);
+                }
+            }
+            OptimKind::Shb => {
+                let mu = self.params.momentum as f32;
+                let wd = self.params.weight_decay as f32;
+                for i in 0..x.len() {
+                    let gi = g[i] + wd * x[i];
+                    self.m[i] = mu * self.m[i] + gi;
+                    x[i] -= lr * self.m[i];
+                }
+            }
+            OptimKind::AdamW => {
+                let b1 = self.params.beta1 as f32;
+                let b2 = self.params.beta2 as f32;
+                let eps = self.params.eps as f32;
+                let wd = self.params.weight_decay as f32;
+                let bc1 = 1.0 - (self.params.beta1 as f64).powi(self.t as i32);
+                let bc2 = 1.0 - (self.params.beta2 as f64).powi(self.t as i32);
+                let bc1 = bc1 as f32;
+                let bc2 = bc2 as f32;
+                for i in 0..x.len() {
+                    self.m[i] = b1 * self.m[i] + (1.0 - b1) * g[i];
+                    self.v[i] = b2 * self.v[i] + (1.0 - b2) * g[i] * g[i];
+                    let mh = self.m[i] / bc1;
+                    let vh = self.v[i] / bc2;
+                    // decoupled weight decay (Loshchilov & Hutter 2019)
+                    x[i] -= lr * (mh / (vh.sqrt() + eps) + wd * x[i]);
+                }
+            }
+            OptimKind::Adagrad => {
+                let eps = self.params.eps as f32;
+                let wd = self.params.weight_decay as f32;
+                for i in 0..x.len() {
+                    let gi = g[i] + wd * x[i];
+                    self.v[i] += gi * gi;
+                    x[i] -= lr * gi / (self.v[i].sqrt() + eps);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_grad(x: &[f32]) -> Vec<f32> {
+        x.iter().map(|v| 2.0 * v).collect() // f(x) = ||x||^2
+    }
+
+    fn converges(params: OptimParams, lr: f64, steps: usize) -> f64 {
+        let mut x = vec![1.0f32, -2.0, 3.0, -4.0];
+        let mut opt = params.build(x.len());
+        for _ in 0..steps {
+            let g = quad_grad(&x);
+            opt.step(&mut x, &g, lr);
+        }
+        tensor::norm(&x)
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        assert!(converges(OptimParams::plain_sgd(), 0.1, 200) < 1e-4);
+    }
+
+    #[test]
+    fn shb_converges_on_quadratic() {
+        let mut p = OptimParams::paper_shb();
+        p.weight_decay = 0.0;
+        assert!(converges(p, 0.05, 300) < 1e-4);
+    }
+
+    #[test]
+    fn adamw_converges_on_quadratic() {
+        let mut p = OptimParams::paper_adamw();
+        p.weight_decay = 0.0;
+        p.grad_clip = None;
+        assert!(converges(p, 0.05, 600) < 1e-2);
+    }
+
+    #[test]
+    fn adagrad_converges_on_quadratic() {
+        let p = OptimParams {
+            kind: OptimKind::Adagrad,
+            momentum: 0.0,
+            beta1: 0.0,
+            beta2: 0.0,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            grad_clip: None,
+        };
+        assert!(converges(p, 0.5, 600) < 1e-2);
+    }
+
+    #[test]
+    fn sgd_matches_closed_form() {
+        // x' = x - lr * g exactly
+        let mut x = vec![1.0f32, 2.0];
+        let mut opt = OptimParams::plain_sgd().build(2);
+        opt.step(&mut x, &[0.5, -1.0], 0.1);
+        assert!((x[0] - 0.95).abs() < 1e-7);
+        assert!((x[1] - 2.1).abs() < 1e-7);
+    }
+
+    #[test]
+    fn shb_first_step_equals_sgd() {
+        let mut p = OptimParams::paper_shb();
+        p.weight_decay = 0.0;
+        let mut x1 = vec![1.0f32, 2.0];
+        let mut o1 = p.build(2);
+        o1.step(&mut x1, &[1.0, 1.0], 0.1);
+        // momentum buffer starts at 0 => first step identical to SGD
+        assert!((x1[0] - 0.9).abs() < 1e-7);
+        // Second step: m = 0.9 * 1 + 1 = 1.9
+        o1.step(&mut x1, &[1.0, 1.0], 0.1);
+        assert!((x1[0] - (0.9 - 0.19)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adamw_decoupled_decay_shrinks_params_with_zero_grad() {
+        let mut p = OptimParams::paper_adamw();
+        p.grad_clip = None;
+        let mut x = vec![1.0f32];
+        let mut opt = p.build(1);
+        opt.step(&mut x, &[0.0], 0.1);
+        // pure decay: x -= lr * wd * x = 1 - 0.1*0.1 = 0.99
+        assert!((x[0] - 0.99).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grad_clip_limits_update() {
+        let mut p = OptimParams::plain_sgd();
+        p.grad_clip = Some(1.0);
+        let mut x = vec![0.0f32, 0.0];
+        let mut opt = p.build(2);
+        opt.step(&mut x, &[30.0, 40.0], 1.0); // norm 50 -> clipped to 1
+        let step_norm = tensor::norm(&x);
+        assert!((step_norm - 1.0).abs() < 1e-5, "step norm {step_norm}");
+    }
+
+    #[test]
+    fn clip_does_not_mutate_caller_grad() {
+        let mut p = OptimParams::plain_sgd();
+        p.grad_clip = Some(1.0);
+        let g = vec![30.0f32, 40.0];
+        let mut x = vec![0.0f32, 0.0];
+        let mut opt = p.build(2);
+        opt.step(&mut x, &g, 1.0);
+        assert_eq!(g, vec![30.0, 40.0]);
+    }
+
+    #[test]
+    fn state_bytes_accounting() {
+        assert_eq!(OptimParams::plain_sgd().build(100).state_bytes(), 0);
+        let mut shb = OptimParams::paper_shb();
+        shb.kind = OptimKind::Shb;
+        assert_eq!(shb.build(100).state_bytes(), 400);
+        assert_eq!(OptimParams::paper_adamw().build(100).state_bytes(), 800);
+    }
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(OptimKind::parse("AdamW"), Some(OptimKind::AdamW));
+        assert_eq!(OptimKind::parse("momentum"), Some(OptimKind::Shb));
+        assert_eq!(OptimKind::parse("sgd"), Some(OptimKind::Sgd));
+        assert_eq!(OptimKind::parse("nope"), None);
+    }
+}

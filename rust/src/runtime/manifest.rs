@@ -1,0 +1,173 @@
+//! Artifact manifest (`artifacts/<model>/meta.json`) written by
+//! `python/compile/aot.py` — the contract between the build-time Python layers
+//! and the Rust runtime.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ModelKind {
+    Classifier,
+    Lm,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub kind: ModelKind,
+    pub dim: usize,
+    pub micro_batch: usize,
+    pub eval_batch: usize,
+    /// (name, shape) flat-parameter segments — mirrors model.py `layout`.
+    pub layout: Vec<(String, Vec<usize>)>,
+    /// entry -> hlo file name.
+    pub entries: std::collections::BTreeMap<String, String>,
+    pub norm_stat_workers: Vec<usize>,
+    // classifier
+    pub input_dim: usize,
+    pub num_classes: usize,
+    // lm
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub dir: PathBuf,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &Path) -> Result<ModelMeta, String> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .map_err(|e| format!("read {}: {e}", meta_path.display()))?;
+        let j = Json::parse(&text).map_err(|e| format!("parse {}: {e}", meta_path.display()))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<ModelMeta, String> {
+        let kind = match j.get("kind").as_str() {
+            Some("classifier") => ModelKind::Classifier,
+            Some("lm") => ModelKind::Lm,
+            other => return Err(format!("unknown model kind {other:?}")),
+        };
+        let layout = j
+            .get("layout")
+            .as_arr()
+            .ok_or("layout missing")?
+            .iter()
+            .map(|e| {
+                let pair = e.as_arr().ok_or("layout entry")?;
+                let name = pair[0].as_str().ok_or("layout name")?.to_string();
+                let shape = pair[1]
+                    .as_arr()
+                    .ok_or("layout shape")?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or("layout dim"))
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok::<_, &str>((name, shape))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let entries = j
+            .get("entries")
+            .as_obj()
+            .ok_or("entries missing")?
+            .iter()
+            .map(|(k, v)| Ok::<_, &str>((k.clone(), v.as_str().ok_or("entry path")?.to_string())))
+            .collect::<Result<_, _>>()?;
+        let norm_stat_workers = j
+            .get("norm_stat_workers")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+            .unwrap_or_default();
+        Ok(ModelMeta {
+            name: j.get("name").as_str().unwrap_or("model").to_string(),
+            kind,
+            dim: j.get("dim").as_usize().ok_or("dim")?,
+            micro_batch: j.get("micro_batch").as_usize().ok_or("micro_batch")?,
+            eval_batch: j.get("eval_batch").as_usize().ok_or("eval_batch")?,
+            layout,
+            entries,
+            norm_stat_workers,
+            input_dim: j.get("input_dim").as_usize().unwrap_or(0),
+            num_classes: j.get("num_classes").as_usize().unwrap_or(0),
+            vocab: j.get("vocab").as_usize().unwrap_or(0),
+            seq_len: j.get("seq_len").as_usize().unwrap_or(0),
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn entry_path(&self, entry: &str) -> Result<PathBuf, String> {
+        self.entries
+            .get(entry)
+            .map(|f| self.dir.join(f))
+            .ok_or_else(|| format!("model {} has no entry '{entry}'", self.name))
+    }
+
+    /// Total parameter count from the layout — must equal `dim`.
+    pub fn layout_dim(&self) -> usize {
+        self.layout
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+}
+
+/// Locate the artifacts root: $ADALOCO_ARTIFACTS or ./artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("ADALOCO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(
+            r#"{
+            "name": "mlp_s", "kind": "classifier", "dim": 10,
+            "micro_batch": 4, "eval_batch": 8,
+            "layout": [["w0", [2, 3]], ["b0", [4]]],
+            "entries": {"grad": "grad.hlo.txt", "init": "init.hlo.txt"},
+            "norm_stat_workers": [4],
+            "input_dim": 3, "num_classes": 2
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_meta() {
+        let m = ModelMeta::from_json(&sample_json(), Path::new("/tmp/x")).unwrap();
+        assert_eq!(m.name, "mlp_s");
+        assert_eq!(m.kind, ModelKind::Classifier);
+        assert_eq!(m.dim, 10);
+        assert_eq!(m.layout.len(), 2);
+        assert_eq!(m.layout_dim(), 10);
+        assert_eq!(m.norm_stat_workers, vec![4]);
+        assert_eq!(
+            m.entry_path("grad").unwrap(),
+            PathBuf::from("/tmp/x/grad.hlo.txt")
+        );
+        assert!(m.entry_path("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        let j = Json::parse(r#"{"kind": "diffusion"}"#).unwrap();
+        assert!(ModelMeta::from_json(&j, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn real_artifact_meta_if_present() {
+        // Integration check against the actual aot.py output when built.
+        let dir = artifacts_root().join("tinylm");
+        if !dir.join("meta.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = ModelMeta::load(&dir).unwrap();
+        assert_eq!(m.kind, ModelKind::Lm);
+        assert_eq!(m.layout_dim(), m.dim);
+        assert!(m.entry_path("grad").unwrap().exists());
+        assert!(m.entry_path("init").unwrap().exists());
+        assert!(m.entry_path("eval").unwrap().exists());
+    }
+}

@@ -1,0 +1,11 @@
+//! Flat f32 vector math — the L3 coordinator hot path.
+//!
+//! All model parameters, gradients, and optimizer state live in flat `Vec<f32>`
+//! buffers (matching the flat-parameter artifact interface, see
+//! `python/compile/model.py`). These kernels are written as simple chunked loops
+//! the compiler auto-vectorizes; the perf pass (EXPERIMENTS.md §Perf) measures and
+//! tunes them via `benches/bench_tensor.rs`.
+
+pub mod ops;
+
+pub use ops::*;

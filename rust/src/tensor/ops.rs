@@ -1,0 +1,355 @@
+//! Vector kernels over flat f32 buffers.
+//!
+//! Invariants: every binary op asserts equal lengths; reductions accumulate in f64
+//! (gradient norms at d ~ 10^7 lose precision in f32 accumulation, which would
+//! perturb the norm-test statistic and hence batch-size decisions).
+
+/// y += alpha * x
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "axpy length mismatch");
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y = alpha * x + beta * y
+pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "axpby length mismatch");
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = alpha * xi + beta * *yi;
+    }
+}
+
+/// x *= alpha
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// out = x (copy)
+pub fn copy(x: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), out.len(), "copy length mismatch");
+    out.copy_from_slice(x);
+}
+
+pub fn fill(x: &mut [f32], v: f32) {
+    for xi in x.iter_mut() {
+        *xi = v;
+    }
+}
+
+/// <x, y> with f64 accumulation.
+///
+/// Perf (§Perf iteration 2): a single f64 accumulator serializes the loop on
+/// its dependency chain (~1.3 Gelem/s); four independent accumulators expose
+/// ILP and let the compiler vectorize the f32→f64 converts. Summation order
+/// changes are within the module's f64-rounding contract.
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len(), "dot length mismatch");
+    let mut acc = [0f64; 4];
+    let n4 = x.len() & !3;
+    let mut i = 0;
+    while i < n4 {
+        acc[0] += (x[i] as f64) * (y[i] as f64);
+        acc[1] += (x[i + 1] as f64) * (y[i + 1] as f64);
+        acc[2] += (x[i + 2] as f64) * (y[i + 2] as f64);
+        acc[3] += (x[i + 3] as f64) * (y[i + 3] as f64);
+        i += 4;
+    }
+    let mut tail = 0f64;
+    for j in n4..x.len() {
+        tail += (x[j] as f64) * (y[j] as f64);
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// ||x||^2 with f64 accumulation (4-way unrolled; see `dot`).
+pub fn norm_sq(x: &[f32]) -> f64 {
+    let mut acc = [0f64; 4];
+    let n4 = x.len() & !3;
+    let mut i = 0;
+    while i < n4 {
+        acc[0] += (x[i] as f64) * (x[i] as f64);
+        acc[1] += (x[i + 1] as f64) * (x[i + 1] as f64);
+        acc[2] += (x[i + 2] as f64) * (x[i + 2] as f64);
+        acc[3] += (x[i + 3] as f64) * (x[i + 3] as f64);
+        i += 4;
+    }
+    let mut tail = 0f64;
+    for j in n4..x.len() {
+        tail += (x[j] as f64) * (x[j] as f64);
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+pub fn norm(x: &[f32]) -> f64 {
+    norm_sq(x).sqrt()
+}
+
+/// ||x - y||^2 with f64 accumulation (4-way unrolled; see `dot`).
+pub fn dist_sq(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len(), "dist_sq length mismatch");
+    let mut acc = [0f64; 4];
+    let n4 = x.len() & !3;
+    let mut i = 0;
+    while i < n4 {
+        let d0 = (x[i] - y[i]) as f64;
+        let d1 = (x[i + 1] - y[i + 1]) as f64;
+        let d2 = (x[i + 2] - y[i + 2]) as f64;
+        let d3 = (x[i + 3] - y[i + 3]) as f64;
+        acc[0] += d0 * d0;
+        acc[1] += d1 * d1;
+        acc[2] += d2 * d2;
+        acc[3] += d3 * d3;
+        i += 4;
+    }
+    let mut tail = 0f64;
+    for j in n4..x.len() {
+        let d = (x[j] - y[j]) as f64;
+        tail += d * d;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// Elementwise mean of `rows` into `out`: out[j] = (1/R) sum_r rows[r][j].
+pub fn mean_rows(rows: &[&[f32]], out: &mut [f32]) {
+    assert!(!rows.is_empty(), "mean_rows over zero rows");
+    let d = out.len();
+    for r in rows {
+        assert_eq!(r.len(), d, "mean_rows length mismatch");
+    }
+    fill(out, 0.0);
+    for r in rows {
+        axpy(1.0, r, out);
+    }
+    scale(1.0 / rows.len() as f32, out);
+}
+
+/// Sum of squared distances of each row from `center`: sum_r ||rows[r]-center||^2.
+pub fn scatter_sq(rows: &[&[f32]], center: &[f32]) -> f64 {
+    rows.iter().map(|r| dist_sq(r, center)).sum()
+}
+
+/// Fused, cache-blocked norm-test statistics over stacked rows:
+/// (var_sum, center_norm_sq) where center = mean(rows) is ALSO written to
+/// `center`. This is the native-substrate analogue of the Pallas `norm_test`
+/// kernel and the L3 sync-time hot path.
+///
+/// Perf (EXPERIMENTS.md §Perf): the naive pipeline (`mean_rows` +
+/// `scatter_sq` + `norm_sq`) makes ~2M+2 full-memory sweeps of the M×D
+/// matrix; this version processes one D-chunk at a time so every element is
+/// touched while resident in L1/L2 — a single effective memory sweep. Uses
+/// the two-moment identity Σ‖g_m−ḡ‖² = Σ‖g_m‖² − M‖ḡ‖² per column chunk
+/// (f64 accumulation, same numerics contract as the rest of this module).
+pub fn norm_test_stats(rows: &[&[f32]], center: &mut [f32]) -> (f64, f64) {
+    let m = rows.len();
+    assert!(m > 0, "norm_test_stats over zero rows");
+    let d = center.len();
+    for r in rows {
+        assert_eq!(r.len(), d, "norm_test_stats length mismatch");
+    }
+    const CHUNK: usize = 4096; // 16 KiB per row slice: M+1 streams stay in L1/L2
+    let inv_m = 1.0f32 / m as f32;
+    let mut var_sum = 0f64;
+    let mut nsq = 0f64;
+    let mut lo = 0;
+    while lo < d {
+        let hi = (lo + CHUNK).min(d);
+        let c = &mut center[lo..hi];
+        // mean into the center chunk
+        c.copy_from_slice(&rows[0][lo..hi]);
+        for r in rows.iter().skip(1) {
+            axpy(1.0, &r[lo..hi], c);
+        }
+        scale(inv_m, c);
+        // second moment: Σ_m Σ_j g_mj² over the chunk (rows still cache-hot)
+        let mut sumsq = 0f64;
+        for r in rows.iter() {
+            sumsq += norm_sq(&r[lo..hi]);
+        }
+        let cn = norm_sq(c);
+        var_sum += (sumsq - m as f64 * cn).max(0.0);
+        nsq += cn;
+        lo = hi;
+    }
+    (var_sum, nsq)
+}
+
+/// Reference multi-pass implementation (kept for the §Perf before/after bench
+/// and as a cross-check oracle in tests).
+pub fn norm_test_stats_naive(rows: &[&[f32]], center: &mut [f32]) -> (f64, f64) {
+    mean_rows(rows, center);
+    let var_sum = scatter_sq(rows, center);
+    let nsq = norm_sq(center);
+    (var_sum, nsq)
+}
+
+/// Gradient clipping by global norm (returns the pre-clip norm).
+pub fn clip_by_norm(x: &mut [f32], max_norm: f64) -> f64 {
+    let n = norm(x);
+    if n > max_norm && n > 0.0 {
+        scale((max_norm / n) as f32, x);
+    }
+    n
+}
+
+/// max_i |x_i|
+pub fn max_abs(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+/// Any NaN/Inf check (guards the engine against diverged runs).
+pub fn all_finite(x: &[f32]) -> bool {
+    x.iter().all(|v| v.is_finite())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, gen_vec_n};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn axpy_basic() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn axpby_basic() {
+        let x = vec![1.0, 2.0];
+        let mut y = vec![3.0, 4.0];
+        axpby(2.0, &x, 0.5, &mut y);
+        assert_eq!(y, vec![3.5, 6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn axpy_mismatch_panics() {
+        let mut y = vec![0.0; 2];
+        axpy(1.0, &[1.0, 2.0, 3.0], &mut y);
+    }
+
+    #[test]
+    fn dot_and_norms() {
+        let x = vec![3.0, 4.0];
+        assert_eq!(dot(&x, &x), 25.0);
+        assert_eq!(norm_sq(&x), 25.0);
+        assert_eq!(norm(&x), 5.0);
+        assert_eq!(dist_sq(&x, &[0.0, 0.0]), 25.0);
+    }
+
+    #[test]
+    fn f64_accumulation_is_stable() {
+        // 1e7 elements of 1e-4: f32 accumulation of squares drifts; f64 is exact
+        // to within rounding of the final value.
+        let x = vec![1e-2f32; 1_000_000];
+        let ns = norm_sq(&x);
+        let expect = (1e-2f32 as f64) * (1e-2f32 as f64) * 1e6;
+        // f64 summation rounding over 1e6 terms is ~n·eps ≈ 1e-10 relative.
+        assert!((ns - expect).abs() / expect < 1e-9, "norm_sq={ns} expect={expect}");
+    }
+
+    #[test]
+    fn mean_rows_basic() {
+        let r1 = vec![1.0, 2.0];
+        let r2 = vec![3.0, 6.0];
+        let rows: Vec<&[f32]> = vec![&r1, &r2];
+        let mut out = vec![0.0; 2];
+        mean_rows(&rows, &mut out);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn norm_test_stats_matches_naive() {
+        prop::check(50, |rng| {
+            let m = 2 + rng.below(6) as usize;
+            let d = 1 + rng.below(100) as usize;
+            let rows_v: Vec<Vec<f32>> = (0..m).map(|_| gen_vec_n(rng, d, 2.0)).collect();
+            let rows: Vec<&[f32]> = rows_v.iter().map(|r| r.as_slice()).collect();
+            let mut center = vec![0.0; d];
+            let (var_sum, nsq) = norm_test_stats(&rows, &mut center);
+
+            // cross-check fused vs multi-pass implementation
+            let mut center2 = vec![0.0; d];
+            let (v2, n2) = norm_test_stats_naive(&rows, &mut center2);
+            if !(prop::close(var_sum, v2, 1e-4, 1e-6) && prop::close(nsq, n2, 1e-6, 1e-9)) {
+                return Err(format!("fused {var_sum}/{nsq} vs naive {v2}/{n2}"));
+            }
+            if prop::max_abs_diff(&center, &center2) > 1e-6 {
+                return Err("fused center mismatch".into());
+            }
+
+            // naive recomputation
+            let mut c2 = vec![0f64; d];
+            for r in &rows_v {
+                for (j, v) in r.iter().enumerate() {
+                    c2[j] += *v as f64;
+                }
+            }
+            for v in c2.iter_mut() {
+                *v /= m as f64;
+            }
+            let var2: f64 = rows_v
+                .iter()
+                .map(|r| r.iter().zip(&c2).map(|(x, c)| (*x as f64 - c).powi(2)).sum::<f64>())
+                .sum();
+            let nsq2: f64 = c2.iter().map(|c| c * c).sum();
+            prop::assert_prop(
+                prop::close(var_sum, var2, 1e-4, 1e-6) && prop::close(nsq, nsq2, 1e-4, 1e-6),
+                format!("var {var_sum} vs {var2}, nsq {nsq} vs {nsq2}"),
+            )
+        });
+    }
+
+    #[test]
+    fn clip_by_norm_behaviour() {
+        let mut x = vec![3.0, 4.0];
+        let pre = clip_by_norm(&mut x, 1.0);
+        assert_eq!(pre, 5.0);
+        assert!((norm(&x) - 1.0).abs() < 1e-6);
+        let mut y = vec![0.1, 0.1];
+        let pre2 = clip_by_norm(&mut y, 1.0);
+        assert!(pre2 < 1.0);
+        assert_eq!(y, vec![0.1, 0.1]); // unchanged below threshold
+    }
+
+    #[test]
+    fn finite_checks() {
+        assert!(all_finite(&[1.0, -2.0, 0.0]));
+        assert!(!all_finite(&[1.0, f32::NAN]));
+        assert!(!all_finite(&[f32::INFINITY]));
+        assert_eq!(max_abs(&[-3.0, 2.0]), 3.0);
+    }
+
+    #[test]
+    fn scale_fill_copy() {
+        let mut x = vec![1.0, 2.0];
+        scale(3.0, &mut x);
+        assert_eq!(x, vec![3.0, 6.0]);
+        let mut out = vec![0.0; 2];
+        copy(&x, &mut out);
+        assert_eq!(out, x);
+        fill(&mut out, 7.0);
+        assert_eq!(out, vec![7.0, 7.0]);
+    }
+
+    #[test]
+    fn prop_dot_symmetry_and_cauchy_schwarz() {
+        prop::check(100, |rng| {
+            let n = 1 + rng.below(256) as usize;
+            let x = gen_vec_n(rng, n, 5.0);
+            let y = gen_vec_n(rng, n, 5.0);
+            let d1 = dot(&x, &y);
+            let d2 = dot(&y, &x);
+            let cs = d1 * d1 <= norm_sq(&x) * norm_sq(&y) * (1.0 + 1e-9) + 1e-9;
+            prop::assert_prop(
+                prop::close(d1, d2, 1e-12, 1e-12) && cs,
+                format!("d1={d1} d2={d2}"),
+            )
+        });
+    }
+}

@@ -1,0 +1,172 @@
+//! Tiny command-line argument parser (offline build has no clap).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, repeated flags, and
+//! positional arguments, with typed accessors and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` ends flag parsing; remainder is positional.
+                    out.positional.extend(it);
+                    break;
+                }
+                let (key, val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let val = match val {
+                    Some(v) => v,
+                    None => {
+                        // A value follows unless the next token is another flag.
+                        match it.peek() {
+                            Some(n) if !n.starts_with("--") => it.next().unwrap(),
+                            _ => String::new(), // boolean flag
+                        }
+                    }
+                };
+                out.flags.entry(key).or_default().push(val);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags.get(key).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("") => Err(CliError(format!("--{key} requires a value"))),
+            Some(s) => s
+                .parse()
+                .map_err(|_| CliError(format!("invalid value for --{key}: '{s}'"))),
+        }
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str, CliError> {
+        match self.get(key) {
+            Some(s) if !s.is_empty() => Ok(s),
+            _ => Err(CliError(format!("missing required flag --{key}"))),
+        }
+    }
+
+    /// Comma-separated list flag: `--hs 32,16,4,1`.
+    pub fn list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Result<Vec<T>, CliError>
+    where
+        T: Clone,
+    {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| CliError(format!("invalid item in --{key}: '{p}'")))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = args(&["--x", "1", "--y=2", "--flag", "--z", "hello"]);
+        assert_eq!(a.get("x"), Some("1"));
+        assert_eq!(a.get("y"), Some("2"));
+        assert!(a.has("flag"));
+        assert_eq!(a.get("flag"), Some(""));
+        assert_eq!(a.get("z"), Some("hello"));
+    }
+
+    #[test]
+    fn positional_and_separator() {
+        let a = args(&["train", "--n", "5", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["train", "--not-a-flag"]);
+        assert_eq!(a.parse_or("n", 0usize).unwrap(), 5);
+    }
+
+    #[test]
+    fn typed_parsing() {
+        let a = args(&["--lr", "0.05", "--steps", "100"]);
+        assert_eq!(a.parse_or("lr", 0.0f64).unwrap(), 0.05);
+        assert_eq!(a.parse_or("steps", 0u64).unwrap(), 100);
+        assert_eq!(a.parse_or("missing", 7u32).unwrap(), 7);
+        assert!(a.parse_or("lr", 0u32).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = args(&["--hs", "32,16,4,1"]);
+        assert_eq!(a.list_or("hs", &[0u32]).unwrap(), vec![32, 16, 4, 1]);
+        assert_eq!(a.list_or::<u32>("missing", &[9]).unwrap(), vec![9]);
+        let b = args(&["--etas", "0.8, 0.9"]);
+        assert_eq!(b.list_or("etas", &[0.0f64]).unwrap(), vec![0.8, 0.9]);
+    }
+
+    #[test]
+    fn repeated_flags() {
+        let a = args(&["--tag", "a", "--tag", "b"]);
+        assert_eq!(a.get_all("tag"), vec!["a", "b"]);
+        assert_eq!(a.get("tag"), Some("b"));
+    }
+
+    #[test]
+    fn require_missing() {
+        let a = args(&["--x", "1"]);
+        assert!(a.require("x").is_ok());
+        assert!(a.require("y").is_err());
+    }
+}

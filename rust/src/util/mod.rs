@@ -1,0 +1,7 @@
+//! Shared utilities: JSON, RNG, CLI parsing, stats, property-testing helpers.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,105 @@
+//! Lightweight property-based testing helper (no proptest in the offline build).
+//!
+//! `check` runs a property over `cases` randomly generated inputs; on failure it
+//! reports the case index and the seed needed to replay it deterministically:
+//!
+//! ```ignore
+//! prop::check(100, |rng| {
+//!     let n = 1 + rng.below(64) as usize;
+//!     let v = gen_vec(rng, n);
+//!     prop::assert_prop(invariant(&v), format!("violated for {v:?}"))
+//! });
+//! ```
+//!
+//! The environment variable `ADALOCO_PROP_SEED` replays a specific failing seed.
+
+use super::rng::Pcg64;
+
+pub type PropResult = Result<(), String>;
+
+pub fn assert_prop(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `prop` over `cases` seeded inputs; panics with a replayable seed on failure.
+pub fn check<F: FnMut(&mut Pcg64) -> PropResult>(cases: u64, mut prop: F) {
+    if let Ok(s) = std::env::var("ADALOCO_PROP_SEED") {
+        let seed: u64 = s.parse().expect("ADALOCO_PROP_SEED must be u64");
+        let mut rng = Pcg64::new(seed, 0xF00D);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed on replay seed {seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        let mut rng = Pcg64::new(seed, 0xF00D);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed on case {case}/{cases}: {msg}\n\
+                 replay with ADALOCO_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Uniform f32 vector in [-scale, scale], random length in [1, max_len].
+pub fn gen_vec(rng: &mut Pcg64, max_len: usize, scale: f32) -> Vec<f32> {
+    let n = 1 + rng.below(max_len as u64) as usize;
+    (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect()
+}
+
+/// Vector of exactly length n.
+pub fn gen_vec_n(rng: &mut Pcg64, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect()
+}
+
+/// Check two floats match to a relative-or-absolute tolerance.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// Max elementwise |a - b| over two slices (must be equal length).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_for_true_property() {
+        check(50, |rng| {
+            let v = gen_vec(rng, 32, 10.0);
+            assert_prop(!v.is_empty() && v.len() <= 32, "length bound")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with ADALOCO_PROP_SEED=")]
+    fn check_reports_seed_on_failure() {
+        check(50, |rng| {
+            let v = gen_vec(rng, 32, 10.0);
+            assert_prop(v.len() < 16, "deliberately falsifiable")
+        });
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, 0.0));
+        assert!(!close(1.0, 1.1, 1e-6, 1e-6));
+        assert!(close(0.0, 1e-9, 0.0, 1e-6));
+    }
+
+    #[test]
+    fn gen_vec_n_len() {
+        let mut rng = Pcg64::new(1, 0);
+        assert_eq!(gen_vec_n(&mut rng, 17, 1.0).len(), 17);
+    }
+}

@@ -1,0 +1,265 @@
+//! Deterministic pseudo-random number generation (no external `rand` crate).
+//!
+//! `Pcg64` is a PCG-XSL-RR 128/64 generator — the same family `rand_pcg` ships —
+//! seeded via SplitMix64 so that small integer seeds give well-distributed streams.
+//! Every stochastic component of the framework (data synthesis, batch sampling,
+//! init fallback, property tests) takes an explicit `&mut Pcg64`, making whole
+//! training runs bit-reproducible from a single `(seed, stream)` pair.
+
+/// PCG-XSL-RR 128/64.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id. Different streams from the
+    /// same seed are independent — workers use `stream = worker_id`.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = seed;
+        let s0 = splitmix64(&mut sm) as u128;
+        let s1 = splitmix64(&mut sm) as u128;
+        let mut sm2 = stream ^ 0xda3e_39cb_94b9_5bdb;
+        let i0 = splitmix64(&mut sm2) as u128;
+        let i1 = splitmix64(&mut sm2) as u128;
+        let mut rng = Pcg64 {
+            state: (s0 << 64) | s1,
+            inc: (((i0 << 64) | i1) << 1) | 1, // must be odd
+        };
+        rng.next_u64();
+        rng
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Unbiased uniform integer in [0, bound) via Lemire's method.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut lo = m as u64;
+        if lo < bound {
+            let t = bound.wrapping_neg() % bound;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (cached second value dropped for simplicity;
+    /// gradients of synthesis cost don't matter at these sizes).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Fill a slice with i.i.d. N(0, sigma^2) samples.
+    pub fn fill_normal(&mut self, out: &mut [f32], sigma: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal_f32() * sigma;
+        }
+    }
+
+    /// Zipf(alpha) sample over [0, n) — rank-frequency distribution for the
+    /// synthetic token stream (C4 analogue). Uses inverse-CDF on a precomputed
+    /// table-free approximation (rejection sampling, Devroye).
+    pub fn zipf(&mut self, n: u64, alpha: f64) -> u64 {
+        debug_assert!(n >= 1 && alpha > 1.0);
+        let b = 2f64.powf(alpha - 1.0);
+        loop {
+            let u = self.next_f64();
+            let v = self.next_f64();
+            let x = (n as f64).powf(1.0 - alpha);
+            let x = ((1.0 - u * (1.0 - x)).powf(1.0 / (1.0 - alpha))).floor();
+            let t = (1.0 + 1.0 / x).powf(alpha - 1.0);
+            if v * x * (t - 1.0) / (b - 1.0) <= t / b {
+                let k = (x as u64).max(1).min(n);
+                return k - 1;
+            }
+        }
+    }
+
+    /// Sample `k` indices from [0, n) without replacement (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        // For small k relative to n, use a set-based approach; else shuffle prefix.
+        if k * 4 < n {
+            let mut seen = std::collections::HashSet::with_capacity(k * 2);
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let i = self.below(n as u64) as usize;
+                if seen.insert(i) {
+                    out.push(i);
+                }
+            }
+            out
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = i + self.below((n - i) as u64) as usize;
+                idx.swap(i, j);
+            }
+            idx.truncate(k);
+            idx
+        }
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fork a child generator (e.g., per-worker) deterministically.
+    pub fn fork(&mut self, stream: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64(), stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 0);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same <= 1);
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Pcg64::new(7, 0);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(3, 0);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn below_in_range_and_covers() {
+        let mut r = Pcg64::new(1, 0);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn zipf_skewed_and_in_range() {
+        let mut r = Pcg64::new(9, 0);
+        let n = 100u64;
+        let mut counts = vec![0usize; n as usize];
+        for _ in 0..20_000 {
+            let k = r.zipf(n, 1.5);
+            assert!(k < n);
+            counts[k as usize] += 1;
+        }
+        // Rank 0 should dominate rank 9 roughly by (10/1)^1.5 ≈ 31x; allow slack.
+        assert!(counts[0] > counts[9] * 5, "{} vs {}", counts[0], counts[9]);
+    }
+
+    #[test]
+    fn sample_indices_unique() {
+        let mut r = Pcg64::new(5, 0);
+        for (n, k) in [(100, 5), (10, 10), (50, 40)] {
+            let idx = r.sample_indices(n, k);
+            assert_eq!(idx.len(), k);
+            let set: std::collections::HashSet<_> = idx.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(idx.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(11, 0);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn fork_independent() {
+        let mut root = Pcg64::new(13, 0);
+        let mut c0 = root.fork(0);
+        let mut c1 = root.fork(1);
+        let same = (0..64).filter(|_| c0.next_u64() == c1.next_u64()).count();
+        assert!(same <= 1);
+    }
+}

@@ -1,0 +1,23 @@
+#!/usr/bin/env python3
+"""Assemble EXPERIMENTS.md sections from results/*/table.txt and figure.txt."""
+import re, os, sys
+
+R = "results"
+def load(p):
+    p = os.path.join(R, p)
+    return open(p).read().strip() if os.path.exists(p) else "(not generated)"
+
+sections = {
+    "T1": "```\n" + load("t1/table.txt") + "\n```",
+    "T2": "```\n" + load("t2/table.txt") + "\n```",
+    "T4T6": "```\n" + load("t4/table.txt") + "\n```\n\n```\n" + load("t6/table.txt") + "\n```",
+    "T8": "```\n" + load("t8/table.txt") + "\n```",
+    "FIGS": "```\n" + load("f1/figure.txt") + "\n```\n\n```\n" + load("f2/figure.txt") + "\n```\n\n```\n" + load("f8/figure.txt") + "\n```",
+    "THEORY": "```\n" + load("theory/table.txt") + "\n```",
+    "ABLATIONS": "```\n" + load("ab2/table.txt") + "\n```\n\n```\n" + load("ab3/table.txt") + "\n```",
+}
+src = open("EXPERIMENTS.md").read()
+for key, text in sections.items():
+    src = re.sub(rf"<!-- {key} -->", lambda m: text, src, count=1)
+open("EXPERIMENTS.md", "w").write(src)
+print("filled", list(sections))

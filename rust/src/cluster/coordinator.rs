@@ -1,0 +1,482 @@
+//! The elastic coordinator: admits workers, drives the round state machine,
+//! and performs the message-passing collectives.
+//!
+//! State machine (per [`Phase`], in the spirit of Psyche's run states):
+//!
+//! ```text
+//! WaitingForWorkers ──all Hellos──▶ Warmup ──warmup_rounds──▶ Round
+//!        ▲                            │                        │ H local steps
+//!        └──────── (spawn) ───────────┘                        ▼
+//!      Done ◀──cooldown_rounds── Cooldown ◀──budget met── Sync (gather/avg/bcast)
+//!                                                              │
+//!                                                              └──▶ next Round
+//! ```
+//!
+//! Every round: assign `RunRound` to the contributors (active workers minus
+//! injected dropouts), gather their `RoundDone` messages, average the
+//! parameters **over contributors only** (dropout re-weighting) in ascending
+//! worker order with exactly the reduction used by
+//! [`crate::collective::allreduce_mean_serial`], broadcast the consensus back,
+//! evaluate the norm-test statistics, and consult the batch-size controller
+//! and sync scheduler — the same [`EngineOpts`] contract as the sequential
+//! engine, which is what makes the two engines agree bit-for-bit on a
+//! homogeneous no-fault scenario (`cluster_matches_sequential_engine` below).
+
+use super::membership::Roster;
+use super::messages::{FromWorker, RoundResult, ToWorker};
+use super::worker::spawn_worker;
+use crate::batch::SyncEvent;
+use crate::config::WorkerSpec;
+use crate::data::Dataset;
+use crate::engine::{EngineOpts, TrainEngine};
+use crate::metrics::{EvalPoint, RunRecord};
+use crate::model::GradModel;
+use crate::tensor;
+use crate::util::rng::Pcg64;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
+
+/// Coordinator state. `Sync` is entered between a round's compute and the
+/// broadcast of the averaged parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    WaitingForWorkers,
+    Warmup,
+    Round,
+    Sync,
+    Cooldown,
+    Done,
+}
+
+/// How long the coordinator waits for any single worker message before
+/// concluding a worker thread died. Generous: a healthy worker replies in
+/// milliseconds; only a panicked thread goes silent.
+const WORKER_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// The concurrent message-passing engine. Construct via
+/// [`ClusterEngine::new`] (homogeneous, no faults) or
+/// [`ClusterEngine::from_scenario`].
+pub struct ClusterEngine {
+    pub workers: Vec<WorkerSpec>,
+    pub warmup_rounds: u64,
+    pub cooldown_rounds: u64,
+    /// Observability: the phase after `run` returns (always `Done`).
+    pub phase: Phase,
+}
+
+impl ClusterEngine {
+    /// Homogeneous fault-free cluster of `m` workers.
+    pub fn new(m: usize) -> Self {
+        ClusterEngine {
+            workers: vec![WorkerSpec::default(); m],
+            warmup_rounds: 0,
+            cooldown_rounds: 0,
+            phase: Phase::WaitingForWorkers,
+        }
+    }
+
+    /// Engine configured from a scenario's worker timeline.
+    pub fn from_scenario(spec: &crate::config::ScenarioSpec) -> Self {
+        ClusterEngine {
+            workers: spec.workers.clone(),
+            warmup_rounds: spec.warmup_rounds,
+            cooldown_rounds: spec.cooldown_rounds,
+            phase: Phase::WaitingForWorkers,
+        }
+    }
+
+    fn recv(rx: &Receiver<FromWorker>) -> FromWorker {
+        match rx.recv_timeout(WORKER_TIMEOUT) {
+            Ok(m) => m,
+            Err(e) => panic!(
+                "cluster coordinator: no worker message within {WORKER_TIMEOUT:?} ({e}); \
+                 a worker thread likely panicked"
+            ),
+        }
+    }
+
+    /// Send `msg` to worker `w`; a dead channel means the thread crashed, so
+    /// the roster retires it permanently (elastic leave).
+    fn try_send(
+        txs: &[Sender<ToWorker>],
+        roster: &mut Roster,
+        w: usize,
+        round: u64,
+        msg: ToWorker,
+    ) -> bool {
+        if txs[w].send(msg).is_ok() {
+            true
+        } else {
+            roster.mark_crashed(w, round);
+            false
+        }
+    }
+}
+
+impl TrainEngine for ClusterEngine {
+    fn name(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn run(
+        &mut self,
+        mut models: Vec<Box<dyn GradModel>>,
+        datasets: Vec<Box<dyn Dataset>>,
+        opts: EngineOpts,
+    ) -> RunRecord {
+        let m = models.len();
+        assert!(m >= 1, "need at least one worker");
+        assert_eq!(m, datasets.len(), "models/datasets count mismatch");
+        assert_eq!(m, self.workers.len(), "models/worker-spec count mismatch");
+        assert_eq!(
+            m, opts.time_model.topo.m_workers,
+            "topology workers != engine workers"
+        );
+        let d = models[0].dim();
+        for mm in models.iter() {
+            assert_eq!(mm.dim(), d, "heterogeneous model dims");
+        }
+
+        let wall_start = std::time::Instant::now();
+        // Same x_0 on every worker (Algorithm A.2 input) — drawn exactly like
+        // the sequential engine, before the models move into their threads.
+        let mut rng = Pcg64::new(opts.seed, 0);
+        let x0 = models[0].init_params(&mut rng);
+        let mut params = x0;
+
+        // ---- WaitingForWorkers: spawn everyone, gather the Hellos ----------
+        self.phase = Phase::WaitingForWorkers;
+        let (from_tx, from_rx) = channel::<FromWorker>();
+        let mut txs = Vec::with_capacity(m);
+        let mut handles = Vec::with_capacity(m);
+        let mut datasets = datasets;
+        for (w, (model, dataset)) in models.drain(..).zip(datasets.drain(..)).enumerate() {
+            let (tx, handle) = spawn_worker(w, model, dataset, opts.optim.clone(), from_tx.clone());
+            txs.push(tx);
+            handles.push(handle);
+        }
+        let mut micro = 1u64;
+        for _ in 0..m {
+            match Self::recv(&from_rx) {
+                FromWorker::Hello { dim, micro_batch, .. } => {
+                    assert_eq!(dim, d, "worker reported mismatched dim");
+                    micro = micro.max(micro_batch as u64);
+                }
+                other => panic!("expected Hello during admission, got {other:?}"),
+            }
+        }
+
+        let mut roster = Roster::new(self.workers.clone());
+        let mut rec = RunRecord {
+            label: opts.label.clone(),
+            ..Default::default()
+        };
+        // Founding members receive x_0.
+        for w in roster.active() {
+            Self::try_send(&txs, &mut roster, w, 0, ToWorker::SetParams { params: params.clone() });
+        }
+
+        let mut b_local = opts.controller.b0().min(opts.b_max_local).max(1);
+        let mut samples: u64 = 0;
+        let mut steps: u64 = 0;
+        let mut sim_time = 0f64;
+        let mut next_eval = if opts.eval_every_samples == 0 {
+            u64::MAX
+        } else {
+            opts.eval_every_samples
+        };
+        let mut weighted_b: f64 = 0.0;
+        let mut total_local_steps: f64 = 0.0;
+        let needs_grad_ar = opts.controller.needs_grad_allreduce();
+        let mut gbar = vec![0.0f32; d];
+        let mut opts = opts;
+
+        let mut warmup_left = self.warmup_rounds;
+        let mut cooldown_left = self.cooldown_rounds;
+        self.phase = if warmup_left > 0 { Phase::Warmup } else { Phase::Round };
+
+        let mut round: u64 = 0;
+        while round < opts.max_rounds {
+            // ---- phase transitions ----------------------------------------
+            if self.phase == Phase::Warmup && warmup_left == 0 {
+                self.phase = Phase::Round;
+            }
+            if samples >= opts.total_samples
+                && matches!(self.phase, Phase::Warmup | Phase::Round)
+            {
+                if cooldown_left > 0 {
+                    self.phase = Phase::Cooldown;
+                } else {
+                    break;
+                }
+            }
+            if self.phase == Phase::Cooldown && cooldown_left == 0 {
+                break;
+            }
+
+            // ---- elastic membership for this round ------------------------
+            for w in roster.retire_due(round) {
+                let _ = txs[w].send(ToWorker::Stop);
+            }
+            for w in roster.admit_due(round) {
+                Self::try_send(
+                    &txs,
+                    &mut roster,
+                    w,
+                    round,
+                    ToWorker::SetParams { params: params.clone() },
+                );
+            }
+            if roster.active().is_empty() {
+                break; // everyone left or crashed: the run cannot proceed
+            }
+
+            // ---- round parameters per phase -------------------------------
+            let (h, controller_live) = match self.phase {
+                Phase::Warmup => {
+                    warmup_left -= 1;
+                    (1u32, false)
+                }
+                Phase::Cooldown => {
+                    cooldown_left -= 1;
+                    (1u32, false)
+                }
+                _ => {
+                    let lr_now = opts.lr.at(samples);
+                    (opts.scheduler.h_for_round(round, samples, lr_now), true)
+                }
+            };
+            let b_eff = b_local.div_ceil(micro) * micro;
+
+            // ---- assign the round -----------------------------------------
+            // The sample-indexed lr stride uses the planned contributor count
+            // (== M with full participation, matching the sequential engine).
+            let contributors = roster.contributors(round);
+            let k_planned = contributors.len() as u64;
+            let lrs: Vec<f64> = (0..h)
+                .map(|hs| opts.lr.at(samples + hs as u64 * k_planned * b_eff))
+                .collect();
+            let mut assigned = Vec::new();
+            for w in contributors {
+                if Self::try_send(
+                    &txs,
+                    &mut roster,
+                    w,
+                    round,
+                    ToWorker::RunRound { round, h, b_eff, lrs: lrs.clone() },
+                ) {
+                    assigned.push(w);
+                }
+            }
+            for w in roster.active() {
+                if roster.spec(w).drops_round(round) {
+                    roster.stats[w].dropped_rounds += 1;
+                }
+            }
+            if assigned.is_empty() {
+                // every contributor dropped or crashed this round: skip it
+                round += 1;
+                continue;
+            }
+
+            // ---- Sync: gather contributions -------------------------------
+            self.phase = Phase::Sync;
+            let mut results: Vec<Option<RoundResult>> = (0..m).map(|_| None).collect();
+            let mut outstanding = assigned.len();
+            while outstanding > 0 {
+                match Self::recv(&from_rx) {
+                    FromWorker::RoundDone(r) if r.round == round => {
+                        let w = r.worker;
+                        assert!(results[w].is_none(), "duplicate RoundDone");
+                        results[w] = Some(r);
+                        outstanding -= 1;
+                    }
+                    other => panic!("unexpected message during sync: {other:?}"),
+                }
+            }
+            let k = assigned.len();
+
+            // ---- bookkeeping (identical order to the sequential engine) ---
+            steps += h as u64;
+            samples += h as u64 * k as u64 * b_eff;
+            weighted_b += h as f64 * b_eff as f64;
+            total_local_steps += h as f64;
+
+            // ---- parameter average over contributors (eq. 3, re-weighted) --
+            // Same float-op sequence as the sequential engine, structurally:
+            // both run through collective::mean_reduce_into.
+            {
+                let first = results[assigned[0]].as_ref().unwrap();
+                params.copy_from_slice(&first.params);
+                let rest_refs: Vec<&[f32]> = assigned[1..]
+                    .iter()
+                    .map(|&w| results[w].as_ref().unwrap().params.as_slice())
+                    .collect();
+                crate::collective::mean_reduce_into(&mut params, &rest_refs);
+            }
+            rec.comm.charge_allreduce(d, k);
+            rec.comm.rounds += 1;
+            for w in roster.active() {
+                Self::try_send(
+                    &txs,
+                    &mut roster,
+                    w,
+                    round,
+                    ToWorker::SetParams { params: params.clone() },
+                );
+            }
+
+            // ---- norm-test statistics over the contributors' gradients ----
+            let grad_refs: Vec<&[f32]> = assigned
+                .iter()
+                .map(|&w| results[w].as_ref().unwrap().grad.as_slice())
+                .collect();
+            let (scatter, nsq) = tensor::norm_test_stats(&grad_refs, &mut gbar);
+            if needs_grad_ar {
+                rec.comm.charge_allreduce(d, k);
+            }
+            let mean_worker_norm_sq =
+                grad_refs.iter().map(|g| tensor::norm_sq(g)).sum::<f64>() / k as f64;
+            let ip_var = if k > 1 {
+                let dots: Vec<f64> = grad_refs.iter().map(|g| tensor::dot(g, &gbar)).collect();
+                let mean_dot = dots.iter().sum::<f64>() / k as f64;
+                dots.iter().map(|t| (t - mean_dot).powi(2)).sum::<f64>() / (k - 1) as f64
+            } else {
+                0.0
+            };
+            let psv = {
+                let vals: Vec<f64> = assigned
+                    .iter()
+                    .filter_map(|&w| results[w].as_ref().unwrap().per_sample_var)
+                    .collect();
+                if vals.len() == k {
+                    Some(vals.iter().sum::<f64>() / k as f64)
+                } else {
+                    None
+                }
+            };
+
+            if controller_live {
+                let ev = SyncEvent {
+                    round,
+                    samples,
+                    b_local: b_eff,
+                    m_workers: k,
+                    worker_scatter: scatter,
+                    gbar_norm_sq: nsq,
+                    per_sample_var: psv,
+                    mean_worker_norm_sq,
+                    inner_product_var: ip_var,
+                };
+                let decision = opts.controller.on_sync(&ev);
+                b_local = decision.b_next.min(opts.b_max_local).max(1);
+            }
+            rec.batch_trace.push((round, samples, b_eff));
+
+            // ---- simulated wall-clock (straggler max over contributors) ---
+            let mut worst = 0f64;
+            for &w in &assigned {
+                let spec = roster.spec(w);
+                let compute =
+                    opts.time_model
+                        .worker_round_time(b_eff, h, w, spec.straggle_factor(round), 0.0);
+                // Injected latency gates the round barrier but is not compute:
+                // only the compute share lands in the per-worker metric.
+                let t = compute + spec.extra_latency(round);
+                roster.stats[w].sim_compute_s += compute;
+                worst = worst.max(t);
+            }
+            sim_time += worst;
+            sim_time += opts.time_model.sync_time(d, needs_grad_ar);
+
+            // ---- per-worker metrics ---------------------------------------
+            for &w in &assigned {
+                let r = results[w].as_ref().unwrap();
+                let s = &mut roster.stats[w];
+                s.rounds_contributed += 1;
+                s.local_steps += h as u64;
+                s.samples += h as u64 * b_eff;
+                s.wall_compute_s += r.wall_s;
+                s.last_loss = r.loss;
+            }
+
+            // ---- evaluation on the lowest-id active worker ----------------
+            if samples >= next_eval || samples >= opts.total_samples {
+                let train_loss = assigned
+                    .iter()
+                    .map(|&w| results[w].as_ref().unwrap().loss)
+                    .sum::<f64>()
+                    / k as f64;
+                let mut evs = None;
+                for w in roster.active() {
+                    if Self::try_send(&txs, &mut roster, w, round, ToWorker::Evaluate { round }) {
+                        loop {
+                            match Self::recv(&from_rx) {
+                                FromWorker::EvalDone { round: r, stats, .. } if r == round => {
+                                    evs = Some(stats);
+                                    break;
+                                }
+                                other => panic!("unexpected message during eval: {other:?}"),
+                            }
+                        }
+                        break;
+                    }
+                }
+                if let Some(evs) = evs {
+                    rec.points.push(EvalPoint {
+                        step: steps,
+                        round,
+                        samples,
+                        sim_time_s: sim_time,
+                        b_local: b_eff,
+                        train_loss,
+                        val_loss: evs.loss,
+                        val_acc: evs.accuracy,
+                        val_top5: evs.top5,
+                    });
+                }
+                while next_eval <= samples {
+                    next_eval = next_eval.saturating_add(opts.eval_every_samples.max(1));
+                }
+            }
+
+            if !tensor::all_finite(&params) {
+                rec.diverged = true;
+                break;
+            }
+            // Sync complete: fall back to the training phase for the next round.
+            self.phase = if warmup_left > 0 {
+                Phase::Warmup
+            } else if cooldown_left > 0 && samples >= opts.total_samples {
+                Phase::Cooldown
+            } else {
+                Phase::Round
+            };
+            round += 1;
+        }
+
+        // ---- Done: drain the cluster --------------------------------------
+        self.phase = Phase::Done;
+        for tx in &txs {
+            let _ = tx.send(ToWorker::Stop);
+        }
+        drop(txs);
+        drop(from_rx);
+        for h in handles {
+            let _ = h.join();
+        }
+
+        rec.total_steps = steps;
+        rec.total_rounds = round;
+        rec.total_samples = samples;
+        rec.sim_time_s = sim_time;
+        rec.wall_time_s = wall_start.elapsed().as_secs_f64();
+        rec.avg_local_batch = if total_local_steps > 0.0 {
+            weighted_b / total_local_steps
+        } else {
+            0.0
+        };
+        rec.worker_stats = roster.stats;
+        rec
+    }
+}

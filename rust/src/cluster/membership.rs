@@ -1,0 +1,163 @@
+//! Worker membership tracking for the elastic coordinator.
+//!
+//! The roster is the coordinator's single source of truth about who is in the
+//! run: pending workers waiting for their `join_round`, active workers, and
+//! workers that left (scheduled `leave_round`, or a dead command channel,
+//! which the coordinator treats as a crash-leave). It also accumulates the
+//! per-worker [`WorkerSummary`] metrics the cluster runtime emits in its
+//! [`crate::metrics::RunRecord`].
+
+use crate::config::WorkerSpec;
+use crate::metrics::WorkerSummary;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum MemberState {
+    /// Spawned but not yet admitted (join_round in the future).
+    Pending,
+    Active,
+    /// Left the run (scheduled leave, or crash detected via a dead channel).
+    Left,
+}
+
+pub(crate) struct Roster {
+    specs: Vec<WorkerSpec>,
+    state: Vec<MemberState>,
+    /// Per-worker metric accumulators, indexed by worker id.
+    pub stats: Vec<WorkerSummary>,
+}
+
+impl Roster {
+    pub fn new(specs: Vec<WorkerSpec>) -> Self {
+        let state = specs
+            .iter()
+            .map(|s| if s.join_round == 0 { MemberState::Active } else { MemberState::Pending })
+            .collect();
+        let stats = specs
+            .iter()
+            .enumerate()
+            .map(|(w, s)| WorkerSummary {
+                worker: w,
+                speed: s.speed,
+                joined_round: s.join_round,
+                ..Default::default()
+            })
+            .collect();
+        Roster { specs, state, stats }
+    }
+
+    pub fn spec(&self, w: usize) -> &WorkerSpec {
+        &self.specs[w]
+    }
+
+    /// Pending workers whose `join_round` has arrived; marks them active,
+    /// records the actual admission round in their stats, and returns their
+    /// ids (ascending) so the coordinator can send them the consensus
+    /// parameters.
+    pub fn admit_due(&mut self, round: u64) -> Vec<usize> {
+        let mut admitted = Vec::new();
+        for w in 0..self.specs.len() {
+            if self.state[w] == MemberState::Pending && self.specs[w].join_round <= round {
+                self.state[w] = MemberState::Active;
+                self.stats[w].joined_round = round;
+                admitted.push(w);
+            }
+        }
+        admitted
+    }
+
+    /// Active workers whose `leave_round` has arrived; marks them left and
+    /// returns their ids so the coordinator can stop their threads.
+    pub fn retire_due(&mut self, round: u64) -> Vec<usize> {
+        let mut retired = Vec::new();
+        for w in 0..self.specs.len() {
+            if self.state[w] == MemberState::Active {
+                if let Some(leave) = self.specs[w].leave_round {
+                    if leave <= round {
+                        self.state[w] = MemberState::Left;
+                        self.stats[w].left_round = Some(round);
+                        retired.push(w);
+                    }
+                }
+            }
+        }
+        retired
+    }
+
+    /// A worker's command channel died: treat as a permanent crash-leave.
+    pub fn mark_crashed(&mut self, w: usize, round: u64) {
+        if self.state[w] != MemberState::Left {
+            self.state[w] = MemberState::Left;
+            self.stats[w].left_round = Some(round);
+        }
+    }
+
+    pub fn is_active(&self, w: usize) -> bool {
+        self.state[w] == MemberState::Active
+    }
+
+    /// Active worker ids in ascending order (the deterministic reduction order).
+    pub fn active(&self) -> Vec<usize> {
+        (0..self.specs.len()).filter(|&w| self.is_active(w)).collect()
+    }
+
+    /// Active workers that actually contribute to `round` (active minus the
+    /// round's injected dropouts), ascending.
+    pub fn contributors(&self, round: u64) -> Vec<usize> {
+        self.active()
+            .into_iter()
+            .filter(|&w| !self.specs[w].drops_round(round))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FaultSpec;
+
+    fn specs() -> Vec<WorkerSpec> {
+        vec![
+            WorkerSpec::default(),
+            WorkerSpec {
+                join_round: 2,
+                leave_round: Some(5),
+                ..Default::default()
+            },
+            WorkerSpec {
+                faults: vec![FaultSpec::Dropout { round: 1 }],
+                ..Default::default()
+            },
+        ]
+    }
+
+    #[test]
+    fn admission_and_retirement() {
+        let mut r = Roster::new(specs());
+        assert_eq!(r.active(), vec![0, 2]);
+        assert!(r.admit_due(1).is_empty());
+        assert_eq!(r.admit_due(2), vec![1]);
+        assert_eq!(r.active(), vec![0, 1, 2]);
+        assert!(r.retire_due(4).is_empty());
+        assert_eq!(r.retire_due(5), vec![1]);
+        assert_eq!(r.active(), vec![0, 2]);
+        assert_eq!(r.stats[1].left_round, Some(5));
+    }
+
+    #[test]
+    fn contributors_exclude_dropouts() {
+        let r = Roster::new(specs());
+        assert_eq!(r.contributors(0), vec![0, 2]);
+        assert_eq!(r.contributors(1), vec![0]);
+    }
+
+    #[test]
+    fn crash_is_permanent() {
+        let mut r = Roster::new(specs());
+        r.mark_crashed(0, 3);
+        assert_eq!(r.active(), vec![2]);
+        assert_eq!(r.stats[0].left_round, Some(3));
+        // a crashed worker never re-enters, but pending admissions still work
+        assert_eq!(r.admit_due(100), vec![1]);
+        assert_eq!(r.active(), vec![1, 2]);
+    }
+}

@@ -1,0 +1,53 @@
+//! The wire protocol between the coordinator and its workers.
+//!
+//! Everything the two sides exchange is a value sent over an
+//! [`std::sync::mpsc`] channel — workers never touch each other's memory, so
+//! the collective here is a true message-passing gather/average/broadcast
+//! rather than the sequential engine's shared-slice all-reduce. Each worker
+//! holds a `Receiver<ToWorker>` for commands and a clone of the coordinator's
+//! `Sender<FromWorker>` for replies.
+
+use crate::model::EvalStats;
+
+/// Coordinator → worker commands.
+#[derive(Debug, Clone)]
+pub enum ToWorker {
+    /// Install consensus parameters (broadcast after every sync; also the
+    /// admission payload for workers joining mid-run).
+    SetParams { params: Vec<f32> },
+    /// Run `h` local steps at local batch `b_eff`, using `lrs[s]` as the
+    /// learning rate of step `s` (the coordinator pre-resolves the sample-
+    /// indexed schedule so workers stay schedule-agnostic).
+    RunRound { round: u64, h: u32, b_eff: u64, lrs: Vec<f64> },
+    /// Evaluate the current parameters on the worker's held-out set.
+    Evaluate { round: u64 },
+    /// Graceful shutdown (round barrier reached, or the worker left the run).
+    Stop,
+}
+
+/// One worker's round contribution.
+#[derive(Debug, Clone)]
+pub struct RoundResult {
+    pub worker: usize,
+    pub round: u64,
+    /// Locally-updated parameters after the H steps.
+    pub params: Vec<f32>,
+    /// The last local batch gradient (norm-test statistics input, §4.3).
+    pub grad: Vec<f32>,
+    /// Loss of the last local step.
+    pub loss: f64,
+    /// Per-sample gradient variance of the last step, when the substrate
+    /// provides it (exact norm test, Algorithm A.1).
+    pub per_sample_var: Option<f64>,
+    /// Measured wall-clock seconds spent in the gradient loop.
+    pub wall_s: f64,
+}
+
+/// Worker → coordinator replies.
+#[derive(Debug, Clone)]
+pub enum FromWorker {
+    /// Sent once at thread start; the coordinator's admission handshake.
+    Hello { worker: usize, dim: usize, micro_batch: usize },
+    RoundDone(RoundResult),
+    EvalDone { worker: usize, round: u64, stats: EvalStats },
+}

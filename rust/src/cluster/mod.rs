@@ -1,0 +1,364 @@
+//! The concurrent cluster runtime: real OS-thread workers, an elastic
+//! message-passing coordinator, and declarative fault/membership scenarios.
+//!
+//! The sequential engine ([`crate::engine::run_local_sgd`]) executes workers
+//! one after another in-process and only *simulates* parallelism through the
+//! α–β time model — none of the scenarios the paper motivates (stragglers,
+//! heterogeneous devices, workers joining or leaving mid-run) can actually be
+//! exercised there. This module provides the second [`TrainEngine`]
+//! implementation where each worker is a real `std::thread` owning its model,
+//! dataset shard, and optimizer state, and all cross-worker coupling flows
+//! through [`messages`] over mpsc channels:
+//!
+//! - [`coordinator::ClusterEngine`] — the elastic coordinator and its round
+//!   state machine (WaitingForWorkers → Warmup → Round → Sync → Cooldown →
+//!   Done, in the spirit of Psyche's run states);
+//! - [`worker`] — the schedule-agnostic worker loop;
+//! - [`membership`] — the roster tracking joins, scheduled leaves, crashes,
+//!   and per-worker metrics;
+//! - scenarios — [`crate::config::ScenarioSpec`] declares worker count,
+//!   per-worker speed multipliers, injected faults (stragglers, dropouts,
+//!   latency), and the elastic join/leave timeline; [`run_scenario`] builds
+//!   workers exactly like [`crate::exp::run_config`] and drives the engine.
+//!
+//! **Correctness anchor:** on a homogeneous fault-free scenario the cluster
+//! runtime reproduces the sequential engine *bit for bit* — same final loss,
+//! same `CommCounters`, same batch trace for the same seed (the coordinator
+//! reduces contributions in ascending worker order with the exact float
+//! operation sequence of [`crate::collective::allreduce_mean_serial`]).
+//! Batch-size controllers and sync schedulers plug in unchanged via
+//! [`EngineOpts`].
+
+pub mod coordinator;
+pub mod membership;
+pub mod messages;
+pub mod worker;
+
+pub use coordinator::{ClusterEngine, Phase};
+pub use messages::{FromWorker, RoundResult, ToWorker};
+
+use crate::config::ScenarioSpec;
+use crate::engine::TrainEngine;
+use crate::metrics::RunRecord;
+
+/// Run a declarative scenario end-to-end: validate, build per-worker models
+/// and datasets exactly like the sequential harness, swap in the scenario's
+/// heterogeneous topology, and drive the cluster engine.
+pub fn run_scenario(spec: &ScenarioSpec) -> anyhow::Result<RunRecord> {
+    let errs = spec.validate();
+    anyhow::ensure!(errs.is_empty(), "invalid scenario: {}", errs.join("; "));
+    let models = crate::exp::build_native_models(&spec.run);
+    let datasets = crate::exp::build_datasets(&spec.run);
+    let mut opts = crate::exp::engine_opts(&spec.run);
+    opts.time_model.topo = spec.topology();
+    opts.label = spec.name.clone();
+    let mut engine = ClusterEngine::from_scenario(spec);
+    Ok(engine.run(models, datasets, opts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::{ApproxNormTest, ConstantSchedule};
+    use crate::collective::Topology;
+    use crate::config::{FaultSpec, RunConfig, WorkerSpec};
+    use crate::data::synth_image::{GaussianMixture, GaussianMixtureSpec};
+    use crate::data::Dataset;
+    use crate::engine::{run_local_sgd, EngineOpts, FixedH, SequentialEngine, TrainEngine};
+    use crate::model::convex::Quadratic;
+    use crate::model::GradModel;
+    use crate::sim::TimeModel;
+    use crate::util::rng::Pcg64;
+
+    fn quad_workers(m: usize, noise: f64) -> (Vec<Box<dyn GradModel>>, Vec<Box<dyn Dataset>>) {
+        let models: Vec<Box<dyn GradModel>> = (0..m)
+            .map(|w| {
+                let mut q = Quadratic::new(16, 0.5, 5.0, noise, 100);
+                q.set_noise_stream(100, w as u64);
+                Box::new(q) as _
+            })
+            .collect();
+        let datasets: Vec<Box<dyn Dataset>> = (0..m)
+            .map(|w| {
+                Box::new(GaussianMixture::new(
+                    GaussianMixtureSpec { feat: 4, classes: 2, eval_size: 8, ..Default::default() },
+                    Pcg64::new(7, w as u64),
+                )) as _
+            })
+            .collect();
+        (models, datasets)
+    }
+
+    fn opts(m: usize, n: u64) -> EngineOpts {
+        let mut o = EngineOpts::quick_defaults("cluster_t", n);
+        o.time_model = TimeModel::paper_vision(Topology::homogeneous(m));
+        o.lr = crate::optim::LrSchedule::Constant { lr: 0.02 };
+        o
+    }
+
+    /// The acceptance-criterion anchor: homogeneous no-fault cluster ==
+    /// sequential engine, bit for bit, for the same seed.
+    #[test]
+    fn cluster_matches_sequential_engine() {
+        let n = 30_000;
+        let m = 4;
+
+        let (mut models, mut data) = quad_workers(m, 0.5);
+        let mut o = opts(m, n);
+        o.scheduler = Box::new(FixedH::new(4));
+        o.controller = Box::new(ApproxNormTest::new(0.8, 8, 256));
+        let seq = run_local_sgd(&mut models, &mut data, o);
+
+        let (models, data) = quad_workers(m, 0.5);
+        let mut o = opts(m, n);
+        o.scheduler = Box::new(FixedH::new(4));
+        o.controller = Box::new(ApproxNormTest::new(0.8, 8, 256));
+        let mut eng = ClusterEngine::new(m);
+        let clu = eng.run(models, data, o);
+
+        assert_eq!(eng.phase, Phase::Done);
+        assert_eq!(seq.total_rounds, clu.total_rounds);
+        assert_eq!(seq.total_steps, clu.total_steps);
+        assert_eq!(seq.total_samples, clu.total_samples);
+        assert_eq!(seq.batch_trace, clu.batch_trace, "adaptive decisions diverged");
+        assert_eq!(seq.comm, clu.comm, "communication accounting diverged");
+        assert_eq!(seq.points.len(), clu.points.len());
+        for (a, b) in seq.points.iter().zip(&clu.points) {
+            assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits(), "val loss not bit-equal");
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits());
+            assert_eq!(a.samples, b.samples);
+        }
+        assert_eq!(seq.avg_local_batch, clu.avg_local_batch);
+        // the cluster record additionally carries per-worker metrics
+        assert_eq!(clu.worker_stats.len(), m);
+        for w in &clu.worker_stats {
+            assert_eq!(w.rounds_contributed, clu.total_rounds);
+            assert_eq!(w.local_steps, clu.total_steps);
+        }
+    }
+
+    #[test]
+    fn cluster_is_deterministic_across_runs() {
+        let run_once = || {
+            let (models, data) = quad_workers(3, 1.0);
+            let mut o = opts(3, 12_000);
+            o.controller = Box::new(ApproxNormTest::new(0.7, 8, 128));
+            ClusterEngine::new(3).run(models, data, o)
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a.batch_trace, b.batch_trace);
+        assert_eq!(a.comm, b.comm);
+        assert_eq!(
+            a.points.last().unwrap().val_loss.to_bits(),
+            b.points.last().unwrap().val_loss.to_bits()
+        );
+    }
+
+    #[test]
+    fn straggler_inflates_sim_time_only() {
+        let base = {
+            let (models, data) = quad_workers(2, 0.2);
+            let mut o = opts(2, 8_000);
+            o.controller = Box::new(ConstantSchedule::new(16));
+            ClusterEngine::new(2).run(models, data, o)
+        };
+        let straggler = {
+            let (models, data) = quad_workers(2, 0.2);
+            let mut o = opts(2, 8_000);
+            o.controller = Box::new(ConstantSchedule::new(16));
+            let mut eng = ClusterEngine::new(2);
+            eng.workers[1].faults.push(FaultSpec::Straggle {
+                from_round: 0,
+                until_round: u64::MAX,
+                factor: 2.0,
+            });
+            eng.run(models, data, o)
+        };
+        // identical training trajectory, slower simulated clock
+        assert_eq!(base.batch_trace, straggler.batch_trace);
+        assert!(
+            straggler.sim_time_s > base.sim_time_s * 1.5,
+            "straggler did not gate the round time: {} vs {}",
+            straggler.sim_time_s,
+            base.sim_time_s
+        );
+        assert!(straggler.worker_stats[1].sim_compute_s > straggler.worker_stats[0].sim_compute_s);
+    }
+
+    #[test]
+    fn dropout_reweights_and_still_converges() {
+        let (models, data) = quad_workers(4, 0.2);
+        let mut o = opts(4, 20_000);
+        o.controller = Box::new(ConstantSchedule::new(16));
+        o.scheduler = Box::new(FixedH::new(4));
+        let mut eng = ClusterEngine::new(4);
+        for r in [1u64, 3, 5] {
+            eng.workers[2].faults.push(FaultSpec::Dropout { round: r });
+        }
+        let rec = eng.run(models, data, o);
+        assert!(!rec.diverged);
+        assert_eq!(rec.worker_stats[2].dropped_rounds, 3);
+        assert_eq!(
+            rec.worker_stats[2].rounds_contributed,
+            rec.total_rounds - 3
+        );
+        // dropped rounds processed fewer samples: 3 rounds ran with 3 workers
+        let full = rec.total_rounds * 4 * 4 * 16; // rounds * H * M * b
+        assert_eq!(rec.total_samples, full - 3 * 4 * 16);
+        let first = rec.points.first().unwrap().val_loss;
+        let last = rec.points.last().unwrap().val_loss;
+        assert!(last < first, "no convergence under dropouts: {first} -> {last}");
+    }
+
+    #[test]
+    fn elastic_join_and_leave() {
+        let (models, data) = quad_workers(4, 0.2);
+        let mut o = opts(4, 16_000);
+        o.controller = Box::new(ConstantSchedule::new(16));
+        o.scheduler = Box::new(FixedH::new(2));
+        let mut eng = ClusterEngine::new(4);
+        eng.workers[2].join_round = 3; // slow joiner
+        eng.workers[3].join_round = 3;
+        eng.workers[1].leave_round = Some(6); // leaves mid-run
+        let rec = eng.run(models, data, o);
+        assert!(!rec.diverged);
+        assert!(rec.total_rounds > 6, "run too short to exercise the timeline");
+        let w2 = &rec.worker_stats[2];
+        assert_eq!(w2.joined_round, 3);
+        assert_eq!(w2.rounds_contributed, rec.total_rounds - 3);
+        let w1 = &rec.worker_stats[1];
+        assert_eq!(w1.left_round, Some(6));
+        assert_eq!(w1.rounds_contributed, 6);
+        // rounds 0..3 ran 2 workers, 3..6 ran 4, 6.. ran 3
+        let expect: u64 = (0..rec.total_rounds)
+            .map(|r| if r < 3 { 2u64 } else if r < 6 { 4 } else { 3 })
+            .map(|k| k * 2 * 16)
+            .sum();
+        assert_eq!(rec.total_samples, expect);
+    }
+
+    #[test]
+    fn warmup_and_cooldown_phases_run() {
+        let (models, data) = quad_workers(2, 0.2);
+        let mut o = opts(2, 4_000);
+        o.controller = Box::new(ApproxNormTest::new(0.8, 8, 64));
+        o.scheduler = Box::new(FixedH::new(4));
+        let mut eng = ClusterEngine::new(2);
+        eng.warmup_rounds = 3;
+        eng.cooldown_rounds = 2;
+        let rec = eng.run(models, data, o);
+        assert!(!rec.diverged);
+        // warmup rounds are H=1 at b0 with the controller frozen
+        for &(r, _, b) in rec.batch_trace.iter().take(3) {
+            assert!(r < 3);
+            assert_eq!(b, 8, "warmup must hold b0");
+        }
+        assert_eq!(eng.phase, Phase::Done);
+        // cooldown adds rounds beyond the budget-crossing round
+        let budget_round = rec
+            .batch_trace
+            .iter()
+            .position(|&(_, s, _)| s >= 4_000)
+            .expect("budget never crossed") as u64;
+        assert_eq!(rec.total_rounds, budget_round + 1 + 2);
+    }
+
+    #[test]
+    fn run_scenario_from_spec() {
+        let mut run = RunConfig::default();
+        run.label = "spec_run".into();
+        run.model = crate::config::ModelSpec::Logistic { feat: 8, classes: 3, l2: 1e-4 };
+        run.data = crate::config::DataSpec::GaussianMixture {
+            feat: 8,
+            classes: 3,
+            separation: 2.5,
+            noise: 1.0,
+            eval_size: 64,
+        };
+        run.m_workers = 3;
+        run.total_samples = 6_000;
+        run.eval_every_samples = 2_000;
+        run.strategy = crate::config::BatchStrategy::NormTest { eta: 0.8, b0: 8, b_max: 256 };
+        run.b_max_local = 256;
+        run.sync = crate::config::SyncSpec::FixedH { h: 4 };
+        let spec = crate::config::ScenarioSpec {
+            name: "unit_scenario".into(),
+            run,
+            warmup_rounds: 0,
+            cooldown_rounds: 0,
+            workers: vec![
+                WorkerSpec::default(),
+                WorkerSpec { speed: 0.5, ..Default::default() },
+                WorkerSpec { join_round: 2, ..Default::default() },
+            ],
+        };
+        let rec = run_scenario(&spec).unwrap();
+        assert_eq!(rec.label, "unit_scenario");
+        assert!(!rec.diverged);
+        assert_eq!(rec.worker_stats.len(), 3);
+        assert_eq!(rec.worker_stats[1].speed, 0.5);
+        assert_eq!(rec.worker_stats[2].joined_round, 2);
+    }
+
+    #[test]
+    fn homogeneous_scenario_matches_run_config() {
+        let mut run = RunConfig::default();
+        run.label = "hom".into();
+        run.model = crate::config::ModelSpec::Logistic { feat: 8, classes: 3, l2: 1e-4 };
+        run.data = crate::config::DataSpec::GaussianMixture {
+            feat: 8,
+            classes: 3,
+            separation: 2.5,
+            noise: 1.0,
+            eval_size: 64,
+        };
+        run.m_workers = 4;
+        run.total_samples = 8_000;
+        run.eval_every_samples = 2_000;
+        run.strategy = crate::config::BatchStrategy::NormTest { eta: 0.8, b0: 8, b_max: 256 };
+        run.b_max_local = 256;
+        run.sync = crate::config::SyncSpec::FixedH { h: 4 };
+        let spec = crate::config::ScenarioSpec {
+            name: "hom_scenario".into(),
+            run: run.clone(),
+            warmup_rounds: 0,
+            cooldown_rounds: 0,
+            workers: vec![WorkerSpec::default(); 4],
+        };
+        assert!(spec.is_homogeneous());
+        let seq = crate::exp::run_config(&run).unwrap();
+        let clu = run_scenario(&spec).unwrap();
+        assert_eq!(seq.batch_trace, clu.batch_trace);
+        assert_eq!(seq.comm, clu.comm);
+        assert_eq!(
+            seq.points.last().unwrap().val_loss.to_bits(),
+            clu.points.last().unwrap().val_loss.to_bits(),
+            "scenario path diverged from run_config path"
+        );
+    }
+
+    #[test]
+    fn engines_share_the_trait() {
+        let mut engines: Vec<Box<dyn TrainEngine>> =
+            vec![Box::new(SequentialEngine), Box::new(ClusterEngine::new(2))];
+        for eng in engines.iter_mut() {
+            let (models, data) = quad_workers(2, 0.1);
+            let mut o = opts(2, 2_000);
+            o.controller = Box::new(ConstantSchedule::new(8));
+            let rec = eng.run(models, data, o);
+            assert!(!rec.diverged, "{} engine diverged", eng.name());
+            assert!(rec.total_rounds > 0);
+        }
+    }
+
+    #[test]
+    fn max_rounds_guard_holds() {
+        let (models, data) = quad_workers(2, 0.0);
+        let mut o = opts(2, u64::MAX);
+        o.max_rounds = 5;
+        let rec = ClusterEngine::new(2).run(models, data, o);
+        assert_eq!(rec.total_rounds, 5);
+    }
+}

@@ -1,0 +1,82 @@
+//! The worker thread: owns its model, dataset shard, and optimizer state, and
+//! reacts to coordinator commands.
+//!
+//! A worker is deliberately dumb: it has no notion of rounds beyond the
+//! assignment it was just handed, no learning-rate schedule (the coordinator
+//! pre-resolves per-step rates), and no view of the other workers. All
+//! cross-worker coupling — averaging, admission, fault handling — lives in the
+//! coordinator, which is what lets the same worker loop serve every scenario.
+
+use super::messages::{FromWorker, RoundResult, ToWorker};
+use crate::data::Dataset;
+use crate::model::GradModel;
+use crate::optim::OptimParams;
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+/// Spawn worker `id` as an OS thread. Returns its command channel and join
+/// handle; the thread immediately reports `Hello` on `out` and then serves
+/// commands until `Stop` or channel disconnect.
+pub(crate) fn spawn_worker(
+    id: usize,
+    mut model: Box<dyn GradModel>,
+    mut dataset: Box<dyn Dataset>,
+    optim: OptimParams,
+    out: Sender<FromWorker>,
+) -> (Sender<ToWorker>, JoinHandle<()>) {
+    let (cmd_tx, cmd_rx) = channel::<ToWorker>();
+    let handle = std::thread::Builder::new()
+        .name(format!("adaloco-worker-{id}"))
+        .spawn(move || {
+            let dim = model.dim();
+            let micro_batch = model.micro_batch().max(1);
+            if out.send(FromWorker::Hello { worker: id, dim, micro_batch }).is_err() {
+                return; // coordinator already gone
+            }
+            let mut params = vec![0.0f32; dim];
+            let mut grad = vec![0.0f32; dim];
+            let mut opt = optim.build(dim);
+            for cmd in cmd_rx {
+                match cmd {
+                    ToWorker::SetParams { params: p } => {
+                        assert_eq!(p.len(), dim, "worker {id}: bad params length");
+                        params = p;
+                    }
+                    ToWorker::RunRound { round, h, b_eff, lrs } => {
+                        assert_eq!(lrs.len(), h as usize, "worker {id}: lrs/h mismatch");
+                        let t0 = std::time::Instant::now();
+                        let mut loss = 0.0;
+                        let mut per_sample_var = None;
+                        for &lr in &lrs {
+                            let batch = dataset.sample(b_eff as usize);
+                            let stats = model.grad(&params, &batch, &mut grad);
+                            opt.step(&mut params, &grad, lr);
+                            loss = stats.loss;
+                            per_sample_var = stats.per_sample_var;
+                        }
+                        let done = FromWorker::RoundDone(RoundResult {
+                            worker: id,
+                            round,
+                            params: params.clone(),
+                            grad: grad.clone(),
+                            loss,
+                            per_sample_var,
+                            wall_s: t0.elapsed().as_secs_f64(),
+                        });
+                        if out.send(done).is_err() {
+                            break;
+                        }
+                    }
+                    ToWorker::Evaluate { round } => {
+                        let stats = model.eval(&params, dataset.eval_set());
+                        if out.send(FromWorker::EvalDone { worker: id, round, stats }).is_err() {
+                            break;
+                        }
+                    }
+                    ToWorker::Stop => break,
+                }
+            }
+        })
+        .expect("spawning worker thread");
+    (cmd_tx, handle)
+}

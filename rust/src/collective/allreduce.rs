@@ -12,6 +12,22 @@
 
 use std::sync::{Arc, Barrier, Mutex};
 
+/// Accumulate `rest` into `acc` (which already holds the first contribution)
+/// and divide by the contributor count — THE mean-reduction float-operation
+/// sequence shared by [`allreduce_mean_serial`] and the cluster coordinator's
+/// gather/average ([`crate::cluster`]). Both callers going through this one
+/// helper is what makes the sequential/cluster bit-for-bit equivalence
+/// structural rather than a comment-enforced coincidence: contributions are
+/// added in caller order, then scaled once.
+pub fn mean_reduce_into(acc: &mut [f32], rest: &[&[f32]]) {
+    for r in rest {
+        assert_eq!(r.len(), acc.len(), "mean reduce length mismatch");
+        crate::tensor::axpy(1.0, r, acc);
+    }
+    let m = rest.len() + 1;
+    crate::tensor::scale(1.0 / m as f32, acc);
+}
+
 /// Reference: mean across `bufs` in place (every buffer ends with the mean).
 pub fn allreduce_mean_serial(bufs: &mut [&mut [f32]]) {
     let m = bufs.len();
@@ -23,13 +39,12 @@ pub fn allreduce_mean_serial(bufs: &mut [&mut [f32]]) {
     if m == 1 {
         return;
     }
-    let inv = 1.0f32 / m as f32;
     // accumulate into worker 0's buffer, then broadcast
     let (first, rest) = bufs.split_at_mut(1);
-    for b in rest.iter() {
-        crate::tensor::axpy(1.0, b, first[0]);
+    {
+        let rest_refs: Vec<&[f32]> = rest.iter().map(|b| &b[..]).collect();
+        mean_reduce_into(first[0], &rest_refs);
     }
-    crate::tensor::scale(inv, first[0]);
     for b in rest.iter_mut() {
         b.copy_from_slice(first[0]);
     }
@@ -180,6 +195,38 @@ mod tests {
     }
 
     #[test]
+    fn mean_reduce_into_matches_serial_bitwise() {
+        // The cluster coordinator and the serial all-reduce must share the
+        // reduction's float-op sequence exactly.
+        prop::check(20, |rng| {
+            let m = 1 + rng.below(6) as usize;
+            let d = 1 + rng.below(100) as usize;
+            let base: Vec<Vec<f32>> = (0..m).map(|_| gen_vec_n(rng, d, 4.0)).collect();
+
+            let mut serial = base.clone();
+            {
+                let mut bufs: Vec<&mut [f32]> =
+                    serial.iter_mut().map(|b| b.as_mut_slice()).collect();
+                allreduce_mean_serial(&mut bufs);
+            }
+            // coordinator-style: copy first, reduce the rest through the helper
+            let mut acc = base[0].clone();
+            let rest: Vec<&[f32]> = base[1..].iter().map(|b| b.as_slice()).collect();
+            mean_reduce_into(&mut acc, &rest);
+
+            for j in 0..d {
+                if acc[j].to_bits() != serial[0][j].to_bits() {
+                    return Err(format!(
+                        "m={m} d={d} elem {j}: {} vs {} not bit-equal",
+                        acc[j], serial[0][j]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn serial_single_worker_noop() {
         let mut b = vec![1.0f32, 2.0];
         let mut bufs: Vec<&mut [f32]> = vec![&mut b];
@@ -233,6 +280,36 @@ mod tests {
             .collect();
         let after = RingAllReduce::new(m).run(before.clone());
         check_mean(&before, &after);
+    }
+
+    #[test]
+    fn threaded_and_serial_agree_on_random_buffers() {
+        prop::check(25, |rng| {
+            let m = 1 + rng.below(7) as usize;
+            let d = 1 + rng.below(300) as usize;
+            let base: Vec<Vec<f32>> = (0..m).map(|_| gen_vec_n(rng, d, 5.0)).collect();
+
+            let mut serial = base.clone();
+            {
+                let mut bufs: Vec<&mut [f32]> =
+                    serial.iter_mut().map(|b| b.as_mut_slice()).collect();
+                allreduce_mean_serial(&mut bufs);
+            }
+            let mut threaded = base.clone();
+            {
+                let mut bufs: Vec<&mut [f32]> =
+                    threaded.iter_mut().map(|b| b.as_mut_slice()).collect();
+                allreduce_mean_threaded(&mut bufs);
+            }
+            for (s, t) in serial.iter().zip(&threaded) {
+                for (j, (&a, &b)) in s.iter().zip(t.iter()).enumerate() {
+                    if !prop::close(a as f64, b as f64, 1e-5, 1e-6) {
+                        return Err(format!("m={m} d={d} elem {j}: serial {a} vs threaded {b}"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -10,7 +10,7 @@
 pub mod allreduce;
 pub mod topology;
 
-pub use allreduce::{allreduce_mean_serial, allreduce_mean_threaded, RingAllReduce};
+pub use allreduce::{allreduce_mean_serial, allreduce_mean_threaded, mean_reduce_into, RingAllReduce};
 pub use topology::Topology;
 
 /// Byte / round counters, the communication-efficiency bookkeeping behind the
@@ -64,5 +64,60 @@ mod tests {
         let b = CommCounters { allreduce_calls: 2, bytes_moved: 5, rounds: 1 };
         a.merge(&b);
         assert_eq!(a, CommCounters { allreduce_calls: 3, bytes_moved: 15, rounds: 3 });
+    }
+
+    #[test]
+    fn charge_formula_property() {
+        // bytes per call: 2·(M−1)·payload with payload = 4·elems; M = 1 moves
+        // nothing (a single worker has no ring).
+        crate::util::prop::check(50, |rng| {
+            let elems = 1 + rng.below(100_000) as usize;
+            let m = 1 + rng.below(16) as usize;
+            let mut c = CommCounters::default();
+            c.charge_allreduce(elems, m);
+            let want = if m > 1 { 2 * (m as u64 - 1) * (elems as u64 * 4) } else { 0 };
+            crate::util::prop::assert_prop(
+                c.bytes_moved == want && c.allreduce_calls == 1,
+                format!("elems={elems} m={m}: got {} want {want}", c.bytes_moved),
+            )
+        });
+    }
+
+    #[test]
+    fn single_worker_never_moves_bytes() {
+        let mut c = CommCounters::default();
+        for elems in [1usize, 17, 1 << 20] {
+            c.charge_allreduce(elems, 1);
+        }
+        assert_eq!(c.bytes_moved, 0);
+        assert_eq!(c.allreduce_calls, 3);
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let xs = [
+            CommCounters { allreduce_calls: 1, bytes_moved: 10, rounds: 2 },
+            CommCounters { allreduce_calls: 5, bytes_moved: 7, rounds: 0 },
+            CommCounters { allreduce_calls: 0, bytes_moved: 123, rounds: 9 },
+        ];
+        // (a ⊕ b) ⊕ c
+        let mut left = xs[0];
+        left.merge(&xs[1]);
+        left.merge(&xs[2]);
+        // a ⊕ (b ⊕ c)
+        let mut bc = xs[1];
+        bc.merge(&xs[2]);
+        let mut right = xs[0];
+        right.merge(&bc);
+        assert_eq!(left, right);
+        // commutativity: c ⊕ b ⊕ a
+        let mut rev = xs[2];
+        rev.merge(&xs[1]);
+        rev.merge(&xs[0]);
+        assert_eq!(left, rev);
+        // identity
+        let mut with_id = left;
+        with_id.merge(&CommCounters::default());
+        assert_eq!(with_id, left);
     }
 }

@@ -543,6 +543,273 @@ impl Default for RunConfig {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Scenario configs: the declarative layer driving the cluster runtime
+// ---------------------------------------------------------------------------
+
+/// A fault injected into one worker's timeline (rounds are coordinator round
+/// indices, half-open `[from_round, until_round)` where ranges apply).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultSpec {
+    /// Compute slowdown: the worker's simulated round time is multiplied by
+    /// `factor` (> 1 = straggler) while the round is in `[from_round, until_round)`.
+    Straggle { from_round: u64, until_round: u64, factor: f64 },
+    /// The worker misses round `round` entirely: it receives no assignment and
+    /// the coordinator re-weights the parameter average over the contributors.
+    Dropout { round: u64 },
+    /// Additional per-round latency (network jitter, checkpoint stall) in
+    /// simulated seconds while the round is in `[from_round, until_round)`.
+    ExtraLatency { from_round: u64, until_round: u64, seconds: f64 },
+}
+
+/// One worker's declarative description inside a [`ScenarioSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerSpec {
+    /// Relative compute speed (1.0 = reference device).
+    pub speed: f64,
+    /// Coordinator round at which this worker is admitted (0 = founding
+    /// member; later rounds model elastic scale-up — the worker joins with the
+    /// current consensus parameters, a "slow joiner").
+    pub join_round: u64,
+    /// Round at which this worker leaves permanently, when set.
+    pub leave_round: Option<u64>,
+    pub faults: Vec<FaultSpec>,
+}
+
+impl Default for WorkerSpec {
+    fn default() -> Self {
+        WorkerSpec { speed: 1.0, join_round: 0, leave_round: None, faults: Vec::new() }
+    }
+}
+
+impl WorkerSpec {
+    /// Combined straggle factor over the active `Straggle` faults at `round`.
+    pub fn straggle_factor(&self, round: u64) -> f64 {
+        let mut f = 1.0;
+        for fault in &self.faults {
+            if let FaultSpec::Straggle { from_round, until_round, factor } = fault {
+                if (*from_round..*until_round).contains(&round) {
+                    f *= factor;
+                }
+            }
+        }
+        f
+    }
+
+    /// Total injected latency (seconds) at `round`.
+    pub fn extra_latency(&self, round: u64) -> f64 {
+        let mut s = 0.0;
+        for fault in &self.faults {
+            if let FaultSpec::ExtraLatency { from_round, until_round, seconds } = fault {
+                if (*from_round..*until_round).contains(&round) {
+                    s += seconds;
+                }
+            }
+        }
+        s
+    }
+
+    /// Whether this worker drops (misses) `round`.
+    pub fn drops_round(&self, round: u64) -> bool {
+        self.faults
+            .iter()
+            .any(|f| matches!(f, FaultSpec::Dropout { round: r } if *r == round))
+    }
+}
+
+/// A full cluster scenario: the underlying training run plus the worker
+/// timeline (speeds, faults, elastic join/leave) and the coordinator's
+/// warmup/cooldown phases. Loaded from JSON by `adaloco cluster`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    /// The training run (model, data, strategy, sync, budget). Its
+    /// `m_workers` must equal `workers.len()`.
+    pub run: RunConfig,
+    /// Initial coordinator rounds executed with H = 1 at the starting batch
+    /// size, without consulting the batch controller (admission/stabilization
+    /// phase, in the spirit of Psyche's warmup).
+    pub warmup_rounds: u64,
+    /// Extra rounds after the sample budget is met, at the final batch size
+    /// with the controller frozen (consensus settling phase).
+    pub cooldown_rounds: u64,
+    pub workers: Vec<WorkerSpec>,
+}
+
+impl ScenarioSpec {
+    /// Worker-speed topology for the simulated time model.
+    pub fn topology(&self) -> crate::collective::Topology {
+        crate::collective::Topology::heterogeneous(
+            self.workers.iter().map(|w| w.speed).collect(),
+        )
+    }
+
+    /// True when the scenario is a plain homogeneous run — the case that must
+    /// agree bit-for-bit with the sequential engine.
+    pub fn is_homogeneous(&self) -> bool {
+        self.warmup_rounds == 0
+            && self.cooldown_rounds == 0
+            && self.workers.iter().all(|w| {
+                w.speed == 1.0 && w.join_round == 0 && w.leave_round.is_none() && w.faults.is_empty()
+            })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let workers = self.workers.iter().map(|w| {
+            let faults = w.faults.iter().map(|f| match f {
+                FaultSpec::Straggle { from_round, until_round, factor } => Json::obj(vec![
+                    ("type", Json::str("straggle")),
+                    ("from_round", Json::num(*from_round as f64)),
+                    ("until_round", Json::num(*until_round as f64)),
+                    ("factor", Json::num(*factor)),
+                ]),
+                FaultSpec::Dropout { round } => Json::obj(vec![
+                    ("type", Json::str("dropout")),
+                    ("round", Json::num(*round as f64)),
+                ]),
+                FaultSpec::ExtraLatency { from_round, until_round, seconds } => Json::obj(vec![
+                    ("type", Json::str("extra_latency")),
+                    ("from_round", Json::num(*from_round as f64)),
+                    ("until_round", Json::num(*until_round as f64)),
+                    ("seconds", Json::num(*seconds)),
+                ]),
+            });
+            Json::obj(vec![
+                ("speed", Json::num(w.speed)),
+                ("join_round", Json::num(w.join_round as f64)),
+                (
+                    "leave_round",
+                    w.leave_round.map(|r| Json::num(r as f64)).unwrap_or(Json::Null),
+                ),
+                ("faults", Json::arr(faults)),
+            ])
+        });
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("run", self.run.to_json()),
+            ("warmup_rounds", Json::num(self.warmup_rounds as f64)),
+            ("cooldown_rounds", Json::num(self.cooldown_rounds as f64)),
+            ("workers", Json::arr(workers)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ScenarioSpec, String> {
+        let run = RunConfig::from_json(j.get("run")).map_err(|e| format!("run: {e}"))?;
+        let wj = j.get("workers").as_arr().ok_or("missing workers array")?;
+        let mut workers = Vec::with_capacity(wj.len());
+        for (i, w) in wj.iter().enumerate() {
+            let mut spec = WorkerSpec {
+                speed: w.get("speed").as_f64().unwrap_or(1.0),
+                join_round: w.get("join_round").as_u64().unwrap_or(0),
+                leave_round: w.get("leave_round").as_u64(),
+                faults: Vec::new(),
+            };
+            if let Some(faults) = w.get("faults").as_arr() {
+                for f in faults {
+                    let fault = match f.get("type").as_str() {
+                        Some("straggle") => FaultSpec::Straggle {
+                            from_round: f.get("from_round").as_u64().unwrap_or(0),
+                            until_round: f
+                                .get("until_round")
+                                .as_u64()
+                                .ok_or_else(|| format!("worker {i}: straggle until_round"))?,
+                            factor: f
+                                .get("factor")
+                                .as_f64()
+                                .ok_or_else(|| format!("worker {i}: straggle factor"))?,
+                        },
+                        Some("dropout") => FaultSpec::Dropout {
+                            round: f
+                                .get("round")
+                                .as_u64()
+                                .ok_or_else(|| format!("worker {i}: dropout round"))?,
+                        },
+                        Some("extra_latency") => FaultSpec::ExtraLatency {
+                            from_round: f.get("from_round").as_u64().unwrap_or(0),
+                            until_round: f
+                                .get("until_round")
+                                .as_u64()
+                                .ok_or_else(|| format!("worker {i}: extra_latency until_round"))?,
+                            seconds: f
+                                .get("seconds")
+                                .as_f64()
+                                .ok_or_else(|| format!("worker {i}: extra_latency seconds"))?,
+                        },
+                        other => return Err(format!("worker {i}: unknown fault type {other:?}")),
+                    };
+                    spec.faults.push(fault);
+                }
+            }
+            workers.push(spec);
+        }
+        Ok(ScenarioSpec {
+            name: j.get("name").as_str().unwrap_or("scenario").to_string(),
+            run,
+            warmup_rounds: j.get("warmup_rounds").as_u64().unwrap_or(0),
+            cooldown_rounds: j.get("cooldown_rounds").as_u64().unwrap_or(0),
+            workers,
+        })
+    }
+
+    /// Validate internal consistency; returns a list of problems (empty = ok).
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = self.run.validate();
+        if self.workers.is_empty() {
+            errs.push("scenario needs at least one worker".into());
+            return errs;
+        }
+        if self.run.m_workers != self.workers.len() {
+            errs.push(format!(
+                "run.m_workers {} != workers.len() {}",
+                self.run.m_workers,
+                self.workers.len()
+            ));
+        }
+        if !self.workers.iter().any(|w| w.join_round == 0) {
+            errs.push("at least one worker must join at round 0".into());
+        }
+        if matches!(self.run.model, ModelSpec::Artifact { .. }) {
+            errs.push(
+                "cluster scenarios require native models (PJRT artifacts are bound to the \
+                 sequential engine)"
+                    .into(),
+            );
+        }
+        for (i, w) in self.workers.iter().enumerate() {
+            if !(w.speed > 0.0) {
+                errs.push(format!("worker {i}: speed must be positive"));
+            }
+            if let Some(leave) = w.leave_round {
+                if leave <= w.join_round {
+                    errs.push(format!("worker {i}: leave_round {leave} <= join_round"));
+                }
+            }
+            for f in &w.faults {
+                match f {
+                    FaultSpec::Straggle { from_round, until_round, factor } => {
+                        if from_round >= until_round {
+                            errs.push(format!("worker {i}: empty straggle window"));
+                        }
+                        if !(*factor > 0.0) {
+                            errs.push(format!("worker {i}: straggle factor must be positive"));
+                        }
+                    }
+                    FaultSpec::ExtraLatency { from_round, until_round, seconds } => {
+                        if from_round >= until_round {
+                            errs.push(format!("worker {i}: empty extra_latency window"));
+                        }
+                        if !(*seconds >= 0.0) {
+                            errs.push(format!("worker {i}: negative extra_latency"));
+                        }
+                    }
+                    FaultSpec::Dropout { .. } => {}
+                }
+            }
+        }
+        errs
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -655,6 +922,104 @@ mod tests {
             LrSchedule::WarmupCosine { peak, .. } => assert!((peak - 0.05).abs() < 1e-12),
             _ => panic!(),
         }
+    }
+
+    fn scenario_fixture() -> ScenarioSpec {
+        let mut run = RunConfig::default();
+        run.m_workers = 3;
+        ScenarioSpec {
+            name: "fixture".into(),
+            run,
+            warmup_rounds: 2,
+            cooldown_rounds: 1,
+            workers: vec![
+                WorkerSpec::default(),
+                WorkerSpec {
+                    speed: 0.5,
+                    faults: vec![
+                        FaultSpec::Straggle { from_round: 4, until_round: 8, factor: 2.0 },
+                        FaultSpec::Dropout { round: 5 },
+                    ],
+                    ..Default::default()
+                },
+                WorkerSpec {
+                    join_round: 3,
+                    leave_round: Some(10),
+                    faults: vec![FaultSpec::ExtraLatency {
+                        from_round: 0,
+                        until_round: 4,
+                        seconds: 0.25,
+                    }],
+                    ..Default::default()
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn scenario_json_roundtrip() {
+        let s = scenario_fixture();
+        assert!(s.validate().is_empty(), "{:?}", s.validate());
+        let j = s.to_json().to_string();
+        let s2 = ScenarioSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn scenario_fault_queries() {
+        let s = scenario_fixture();
+        let w1 = &s.workers[1];
+        assert_eq!(w1.straggle_factor(3), 1.0);
+        assert_eq!(w1.straggle_factor(4), 2.0);
+        assert_eq!(w1.straggle_factor(8), 1.0);
+        assert!(w1.drops_round(5) && !w1.drops_round(6));
+        let w2 = &s.workers[2];
+        assert_eq!(w2.extra_latency(2), 0.25);
+        assert_eq!(w2.extra_latency(4), 0.0);
+        assert!(!s.is_homogeneous());
+    }
+
+    #[test]
+    fn scenario_validation_catches_errors() {
+        let mut s = scenario_fixture();
+        s.run.m_workers = 7;
+        s.workers[0].speed = 0.0;
+        s.workers[1].faults.push(FaultSpec::Straggle {
+            from_round: 9,
+            until_round: 9,
+            factor: 2.0,
+        });
+        s.workers[0].join_round = 1;
+        s.workers[1].join_round = 1;
+        s.workers[2].join_round = 1;
+        let errs = s.validate();
+        assert!(errs.iter().any(|e| e.contains("m_workers")));
+        assert!(errs.iter().any(|e| e.contains("speed")));
+        assert!(errs.iter().any(|e| e.contains("straggle window")));
+        assert!(errs.iter().any(|e| e.contains("round 0")));
+        s = scenario_fixture();
+        s.run.model = ModelSpec::Artifact { name: "tinylm".into() };
+        assert!(s.validate().iter().any(|e| e.contains("native models")));
+    }
+
+    #[test]
+    fn scenario_topology_and_homogeneity() {
+        let s = scenario_fixture();
+        let topo = s.topology();
+        assert_eq!(topo.m_workers, 3);
+        assert_eq!(topo.speeds, vec![1.0, 0.5, 1.0]);
+
+        let mut hom = RunConfig::default();
+        hom.m_workers = 2;
+        let hom = ScenarioSpec {
+            name: "hom".into(),
+            run: hom,
+            warmup_rounds: 0,
+            cooldown_rounds: 0,
+            workers: vec![WorkerSpec::default(), WorkerSpec::default()],
+        };
+        assert!(hom.is_homogeneous());
+        assert!(hom.validate().is_empty());
     }
 
     #[test]

@@ -30,9 +30,14 @@ pub struct EngineOpts {
     pub controller: Box<dyn BatchSizeController>,
     pub optim: OptimParams,
     pub lr: LrSchedule,
-    /// Total training budget N in samples (global, across workers).
+    /// Total training budget N in samples (global, across workers). Must be
+    /// positive; constructors assert it.
     pub total_samples: u64,
-    /// Evaluate every this many processed samples (0 = only at the end).
+    /// Evaluate every this many processed samples. `0` is an explicit sentinel
+    /// meaning "evaluate only at the end of the run" — callers deriving this
+    /// from a fraction of `total_samples` must guard against integer division
+    /// rounding tiny budgets down to the sentinel by accident (see
+    /// [`EngineOpts::quick_defaults`]).
     pub eval_every_samples: u64,
     /// Hard cap on the local batch size (device memory; engine-level guard in
     /// addition to the controller's own cap).
@@ -48,14 +53,22 @@ pub struct EngineOpts {
 }
 
 impl EngineOpts {
+    /// Small-budget defaults for tests and examples.
+    ///
+    /// Evaluates ~8 times over the run. For budgets below 8 samples the naive
+    /// `total_samples / 8` would round to `0`, silently hitting the
+    /// "only at the end" sentinel of [`EngineOpts::eval_every_samples`]; the
+    /// `max(1)` guard keeps intermediate evals for tiny budgets, and a zero
+    /// budget is rejected outright.
     pub fn quick_defaults(label: &str, total_samples: u64) -> Self {
+        assert!(total_samples > 0, "total_samples must be positive");
         EngineOpts {
             scheduler: Box::new(crate::engine::sync::FixedH::new(4)),
             controller: Box::new(crate::batch::ConstantSchedule::new(32)),
             optim: OptimParams::plain_sgd(),
             lr: LrSchedule::Constant { lr: 0.05 },
             total_samples,
-            eval_every_samples: total_samples / 8,
+            eval_every_samples: (total_samples / 8).max(1),
             b_max_local: 1 << 20,
             seed: 1,
             time_model: TimeModel::paper_vision(crate::collective::Topology::paper_default()),
@@ -392,6 +405,33 @@ mod tests {
         o.max_rounds = 5;
         let rec = run_local_sgd(&mut models, &mut data, o);
         assert_eq!(rec.total_rounds, 5);
+    }
+
+    #[test]
+    fn quick_defaults_guard_tiny_budgets() {
+        // Budgets below the eval divisor must not degenerate to the
+        // `0 = only at the end` sentinel.
+        for n in [1u64, 3, 7, 8, 9, 1000] {
+            let o = EngineOpts::quick_defaults("tiny", n);
+            assert!(o.eval_every_samples >= 1, "budget {n} hit the 0 sentinel");
+            assert_eq!(o.eval_every_samples, (n / 8).max(1));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "total_samples must be positive")]
+    fn quick_defaults_reject_zero_budget() {
+        EngineOpts::quick_defaults("zero", 0);
+    }
+
+    #[test]
+    fn tiny_budget_run_still_evaluates() {
+        let (mut models, mut data) = quad_workers(1, 0.0);
+        let mut o = EngineOpts::quick_defaults("t", 5);
+        o.time_model = TimeModel::paper_vision(Topology::homogeneous(1));
+        o.controller = Box::new(ConstantSchedule::new(1));
+        let rec = run_local_sgd(&mut models, &mut data, o);
+        assert!(!rec.points.is_empty(), "tiny budget produced no eval points");
     }
 
     #[test]

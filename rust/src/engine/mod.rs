@@ -1,8 +1,61 @@
 //! Distributed training engine: Local SGD (Algorithm A.2), synchronization
 //! schedulers, and the worker/leader loop.
+//!
+//! Two engines implement [`TrainEngine`] over the same [`EngineOpts`]:
+//!
+//! - [`SequentialEngine`] — the deterministic in-process reference
+//!   ([`run_local_sgd`]): workers execute one after another and parallelism is
+//!   only *simulated* through the α–β time model.
+//! - [`crate::cluster::ClusterEngine`] — real OS-thread workers talking to an
+//!   elastic coordinator over channels, with per-worker fault injection.
+//!
+//! Batch-size controllers ([`crate::batch`]) and sync schedulers ([`sync`])
+//! plug into either engine unchanged; on a homogeneous no-fault scenario the
+//! two agree bit-for-bit (`cluster::tests::cluster_matches_sequential_engine`).
 
 pub mod local_sgd;
 pub mod sync;
 
 pub use local_sgd::{run_local_sgd, EngineOpts};
 pub use sync::{FixedH, PostLocal, Qsr, SyncScheduler};
+
+use crate::data::Dataset;
+use crate::metrics::RunRecord;
+use crate::model::GradModel;
+
+/// A training engine: consumes per-worker models and datasets plus the run
+/// options, produces the full [`RunRecord`]. The abstraction boundary that
+/// lets the sequential reference and the cluster runtime share controllers,
+/// schedulers, metrics, and the experiment harness.
+pub trait TrainEngine {
+    /// Execute one training run. `models` and `datasets` must have equal
+    /// length (one pair per worker).
+    fn run(
+        &mut self,
+        models: Vec<Box<dyn GradModel>>,
+        datasets: Vec<Box<dyn Dataset>>,
+        opts: EngineOpts,
+    ) -> RunRecord;
+
+    /// Human-readable engine name for logs and labels.
+    fn name(&self) -> &'static str;
+}
+
+/// The in-process sequential reference engine (wraps [`run_local_sgd`]).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SequentialEngine;
+
+impl TrainEngine for SequentialEngine {
+    fn run(
+        &mut self,
+        mut models: Vec<Box<dyn GradModel>>,
+        mut datasets: Vec<Box<dyn Dataset>>,
+        opts: EngineOpts,
+    ) -> RunRecord {
+        run_local_sgd(&mut models, &mut datasets, opts)
+    }
+
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+}

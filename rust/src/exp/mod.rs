@@ -48,7 +48,11 @@ impl Dataset for NullDataset {
     }
 }
 
-fn build_datasets(cfg: &RunConfig) -> Vec<Box<dyn Dataset>> {
+/// Per-worker dataset construction (worker `w` gets stream `w` of the config
+/// seed). Public so alternative engines (the cluster runtime) build workers
+/// identically to the sequential path — identical streams are what makes the
+/// engines comparable bit-for-bit.
+pub fn build_datasets(cfg: &RunConfig) -> Vec<Box<dyn Dataset>> {
     (0..cfg.m_workers)
         .map(|w| -> Box<dyn Dataset> {
             let rng = Pcg64::new(cfg.seed.wrapping_mul(1009).wrapping_add(77), w as u64);
@@ -85,7 +89,9 @@ fn build_datasets(cfg: &RunConfig) -> Vec<Box<dyn Dataset>> {
         .collect()
 }
 
-fn build_native_models(cfg: &RunConfig) -> Vec<Box<dyn GradModel>> {
+/// Per-worker native model construction (see [`build_datasets`] on why this
+/// is public).
+pub fn build_native_models(cfg: &RunConfig) -> Vec<Box<dyn GradModel>> {
     (0..cfg.m_workers)
         .map(|w| -> Box<dyn GradModel> {
             match &cfg.model {
@@ -107,7 +113,7 @@ fn build_native_models(cfg: &RunConfig) -> Vec<Box<dyn GradModel>> {
 }
 
 /// Time-model selection per workload family.
-fn time_model(cfg: &RunConfig) -> TimeModel {
+pub fn time_model(cfg: &RunConfig) -> TimeModel {
     let topo = crate::collective::Topology::homogeneous(cfg.m_workers);
     match cfg.data {
         DataSpec::MarkovZipf { .. } => TimeModel::paper_lm(topo),
@@ -115,7 +121,9 @@ fn time_model(cfg: &RunConfig) -> TimeModel {
     }
 }
 
-fn engine_opts(cfg: &RunConfig) -> EngineOpts {
+/// Assemble [`EngineOpts`] from a run config (homogeneous topology; the
+/// cluster runtime swaps in the scenario topology afterwards).
+pub fn engine_opts(cfg: &RunConfig) -> EngineOpts {
     EngineOpts {
         scheduler: cfg.sync.build(),
         controller: cfg.strategy.build(),

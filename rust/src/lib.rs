@@ -11,14 +11,37 @@
 //!   contribution, adaptive batch-size controllers driven by the norm test
 //!   ([`batch`]).
 //! - **L2/L1 (python/compile)** — JAX models + Pallas kernels, AOT-lowered to HLO
-//!   text artifacts executed through [`runtime`] (PJRT CPU client); Python never
-//!   runs on the training path.
+//!   text artifacts executed through [`runtime`] (PJRT CPU client; gated behind
+//!   the `pjrt` cargo feature — the default build compiles an API-compatible
+//!   stub); Python never runs on the training path.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured results of every table and figure.
+//! ## Engines
+//!
+//! Two engines implement [`engine::TrainEngine`] over the same
+//! [`engine::EngineOpts`] — controllers, schedulers, and metrics plug into
+//! either unchanged:
+//!
+//! - [`engine::SequentialEngine`] ([`engine::run_local_sgd`]) — the
+//!   deterministic in-process reference: workers execute one after another and
+//!   parallelism is only *simulated* through the α–β time model.
+//! - [`cluster::ClusterEngine`] — the concurrent runtime: each worker is a
+//!   real OS thread owning its model/dataset shard, coupled to an elastic
+//!   coordinator purely through message-passing channels (round state machine
+//!   WaitingForWorkers → Warmup → Round → Sync → Cooldown → Done). Scenarios
+//!   are declared as [`config::ScenarioSpec`] JSON — per-worker speeds,
+//!   injected faults (stragglers, dropouts, latency), and an elastic
+//!   join/leave timeline — and driven by `adaloco cluster`. On a homogeneous
+//!   fault-free scenario the two engines agree **bit for bit** (same seed →
+//!   same final loss and [`collective::CommCounters`]), the correctness anchor
+//!   for every scaling scenario built on top.
+//!
+//! See DESIGN.md for the system inventory, README.md for the cluster scenario
+//! format, and EXPERIMENTS.md for the paper-vs-measured results of every table
+//! and figure.
 
 pub mod batch;
 pub mod bench;
+pub mod cluster;
 pub mod collective;
 pub mod config;
 pub mod data;

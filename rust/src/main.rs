@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train    Run a single training run from a JSON config (or the default).
+//!   cluster  Run a cluster scenario (or a suite directory) through the
+//!            concurrent message-passing runtime.
 //!   table    Regenerate a paper table: t1 t2 t4 t6 t8 t1-pjrt t2-pjrt theory ab2 ab3.
 //!   figure   Regenerate a paper figure's series: f1 f2 f8.
 //!   inspect  Show artifact manifests and runtime info.
@@ -19,10 +21,12 @@ use std::path::PathBuf;
 const USAGE: &str = r#"adaloco — adaptive batch size strategies for local gradient methods
 
 USAGE:
-  adaloco train  [--config cfg.json] [--save out.json] [--seed N]
-  adaloco table  --id <t1|t2|t4|t6|t8|t1-pjrt|t2-pjrt|theory|ab2|ab3>
-                 [--scale S] [--seeds 1,2,3] [--out results]
-  adaloco figure --id <f1|f2|f8> [--scale S] [--out results]
+  adaloco train   [--config cfg.json] [--save out.json] [--seed N]
+  adaloco cluster (--config scenario.json | --suite scenarios/)
+                  [--seed N] [--out results]
+  adaloco table   --id <t1|t2|t4|t6|t8|t1-pjrt|t2-pjrt|theory|ab2|ab3>
+                  [--scale S] [--seeds 1,2,3] [--out results]
+  adaloco figure  --id <f1|f2|f8> [--scale S] [--out results]
   adaloco inspect [--model name]
 
 EXAMPLES:
@@ -30,6 +34,8 @@ EXAMPLES:
   adaloco table --id t4 --seeds 1,2,3      # 3-seed mean(std) variant
   adaloco figure --id f2                   # Figure-2 series -> results/f2/
   adaloco train --config my_run.json
+  adaloco cluster --config scenarios/straggler8.json
+  adaloco cluster --suite scenarios/       # run every scenario in the dir
 "#;
 
 fn main() {
@@ -43,6 +49,7 @@ fn main() {
     let cmd = args.positional.first().cloned().unwrap_or_default();
     let result = match cmd.as_str() {
         "train" => cmd_train(&args),
+        "cluster" => cmd_cluster(&args),
         "table" => cmd_table(&args),
         "figure" => cmd_figure(&args),
         "inspect" => cmd_inspect(&args),
@@ -103,6 +110,82 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if rec.diverged {
         anyhow::bail!("run diverged (non-finite parameters)");
     }
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
+    use adaloco::config::ScenarioSpec;
+    let out = PathBuf::from(args.str_or("out", "results"));
+    let mut paths: Vec<PathBuf> = Vec::new();
+    if let Some(cfg) = args.get("config") {
+        paths.push(PathBuf::from(cfg));
+    }
+    if let Some(dir) = args.get("suite") {
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map_or(false, |x| x == "json"))
+            .collect();
+        entries.sort();
+        anyhow::ensure!(!entries.is_empty(), "no *.json scenarios under {dir}");
+        paths.extend(entries);
+    }
+    anyhow::ensure!(
+        !paths.is_empty(),
+        "cluster: pass --config <scenario.json> or --suite <dir>"
+    );
+    let mut any_diverged = false;
+    for path in paths {
+        let text = std::fs::read_to_string(&path)?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let mut spec = ScenarioSpec::from_json(&j)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        if let Some(seed) = args.get("seed") {
+            spec.run.seed = seed.parse()?;
+        }
+        println!(
+            "scenario '{}': {} workers, warmup={} cooldown={} ...",
+            spec.name,
+            spec.workers.len(),
+            spec.warmup_rounds,
+            spec.cooldown_rounds
+        );
+        let rec = adaloco::cluster::run_scenario(&spec)?;
+        rec.write_to(&out)?;
+        println!(
+            "  rounds={} samples={} avg_bsz={:.0} sim_time={} wall={} best_loss={:.4} \
+             allreduces={} bytes={}",
+            rec.total_rounds,
+            rec.total_samples,
+            rec.avg_local_batch,
+            stats::fmt_duration(rec.sim_time_s),
+            stats::fmt_duration(rec.wall_time_s),
+            rec.best_val_loss(),
+            rec.comm.allreduce_calls,
+            stats::fmt_bytes(rec.comm.bytes_moved),
+        );
+        for w in &rec.worker_stats {
+            println!(
+                "  worker {:>2}: speed={:.2} joined@r{}{} rounds={} dropped={} steps={} \
+                 samples={} sim_compute={}",
+                w.worker,
+                w.speed,
+                w.joined_round,
+                w.left_round.map(|r| format!(" left@r{r}")).unwrap_or_default(),
+                w.rounds_contributed,
+                w.dropped_rounds,
+                w.local_steps,
+                w.samples,
+                stats::fmt_duration(w.sim_compute_s),
+            );
+        }
+        if rec.diverged {
+            eprintln!("  WARNING: scenario '{}' diverged", spec.name);
+            any_diverged = true;
+        }
+    }
+    anyhow::ensure!(!any_diverged, "at least one scenario diverged");
     Ok(())
 }
 

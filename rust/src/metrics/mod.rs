@@ -18,6 +18,33 @@ pub struct EvalPoint {
     pub val_top5: f64,
 }
 
+/// Per-worker summary emitted by the cluster runtime (one row per worker of
+/// the scenario, including workers that joined late, dropped rounds, or left).
+/// Empty for the sequential engine, whose workers are indistinguishable.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkerSummary {
+    pub worker: usize,
+    /// Relative compute speed from the scenario topology (1.0 = reference).
+    pub speed: f64,
+    /// Round at which the worker was actually admitted (0 = founding member).
+    /// If the run ended before a pending worker's turn, this holds its
+    /// scheduled `join_round` and `rounds_contributed` stays 0.
+    pub joined_round: u64,
+    /// Round at which the worker left, when it did.
+    pub left_round: Option<u64>,
+    /// Rounds this worker's update contributed to the average.
+    pub rounds_contributed: u64,
+    /// Rounds this worker was active but dropped (excluded from the average).
+    pub dropped_rounds: u64,
+    pub local_steps: u64,
+    pub samples: u64,
+    /// Simulated compute seconds (α–β model, straggler-scaled).
+    pub sim_compute_s: f64,
+    /// Measured wall-clock seconds inside this worker's gradient loop.
+    pub wall_compute_s: f64,
+    pub last_loss: f64,
+}
+
 /// Full record of one training run.
 #[derive(Debug, Clone, Default)]
 pub struct RunRecord {
@@ -26,6 +53,8 @@ pub struct RunRecord {
     /// (round, b_local) trace at every sync — the batch-size growth curves of
     /// Figures 1/2/8-10.
     pub batch_trace: Vec<(u64, u64, u64)>, // (round, samples, b_local)
+    /// Per-worker metrics (cluster runtime only; empty for sequential runs).
+    pub worker_stats: Vec<WorkerSummary>,
     pub comm: CommCounters,
     pub total_steps: u64,
     pub total_rounds: u64,
@@ -81,7 +110,66 @@ impl RunRecord {
         out
     }
 
+    /// CSV of the per-worker summaries (cluster runs; empty rows otherwise).
+    pub fn worker_stats_csv(&self) -> String {
+        let mut out = String::from(
+            "worker,speed,joined_round,left_round,rounds_contributed,dropped_rounds,\
+             local_steps,samples,sim_compute_s,wall_compute_s,last_loss\n",
+        );
+        for w in &self.worker_stats {
+            out.push_str(&format!(
+                "{},{:.3},{},{},{},{},{},{},{:.6},{:.6},{:.6}\n",
+                w.worker,
+                w.speed,
+                w.joined_round,
+                w.left_round.map(|r| r.to_string()).unwrap_or_default(),
+                w.rounds_contributed,
+                w.dropped_rounds,
+                w.local_steps,
+                w.samples,
+                w.sim_compute_s,
+                w.wall_compute_s,
+                w.last_loss,
+            ));
+        }
+        out
+    }
+
+    fn worker_json(w: &WorkerSummary) -> Json {
+        Json::obj(vec![
+            ("worker", Json::num(w.worker as f64)),
+            ("speed", Json::num(w.speed)),
+            ("joined_round", Json::num(w.joined_round as f64)),
+            (
+                "left_round",
+                w.left_round.map(|r| Json::num(r as f64)).unwrap_or(Json::Null),
+            ),
+            ("rounds_contributed", Json::num(w.rounds_contributed as f64)),
+            ("dropped_rounds", Json::num(w.dropped_rounds as f64)),
+            ("local_steps", Json::num(w.local_steps as f64)),
+            ("samples", Json::num(w.samples as f64)),
+            ("sim_compute_s", Json::num(w.sim_compute_s)),
+            ("wall_compute_s", Json::num(w.wall_compute_s)),
+            ("last_loss", Json::num(w.last_loss)),
+        ])
+    }
+
     pub fn summary_json(&self) -> Json {
+        if !self.worker_stats.is_empty() {
+            let mut obj = match self.summary_json_base() {
+                Json::Obj(o) => o,
+                _ => unreachable!(),
+            };
+            obj.insert(
+                "workers".to_string(),
+                Json::arr(self.worker_stats.iter().map(Self::worker_json)),
+            );
+            return Json::Obj(obj);
+        }
+        self.summary_json_base()
+    }
+
+    fn summary_json_base(&self) -> Json {
         Json::obj(vec![
             ("label", Json::str(&self.label)),
             ("steps", Json::num(self.total_steps as f64)),
@@ -108,6 +196,10 @@ impl RunRecord {
             .write_all(self.batch_trace_csv().as_bytes())?;
         std::fs::File::create(dir.join(format!("{base}.summary.json")))?
             .write_all(self.summary_json().to_string_pretty().as_bytes())?;
+        if !self.worker_stats.is_empty() {
+            std::fs::File::create(dir.join(format!("{base}.workers.csv")))?
+                .write_all(self.worker_stats_csv().as_bytes())?;
+        }
         Ok(())
     }
 }
@@ -191,6 +283,33 @@ mod tests {
         assert!(dir.join("test_run.batch.csv").exists());
         assert!(dir.join("test_run.summary.json").exists());
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn worker_stats_emission() {
+        let mut r = record();
+        r.worker_stats = vec![
+            WorkerSummary { worker: 0, speed: 1.0, rounds_contributed: 2, ..Default::default() },
+            WorkerSummary {
+                worker: 1,
+                speed: 0.5,
+                joined_round: 1,
+                left_round: Some(2),
+                dropped_rounds: 1,
+                ..Default::default()
+            },
+        ];
+        let csv = r.worker_stats_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.lines().nth(2).unwrap().starts_with("1,0.500,1,2,"));
+        let j = r.summary_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let workers = parsed.get("workers").as_arr().unwrap();
+        assert_eq!(workers.len(), 2);
+        assert_eq!(workers[1].get("left_round").as_u64(), Some(2));
+        // sequential records keep the summary shape unchanged
+        r.worker_stats.clear();
+        assert!(r.summary_json().get("workers").is_null());
     }
 
     #[test]

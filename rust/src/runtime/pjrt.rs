@@ -1,0 +1,368 @@
+//! Real PJRT runtime (requires the `pjrt` cargo feature and the `xla` crate).
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO **text** is the interchange format — the
+//! crate's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized protos.
+//!
+//! [`PjrtModel`] implements [`crate::model::GradModel`] over a model's artifact
+//! directory: `grad` at the fixed micro-batch (larger local batches are
+//! realized via gradient accumulation, exactly as the paper does on GPUs),
+//! `eval`, `init`, and the Pallas `norm_stat` kernel for sync-time statistics.
+
+use super::{artifacts_root, ModelKind, ModelMeta};
+use crate::data::Batch;
+use crate::model::{EvalStats, GradModel, StepStats};
+use crate::tensor;
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Shared PJRT client + compiled-executable cache (compile once per entry).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client, cache: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by path).
+    pub fn load(&mut self, path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(e) = self.cache.get(&key) {
+            return Ok(Rc::clone(e));
+        }
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .with_context(|| format!("parsing HLO text {key}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        let rc = Rc::new(exe);
+        self.cache.insert(key, Rc::clone(&rc));
+        Ok(rc)
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Run an executable and return the decomposed output tuple.
+fn run_tuple(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    let bufs = exe.execute::<xla::Literal>(args)?;
+    let lit = bufs[0][0].to_literal_sync()?;
+    Ok(lit.to_tuple()?)
+}
+
+/// A GradModel backed by AOT artifacts. NOT Sync/Send-shared; the engine runs
+/// workers sequentially, so each run uses one runtime for all workers.
+pub struct PjrtModel {
+    pub meta: ModelMeta,
+    grad_exe: Rc<xla::PjRtLoadedExecutable>,
+    eval_exe: Rc<xla::PjRtLoadedExecutable>,
+    init_exe: Rc<xla::PjRtLoadedExecutable>,
+    norm_stat_exe: Option<(usize, Rc<xla::PjRtLoadedExecutable>)>,
+    grad_accum: Vec<f32>,
+}
+
+// SAFETY-adjacent note: the xla crate's raw pointers are not marked Send. The
+// engine trait requires Send for the threaded substrates; PJRT models are used
+// strictly single-threaded (sequential worker loop + serial all-reduce), which
+// we uphold by construction in `exp::build_workers`. The cluster runtime
+// refuses artifact models for exactly this reason (see `cluster::run_scenario`).
+unsafe impl Send for PjrtModel {}
+
+impl PjrtModel {
+    /// Load the artifact set for `name` under the artifacts root, compiling the
+    /// norm-stat kernel for `m_workers` if that variant was lowered.
+    pub fn load(rt: &mut PjrtRuntime, name: &str, m_workers: usize) -> Result<Self> {
+        let dir = artifacts_root().join(name);
+        let meta = ModelMeta::load(&dir).map_err(|e| anyhow::anyhow!(e))?;
+        if meta.layout_dim() != meta.dim {
+            bail!("manifest layout covers {} != dim {}", meta.layout_dim(), meta.dim);
+        }
+        let grad_exe = rt.load(&meta.entry_path("grad").map_err(anyhow::Error::msg)?)?;
+        let eval_exe = rt.load(&meta.entry_path("eval").map_err(anyhow::Error::msg)?)?;
+        let init_exe = rt.load(&meta.entry_path("init").map_err(anyhow::Error::msg)?)?;
+        let norm_stat_exe = if meta.norm_stat_workers.contains(&m_workers) {
+            let p = meta
+                .entry_path(&format!("norm_stat_m{m_workers}"))
+                .map_err(anyhow::Error::msg)?;
+            Some((m_workers, rt.load(&p)?))
+        } else {
+            None
+        };
+        let dim = meta.dim;
+        Ok(PjrtModel {
+            meta,
+            grad_exe,
+            eval_exe,
+            init_exe,
+            norm_stat_exe,
+            grad_accum: vec![0.0; dim],
+        })
+    }
+
+    fn batch_literals(&self, batch: &Batch, lo: usize, hi: usize) -> Result<(xla::Literal, xla::Literal)> {
+        let n = (hi - lo) as i64;
+        match (&self.meta.kind, batch) {
+            (ModelKind::Classifier, Batch::Dense { x, y, feat, .. }) => {
+                anyhow::ensure!(*feat == self.meta.input_dim, "feature dim mismatch");
+                let xs = &x[lo * feat..hi * feat];
+                let ys = &y[lo..hi];
+                Ok((lit_f32(xs, &[n, *feat as i64])?, lit_i32(ys, &[n])?))
+            }
+            (ModelKind::Lm, Batch::Tokens { x, y, seq, .. }) => {
+                anyhow::ensure!(*seq == self.meta.seq_len, "sequence length mismatch");
+                let xs = &x[lo * seq..hi * seq];
+                let ys = &y[lo * seq..hi * seq];
+                Ok((
+                    lit_i32(xs, &[n, *seq as i64])?,
+                    lit_i32(ys, &[n, *seq as i64])?,
+                ))
+            }
+            _ => bail!("batch kind does not match model kind"),
+        }
+    }
+
+    fn grad_micro(&mut self, params_lit: &xla::Literal, batch: &Batch, lo: usize, hi: usize) -> Result<f64> {
+        let (xs, ys) = self.batch_literals(batch, lo, hi)?;
+        let out = run_tuple(&self.grad_exe, &[params_lit.clone(), xs, ys])?;
+        anyhow::ensure!(out.len() == 2, "grad entry must return (loss, grad)");
+        let loss = out[0].to_vec::<f32>()?[0] as f64;
+        let g = out[1].to_vec::<f32>()?;
+        tensor::axpy(1.0, &g, &mut self.grad_accum);
+        Ok(loss)
+    }
+}
+
+impl GradModel for PjrtModel {
+    fn dim(&self) -> usize {
+        self.meta.dim
+    }
+
+    fn init_params(&mut self, rng: &mut Pcg64) -> Vec<f32> {
+        let seed = rng.next_u32();
+        let out = run_tuple(&self.init_exe, &[xla::Literal::scalar(seed)])
+            .expect("init artifact execution failed");
+        out[0].to_vec::<f32>().expect("init output not f32")
+    }
+
+    fn grad(&mut self, params: &[f32], batch: &Batch, out: &mut [f32]) -> StepStats {
+        let micro = self.meta.micro_batch;
+        let n = batch.len();
+        assert!(n > 0 && n % micro == 0, "batch {n} must be a multiple of micro {micro}");
+        let params_lit = lit_f32(params, &[params.len() as i64]).expect("params literal");
+        tensor::fill(&mut self.grad_accum, 0.0);
+        let mut loss = 0f64;
+        let chunks = n / micro;
+        for c in 0..chunks {
+            loss += self
+                .grad_micro(&params_lit, batch, c * micro, (c + 1) * micro)
+                .expect("grad artifact execution failed");
+        }
+        let inv = 1.0 / chunks as f32;
+        for (o, g) in out.iter_mut().zip(&self.grad_accum) {
+            *o = *g * inv;
+        }
+        StepStats {
+            loss: loss / chunks as f64,
+            per_sample_var: None, // PJRT path: only batch grads (the §4.3 constraint)
+        }
+    }
+
+    fn eval(&mut self, params: &[f32], eval: &Batch) -> EvalStats {
+        let eb = self.meta.eval_batch;
+        let n = eval.len();
+        assert!(n >= eb, "eval set smaller than eval batch");
+        let params_lit = lit_f32(params, &[params.len() as i64]).expect("params literal");
+        let chunks = n / eb; // remainder dropped; eval sets are sized as multiples
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        for c in 0..chunks {
+            let (xs, ys) = self
+                .batch_literals(eval, c * eb, (c + 1) * eb)
+                .expect("eval batch literals");
+            let out = run_tuple(&self.eval_exe, &[params_lit.clone(), xs, ys])
+                .expect("eval artifact execution failed");
+            loss_sum += out[0].to_vec::<f32>().expect("loss")[0] as f64;
+            correct += out[1].to_vec::<f32>().expect("correct")[0] as f64;
+        }
+        let units = match self.meta.kind {
+            ModelKind::Classifier => (chunks * eb) as f64,
+            ModelKind::Lm => (chunks * eb * self.meta.seq_len) as f64,
+        };
+        EvalStats {
+            loss: loss_sum / units,
+            accuracy: correct / units,
+            top5: correct / units, // per-token/example top1; top5 not lowered
+            n: chunks * eb,
+        }
+    }
+
+    fn micro_batch(&self) -> usize {
+        self.meta.micro_batch
+    }
+
+    fn norm_stats(&mut self, grads: &[&[f32]], center: &mut [f32]) -> Option<(f64, f64)> {
+        let (m, exe) = self.norm_stat_exe.as_ref()?;
+        if grads.len() != *m {
+            return None;
+        }
+        let d = self.meta.dim;
+        let mut stacked = Vec::with_capacity(m * d);
+        for g in grads {
+            debug_assert_eq!(g.len(), d);
+            stacked.extend_from_slice(g);
+        }
+        let g_lit = lit_f32(&stacked, &[*m as i64, d as i64]).ok()?;
+        let out = run_tuple(exe, &[g_lit]).ok()?;
+        if out.len() != 3 {
+            return None;
+        }
+        let gbar = out[0].to_vec::<f32>().ok()?;
+        center.copy_from_slice(&gbar);
+        let var_sum = out[1].to_vec::<f32>().ok()?[0] as f64;
+        let nsq = out[2].to_vec::<f32>().ok()?[0] as f64;
+        Some((var_sum, nsq))
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.meta.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    fn have_artifacts(name: &str) -> bool {
+        artifacts_root().join(name).join("meta.json").exists()
+    }
+
+    #[test]
+    fn load_and_roundtrip_tinylm() {
+        if !have_artifacts("tinylm") {
+            eprintln!("skipping: artifacts/tinylm not built");
+            return;
+        }
+        let mut rt = PjrtRuntime::cpu().unwrap();
+        let mut model = PjrtModel::load(&mut rt, "tinylm", 4).unwrap();
+        let mut rng = Pcg64::new(1, 0);
+        let params = model.init_params(&mut rng);
+        assert_eq!(params.len(), model.dim());
+        assert!(tensor::all_finite(&params));
+        assert!(tensor::norm(&params) > 0.0);
+
+        let spec = crate::data::synth_text::MarkovZipfSpec {
+            vocab: model.meta.vocab,
+            seq_len: model.meta.seq_len,
+            eval_size: model.meta.eval_batch,
+            ..Default::default()
+        };
+        let mut data = crate::data::synth_text::MarkovZipf::new(spec, Pcg64::new(2, 0));
+        let b = data.sample(model.micro_batch() * 2);
+        let mut g = vec![0.0f32; model.dim()];
+        let stats = model.grad(&params, &b, &mut g);
+        assert!(stats.loss.is_finite() && stats.loss > 0.0);
+        // fresh init on vocab-V data: loss near ln(V)
+        let lnv = (model.meta.vocab as f64).ln();
+        assert!((stats.loss - lnv).abs() < 1.5, "loss {} vs ln(V) {}", stats.loss, lnv);
+        assert!(tensor::norm(&g) > 0.0);
+
+        let ev = model.eval(&params, data.eval_set());
+        assert!(ev.loss.is_finite());
+        assert!(ev.accuracy >= 0.0 && ev.accuracy <= 1.0);
+    }
+
+    #[test]
+    fn pallas_norm_stat_matches_native() {
+        if !have_artifacts("tinylm") {
+            eprintln!("skipping: artifacts/tinylm not built");
+            return;
+        }
+        let mut rt = PjrtRuntime::cpu().unwrap();
+        let mut model = PjrtModel::load(&mut rt, "tinylm", 4).unwrap();
+        let d = model.dim();
+        let mut rng = Pcg64::new(3, 0);
+        let rows: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..d).map(|_| rng.normal_f32() * 0.1).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut c_pallas = vec![0.0f32; d];
+        let (var_p, nsq_p) = model.norm_stats(&refs, &mut c_pallas).expect("norm_stat artifact");
+        let mut c_native = vec![0.0f32; d];
+        let (var_n, nsq_n) = tensor::norm_test_stats(&refs, &mut c_native);
+        assert!(crate::util::prop::close(var_p, var_n, 1e-3, 1e-4), "{var_p} vs {var_n}");
+        assert!(crate::util::prop::close(nsq_p, nsq_n, 1e-3, 1e-4), "{nsq_p} vs {nsq_n}");
+        assert!(crate::util::prop::max_abs_diff(&c_pallas, &c_native) < 1e-4);
+    }
+
+    #[test]
+    fn grad_descends_on_mlp_artifact() {
+        if !have_artifacts("mlp_s") {
+            eprintln!("skipping: artifacts/mlp_s not built");
+            return;
+        }
+        let mut rt = PjrtRuntime::cpu().unwrap();
+        let mut model = PjrtModel::load(&mut rt, "mlp_s", 4).unwrap();
+        let spec = crate::data::synth_image::GaussianMixtureSpec {
+            feat: model.meta.input_dim,
+            classes: model.meta.num_classes,
+            separation: 4.0,
+            noise: 1.0,
+            eval_size: model.meta.eval_batch,
+            data_seed: 5,
+        };
+        let mut data =
+            crate::data::synth_image::GaussianMixture::new(spec, Pcg64::new(4, 0));
+        let mut rng = Pcg64::new(5, 0);
+        let mut params = model.init_params(&mut rng);
+        let mut g = vec![0.0f32; model.dim()];
+        let l0 = {
+            let b = data.sample(model.micro_batch());
+            model.grad(&params, &b, &mut g).loss
+        };
+        for _ in 0..15 {
+            let b = data.sample(model.micro_batch());
+            model.grad(&params, &b, &mut g);
+            tensor::axpy(-0.05, &g, &mut params);
+        }
+        let b = data.sample(model.micro_batch() * 4);
+        let l1 = model.grad(&params, &b, &mut g).loss;
+        assert!(l1 < l0, "loss did not decrease: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        if !have_artifacts("tinylm") {
+            return;
+        }
+        let mut rt = PjrtRuntime::cpu().unwrap();
+        let _a = PjrtModel::load(&mut rt, "tinylm", 4).unwrap();
+        let n = rt.cached_executables();
+        let _b = PjrtModel::load(&mut rt, "tinylm", 4).unwrap();
+        assert_eq!(rt.cached_executables(), n, "second load must hit the cache");
+    }
+}

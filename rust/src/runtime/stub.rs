@@ -1,0 +1,80 @@
+//! API-compatible stand-in for the PJRT runtime, compiled when the `pjrt`
+//! feature is off (the default in the offline environment, which lacks the
+//! `xla` crate).
+//!
+//! Constructors return a descriptive error, so artifact-backed configs fail at
+//! run time with a clear message while everything native keeps working; the
+//! types themselves are unconstructible, so the trait methods are statically
+//! unreachable.
+
+use crate::data::Batch;
+use crate::model::{EvalStats, GradModel, StepStats};
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Result};
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: adaloco was built without the `pjrt` cargo feature \
+     (requires the external `xla` crate; see rust/Cargo.toml)";
+
+/// Stub for the PJRT client; [`PjrtRuntime::cpu`] always errors.
+pub struct PjrtRuntime {
+    _unconstructible: (),
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn platform(&self) -> String {
+        unreachable!("stub PjrtRuntime cannot be constructed")
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        unreachable!("stub PjrtRuntime cannot be constructed")
+    }
+}
+
+/// Stub for artifact-backed models; [`PjrtModel::load`] always errors.
+pub struct PjrtModel {
+    _unconstructible: (),
+}
+
+impl PjrtModel {
+    pub fn load(_rt: &mut PjrtRuntime, name: &str, _m_workers: usize) -> Result<Self> {
+        bail!("cannot load artifact '{name}': {UNAVAILABLE}")
+    }
+}
+
+impl GradModel for PjrtModel {
+    fn dim(&self) -> usize {
+        unreachable!("stub PjrtModel cannot be constructed")
+    }
+
+    fn init_params(&mut self, _rng: &mut Pcg64) -> Vec<f32> {
+        unreachable!("stub PjrtModel cannot be constructed")
+    }
+
+    fn grad(&mut self, _params: &[f32], _batch: &Batch, _out: &mut [f32]) -> StepStats {
+        unreachable!("stub PjrtModel cannot be constructed")
+    }
+
+    fn eval(&mut self, _params: &[f32], _eval: &Batch) -> EvalStats {
+        unreachable!("stub PjrtModel cannot be constructed")
+    }
+
+    fn name(&self) -> String {
+        unreachable!("stub PjrtModel cannot be constructed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_are_descriptive() {
+        let err = PjrtRuntime::cpu().unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "unhelpful error: {err}");
+    }
+}

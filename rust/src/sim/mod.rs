@@ -73,6 +73,26 @@ impl TimeModel {
         worst * h as f64
     }
 
+    /// Compute time for H local steps on one worker under cluster fault
+    /// injection: the topology speed is already inside [`Self::local_step_time`];
+    /// `straggle` is the scenario's multiplicative slowdown for this round and
+    /// `extra_latency_s` its injected per-round latency. The cluster
+    /// coordinator takes the max of this over the round's contributors, which
+    /// for `straggle = 1.0`, `extra_latency_s = 0.0` reproduces
+    /// [`Self::round_compute_time`] bit for bit (`x * 1.0` and `x + 0.0` are
+    /// exact in IEEE-754 for the positive times involved) — part of the
+    /// sequential/cluster equivalence contract.
+    pub fn worker_round_time(
+        &self,
+        b: u64,
+        h: u32,
+        worker: usize,
+        straggle: f64,
+        extra_latency_s: f64,
+    ) -> f64 {
+        self.local_step_time(b, worker) * h as f64 * straggle + extra_latency_s
+    }
+
     /// Communication time per sync: model-average all-reduce (+ gradient
     /// all-reduce + host statistic when the controller needs the norm test).
     pub fn sync_time(&self, dim: usize, norm_test: bool) -> f64 {
@@ -117,6 +137,29 @@ mod tests {
         let plain = t.sync_time(1_000_000, false);
         let with = t.sync_time(1_000_000, true);
         assert!(with > plain * 1.9, "norm test should roughly double sync cost");
+    }
+
+    #[test]
+    fn worker_round_time_matches_round_compute_without_faults() {
+        let t = TimeModel::paper_vision(Topology::heterogeneous(vec![1.0, 0.5, 2.0]));
+        for (b, h) in [(64u64, 1u32), (512, 4), (4096, 16)] {
+            let max_over_workers = (0..3)
+                .map(|w| t.worker_round_time(b, h, w, 1.0, 0.0))
+                .fold(0f64, f64::max);
+            assert_eq!(
+                max_over_workers.to_bits(),
+                t.round_compute_time(b, h).to_bits(),
+                "fault-free worker_round_time must be bit-equal at b={b} h={h}"
+            );
+        }
+    }
+
+    #[test]
+    fn worker_round_time_applies_faults() {
+        let t = tm();
+        let base = t.worker_round_time(256, 4, 0, 1.0, 0.0);
+        assert_eq!(t.worker_round_time(256, 4, 0, 2.0, 0.0), base * 2.0);
+        assert_eq!(t.worker_round_time(256, 4, 0, 1.0, 0.5), base + 0.5);
     }
 
     #[test]

@@ -1,0 +1,108 @@
+//! Integration tests for the cluster runtime: every committed scenario under
+//! scenarios/ must load, validate, and run to completion, and the homogeneous
+//! scenario must reproduce the sequential engine bit-for-bit (the acceptance
+//! anchor for all future scaling work).
+
+use adaloco::cluster::run_scenario;
+use adaloco::config::ScenarioSpec;
+use adaloco::exp::run_config;
+use adaloco::util::json::Json;
+use std::path::PathBuf;
+
+fn scenarios_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../scenarios")
+}
+
+fn load(name: &str) -> ScenarioSpec {
+    let path = scenarios_dir().join(name);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    let spec = ScenarioSpec::from_json(&Json::parse(&text).expect("scenario JSON"))
+        .unwrap_or_else(|e| panic!("{name}: {e}"));
+    let errs = spec.validate();
+    assert!(errs.is_empty(), "{name} invalid: {}", errs.join("; "));
+    spec
+}
+
+#[test]
+fn all_committed_scenarios_parse_and_roundtrip() {
+    for name in ["homogeneous4.json", "straggler8.json", "elastic4to8.json"] {
+        let spec = load(name);
+        let j = spec.to_json().to_string();
+        let again = ScenarioSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(spec, again, "{name} does not roundtrip");
+    }
+}
+
+#[test]
+fn homogeneous_scenario_matches_sequential_bit_for_bit() {
+    let spec = load("homogeneous4.json");
+    assert!(spec.is_homogeneous(), "homogeneous4.json must stay fault-free");
+    let seq = run_config(&spec.run).expect("sequential run");
+    let clu = run_scenario(&spec).expect("cluster run");
+    assert_eq!(seq.comm, clu.comm, "CommCounters diverged");
+    assert_eq!(seq.batch_trace, clu.batch_trace, "batch schedule diverged");
+    assert_eq!(seq.total_samples, clu.total_samples);
+    assert_eq!(seq.points.len(), clu.points.len());
+    let (a, b) = (seq.points.last().unwrap(), clu.points.last().unwrap());
+    assert_eq!(
+        a.val_loss.to_bits(),
+        b.val_loss.to_bits(),
+        "final loss not bit-equal: {} vs {}",
+        a.val_loss,
+        b.val_loss
+    );
+    assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+}
+
+#[test]
+fn straggler_scenario_completes_with_worker_metrics() {
+    let spec = load("straggler8.json");
+    let rec = run_scenario(&spec).expect("straggler8 run");
+    assert!(!rec.diverged);
+    assert_eq!(rec.worker_stats.len(), 8, "per-worker metrics missing");
+    // the slow worker (speed 0.5) accumulates ~2x the simulated compute time
+    let slow = &rec.worker_stats[7];
+    let fast = &rec.worker_stats[0];
+    assert_eq!(slow.speed, 0.5);
+    assert!(
+        slow.sim_compute_s > fast.sim_compute_s * 1.5,
+        "straggler sim time {} not dominating reference {}",
+        slow.sim_compute_s,
+        fast.sim_compute_s
+    );
+    if rec.total_rounds > 12 {
+        assert_eq!(slow.dropped_rounds, 1, "dropout at round 12 not recorded");
+        assert_eq!(slow.rounds_contributed, rec.total_rounds - 1);
+    }
+    // every worker reports its share of the run
+    for w in &rec.worker_stats {
+        assert!(w.local_steps > 0, "worker {} never stepped", w.worker);
+        assert!(w.samples > 0);
+    }
+}
+
+#[test]
+fn elastic_scenario_scales_up_mid_run() {
+    let spec = load("elastic4to8.json");
+    let rec = run_scenario(&spec).expect("elastic4to8 run");
+    assert!(!rec.diverged);
+    assert_eq!(rec.worker_stats.len(), 8);
+    for w in 0..4 {
+        assert_eq!(rec.worker_stats[w].joined_round, 0);
+    }
+    for w in 4..8 {
+        assert_eq!(rec.worker_stats[w].joined_round, 10);
+        assert!(
+            rec.worker_stats[w].rounds_contributed < rec.worker_stats[0].rounds_contributed,
+            "late joiner {w} contributed as much as a founder"
+        );
+    }
+    // warmup rounds hold b0 with H = 1
+    for &(r, _, b) in rec.batch_trace.iter().take(2) {
+        assert!(r < 2);
+        assert_eq!(b, 16, "warmup must hold b0");
+    }
+    // the budget was actually reached despite the elastic timeline
+    assert!(rec.total_samples >= spec.run.total_samples);
+}

@@ -1,0 +1,203 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored path crate
+//! provides the slice of anyhow's API the workspace actually uses: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`] macros, and the
+//! [`Context`] extension trait. Semantics match upstream for that slice:
+//!
+//! - `?` converts any `E: std::error::Error + Send + Sync + 'static` into
+//!   [`Error`] (possible because [`Error`] itself does not implement
+//!   `std::error::Error`, exactly like upstream).
+//! - `.context(c)` / `.with_context(|| c)` prepend `"c: "` to the message.
+//! - `Display` prints the outermost message; the alternate form (`{:#}`)
+//!   prints the full `outer: inner` context chain, which this implementation
+//!   folds into the message eagerly, so both forms agree.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased error with a human-readable context chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` defaulting the error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap a concrete `std::error::Error`, keeping it as the source.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Prepend a context layer: `"{context}: {self}"`.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The wrapped source error, when one exists.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Context extension for `Result` and `Option` (subset of `anyhow::Context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($msg:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($msg, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err.to_string())
+    };
+}
+
+/// Return early with an [`anyhow!`]-constructed error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 7;
+        let e = anyhow!("value {x} bad");
+        assert_eq!(e.to_string(), "value 7 bad");
+        let e = anyhow!("pair {} {}", 1, 2);
+        assert_eq!(e.to_string(), "pair 1 2");
+        let e = anyhow!(String::from("plain"));
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "flag was {ok}");
+            if !ok {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+    }
+
+    #[test]
+    fn context_chains() {
+        let e: Error = Err::<(), _>(io_err()).context("opening config").unwrap_err();
+        assert_eq!(e.to_string(), "opening config: gone");
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| format!("pass {}", 2))
+            .unwrap_err();
+        assert_eq!(e.to_string(), "pass 2: gone");
+        let e: Error = None::<u8>.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn alternate_display_matches_plain() {
+        let e = anyhow!("outer").context("wrap");
+        assert_eq!(format!("{e}"), format!("{e:#}"));
+    }
+}

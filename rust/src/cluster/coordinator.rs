@@ -26,6 +26,8 @@ use super::membership::Roster;
 use super::messages::{FromWorker, RoundResult, ToWorker};
 use super::worker::spawn_worker;
 use crate::batch::SyncEvent;
+use crate::collective::CommCounters;
+use crate::comm::{ErrorFeedback, Payload};
 use crate::config::WorkerSpec;
 use crate::data::Dataset;
 use crate::engine::{EngineOpts, TrainEngine};
@@ -151,7 +153,14 @@ impl TrainEngine for ClusterEngine {
         let mut handles = Vec::with_capacity(m);
         let mut datasets = datasets;
         for (w, (model, dataset)) in models.drain(..).zip(datasets.drain(..)).enumerate() {
-            let (tx, handle) = spawn_worker(w, model, dataset, opts.optim.clone(), from_tx.clone());
+            let (tx, handle) = spawn_worker(
+                w,
+                model,
+                dataset,
+                opts.optim.clone(),
+                opts.compression.clone(),
+                from_tx.clone(),
+            );
             txs.push(tx);
             handles.push(handle);
         }
@@ -171,9 +180,20 @@ impl TrainEngine for ClusterEngine {
             label: opts.label.clone(),
             ..Default::default()
         };
-        // Founding members receive x_0.
+        // The coordinator's side of the compressed-sync protocol: one
+        // compressor (shared config with the workers) and the downlink
+        // error-feedback residual for the broadcast direction.
+        let compressor = opts.compression.build();
+        let mut downlink_ef = opts.compression.error_feedback.then(|| ErrorFeedback::new(d));
+        // Founding members receive x_0 (dense: there is no reference yet).
         for w in roster.active() {
-            Self::try_send(&txs, &mut roster, w, 0, ToWorker::SetParams { params: params.clone() });
+            Self::try_send(
+                &txs,
+                &mut roster,
+                w,
+                0,
+                ToWorker::SetParams { payload: Payload::Dense { values: params.clone() } },
+            );
         }
 
         let mut b_local = opts.controller.b0().min(opts.b_max_local).max(1);
@@ -219,12 +239,13 @@ impl TrainEngine for ClusterEngine {
                 let _ = txs[w].send(ToWorker::Stop);
             }
             for w in roster.admit_due(round) {
+                // Admission payload is dense: the joiner holds no reference.
                 Self::try_send(
                     &txs,
                     &mut roster,
                     w,
                     round,
-                    ToWorker::SetParams { params: params.clone() },
+                    ToWorker::SetParams { payload: Payload::Dense { values: params.clone() } },
                 );
             }
             if roster.active().is_empty() {
@@ -303,18 +324,53 @@ impl TrainEngine for ClusterEngine {
             total_local_steps += h as f64;
 
             // ---- parameter average over contributors (eq. 3, re-weighted) --
-            // Same float-op sequence as the sequential engine, structurally:
-            // both run through collective::mean_reduce_into.
-            {
+            // Contributions arrive as payloads encoded against the previous
+            // consensus; decode them in ascending worker order and reduce with
+            // the same float-op sequence as the sequential engine (both run
+            // through collective::mean_reduce_into). For lossy methods the new
+            // consensus is re-encoded for the downlink, so the broadcast wire
+            // is compressed too, and decoded here exactly as every worker will
+            // decode it; dense (identity) payloads are averaged straight from
+            // the received buffers — no decode clones, the legacy dataflow.
+            let mut wire_frac = 1.0f64;
+            let down = if opts.compression.is_dense() {
                 let first = results[assigned[0]].as_ref().unwrap();
-                params.copy_from_slice(&first.params);
+                params.copy_from_slice(first.payload.as_dense().expect("dense payload"));
                 let rest_refs: Vec<&[f32]> = assigned[1..]
                     .iter()
-                    .map(|&w| results[w].as_ref().unwrap().params.as_slice())
+                    .map(|&w| {
+                        results[w].as_ref().unwrap().payload.as_dense().expect("dense payload")
+                    })
                     .collect();
                 crate::collective::mean_reduce_into(&mut params, &rest_refs);
-            }
-            rec.comm.charge_allreduce(d, k);
+                rec.comm.charge_allreduce(d, k);
+                Payload::Dense { values: params.clone() }
+            } else {
+                let reference = params.clone();
+                let uplink: u64 = assigned
+                    .iter()
+                    .map(|&w| results[w].as_ref().unwrap().payload.wire_bytes())
+                    .sum();
+                let decoded: Vec<Vec<f32>> = assigned
+                    .iter()
+                    .map(|&w| results[w].as_ref().unwrap().payload.decode(&reference))
+                    .collect();
+                params.copy_from_slice(&decoded[0]);
+                {
+                    let rest_refs: Vec<&[f32]> =
+                        decoded[1..].iter().map(|v| v.as_slice()).collect();
+                    crate::collective::mean_reduce_into(&mut params, &rest_refs);
+                }
+                let down = compressor.encode(&params, &reference, downlink_ef.as_mut());
+                down.decode_into(&reference, &mut params);
+                let logical = CommCounters::ring_bytes(d, k);
+                let wire = CommCounters::compressed_wire_bytes(k, uplink, down.wire_bytes());
+                if logical > 0 {
+                    wire_frac = wire as f64 / logical as f64;
+                }
+                rec.comm.charge_compressed_allreduce(d, k, uplink, down.wire_bytes());
+                down
+            };
             rec.comm.rounds += 1;
             for w in roster.active() {
                 Self::try_send(
@@ -322,7 +378,7 @@ impl TrainEngine for ClusterEngine {
                     &mut roster,
                     w,
                     round,
-                    ToWorker::SetParams { params: params.clone() },
+                    ToWorker::SetParams { payload: down.clone() },
                 );
             }
 
@@ -387,7 +443,7 @@ impl TrainEngine for ClusterEngine {
                 worst = worst.max(t);
             }
             sim_time += worst;
-            sim_time += opts.time_model.sync_time(d, needs_grad_ar);
+            sim_time += opts.time_model.sync_time_compressed(d, needs_grad_ar, wire_frac);
 
             // ---- per-worker metrics ---------------------------------------
             for &w in &assigned {

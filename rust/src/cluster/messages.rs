@@ -7,14 +7,18 @@
 //! holds a `Receiver<ToWorker>` for commands and a clone of the coordinator's
 //! `Sender<FromWorker>` for replies.
 
+use crate::comm::Payload;
 use crate::model::EvalStats;
 
 /// Coordinator → worker commands.
 #[derive(Debug, Clone)]
 pub enum ToWorker {
     /// Install consensus parameters (broadcast after every sync; also the
-    /// admission payload for workers joining mid-run).
-    SetParams { params: Vec<f32> },
+    /// admission payload for workers joining mid-run). The payload is encoded
+    /// by the run's [`crate::comm::Compressor`] against the consensus of the
+    /// previous round, which every active worker holds; admission payloads are
+    /// always [`Payload::Dense`], since joiners hold no reference yet.
+    SetParams { payload: Payload },
     /// Run `h` local steps at local batch `b_eff`, using `lrs[s]` as the
     /// learning rate of step `s` (the coordinator pre-resolves the sample-
     /// indexed schedule so workers stay schedule-agnostic).
@@ -30,9 +34,12 @@ pub enum ToWorker {
 pub struct RoundResult {
     pub worker: usize,
     pub round: u64,
-    /// Locally-updated parameters after the H steps.
-    pub params: Vec<f32>,
-    /// The last local batch gradient (norm-test statistics input, §4.3).
+    /// The worker's post-round parameters, encoded against the round's
+    /// starting consensus by the run's compressor ([`Payload::Dense`] for
+    /// identity runs — exactly the bytes the uncompressed system sent).
+    pub payload: Payload,
+    /// The last local batch gradient (norm-test statistics input, §4.3) —
+    /// always dense: the batch controllers need the exact averaged gradient.
     pub grad: Vec<f32>,
     /// Loss of the last local step.
     pub loss: f64,

@@ -8,6 +8,7 @@
 //! coordinator, which is what lets the same worker loop serve every scenario.
 
 use super::messages::{FromWorker, RoundResult, ToWorker};
+use crate::comm::{CompressionSpec, ErrorFeedback};
 use crate::data::Dataset;
 use crate::model::GradModel;
 use crate::optim::OptimParams;
@@ -16,12 +17,16 @@ use std::thread::JoinHandle;
 
 /// Spawn worker `id` as an OS thread. Returns its command channel and join
 /// handle; the thread immediately reports `Hello` on `out` and then serves
-/// commands until `Stop` or channel disconnect.
+/// commands until `Stop` or channel disconnect. The worker owns its side of
+/// the compressed-sync protocol: it decodes `SetParams` payloads against the
+/// consensus it last applied and encodes its round results with the run's
+/// compressor, carrying its private [`ErrorFeedback`] residual across rounds.
 pub(crate) fn spawn_worker(
     id: usize,
     mut model: Box<dyn GradModel>,
     mut dataset: Box<dyn Dataset>,
     optim: OptimParams,
+    compression: CompressionSpec,
     out: Sender<FromWorker>,
 ) -> (Sender<ToWorker>, JoinHandle<()>) {
     let (cmd_tx, cmd_rx) = channel::<ToWorker>();
@@ -33,14 +38,20 @@ pub(crate) fn spawn_worker(
             if out.send(FromWorker::Hello { worker: id, dim, micro_batch }).is_err() {
                 return; // coordinator already gone
             }
+            let compressor = compression.build();
+            let mut ef = compression.error_feedback.then(|| ErrorFeedback::new(dim));
             let mut params = vec![0.0f32; dim];
+            // The consensus this worker last applied — the payload reference
+            // shared with the coordinator.
+            let mut reference = vec![0.0f32; dim];
             let mut grad = vec![0.0f32; dim];
             let mut opt = optim.build(dim);
             for cmd in cmd_rx {
                 match cmd {
-                    ToWorker::SetParams { params: p } => {
-                        assert_eq!(p.len(), dim, "worker {id}: bad params length");
-                        params = p;
+                    ToWorker::SetParams { payload } => {
+                        assert_eq!(payload.dim(), dim, "worker {id}: bad payload dim");
+                        payload.decode_into(&reference, &mut params);
+                        reference.copy_from_slice(&params);
                     }
                     ToWorker::RunRound { round, h, b_eff, lrs } => {
                         assert_eq!(lrs.len(), h as usize, "worker {id}: lrs/h mismatch");
@@ -54,10 +65,11 @@ pub(crate) fn spawn_worker(
                             loss = stats.loss;
                             per_sample_var = stats.per_sample_var;
                         }
+                        let payload = compressor.encode(&params, &reference, ef.as_mut());
                         let done = FromWorker::RoundDone(RoundResult {
                             worker: id,
                             round,
-                            params: params.clone(),
+                            payload,
                             grad: grad.clone(),
                             loss,
                             per_sample_var,

@@ -226,6 +226,49 @@ mod tests {
         });
     }
 
+    /// The compressed sync path with the identity compressor — encode each
+    /// buffer as a dense payload, decode, reduce through `mean_reduce_into`,
+    /// re-encode/decode the downlink — must reproduce `allreduce_mean_serial`
+    /// bit for bit. This is the structural guarantee behind "identity
+    /// compression == the legacy uncompressed sync".
+    #[test]
+    fn identity_payload_sync_matches_serial_bitwise() {
+        use crate::comm::{Compressor, Identity};
+        prop::check(20, |rng| {
+            let m = 1 + rng.below(6) as usize;
+            let d = 1 + rng.below(120) as usize;
+            let base: Vec<Vec<f32>> = (0..m).map(|_| gen_vec_n(rng, d, 4.0)).collect();
+            let reference = gen_vec_n(rng, d, 4.0);
+
+            let mut serial = base.clone();
+            {
+                let mut bufs: Vec<&mut [f32]> =
+                    serial.iter_mut().map(|b| b.as_mut_slice()).collect();
+                allreduce_mean_serial(&mut bufs);
+            }
+
+            let payloads: Vec<_> =
+                base.iter().map(|b| Identity.encode(b, &reference, None)).collect();
+            let decoded: Vec<Vec<f32>> = payloads.iter().map(|p| p.decode(&reference)).collect();
+            let mut consensus = decoded[0].clone();
+            let rest: Vec<&[f32]> = decoded[1..].iter().map(|v| v.as_slice()).collect();
+            mean_reduce_into(&mut consensus, &rest);
+            let down = Identity.encode(&consensus, &reference, None);
+            let mut adopted = vec![0.0f32; d];
+            down.decode_into(&reference, &mut adopted);
+
+            for j in 0..d {
+                if adopted[j].to_bits() != serial[0][j].to_bits() {
+                    return Err(format!(
+                        "m={m} d={d} elem {j}: payload path {} vs serial {} not bit-equal",
+                        adopted[j], serial[0][j]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn serial_single_worker_noop() {
         let mut b = vec![1.0f32, 2.0];

@@ -10,35 +10,120 @@
 pub mod allreduce;
 pub mod topology;
 
-pub use allreduce::{allreduce_mean_serial, allreduce_mean_threaded, mean_reduce_into, RingAllReduce};
+pub use allreduce::{
+    allreduce_mean_serial, allreduce_mean_threaded, mean_reduce_into, RingAllReduce,
+};
 pub use topology::Topology;
 
 /// Byte / round counters, the communication-efficiency bookkeeping behind the
 /// paper's headline claim (fewer syncs + larger batches => less communication).
+///
+/// Two byte columns are tracked:
+///
+/// - [`CommCounters::bytes_moved`] — **logical** bytes: what a dense-f32 ring
+///   all-reduce of the same tensors would move. This is the denominator the
+///   paper's tables report and is independent of any compression.
+/// - [`CommCounters::wire_bytes`] — bytes actually on the wire, including the
+///   compressed payloads' side channels (scales, indices, sign bitmaps). For
+///   an uncompressed (identity) sync the two columns are equal; their
+///   quotient is the run's compression ratio
+///   ([`CommCounters::compression_ratio`]).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CommCounters {
     /// All-reduce invocations (model averaging + norm-test gradient reduces).
     pub allreduce_calls: u64,
-    /// Total bytes moved by this worker set under a ring all-reduce:
+    /// Total logical bytes moved by this worker set under a ring all-reduce:
     /// 2·(M−1)/M · payload_bytes · M  (all workers combined).
     pub bytes_moved: u64,
+    /// Total bytes actually transmitted (compressed payloads + side channels),
+    /// under the same (M−1)/M link-utilization model as the logical column.
+    pub wire_bytes: u64,
     /// Communication rounds (sync points).
     pub rounds: u64,
 }
 
 impl CommCounters {
-    /// Charge one all-reduce of `elems` f32 over `m` workers (ring algorithm).
+    /// Logical bytes of one dense ring all-reduce of `elems` f32 over `m`
+    /// workers: 2·(M−1)·4·elems (all workers combined); a single worker moves
+    /// nothing.
+    pub fn ring_bytes(elems: usize, m: usize) -> u64 {
+        if m > 1 {
+            2 * (m as u64 - 1) * (elems * std::mem::size_of::<f32>()) as u64
+        } else {
+            0
+        }
+    }
+
+    /// Wire bytes of one compressed sync over `m` workers: `uplink_total` is
+    /// the sum of the workers' payload bytes, `downlink` the broadcast payload
+    /// each worker receives. Charged under the same (M−1)/M link model as
+    /// [`CommCounters::ring_bytes`]:
+    ///
+    /// ```text
+    /// (M−1)/M · (Σ_w uplink_w + M · downlink)
+    /// ```
+    ///
+    /// so a dense payload (uplink_w = downlink = 4·d) reproduces the logical
+    /// ring formula exactly and the ratio of the two columns reduces to
+    /// `compressed payload bytes / dense payload bytes`, independent of M.
+    /// The division is exact whenever M divides the uplink total (equal
+    /// per-worker payloads, the common case).
+    pub fn compressed_wire_bytes(m: usize, uplink_total: u64, downlink: u64) -> u64 {
+        if m > 1 {
+            (m as u64 - 1) * (uplink_total + m as u64 * downlink) / m as u64
+        } else {
+            0
+        }
+    }
+
+    /// Charge one dense all-reduce of `elems` f32 over `m` workers (ring
+    /// algorithm); wire bytes equal logical bytes.
     pub fn charge_allreduce(&mut self, elems: usize, m: usize) {
         self.allreduce_calls += 1;
-        let payload = (elems * std::mem::size_of::<f32>()) as u64;
-        if m > 1 {
-            self.bytes_moved += 2 * (m as u64 - 1) * payload;
+        let bytes = Self::ring_bytes(elems, m);
+        self.bytes_moved += bytes;
+        self.wire_bytes += bytes;
+    }
+
+    /// Charge one compressed sync of `elems` f32 over `m` workers: logical
+    /// bytes as if dense, wire bytes from the actual payload sizes (see
+    /// [`CommCounters::compressed_wire_bytes`]).
+    pub fn charge_compressed_allreduce(
+        &mut self,
+        elems: usize,
+        m: usize,
+        uplink_total: u64,
+        downlink: u64,
+    ) {
+        self.allreduce_calls += 1;
+        self.bytes_moved += Self::ring_bytes(elems, m);
+        self.wire_bytes += Self::compressed_wire_bytes(m, uplink_total, downlink);
+    }
+
+    /// logical / wire — how many times smaller the wire traffic is than the
+    /// dense equivalent (1.0 for uncompressed runs; 1.0 when nothing moved).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.wire_bytes == 0 {
+            1.0
+        } else {
+            self.bytes_moved as f64 / self.wire_bytes as f64
+        }
+    }
+
+    /// wire / logical — the fraction of dense bytes actually transmitted
+    /// (the acceptance metric "wire-byte ratio"; 1.0 when nothing moved).
+    pub fn wire_fraction(&self) -> f64 {
+        if self.bytes_moved == 0 {
+            1.0
+        } else {
+            self.wire_bytes as f64 / self.bytes_moved as f64
         }
     }
 
     pub fn merge(&mut self, other: &CommCounters) {
         self.allreduce_calls += other.allreduce_calls;
         self.bytes_moved += other.bytes_moved;
+        self.wire_bytes += other.wire_bytes;
         self.rounds += other.rounds;
     }
 }
@@ -53,17 +138,23 @@ mod tests {
         c.charge_allreduce(1000, 4);
         // 2*(4-1)*4000 = 24000 bytes
         assert_eq!(c.bytes_moved, 24_000);
+        assert_eq!(c.wire_bytes, 24_000, "dense wire bytes equal logical bytes");
         assert_eq!(c.allreduce_calls, 1);
         c.charge_allreduce(1000, 1); // single worker moves nothing
         assert_eq!(c.bytes_moved, 24_000);
+        assert_eq!(c.compression_ratio(), 1.0);
+        assert_eq!(c.wire_fraction(), 1.0);
     }
 
     #[test]
     fn merge_adds() {
-        let mut a = CommCounters { allreduce_calls: 1, bytes_moved: 10, rounds: 2 };
-        let b = CommCounters { allreduce_calls: 2, bytes_moved: 5, rounds: 1 };
+        let mut a = CommCounters { allreduce_calls: 1, bytes_moved: 10, wire_bytes: 8, rounds: 2 };
+        let b = CommCounters { allreduce_calls: 2, bytes_moved: 5, wire_bytes: 3, rounds: 1 };
         a.merge(&b);
-        assert_eq!(a, CommCounters { allreduce_calls: 3, bytes_moved: 15, rounds: 3 });
+        assert_eq!(
+            a,
+            CommCounters { allreduce_calls: 3, bytes_moved: 15, wire_bytes: 11, rounds: 3 }
+        );
     }
 
     #[test]
@@ -96,9 +187,9 @@ mod tests {
     #[test]
     fn merge_is_associative_and_commutative() {
         let xs = [
-            CommCounters { allreduce_calls: 1, bytes_moved: 10, rounds: 2 },
-            CommCounters { allreduce_calls: 5, bytes_moved: 7, rounds: 0 },
-            CommCounters { allreduce_calls: 0, bytes_moved: 123, rounds: 9 },
+            CommCounters { allreduce_calls: 1, bytes_moved: 10, wire_bytes: 4, rounds: 2 },
+            CommCounters { allreduce_calls: 5, bytes_moved: 7, wire_bytes: 7, rounds: 0 },
+            CommCounters { allreduce_calls: 0, bytes_moved: 123, wire_bytes: 60, rounds: 9 },
         ];
         // (a ⊕ b) ⊕ c
         let mut left = xs[0];
@@ -119,5 +210,100 @@ mod tests {
         let mut with_id = left;
         with_id.merge(&CommCounters::default());
         assert_eq!(with_id, left);
+    }
+
+    #[test]
+    fn merge_associativity_holds_for_charged_compressed_counters() {
+        // Same property, but on counters produced by the real charge paths
+        // (mixed dense + compressed) rather than hand-picked literals.
+        let mut a = CommCounters::default();
+        a.charge_allreduce(1000, 4);
+        let mut b = CommCounters::default();
+        b.charge_compressed_allreduce(1000, 4, 4 * 1040, 1040);
+        let mut c = CommCounters::default();
+        c.charge_compressed_allreduce(1000, 4, 4 * 132, 132);
+        c.rounds += 1;
+
+        let mut left = a;
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b;
+        bc.merge(&c);
+        let mut right = a;
+        right.merge(&bc);
+        assert_eq!(left, right);
+    }
+
+    /// Satellite check: wire bytes and the logical/wire ratio are EXACT for
+    /// each compressor on a known tensor (d = 1024, m = 4, delta against a
+    /// zero reference), assuming the coordinator re-compresses the broadcast
+    /// with the same method (equal uplink and downlink payload sizes).
+    #[test]
+    fn compressed_accounting_exact_per_compressor() {
+        use crate::comm::{Compressor, Identity, QuantizeInt8, SignSgd, TopK};
+        let d = 1024usize;
+        let m = 4usize;
+        let reference = vec![0.0f32; d];
+        let params: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin()).collect();
+        let logical = CommCounters::ring_bytes(d, m); // 2·3·4096 = 24576
+        assert_eq!(logical, 24_576);
+
+        // (compressor, expected per-endpoint wire bytes)
+        let cases: Vec<(Box<dyn Compressor>, u64)> = vec![
+            (Box::new(Identity), 4 * d as u64),                         // 4096
+            (Box::new(QuantizeInt8::new(256)), d as u64 + 4 * 4),       // 1040
+            (Box::new(SignSgd), d as u64 / 8 + 4),                      // 132
+            (Box::new(TopK::new(0.125)), 8 * (d as u64 / 8)),           // 1024
+        ];
+        for (comp, per_endpoint) in cases {
+            let payload = comp.encode(&params, &reference, None);
+            assert_eq!(payload.wire_bytes(), per_endpoint, "{}", comp.name());
+            let mut c = CommCounters::default();
+            c.charge_compressed_allreduce(
+                d,
+                m,
+                m as u64 * payload.wire_bytes(),
+                payload.wire_bytes(),
+            );
+            assert_eq!(c.bytes_moved, logical, "{}", comp.name());
+            // (m−1)·(m·u + m·u)/m = 2·(m−1)·u — exact, no truncation.
+            assert_eq!(c.wire_bytes, 2 * (m as u64 - 1) * per_endpoint, "{}", comp.name());
+            let want_ratio = logical as f64 / c.wire_bytes as f64;
+            assert_eq!(c.compression_ratio(), want_ratio, "{}", comp.name());
+            assert_eq!(c.wire_fraction(), 1.0 / want_ratio, "{}", comp.name());
+            // ratio reduces to dense-payload / compressed-payload, independent of M
+            assert_eq!(want_ratio, 4.0 * d as f64 / per_endpoint as f64, "{}", comp.name());
+        }
+    }
+
+    #[test]
+    fn dense_compressed_charge_equals_plain_charge() {
+        // Identity payloads through the compressed charge path must reproduce
+        // the legacy dense accounting bit for bit (part of the identity ==
+        // uncompressed contract).
+        for m in 1..8usize {
+            for elems in [1usize, 17, 1000, 1 << 16] {
+                let mut plain = CommCounters::default();
+                plain.charge_allreduce(elems, m);
+                let dense_payload = 4 * elems as u64;
+                let mut comp = CommCounters::default();
+                comp.charge_compressed_allreduce(
+                    elems,
+                    m,
+                    m as u64 * dense_payload,
+                    dense_payload,
+                );
+                assert_eq!(plain, comp, "m={m} elems={elems}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_compressed_moves_nothing() {
+        let mut c = CommCounters::default();
+        c.charge_compressed_allreduce(1000, 1, 4000, 4000);
+        assert_eq!(c.bytes_moved, 0);
+        assert_eq!(c.wire_bytes, 0);
+        assert_eq!(c.compression_ratio(), 1.0);
     }
 }

@@ -72,6 +72,23 @@ impl Topology {
         let bytes = (elems * 4) as f64;
         2.0 * (m - 1.0) * self.latency_s + 2.0 * (m - 1.0) / m * bytes / self.bandwidth_bps
     }
+
+    /// [`Topology::allreduce_time`] with the bandwidth term scaled by
+    /// `wire_frac` (the compressed-sync wire bytes over the dense logical
+    /// bytes). Latency is per ring step and does not shrink with payload
+    /// size. `wire_frac = 1.0` returns [`Topology::allreduce_time`] bit for
+    /// bit — the identity-compression sim-time contract.
+    pub fn allreduce_time_scaled(&self, elems: usize, wire_frac: f64) -> f64 {
+        if wire_frac == 1.0 {
+            return self.allreduce_time(elems);
+        }
+        let m = self.m_workers as f64;
+        if self.m_workers <= 1 {
+            return 0.0;
+        }
+        let bytes = (elems * 4) as f64 * wire_frac;
+        2.0 * (m - 1.0) * self.latency_s + 2.0 * (m - 1.0) / m * bytes / self.bandwidth_bps
+    }
 }
 
 #[cfg(test)]

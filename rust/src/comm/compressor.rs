@@ -1,0 +1,546 @@
+//! The [`Compressor`] trait, the [`Payload`] wire format, and the four
+//! built-in methods: [`Identity`], [`QuantizeInt8`], [`SignSgd`], [`TopK`].
+//!
+//! All methods are deterministic pure functions of their inputs (ties in the
+//! top-k selection break on the lower index), which is what lets the
+//! sequential and cluster engines agree bit-for-bit on compressed runs: the
+//! same parameters against the same reference always produce the same payload
+//! and the same decode.
+
+use super::error_feedback::ErrorFeedback;
+
+/// One endpoint's sync message. Lossy variants carry a compressed **delta**
+/// against the shared reference; [`Payload::Dense`] carries absolute
+/// parameters (identity method, and the admission payload for workers joining
+/// mid-run, who hold no reference yet).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Full f32 parameters, bit for bit.
+    Dense { values: Vec<f32> },
+    /// Per-chunk int8 quantized delta: `q[i] * scales[i / chunk]`.
+    QuantI8 { dim: usize, chunk: usize, q: Vec<i8>, scales: Vec<f32> },
+    /// 1-bit sign of the delta (bit set = non-negative) at a single L1-mean
+    /// magnitude.
+    Sign { dim: usize, scale: f32, bits: Vec<u64> },
+    /// Sparse top-k delta as (index, value) pairs, indices ascending.
+    Sparse { dim: usize, idx: Vec<u32>, val: Vec<f32> },
+}
+
+impl Payload {
+    pub fn dim(&self) -> usize {
+        match self {
+            Payload::Dense { values } => values.len(),
+            Payload::QuantI8 { dim, .. }
+            | Payload::Sign { dim, .. }
+            | Payload::Sparse { dim, .. } => *dim,
+        }
+    }
+
+    /// Bytes this payload occupies on the wire: values plus every side channel
+    /// (scales, indices, sign bitmap). The honest numerator of the
+    /// compression-ratio metric.
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Payload::Dense { values } => 4 * values.len() as u64,
+            Payload::QuantI8 { q, scales, .. } => q.len() as u64 + 4 * scales.len() as u64,
+            Payload::Sign { dim, .. } => (*dim as u64).div_ceil(8) + 4,
+            Payload::Sparse { idx, .. } => 8 * idx.len() as u64,
+        }
+    }
+
+    /// Bytes the equivalent dense f32 message would occupy.
+    pub fn logical_bytes(&self) -> u64 {
+        4 * self.dim() as u64
+    }
+
+    /// Borrow the dense values without copying (identity payloads). The
+    /// engines use this to keep the dense sync path allocation-free.
+    pub fn as_dense(&self) -> Option<&[f32]> {
+        match self {
+            Payload::Dense { values } => Some(values),
+            _ => None,
+        }
+    }
+
+    /// Write the delta this payload encodes into `out` (zero-filled first).
+    /// Panics for [`Payload::Dense`], which encodes absolute values, not a
+    /// delta — dense payloads decode via [`Payload::decode_into`] alone.
+    fn delta_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim(), "payload/buffer dim mismatch");
+        match self {
+            Payload::Dense { .. } => unreachable!("dense payloads carry no delta"),
+            Payload::QuantI8 { chunk, q, scales, .. } => {
+                for (i, (&qi, oi)) in q.iter().zip(out.iter_mut()).enumerate() {
+                    *oi = qi as f32 * scales[i / chunk];
+                }
+            }
+            Payload::Sign { dim, scale, bits } => {
+                for (i, oi) in out.iter_mut().enumerate().take(*dim) {
+                    let set = (bits[i / 64] >> (i % 64)) & 1 == 1;
+                    *oi = if set { *scale } else { -scale };
+                }
+            }
+            Payload::Sparse { idx, val, .. } => {
+                for oi in out.iter_mut() {
+                    *oi = 0.0;
+                }
+                for (&i, &v) in idx.iter().zip(val) {
+                    out[i as usize] = v;
+                }
+            }
+        }
+    }
+
+    /// Reconstruct the parameters this payload represents, given the reference
+    /// both endpoints share. `Dense` ignores the reference (and is therefore
+    /// an exact, bit-for-bit transport).
+    pub fn decode_into(&self, reference: &[f32], out: &mut [f32]) {
+        match self {
+            Payload::Dense { values } => {
+                assert_eq!(values.len(), out.len(), "payload/buffer dim mismatch");
+                out.copy_from_slice(values);
+            }
+            _ => {
+                assert_eq!(reference.len(), out.len(), "reference/buffer dim mismatch");
+                self.delta_into(out);
+                for (oi, &ri) in out.iter_mut().zip(reference) {
+                    *oi += ri;
+                }
+            }
+        }
+    }
+
+    pub fn decode(&self, reference: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim()];
+        self.decode_into(reference, &mut out);
+        out
+    }
+}
+
+/// A sync-boundary compressor. Implementations are stateless; all cross-round
+/// memory lives in the caller-owned [`ErrorFeedback`].
+pub trait Compressor: Send + Sync {
+    /// Encode `params` for transmission given the `reference` both endpoints
+    /// hold. When `carry` is provided (lossy methods with error feedback on),
+    /// its residual is folded into the delta before compressing and replaced
+    /// with this round's leftover afterwards.
+    fn encode(
+        &self,
+        params: &[f32],
+        reference: &[f32],
+        carry: Option<&mut ErrorFeedback>,
+    ) -> Payload;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Delta + carried residual: the target a lossy method actually compresses.
+fn lossy_target(
+    params: &[f32],
+    reference: &[f32],
+    carry: &Option<&mut ErrorFeedback>,
+) -> Vec<f32> {
+    assert_eq!(params.len(), reference.len(), "params/reference dim mismatch");
+    let mut t: Vec<f32> = params.iter().zip(reference).map(|(p, r)| p - r).collect();
+    if let Some(ef) = carry {
+        ef.fold_into(&mut t);
+    }
+    t
+}
+
+/// Dense pass-through: payloads carry the parameters themselves, exactly.
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn encode(
+        &self,
+        params: &[f32],
+        _reference: &[f32],
+        _carry: Option<&mut ErrorFeedback>,
+    ) -> Payload {
+        // Residual is identically zero; any carried state is left untouched.
+        Payload::Dense { values: params.to_vec() }
+    }
+
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+}
+
+/// Per-chunk symmetric int8 quantization: each `chunk`-sized block stores
+/// `scale = max|t| / 127` and `q_i = round(t_i / scale)` clamped to ±127.
+pub struct QuantizeInt8 {
+    pub chunk: usize,
+}
+
+impl QuantizeInt8 {
+    pub fn new(chunk: usize) -> Self {
+        assert!(chunk >= 1, "quantization chunk must be >= 1");
+        QuantizeInt8 { chunk }
+    }
+}
+
+impl Compressor for QuantizeInt8 {
+    fn encode(
+        &self,
+        params: &[f32],
+        reference: &[f32],
+        mut carry: Option<&mut ErrorFeedback>,
+    ) -> Payload {
+        let t = lossy_target(params, reference, &carry);
+        let d = t.len();
+        let mut q = vec![0i8; d];
+        let mut scales = Vec::with_capacity(d.div_ceil(self.chunk));
+        let mut residual = vec![0.0f32; d];
+        for (c, block) in t.chunks(self.chunk).enumerate() {
+            let lo = c * self.chunk;
+            let amax = block.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let scale = if amax > 0.0 { amax / 127.0 } else { 0.0 };
+            scales.push(scale);
+            for (i, &v) in block.iter().enumerate() {
+                let qi = if scale > 0.0 {
+                    (v / scale).round().clamp(-127.0, 127.0) as i8
+                } else {
+                    0
+                };
+                q[lo + i] = qi;
+                residual[lo + i] = v - qi as f32 * scale;
+            }
+        }
+        if let Some(ef) = carry.take() {
+            ef.store(residual);
+        }
+        Payload::QuantI8 { dim: d, chunk: self.chunk, q, scales }
+    }
+
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+}
+
+/// 1-bit compression: the sign of each delta entry plus one L1-mean magnitude
+/// (Bernstein et al., "signSGD"; the rescale keeps the update unbiased in
+/// magnitude).
+pub struct SignSgd;
+
+impl Compressor for SignSgd {
+    fn encode(
+        &self,
+        params: &[f32],
+        reference: &[f32],
+        mut carry: Option<&mut ErrorFeedback>,
+    ) -> Payload {
+        let t = lossy_target(params, reference, &carry);
+        let d = t.len();
+        let l1: f64 = t.iter().map(|v| v.abs() as f64).sum();
+        let scale = if d > 0 { (l1 / d as f64) as f32 } else { 0.0 };
+        let mut bits = vec![0u64; d.div_ceil(64)];
+        let mut residual = vec![0.0f32; d];
+        for (i, &v) in t.iter().enumerate() {
+            let non_negative = v >= 0.0;
+            if non_negative {
+                bits[i / 64] |= 1u64 << (i % 64);
+            }
+            let dec = if non_negative { scale } else { -scale };
+            residual[i] = v - dec;
+        }
+        if let Some(ef) = carry.take() {
+            ef.store(residual);
+        }
+        Payload::Sign { dim: d, scale, bits }
+    }
+
+    fn name(&self) -> &'static str {
+        "signsgd"
+    }
+}
+
+/// Magnitude top-k sparsification: transmit the `ceil(k_frac * d)` largest
+/// |delta| entries exactly, drop the rest (into the residual when error
+/// feedback is on). Ties break on the lower index, so the selected set is a
+/// deterministic function of the delta.
+pub struct TopK {
+    pub k_frac: f64,
+}
+
+impl TopK {
+    pub fn new(k_frac: f64) -> Self {
+        assert!(k_frac > 0.0 && k_frac <= 1.0, "k_frac must be in (0, 1]");
+        TopK { k_frac }
+    }
+
+    /// Number of entries kept for a `d`-dimensional delta (at least 1).
+    pub fn k_for(&self, d: usize) -> usize {
+        ((d as f64 * self.k_frac).ceil() as usize).clamp(1, d.max(1))
+    }
+}
+
+impl Compressor for TopK {
+    fn encode(
+        &self,
+        params: &[f32],
+        reference: &[f32],
+        mut carry: Option<&mut ErrorFeedback>,
+    ) -> Payload {
+        let t = lossy_target(params, reference, &carry);
+        let d = t.len();
+        let k = self.k_for(d);
+        let mut order: Vec<u32> = (0..d as u32).collect();
+        // Strict total order: |t| descending, index ascending on ties — the
+        // selected set is unique, so both engines pick the same entries.
+        if k < d {
+            order.select_nth_unstable_by(k - 1, |&a, &b| {
+                t[b as usize]
+                    .abs()
+                    .total_cmp(&t[a as usize].abs())
+                    .then(a.cmp(&b))
+            });
+        }
+        let mut idx: Vec<u32> = order[..k].to_vec();
+        idx.sort_unstable();
+        let val: Vec<f32> = idx.iter().map(|&i| t[i as usize]).collect();
+        if let Some(ef) = carry.take() {
+            // Kept entries are transmitted exactly; their residual is zero.
+            let mut residual = t;
+            for &i in &idx {
+                residual[i as usize] = 0.0;
+            }
+            ef.store(residual);
+        }
+        Payload::Sparse { dim: d, idx, val }
+    }
+
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, gen_vec_n};
+    use crate::util::rng::Pcg64;
+
+    fn rand_pair(rng: &mut Pcg64, d: usize) -> (Vec<f32>, Vec<f32>) {
+        (gen_vec_n(rng, d, 2.0), gen_vec_n(rng, d, 2.0))
+    }
+
+    #[test]
+    fn identity_roundtrip_is_bit_for_bit() {
+        prop::check(30, |rng| {
+            let d = 1 + rng.below(300) as usize;
+            let (params, reference) = rand_pair(rng, d);
+            let p = Identity.encode(&params, &reference, None);
+            assert_eq!(p.wire_bytes(), 4 * d as u64);
+            assert_eq!(p.wire_bytes(), p.logical_bytes());
+            let back = p.decode(&reference);
+            for (a, b) in params.iter().zip(&back) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("identity not exact: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int8_error_bounded_by_half_step() {
+        prop::check(30, |rng| {
+            let d = 1 + rng.below(500) as usize;
+            let (params, reference) = rand_pair(rng, d);
+            let comp = QuantizeInt8::new(64);
+            let p = comp.encode(&params, &reference, None);
+            let back = p.decode(&reference);
+            let t: Vec<f32> = params.iter().zip(&reference).map(|(a, b)| a - b).collect();
+            for (c, block) in t.chunks(64).enumerate() {
+                let amax = block.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                let step = amax / 127.0;
+                for (i, &v) in block.iter().enumerate() {
+                    let dec = back[c * 64 + i] - reference[c * 64 + i];
+                    let err = (v - dec).abs();
+                    if err > step * 0.5 + 1e-6 {
+                        return Err(format!("chunk {c} elem {i}: err {err} > step/2 {step}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int8_wire_bytes_and_shape() {
+        let params = vec![1.0f32; 1000];
+        let reference = vec![0.0f32; 1000];
+        let p = QuantizeInt8::new(256).encode(&params, &reference, None);
+        // 1000 i8 values + 4 chunk scales
+        assert_eq!(p.wire_bytes(), 1000 + 4 * 4);
+        assert_eq!(p.logical_bytes(), 4000);
+        match &p {
+            Payload::QuantI8 { q, scales, .. } => {
+                assert_eq!(q.len(), 1000);
+                assert_eq!(scales.len(), 4);
+                assert!(q.iter().all(|&x| x == 127), "constant delta quantizes to full scale");
+            }
+            _ => panic!("wrong payload variant"),
+        }
+    }
+
+    #[test]
+    fn sign_decodes_to_scaled_signs() {
+        let reference = vec![0.0f32; 6];
+        let params = vec![2.0f32, -1.0, 0.5, -0.5, 3.0, -3.0];
+        let p = SignSgd.encode(&params, &reference, None);
+        let l1_mean = (2.0 + 1.0 + 0.5 + 0.5 + 3.0 + 3.0) / 6.0;
+        let back = p.decode(&reference);
+        for (v, b) in params.iter().zip(&back) {
+            assert!((b.abs() - l1_mean as f32).abs() < 1e-6);
+            assert_eq!(v.is_sign_negative(), *b < 0.0, "sign flipped");
+        }
+        // 1 bit per element + one f32 scale
+        assert_eq!(p.wire_bytes(), 1 + 4);
+    }
+
+    #[test]
+    fn sign_zero_delta_is_zero() {
+        let x = vec![1.5f32; 100];
+        let p = SignSgd.encode(&x, &x, None);
+        let back = p.decode(&x);
+        assert_eq!(back, x, "zero delta must decode to the reference exactly");
+    }
+
+    #[test]
+    fn topk_keeps_exactly_the_largest() {
+        let reference = vec![0.0f32; 8];
+        let params = vec![0.1f32, -5.0, 0.2, 4.0, -0.3, 0.0, 3.0, -0.05];
+        let p = TopK::new(0.375).encode(&params, &reference, None); // k = 3
+        match &p {
+            Payload::Sparse { idx, val, .. } => {
+                assert_eq!(idx, &vec![1u32, 3, 6]);
+                assert_eq!(val, &vec![-5.0f32, 4.0, 3.0]);
+            }
+            _ => panic!("wrong payload variant"),
+        }
+        assert_eq!(p.wire_bytes(), 3 * 8);
+        let back = p.decode(&reference);
+        assert_eq!(back, vec![0.0, -5.0, 0.0, 4.0, 0.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_tie_break_is_deterministic() {
+        let reference = vec![0.0f32; 4];
+        let params = vec![1.0f32, 1.0, 1.0, 1.0];
+        let p = TopK::new(0.5).encode(&params, &reference, None);
+        match &p {
+            Payload::Sparse { idx, .. } => assert_eq!(idx, &vec![0u32, 1]),
+            _ => panic!("wrong payload variant"),
+        }
+    }
+
+    #[test]
+    fn topk_k_for_rounds_up_and_clamps() {
+        let t = TopK::new(0.125);
+        assert_eq!(t.k_for(1024), 128);
+        assert_eq!(t.k_for(10), 2); // ceil(1.25)
+        assert_eq!(t.k_for(1), 1);
+        assert_eq!(TopK::new(1.0).k_for(7), 7);
+    }
+
+    #[test]
+    fn error_feedback_stores_exact_residual() {
+        prop::check(20, |rng| {
+            let d = 1 + rng.below(200) as usize;
+            let (params, reference) = rand_pair(rng, d);
+            for comp in [
+                Box::new(QuantizeInt8::new(32)) as Box<dyn Compressor>,
+                Box::new(SignSgd),
+                Box::new(TopK::new(0.2)),
+            ] {
+                let mut ef = ErrorFeedback::new(d);
+                let p = comp.encode(&params, &reference, Some(&mut ef));
+                let back = p.decode(&reference);
+                for j in 0..d {
+                    let t = params[j] - reference[j];
+                    let dec = back[j] - reference[j];
+                    let want = t - dec;
+                    if (ef.residual[j] - want).abs() > 1e-5 {
+                        return Err(format!(
+                            "{}: residual[{j}] = {} want {want}",
+                            comp.name(),
+                            ef.residual[j]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn error_feedback_integrates_the_lost_signal() {
+        // Repeatedly "transmit" a constant target through aggressive top-k.
+        // With error feedback the cumulative decoded signal must approach
+        // rounds * target; without it, only the top coordinate ever moves.
+        let d = 16;
+        let target: Vec<f32> = (0..d).map(|i| 1.0 + i as f32 * 0.1).collect();
+        let reference = vec![0.0f32; d];
+        let comp = TopK::new(1.0 / d as f64);
+        let rounds = 256;
+
+        let mut with_ef = vec![0.0f32; d];
+        let mut ef = ErrorFeedback::new(d);
+        for _ in 0..rounds {
+            let p = comp.encode(&target, &reference, Some(&mut ef));
+            let dec = p.decode(&reference);
+            crate::tensor::axpy(1.0, &dec, &mut with_ef);
+        }
+        let mut without_ef = vec![0.0f32; d];
+        for _ in 0..rounds {
+            let p = comp.encode(&target, &reference, None);
+            let dec = p.decode(&reference);
+            crate::tensor::axpy(1.0, &dec, &mut without_ef);
+        }
+
+        // Conservation: cumulative decoded = rounds·target − residual, so the
+        // EF error equals the current residual, whose steady state is bounded
+        // by the per-round L1 mass (~28 here) regardless of round count.
+        let want: Vec<f32> = target.iter().map(|v| v * rounds as f32).collect();
+        let err_ef = crate::util::prop::max_abs_diff(&with_ef, &want);
+        let err_naive = crate::util::prop::max_abs_diff(&without_ef, &want);
+        let l1_mass: f32 = target.iter().map(|v| v.abs()).sum();
+        assert!(
+            err_ef <= l1_mass * 1.5,
+            "error feedback residual unbounded: max err {err_ef} vs mass {l1_mass}"
+        );
+        assert!(
+            err_naive > err_ef * 4.0,
+            "naive compression unexpectedly close: {err_naive} vs {err_ef}"
+        );
+        // EF reaches every coordinate; naive top-1 only ever moves one.
+        assert!(with_ef.iter().all(|&v| v > 0.0), "EF left a coordinate untouched");
+        assert_eq!(without_ef.iter().filter(|&&v| v != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn payload_dims_consistent() {
+        let params = vec![0.5f32; 100];
+        let reference = vec![0.0f32; 100];
+        for comp in [
+            Box::new(Identity) as Box<dyn Compressor>,
+            Box::new(QuantizeInt8::new(256)),
+            Box::new(SignSgd),
+            Box::new(TopK::new(0.1)),
+        ] {
+            let p = comp.encode(&params, &reference, None);
+            assert_eq!(p.dim(), 100, "{}", comp.name());
+            assert_eq!(p.logical_bytes(), 400);
+            assert_eq!(p.decode(&reference).len(), 100);
+            if comp.name() != "identity" {
+                assert!(
+                    p.wire_bytes() < p.logical_bytes(),
+                    "{} did not shrink the payload",
+                    comp.name()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Per-endpoint error-feedback state for lossy compression.
+//!
+//! Compressing a delta discards `target − decode(payload)`; without memory
+//! that signal is gone for good because the endpoint overwrites its parameters
+//! with the broadcast consensus. The classic fix (Stich et al. 2018;
+//! Karimireddy et al. 2019) is to carry the residual and fold it into the next
+//! round's delta before compressing — the compressed stream then integrates to
+//! the true update and convergence matches the uncompressed method up to a
+//! delay term. Each uplink (one per worker) and the coordinator's downlink
+//! keep their own [`ErrorFeedback`].
+
+/// The accumulated compression residual of one endpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorFeedback {
+    /// `e_t = target_t − decode(compress(target_t))`, where `target_t`
+    /// already includes `e_{t−1}`.
+    pub residual: Vec<f32>,
+}
+
+impl ErrorFeedback {
+    pub fn new(dim: usize) -> Self {
+        ErrorFeedback { residual: vec![0.0; dim] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.residual.len()
+    }
+
+    /// Fold the carried residual into this round's delta: `t += e`.
+    pub fn fold_into(&self, target: &mut [f32]) {
+        crate::tensor::axpy(1.0, &self.residual, target);
+    }
+
+    /// Replace the carried residual with this round's leftover.
+    pub fn store(&mut self, residual: Vec<f32>) {
+        assert_eq!(residual.len(), self.residual.len(), "error feedback dim changed");
+        self.residual = residual;
+    }
+
+    /// L2 norm of the carried residual (observability / tests).
+    pub fn norm(&self) -> f64 {
+        crate::tensor::norm(&self.residual)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_zero_and_folds() {
+        let mut ef = ErrorFeedback::new(4);
+        assert_eq!(ef.norm(), 0.0);
+        let mut t = vec![1.0f32, -2.0, 3.0, 0.0];
+        ef.fold_into(&mut t);
+        assert_eq!(t, vec![1.0, -2.0, 3.0, 0.0]);
+        ef.store(vec![0.5, 0.0, -0.5, 1.0]);
+        ef.fold_into(&mut t);
+        assert_eq!(t, vec![1.5, -2.0, 2.5, 1.0]);
+        assert!(ef.norm() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "error feedback dim changed")]
+    fn dim_mismatch_rejected() {
+        ErrorFeedback::new(4).store(vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,372 @@
+//! Compressed communication: quantized / sparsified sync payloads with
+//! error feedback.
+//!
+//! The paper's premise is that communication dominates distributed training
+//! and its adaptive batch sizes amortize *how often* workers synchronize; this
+//! subsystem attacks the orthogonal axis — *how many bytes* each sync moves —
+//! so the two can be studied together (the `adaloco sweep` harness crosses
+//! compression methods with sync intervals H).
+//!
+//! ## Protocol
+//!
+//! Every sync exchanges [`Payload`]s built by a [`Compressor`] against the
+//! *reference* parameters both ends already hold (the consensus of the
+//! previous round):
+//!
+//! 1. each worker encodes its post-round parameters relative to the reference
+//!    (uplink); lossy methods transmit a compressed **delta**, [`Identity`]
+//!    transmits the dense parameters — exactly the bytes the uncompressed
+//!    system sends, which is what makes the identity path bit-for-bit equal to
+//!    the legacy sync;
+//! 2. the coordinator decodes all contributions against the same reference and
+//!    averages them with [`crate::collective::mean_reduce_into`] (the shared
+//!    float-op sequence of both engines);
+//! 3. the averaged consensus is re-encoded relative to the reference and
+//!    broadcast (downlink), so the wire stays compressed in both directions;
+//!    workers and coordinator decode the same payload against the same
+//!    reference and therefore agree on the new consensus exactly.
+//!
+//! ## Error feedback
+//!
+//! Lossy compression discards part of each delta; naively that information is
+//! lost forever because workers overwrite their parameters with the broadcast
+//! consensus. [`ErrorFeedback`] keeps the discarded residual `e = target −
+//! decode(payload)` per endpoint and folds it into the next round's delta
+//! before compressing (Stich et al., "Sparsified SGD with Memory"; Karimireddy
+//! et al., "Error Feedback Fixes SignSGD"). The engine keeps one state per
+//! worker for the uplink and one on the coordinator for the downlink.
+//!
+//! ## Accounting
+//!
+//! [`Payload::wire_bytes`] counts the bytes actually on the wire (values plus
+//! scales/indices/bitmaps); [`crate::collective::CommCounters`] records them
+//! next to the logical (uncompressed ring) bytes so the compression ratio is a
+//! first-class run metric.
+
+pub mod compressor;
+pub mod error_feedback;
+
+pub use compressor::{Compressor, Identity, Payload, QuantizeInt8, SignSgd, TopK};
+pub use error_feedback::ErrorFeedback;
+
+use crate::util::json::Json;
+
+/// Which compression method a run uses (the declarative half of the
+/// subsystem; [`CompressionSpec::build`] turns it into a [`Compressor`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CompressMethod {
+    /// Dense pass-through: payloads carry the full f32 parameters, bit for
+    /// bit. The legacy uncompressed sync is this method.
+    Identity,
+    /// Per-chunk int8 quantization of the delta: each `chunk`-sized block
+    /// stores one f32 scale plus one i8 per element (~3.9x smaller).
+    QuantizeInt8 { chunk: usize },
+    /// 1-bit sign of the delta plus a single L1-mean rescale (~32x smaller).
+    SignSgd,
+    /// Top-`k_frac`·d entries of the delta by magnitude, sent as
+    /// (index, value) pairs.
+    TopK { k_frac: f64 },
+}
+
+impl CompressMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressMethod::Identity => "identity",
+            CompressMethod::QuantizeInt8 { .. } => "int8",
+            CompressMethod::SignSgd => "signsgd",
+            CompressMethod::TopK { .. } => "topk",
+        }
+    }
+}
+
+/// Full compression configuration of a run: method plus whether endpoints keep
+/// [`ErrorFeedback`] state. Serialized as the `compression` section of
+/// [`crate::config::ScenarioSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressionSpec {
+    pub method: CompressMethod,
+    /// Accumulate the compression residual per endpoint and fold it into the
+    /// next round's delta. Meaningless (and ignored) for `Identity`, whose
+    /// residual is identically zero.
+    pub error_feedback: bool,
+}
+
+impl Default for CompressionSpec {
+    fn default() -> Self {
+        CompressionSpec { method: CompressMethod::Identity, error_feedback: false }
+    }
+}
+
+impl CompressionSpec {
+    /// The uncompressed (identity, no error feedback) configuration.
+    pub fn identity() -> Self {
+        CompressionSpec::default()
+    }
+
+    /// True when payloads are dense f32 — the path that must stay bit-for-bit
+    /// equal to the legacy uncompressed sync.
+    pub fn is_dense(&self) -> bool {
+        matches!(self.method, CompressMethod::Identity)
+    }
+
+    pub fn build(&self) -> Box<dyn Compressor> {
+        match &self.method {
+            CompressMethod::Identity => Box::new(Identity),
+            CompressMethod::QuantizeInt8 { chunk } => Box::new(QuantizeInt8::new(*chunk)),
+            CompressMethod::SignSgd => Box::new(SignSgd),
+            CompressMethod::TopK { k_frac } => Box::new(TopK::new(*k_frac)),
+        }
+    }
+
+    /// Compact label for tables and file names, e.g. `topk0.125+ef`.
+    pub fn label(&self) -> String {
+        let base = match &self.method {
+            CompressMethod::Identity => "identity".to_string(),
+            CompressMethod::QuantizeInt8 { chunk } => format!("int8c{chunk}"),
+            CompressMethod::SignSgd => "signsgd".to_string(),
+            CompressMethod::TopK { k_frac } => format!("topk{k_frac}"),
+        };
+        if self.error_feedback && !self.is_dense() {
+            format!("{base}+ef")
+        } else {
+            base
+        }
+    }
+
+    /// Parse a CLI shorthand: `method[:param][+ef|-ef]`, where `param` is the
+    /// chunk size for `int8` and the top fraction for `topk`. Lossy methods
+    /// default to error feedback ON (the configuration that converges);
+    /// `identity` ignores the suffix.
+    ///
+    /// Examples: `identity`, `int8`, `int8:128`, `signsgd-ef`, `topk:0.05`.
+    pub fn parse(s: &str) -> Result<CompressionSpec, String> {
+        let s = s.trim();
+        let (body, ef) = if let Some(b) = s.strip_suffix("+ef") {
+            (b, true)
+        } else if let Some(b) = s.strip_suffix("-ef") {
+            (b, false)
+        } else {
+            (s, true)
+        };
+        let (name, param) = match body.split_once(':') {
+            Some((n, p)) => (n, Some(p)),
+            None => (body, None),
+        };
+        let method = match name {
+            "identity" | "none" => CompressMethod::Identity,
+            "int8" => CompressMethod::QuantizeInt8 {
+                chunk: match param {
+                    None => 256,
+                    Some(p) => p
+                        .parse::<usize>()
+                        .map_err(|_| format!("int8 chunk '{p}' is not an integer"))?,
+                },
+            },
+            "signsgd" => CompressMethod::SignSgd,
+            "topk" => CompressMethod::TopK {
+                k_frac: match param {
+                    None => 0.125,
+                    Some(p) => p
+                        .parse::<f64>()
+                        .map_err(|_| format!("topk fraction '{p}' is not a number"))?,
+                },
+            },
+            other => return Err(format!("unknown compression method '{other}'")),
+        };
+        let spec = CompressionSpec {
+            error_feedback: ef && !matches!(method, CompressMethod::Identity),
+            method,
+        };
+        let errs = spec.validate();
+        if errs.is_empty() {
+            Ok(spec)
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+
+    /// Validate ranges; returns a list of problems (empty = ok).
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        match &self.method {
+            CompressMethod::QuantizeInt8 { chunk } => {
+                if *chunk == 0 {
+                    errs.push("int8 compression chunk must be >= 1".into());
+                }
+            }
+            CompressMethod::TopK { k_frac } => {
+                if !(*k_frac > 0.0 && *k_frac <= 1.0) {
+                    errs.push(format!("topk k_frac {k_frac} must be in (0, 1]"));
+                }
+            }
+            _ => {}
+        }
+        errs
+    }
+
+    // ---------------------------------------------------------------- JSON --
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("method", Json::str(self.method.name()))];
+        match &self.method {
+            CompressMethod::QuantizeInt8 { chunk } => {
+                pairs.push(("chunk", Json::num(*chunk as f64)));
+            }
+            CompressMethod::TopK { k_frac } => {
+                pairs.push(("k_frac", Json::num(*k_frac)));
+            }
+            _ => {}
+        }
+        pairs.push(("error_feedback", Json::Bool(self.error_feedback)));
+        Json::obj(pairs)
+    }
+
+    /// Parse from JSON. `Json::Null` (the key being absent) yields the
+    /// identity default; anything else must be a well-formed object —
+    /// malformed or out-of-range values are errors, never silent defaults.
+    pub fn from_json(j: &Json) -> Result<CompressionSpec, String> {
+        if j.is_null() {
+            return Ok(CompressionSpec::identity());
+        }
+        if j.as_obj().is_none() {
+            return Err("compression must be an object".into());
+        }
+        let name = j
+            .get("method")
+            .as_str()
+            .ok_or("compression.method must be a string")?;
+        let method = match name {
+            "identity" | "none" => CompressMethod::Identity,
+            "int8" => CompressMethod::QuantizeInt8 {
+                chunk: match j.get("chunk") {
+                    Json::Null => 256,
+                    v => v.as_usize().ok_or("compression.chunk must be a positive integer")?,
+                },
+            },
+            "signsgd" => CompressMethod::SignSgd,
+            "topk" => CompressMethod::TopK {
+                k_frac: j
+                    .get("k_frac")
+                    .as_f64()
+                    .ok_or("compression.k_frac must be a number")?,
+            },
+            other => return Err(format!("unknown compression method '{other}'")),
+        };
+        let error_feedback = match j.get("error_feedback") {
+            Json::Null => false,
+            v => v.as_bool().ok_or("compression.error_feedback must be a bool")?,
+        };
+        let spec = CompressionSpec {
+            error_feedback: error_feedback && !matches!(method, CompressMethod::Identity),
+            method,
+        };
+        let errs = spec.validate();
+        if errs.is_empty() {
+            Ok(spec)
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_identity() {
+        let s = CompressionSpec::default();
+        assert!(s.is_dense());
+        assert!(!s.error_feedback);
+        assert_eq!(s.label(), "identity");
+    }
+
+    #[test]
+    fn labels() {
+        let s = CompressionSpec {
+            method: CompressMethod::TopK { k_frac: 0.125 },
+            error_feedback: true,
+        };
+        assert_eq!(s.label(), "topk0.125+ef");
+        let s = CompressionSpec {
+            method: CompressMethod::QuantizeInt8 { chunk: 256 },
+            error_feedback: false,
+        };
+        assert_eq!(s.label(), "int8c256");
+    }
+
+    #[test]
+    fn parse_shorthands() {
+        assert_eq!(CompressionSpec::parse("identity").unwrap(), CompressionSpec::identity());
+        let s = CompressionSpec::parse("int8:128").unwrap();
+        assert_eq!(s.method, CompressMethod::QuantizeInt8 { chunk: 128 });
+        assert!(s.error_feedback, "lossy methods default to error feedback");
+        let s = CompressionSpec::parse("signsgd-ef").unwrap();
+        assert_eq!(s.method, CompressMethod::SignSgd);
+        assert!(!s.error_feedback);
+        let s = CompressionSpec::parse("topk:0.05+ef").unwrap();
+        assert_eq!(s.method, CompressMethod::TopK { k_frac: 0.05 });
+        assert!(s.error_feedback);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(CompressionSpec::parse("fft").is_err());
+        assert!(CompressionSpec::parse("int8:many").is_err());
+        assert!(CompressionSpec::parse("int8:0").is_err(), "chunk 0 must be rejected");
+        assert!(CompressionSpec::parse("topk:0").is_err(), "k_frac 0 must be rejected");
+        assert!(CompressionSpec::parse("topk:1.5").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_all_methods() {
+        let specs = [
+            CompressionSpec::identity(),
+            CompressionSpec {
+                method: CompressMethod::QuantizeInt8 { chunk: 64 },
+                error_feedback: true,
+            },
+            CompressionSpec { method: CompressMethod::SignSgd, error_feedback: false },
+            CompressionSpec {
+                method: CompressMethod::TopK { k_frac: 0.25 },
+                error_feedback: true,
+            },
+        ];
+        for s in specs {
+            let j = s.to_json().to_string();
+            let s2 = CompressionSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+            assert_eq!(s, s2, "roundtrip failed for {j}");
+        }
+    }
+
+    #[test]
+    fn json_null_is_identity_and_malformed_rejected() {
+        assert_eq!(
+            CompressionSpec::from_json(&Json::Null).unwrap(),
+            CompressionSpec::identity()
+        );
+        let bad = [
+            r#"{"method": "zip"}"#,
+            r#"{"method": 5}"#,
+            r#"{"method": "topk"}"#,
+            r#"{"method": "topk", "k_frac": 0}"#,
+            r#"{"method": "topk", "k_frac": "lots"}"#,
+            r#"{"method": "int8", "chunk": 0}"#,
+            r#"{"method": "int8", "chunk": -4}"#,
+            r#"{"method": "int8", "error_feedback": "yes"}"#,
+            r#""topk""#,
+        ];
+        for b in bad {
+            let j = Json::parse(b).unwrap();
+            assert!(CompressionSpec::from_json(&j).is_err(), "accepted malformed {b}");
+        }
+    }
+
+    #[test]
+    fn identity_never_carries_error_feedback() {
+        let j = Json::parse(r#"{"method": "identity", "error_feedback": true}"#).unwrap();
+        let s = CompressionSpec::from_json(&j).unwrap();
+        assert!(!s.error_feedback, "identity residual is zero; EF must normalize off");
+        assert_eq!(CompressionSpec::parse("identity+ef").unwrap(), CompressionSpec::identity());
+    }
+}

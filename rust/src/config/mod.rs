@@ -10,6 +10,7 @@ use crate::batch::{
     ApproxNormTest, BatchSizeController, ConstantSchedule, ExactNormTest, GeometricSchedule,
     InnerProductTest, StagedSchedule,
 };
+use crate::comm::CompressionSpec;
 use crate::engine::{FixedH, PostLocal, Qsr, SyncScheduler};
 use crate::optim::{LrSchedule, OptimKind, OptimParams};
 use crate::util::json::Json;
@@ -618,8 +619,9 @@ impl WorkerSpec {
 }
 
 /// A full cluster scenario: the underlying training run plus the worker
-/// timeline (speeds, faults, elastic join/leave) and the coordinator's
-/// warmup/cooldown phases. Loaded from JSON by `adaloco cluster`.
+/// timeline (speeds, faults, elastic join/leave), the coordinator's
+/// warmup/cooldown phases, and the sync-payload compression. Loaded from JSON
+/// by `adaloco cluster` and swept by `adaloco sweep`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScenarioSpec {
     pub name: String,
@@ -633,6 +635,11 @@ pub struct ScenarioSpec {
     /// Extra rounds after the sample budget is met, at the final batch size
     /// with the controller frozen (consensus settling phase).
     pub cooldown_rounds: u64,
+    /// Sync-payload compression (method + parameters + error feedback). The
+    /// JSON key is optional; when absent the scenario runs uncompressed
+    /// (identity), so every pre-existing scenario file stays valid and any of
+    /// them turns into a compressed run with a one-key edit.
+    pub compression: CompressionSpec,
     pub workers: Vec<WorkerSpec>,
 }
 
@@ -650,7 +657,10 @@ impl ScenarioSpec {
         self.warmup_rounds == 0
             && self.cooldown_rounds == 0
             && self.workers.iter().all(|w| {
-                w.speed == 1.0 && w.join_round == 0 && w.leave_round.is_none() && w.faults.is_empty()
+                w.speed == 1.0
+                    && w.join_round == 0
+                    && w.leave_round.is_none()
+                    && w.faults.is_empty()
             })
     }
 
@@ -689,64 +699,92 @@ impl ScenarioSpec {
             ("run", self.run.to_json()),
             ("warmup_rounds", Json::num(self.warmup_rounds as f64)),
             ("cooldown_rounds", Json::num(self.cooldown_rounds as f64)),
+            ("compression", self.compression.to_json()),
             ("workers", Json::arr(workers)),
         ])
     }
 
+    /// Parse from JSON. Optional keys may be absent (or explicit `null`) and
+    /// take their default, but a key that IS present with a malformed or
+    /// out-of-range value is a hard error — never a silent default (a typo'd
+    /// `"speed": "fast"` must not quietly run at speed 1.0).
     pub fn from_json(j: &Json) -> Result<ScenarioSpec, String> {
+        // Optional typed accessors: None for absent/null, Err for wrong type.
+        fn opt_f64(j: &Json, key: &str, ctx: &str) -> Result<Option<f64>, String> {
+            match j.get(key) {
+                Json::Null => Ok(None),
+                v => v
+                    .as_f64()
+                    .map(Some)
+                    .ok_or_else(|| format!("{ctx}: {key} must be a number")),
+            }
+        }
+        fn opt_u64(j: &Json, key: &str, ctx: &str) -> Result<Option<u64>, String> {
+            match j.get(key) {
+                Json::Null => Ok(None),
+                v => v
+                    .as_u64()
+                    .map(Some)
+                    .ok_or_else(|| format!("{ctx}: {key} must be a non-negative integer")),
+            }
+        }
+
         let run = RunConfig::from_json(j.get("run")).map_err(|e| format!("run: {e}"))?;
+        let compression = CompressionSpec::from_json(j.get("compression"))
+            .map_err(|e| format!("compression: {e}"))?;
         let wj = j.get("workers").as_arr().ok_or("missing workers array")?;
         let mut workers = Vec::with_capacity(wj.len());
         for (i, w) in wj.iter().enumerate() {
+            let ctx = format!("worker {i}");
             let mut spec = WorkerSpec {
-                speed: w.get("speed").as_f64().unwrap_or(1.0),
-                join_round: w.get("join_round").as_u64().unwrap_or(0),
-                leave_round: w.get("leave_round").as_u64(),
+                speed: opt_f64(w, "speed", &ctx)?.unwrap_or(1.0),
+                join_round: opt_u64(w, "join_round", &ctx)?.unwrap_or(0),
+                leave_round: opt_u64(w, "leave_round", &ctx)?,
                 faults: Vec::new(),
             };
-            if let Some(faults) = w.get("faults").as_arr() {
-                for f in faults {
-                    let fault = match f.get("type").as_str() {
-                        Some("straggle") => FaultSpec::Straggle {
-                            from_round: f.get("from_round").as_u64().unwrap_or(0),
-                            until_round: f
-                                .get("until_round")
-                                .as_u64()
-                                .ok_or_else(|| format!("worker {i}: straggle until_round"))?,
-                            factor: f
-                                .get("factor")
-                                .as_f64()
-                                .ok_or_else(|| format!("worker {i}: straggle factor"))?,
-                        },
-                        Some("dropout") => FaultSpec::Dropout {
-                            round: f
-                                .get("round")
-                                .as_u64()
-                                .ok_or_else(|| format!("worker {i}: dropout round"))?,
-                        },
-                        Some("extra_latency") => FaultSpec::ExtraLatency {
-                            from_round: f.get("from_round").as_u64().unwrap_or(0),
-                            until_round: f
-                                .get("until_round")
-                                .as_u64()
-                                .ok_or_else(|| format!("worker {i}: extra_latency until_round"))?,
-                            seconds: f
-                                .get("seconds")
-                                .as_f64()
-                                .ok_or_else(|| format!("worker {i}: extra_latency seconds"))?,
-                        },
-                        other => return Err(format!("worker {i}: unknown fault type {other:?}")),
-                    };
-                    spec.faults.push(fault);
+            match w.get("faults") {
+                Json::Null => {}
+                fj => {
+                    let faults =
+                        fj.as_arr().ok_or_else(|| format!("{ctx}: faults must be an array"))?;
+                    for f in faults {
+                        let fault = match f.get("type").as_str() {
+                            Some("straggle") => FaultSpec::Straggle {
+                                from_round: opt_u64(f, "from_round", &ctx)?.unwrap_or(0),
+                                until_round: opt_u64(f, "until_round", &ctx)?
+                                    .ok_or_else(|| format!("{ctx}: straggle until_round"))?,
+                                factor: opt_f64(f, "factor", &ctx)?
+                                    .ok_or_else(|| format!("{ctx}: straggle factor"))?,
+                            },
+                            Some("dropout") => FaultSpec::Dropout {
+                                round: opt_u64(f, "round", &ctx)?
+                                    .ok_or_else(|| format!("{ctx}: dropout round"))?,
+                            },
+                            Some("extra_latency") => FaultSpec::ExtraLatency {
+                                from_round: opt_u64(f, "from_round", &ctx)?.unwrap_or(0),
+                                until_round: opt_u64(f, "until_round", &ctx)?
+                                    .ok_or_else(|| format!("{ctx}: extra_latency until_round"))?,
+                                seconds: opt_f64(f, "seconds", &ctx)?
+                                    .ok_or_else(|| format!("{ctx}: extra_latency seconds"))?,
+                            },
+                            other => return Err(format!("{ctx}: unknown fault type {other:?}")),
+                        };
+                        spec.faults.push(fault);
+                    }
                 }
             }
             workers.push(spec);
         }
+        let name = match j.get("name") {
+            Json::Null => "scenario".to_string(),
+            v => v.as_str().ok_or("scenario: name must be a string")?.to_string(),
+        };
         Ok(ScenarioSpec {
-            name: j.get("name").as_str().unwrap_or("scenario").to_string(),
+            name,
             run,
-            warmup_rounds: j.get("warmup_rounds").as_u64().unwrap_or(0),
-            cooldown_rounds: j.get("cooldown_rounds").as_u64().unwrap_or(0),
+            warmup_rounds: opt_u64(j, "warmup_rounds", "scenario")?.unwrap_or(0),
+            cooldown_rounds: opt_u64(j, "cooldown_rounds", "scenario")?.unwrap_or(0),
+            compression,
             workers,
         })
     }
@@ -754,6 +792,7 @@ impl ScenarioSpec {
     /// Validate internal consistency; returns a list of problems (empty = ok).
     pub fn validate(&self) -> Vec<String> {
         let mut errs = self.run.validate();
+        errs.extend(self.compression.validate());
         if self.workers.is_empty() {
             errs.push("scenario needs at least one worker".into());
             return errs;
@@ -932,6 +971,7 @@ mod tests {
             run,
             warmup_rounds: 2,
             cooldown_rounds: 1,
+            compression: CompressionSpec::identity(),
             workers: vec![
                 WorkerSpec::default(),
                 WorkerSpec {
@@ -963,6 +1003,103 @@ mod tests {
         let j = s.to_json().to_string();
         let s2 = ScenarioSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn scenario_compression_roundtrips_and_defaults_to_identity() {
+        use crate::comm::CompressMethod;
+        let mut s = scenario_fixture();
+        for method in [
+            CompressMethod::QuantizeInt8 { chunk: 128 },
+            CompressMethod::SignSgd,
+            CompressMethod::TopK { k_frac: 0.0625 },
+        ] {
+            s.compression = CompressionSpec { method, error_feedback: true };
+            assert!(s.validate().is_empty(), "{:?}", s.validate());
+            let j = s.to_json().to_string();
+            let s2 = ScenarioSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+            assert_eq!(s, s2);
+        }
+        // the key is optional: scenarios written before the comm subsystem
+        // parse unchanged as identity
+        let mut j = s.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.remove("compression");
+        }
+        let s2 = ScenarioSpec::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(s2.compression, CompressionSpec::identity());
+    }
+
+    #[test]
+    fn scenario_malformed_values_error_instead_of_defaulting() {
+        // Every case takes the valid fixture JSON and corrupts exactly one
+        // field that previously defaulted silently.
+        let base = scenario_fixture().to_json().to_string();
+        let corruptions = [
+            (r#""speed":0.5"#, r#""speed":"fast""#),
+            (r#""join_round":3"#, r#""join_round":-3"#),
+            (r#""join_round":3"#, r#""join_round":"soon""#),
+            (r#""leave_round":10"#, r#""leave_round":9.5"#),
+            (r#""warmup_rounds":2"#, r#""warmup_rounds":"two""#),
+            (r#""cooldown_rounds":1"#, r#""cooldown_rounds":-1"#),
+            (r#""from_round":4"#, r#""from_round":4.5"#),
+            (r#""seconds":0.25"#, r#""seconds":"slow""#),
+            (r#""faults":[]"#, r#""faults":{}"#),
+            (r#""name":"fixture""#, r#""name":42"#),
+        ];
+        for (good, bad) in corruptions {
+            assert!(base.contains(good), "fixture lost the field behind {good:?}");
+            let text = base.replacen(good, bad, 1);
+            let j = Json::parse(&text).unwrap();
+            assert!(
+                ScenarioSpec::from_json(&j).is_err(),
+                "malformed {bad:?} was silently accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn scenario_out_of_range_compression_rejected() {
+        let mut s = scenario_fixture();
+        s.compression = CompressionSpec {
+            method: crate::comm::CompressMethod::TopK { k_frac: 0.0 },
+            error_feedback: true,
+        };
+        assert!(
+            s.validate().iter().any(|e| e.contains("k_frac")),
+            "top-k of 0 must be rejected"
+        );
+        s.compression = CompressionSpec {
+            method: crate::comm::CompressMethod::QuantizeInt8 { chunk: 0 },
+            error_feedback: false,
+        };
+        assert!(s.validate().iter().any(|e| e.contains("chunk")));
+        // and straight from JSON, the parser already refuses
+        let mut j = scenario_fixture().to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert(
+                "compression".into(),
+                Json::parse(r#"{"method": "topk", "k_frac": 0}"#).unwrap(),
+            );
+        }
+        let err = ScenarioSpec::from_json(&Json::parse(&j.to_string()).unwrap());
+        assert!(err.is_err());
+        assert!(err.unwrap_err().contains("k_frac"), "error must name the bad field");
+    }
+
+    #[test]
+    fn scenario_negative_latency_rejected() {
+        let mut s = scenario_fixture();
+        s.workers[0].faults.push(FaultSpec::ExtraLatency {
+            from_round: 0,
+            until_round: 5,
+            seconds: -0.5,
+        });
+        assert!(
+            s.validate().iter().any(|e| e.contains("negative extra_latency")),
+            "negative latency must be rejected: {:?}",
+            s.validate()
+        );
     }
 
     #[test]
@@ -1016,6 +1153,7 @@ mod tests {
             run: hom,
             warmup_rounds: 0,
             cooldown_rounds: 0,
+            compression: CompressionSpec::identity(),
             workers: vec![WorkerSpec::default(), WorkerSpec::default()],
         };
         assert!(hom.is_homogeneous());

@@ -3,6 +3,7 @@
 //! experiment index and the substitutions).
 
 pub mod figures;
+pub mod sweep;
 pub mod tables;
 pub mod theory;
 
@@ -137,6 +138,7 @@ pub fn engine_opts(cfg: &RunConfig) -> EngineOpts {
         label: cfg.label.clone(),
         max_rounds: 10_000_000,
         threaded_allreduce: false,
+        compression: crate::comm::CompressionSpec::identity(),
     }
 }
 

@@ -1,0 +1,267 @@
+//! Compression × sync-interval sweep harness (`adaloco sweep`).
+//!
+//! The paper's tables trade sync *frequency* (H) against convergence; the comm
+//! subsystem adds the orthogonal axis of sync *size*. This harness crosses the
+//! two over one base scenario and emits a paper-style comparison table, so a
+//! single command answers "how many wire bytes does each (method, H) cell pay
+//! for what final loss".
+//!
+//! Every artifact of a sweep — the per-run eval/batch/workers CSVs and summary
+//! JSONs, `sweep.csv`, `sweep.json`, and `sweep_table.txt` — lands under one
+//! [`RunDir`] (`<out>/sweep_<scenario>/`) instead of scattering across the
+//! output root.
+
+use crate::cluster::run_scenario;
+use crate::comm::CompressionSpec;
+use crate::config::{ScenarioSpec, SyncSpec};
+use crate::metrics::RunDir;
+use crate::util::json::Json;
+use crate::util::stats;
+use std::path::Path;
+
+/// One (method, H) cell of the sweep.
+struct SweepRow {
+    method: String,
+    h: u32,
+    rounds: u64,
+    samples: u64,
+    final_loss: f64,
+    best_loss: f64,
+    logical_bytes: u64,
+    wire_bytes: u64,
+    wire_frac: f64,
+    ratio: f64,
+    sim_time_s: f64,
+    diverged: bool,
+}
+
+/// The default method grid: uncompressed baseline plus each lossy family with
+/// error feedback on.
+pub fn default_methods() -> Vec<CompressionSpec> {
+    ["identity", "int8", "signsgd", "topk"]
+        .iter()
+        .map(|s| CompressionSpec::parse(s).expect("builtin method grid"))
+        .collect()
+}
+
+/// Run `methods` × `hs` over the base scenario and write every artifact under
+/// `<out>/sweep_<scenario>/`. Returns the rendered comparison table.
+pub fn compression_sweep(
+    spec: &ScenarioSpec,
+    methods: &[CompressionSpec],
+    hs: &[u32],
+    out: &Path,
+) -> anyhow::Result<String> {
+    anyhow::ensure!(!methods.is_empty(), "sweep needs at least one compression method");
+    anyhow::ensure!(!hs.is_empty(), "sweep needs at least one sync interval H");
+    anyhow::ensure!(hs.iter().all(|&h| h >= 1), "sync interval H must be >= 1");
+    let dir = RunDir::create(out, &format!("sweep_{}", spec.name))?;
+
+    let mut rows = Vec::with_capacity(methods.len() * hs.len());
+    for method in methods {
+        for &h in hs {
+            let mut cell = spec.clone();
+            cell.compression = method.clone();
+            cell.run.sync = SyncSpec::FixedH { h };
+            let label = format!("{}_{}_h{}", spec.name, method.label(), h);
+            cell.name = label.clone();
+            cell.run.label = label;
+            let rec = run_scenario(&cell)?;
+            dir.write_record(&rec)?;
+            rows.push(SweepRow {
+                method: method.label(),
+                h,
+                rounds: rec.total_rounds,
+                samples: rec.total_samples,
+                final_loss: rec.final_val_loss(),
+                best_loss: rec.best_val_loss(),
+                logical_bytes: rec.comm.bytes_moved,
+                wire_bytes: rec.comm.wire_bytes,
+                wire_frac: rec.comm.wire_fraction(),
+                ratio: rec.comm.compression_ratio(),
+                sim_time_s: rec.sim_time_s,
+                diverged: rec.diverged,
+            });
+        }
+    }
+
+    let table = render_table(spec, &rows);
+    dir.write_text("sweep_table.txt", &table)?;
+    dir.write_text("sweep.csv", &render_csv(&rows))?;
+    dir.write_text("sweep.json", &render_json(spec, &rows).to_string_pretty())?;
+    Ok(table)
+}
+
+fn render_table(spec: &ScenarioSpec, rows: &[SweepRow]) -> String {
+    let mut out = format!(
+        "== compression x sync-interval sweep: '{}' ({} workers, seed {}) ==\n",
+        spec.name,
+        spec.workers.len(),
+        spec.run.seed
+    );
+    out.push_str(&format!(
+        "{:<14} {:>4} {:>7} {:>12} {:>12} {:>11} {:>11} {:>10} {:>10}\n",
+        "method", "H", "rounds", "final_loss", "best_loss", "logical", "wire", "wire_frac",
+        "sim_time"
+    ));
+    for r in rows {
+        let loss = if r.diverged {
+            "diverged".to_string()
+        } else {
+            format!("{:.4}", r.final_loss)
+        };
+        out.push_str(&format!(
+            "{:<14} {:>4} {:>7} {:>12} {:>12.4} {:>11} {:>11} {:>10.3} {:>10}\n",
+            r.method,
+            r.h,
+            r.rounds,
+            loss,
+            r.best_loss,
+            stats::fmt_bytes(r.logical_bytes),
+            stats::fmt_bytes(r.wire_bytes),
+            r.wire_frac,
+            stats::fmt_duration(r.sim_time_s),
+        ));
+    }
+    out
+}
+
+fn render_csv(rows: &[SweepRow]) -> String {
+    let mut out = String::from(
+        "method,h,rounds,samples,final_loss,best_loss,logical_bytes,wire_bytes,wire_frac,\
+         compression_ratio,sim_time_s,diverged\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{},{},{},{},{:.6},{:.6},{},{},{:.6},{:.6},{:.6},{}\n",
+            r.method,
+            r.h,
+            r.rounds,
+            r.samples,
+            r.final_loss,
+            r.best_loss,
+            r.logical_bytes,
+            r.wire_bytes,
+            r.wire_frac,
+            r.ratio,
+            r.sim_time_s,
+            r.diverged,
+        ));
+    }
+    out
+}
+
+fn render_json(spec: &ScenarioSpec, rows: &[SweepRow]) -> Json {
+    Json::obj(vec![
+        ("scenario", Json::str(&spec.name)),
+        ("m_workers", Json::num(spec.workers.len() as f64)),
+        (
+            "cells",
+            Json::arr(rows.iter().map(|r| {
+                Json::obj(vec![
+                    ("method", Json::str(&r.method)),
+                    ("h", Json::num(r.h as f64)),
+                    ("rounds", Json::num(r.rounds as f64)),
+                    ("samples", Json::num(r.samples as f64)),
+                    ("final_loss", Json::num(r.final_loss)),
+                    ("best_loss", Json::num(r.best_loss)),
+                    ("logical_bytes", Json::num(r.logical_bytes as f64)),
+                    ("wire_bytes", Json::num(r.wire_bytes as f64)),
+                    ("wire_frac", Json::num(r.wire_frac)),
+                    ("compression_ratio", Json::num(r.ratio)),
+                    ("sim_time_s", Json::num(r.sim_time_s)),
+                    ("diverged", Json::Bool(r.diverged)),
+                ])
+            })),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BatchStrategy, DataSpec, ModelSpec, RunConfig, WorkerSpec};
+
+    fn tiny_scenario() -> ScenarioSpec {
+        let mut run = RunConfig::default();
+        run.label = "sweep_unit".into();
+        run.model = ModelSpec::Logistic { feat: 8, classes: 3, l2: 1e-4 };
+        run.data = DataSpec::GaussianMixture {
+            feat: 8,
+            classes: 3,
+            separation: 2.5,
+            noise: 1.0,
+            eval_size: 64,
+        };
+        run.m_workers = 2;
+        run.total_samples = 3_000;
+        run.eval_every_samples = 1_000;
+        run.strategy = BatchStrategy::Constant { b: 16 };
+        run.b_max_local = 256;
+        ScenarioSpec {
+            name: "sweep_unit".into(),
+            run,
+            warmup_rounds: 0,
+            cooldown_rounds: 0,
+            compression: CompressionSpec::identity(),
+            workers: vec![WorkerSpec::default(), WorkerSpec::default()],
+        }
+    }
+
+    #[test]
+    fn sweep_runs_grid_and_groups_artifacts() {
+        let out = std::env::temp_dir().join("adaloco_sweep_test");
+        let _ = std::fs::remove_dir_all(&out);
+        let spec = tiny_scenario();
+        let methods = [
+            CompressionSpec::parse("identity").unwrap(),
+            CompressionSpec::parse("topk:0.25").unwrap(),
+        ];
+        let table = compression_sweep(&spec, &methods, &[2, 4], &out).unwrap();
+        // 2 methods x 2 intervals = 4 data lines + header block
+        assert_eq!(table.lines().count(), 2 + 4, "table:\n{table}");
+        assert!(table.contains("identity"));
+        assert!(table.contains("topk0.25+ef"));
+
+        let dir = out.join("sweep_sweep_unit");
+        assert!(dir.join("sweep_table.txt").exists());
+        assert!(dir.join("sweep.csv").exists());
+        assert!(dir.join("sweep.json").exists());
+        // per-run artifacts live in the SAME directory (satellite: one run dir)
+        assert!(dir.join("sweep_unit_identity_h2.summary.json").exists());
+        assert!(dir.join("sweep_unit_topk0.25+ef_h4.workers.csv").exists());
+
+        let csv = std::fs::read_to_string(dir.join("sweep.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 5);
+        let j = Json::parse(&std::fs::read_to_string(dir.join("sweep.json")).unwrap()).unwrap();
+        assert_eq!(j.get("cells").as_arr().unwrap().len(), 4);
+        // the compressed cells actually moved fewer wire bytes
+        let cells = j.get("cells").as_arr().unwrap();
+        let ident = &cells[0];
+        let topk = &cells[2];
+        assert_eq!(ident.get("wire_frac").as_f64(), Some(1.0));
+        assert!(topk.get("wire_frac").as_f64().unwrap() < 1.0);
+        std::fs::remove_dir_all(&out).unwrap();
+    }
+
+    #[test]
+    fn sweep_rejects_empty_grid() {
+        let spec = tiny_scenario();
+        let out = std::env::temp_dir().join("adaloco_sweep_empty");
+        assert!(compression_sweep(&spec, &[], &[4], &out).is_err());
+        assert!(
+            compression_sweep(&spec, &[CompressionSpec::identity()], &[], &out).is_err()
+        );
+        assert!(
+            compression_sweep(&spec, &[CompressionSpec::identity()], &[0], &out).is_err()
+        );
+    }
+
+    #[test]
+    fn default_method_grid_is_valid() {
+        let ms = default_methods();
+        assert_eq!(ms.len(), 4);
+        assert!(ms[0].is_dense());
+        assert!(ms.iter().skip(1).all(|m| m.error_feedback));
+    }
+}

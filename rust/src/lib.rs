@@ -35,6 +35,15 @@
 //!   same final loss and [`collective::CommCounters`]), the correctness anchor
 //!   for every scaling scenario built on top.
 //!
+//! Both engines synchronize through the [`comm`] subsystem: a [`comm::Compressor`]
+//! (identity, per-chunk int8 quantization, 1-bit signSGD, top-k sparsification)
+//! encodes each sync payload against the shared consensus, per-endpoint
+//! [`comm::ErrorFeedback`] carries the compression residual into the next round,
+//! and [`collective::CommCounters`] accounts compressed wire bytes next to the
+//! logical ring bytes so the compression ratio is a first-class metric.
+//! `adaloco sweep` crosses compression methods with sync intervals H into a
+//! paper-style comparison table.
+//!
 //! See DESIGN.md for the system inventory, README.md for the cluster scenario
 //! format, and EXPERIMENTS.md for the paper-vs-measured results of every table
 //! and figure.
@@ -43,6 +52,7 @@ pub mod batch;
 pub mod bench;
 pub mod cluster;
 pub mod collective;
+pub mod comm;
 pub mod config;
 pub mod data;
 pub mod engine;

@@ -4,6 +4,8 @@
 //!   train    Run a single training run from a JSON config (or the default).
 //!   cluster  Run a cluster scenario (or a suite directory) through the
 //!            concurrent message-passing runtime.
+//!   sweep    Cross compression methods with sync intervals H over one
+//!            scenario and emit a paper-style comparison table.
 //!   table    Regenerate a paper table: t1 t2 t4 t6 t8 t1-pjrt t2-pjrt theory ab2 ab3.
 //!   figure   Regenerate a paper figure's series: f1 f2 f8.
 //!   inspect  Show artifact manifests and runtime info.
@@ -24,10 +26,16 @@ USAGE:
   adaloco train   [--config cfg.json] [--save out.json] [--seed N]
   adaloco cluster (--config scenario.json | --suite scenarios/)
                   [--seed N] [--out results]
+  adaloco sweep   --config scenario.json [--methods identity,int8,signsgd,topk]
+                  [--hs 1,4,16] [--seed N] [--out results]
   adaloco table   --id <t1|t2|t4|t6|t8|t1-pjrt|t2-pjrt|theory|ab2|ab3>
                   [--scale S] [--seeds 1,2,3] [--out results]
   adaloco figure  --id <f1|f2|f8> [--scale S] [--out results]
   adaloco inspect [--model name]
+
+COMPRESSION METHODS (sweep --methods, scenario "compression" sections):
+  identity | int8[:chunk] | signsgd | topk[:frac], each with an optional
+  +ef / -ef suffix for error feedback (lossy methods default to +ef).
 
 EXAMPLES:
   adaloco table --id t1 --scale 0.25       # quick Table-1 reproduction
@@ -36,6 +44,7 @@ EXAMPLES:
   adaloco train --config my_run.json
   adaloco cluster --config scenarios/straggler8.json
   adaloco cluster --suite scenarios/       # run every scenario in the dir
+  adaloco sweep --config scenarios/topk8.json --methods identity,topk:0.05 --hs 4,16
 "#;
 
 fn main() {
@@ -50,6 +59,7 @@ fn main() {
     let result = match cmd.as_str() {
         "train" => cmd_train(&args),
         "cluster" => cmd_cluster(&args),
+        "sweep" => cmd_sweep(&args),
         "table" => cmd_table(&args),
         "figure" => cmd_figure(&args),
         "inspect" => cmd_inspect(&args),
@@ -95,7 +105,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     rec.write_to(&out)?;
     println!(
         "steps={} rounds={} samples={} avg_bsz={:.0} sim_time={} wall={} \
-         best_acc={:.2}% best_loss={:.4} allreduces={} bytes={}",
+         best_acc={:.2}% best_loss={:.4} allreduces={} bytes={} wire={} (x{:.1})",
         rec.total_steps,
         rec.total_rounds,
         rec.total_samples,
@@ -106,6 +116,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         rec.best_val_loss(),
         rec.comm.allreduce_calls,
         stats::fmt_bytes(rec.comm.bytes_moved),
+        stats::fmt_bytes(rec.comm.wire_bytes),
+        rec.comm.compression_ratio(),
     );
     if rec.diverged {
         anyhow::bail!("run diverged (non-finite parameters)");
@@ -145,17 +157,18 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             spec.run.seed = seed.parse()?;
         }
         println!(
-            "scenario '{}': {} workers, warmup={} cooldown={} ...",
+            "scenario '{}': {} workers, warmup={} cooldown={} compression={} ...",
             spec.name,
             spec.workers.len(),
             spec.warmup_rounds,
-            spec.cooldown_rounds
+            spec.cooldown_rounds,
+            spec.compression.label(),
         );
         let rec = adaloco::cluster::run_scenario(&spec)?;
         rec.write_to(&out)?;
         println!(
             "  rounds={} samples={} avg_bsz={:.0} sim_time={} wall={} best_loss={:.4} \
-             allreduces={} bytes={}",
+             allreduces={} bytes={} wire={} (x{:.1})",
             rec.total_rounds,
             rec.total_samples,
             rec.avg_local_batch,
@@ -164,6 +177,8 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             rec.best_val_loss(),
             rec.comm.allreduce_calls,
             stats::fmt_bytes(rec.comm.bytes_moved),
+            stats::fmt_bytes(rec.comm.wire_bytes),
+            rec.comm.compression_ratio(),
         );
         for w in &rec.worker_stats {
             println!(
@@ -186,6 +201,42 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         }
     }
     anyhow::ensure!(!any_diverged, "at least one scenario diverged");
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    use adaloco::comm::CompressionSpec;
+    use adaloco::config::ScenarioSpec;
+    use adaloco::exp::sweep;
+    let path = args.require("config").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let mut spec =
+        ScenarioSpec::from_json(&j).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    if let Some(seed) = args.get("seed") {
+        spec.run.seed = seed.parse()?;
+    }
+    let methods: Vec<CompressionSpec> = match args.get("methods") {
+        None => sweep::default_methods(),
+        Some(list) => list
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                CompressionSpec::parse(s).map_err(|e| anyhow::anyhow!("--methods '{s}': {e}"))
+            })
+            .collect::<anyhow::Result<_>>()?,
+    };
+    let hs: Vec<u32> = args.list_or("hs", &[1u32, 4, 16]).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let out = PathBuf::from(args.str_or("out", "results"));
+    eprintln!(
+        "sweep '{}': {} methods x {} intervals -> {}",
+        spec.name,
+        methods.len(),
+        hs.len(),
+        out.join(format!("sweep_{}", spec.name)).display()
+    );
+    let table = sweep::compression_sweep(&spec, &methods, &hs, &out)?;
+    println!("{table}");
     Ok(())
 }
 

@@ -179,9 +179,14 @@ impl RunRecord {
             ("wall_time_s", Json::num(self.wall_time_s)),
             ("avg_local_batch", Json::num(self.avg_local_batch)),
             ("best_val_acc", Json::num(self.best_val_acc())),
-            ("best_val_loss", Json::num(if self.points.is_empty() { f64::NAN } else { self.best_val_loss() })),
+            (
+                "best_val_loss",
+                Json::num(if self.points.is_empty() { f64::NAN } else { self.best_val_loss() }),
+            ),
             ("allreduce_calls", Json::num(self.comm.allreduce_calls as f64)),
             ("bytes_moved", Json::num(self.comm.bytes_moved as f64)),
+            ("wire_bytes", Json::num(self.comm.wire_bytes as f64)),
+            ("compression_ratio", Json::num(self.comm.compression_ratio())),
             ("diverged", Json::Bool(self.diverged)),
         ])
     }
@@ -201,6 +206,42 @@ impl RunRecord {
                 .write_all(self.worker_stats_csv().as_bytes())?;
         }
         Ok(())
+    }
+}
+
+/// One run directory aggregating every artifact of a single invocation —
+/// per-run eval/batch/workers CSVs, summary JSONs, and any harness-level
+/// tables — so a sweep (or any multi-run command) lands under one path
+/// instead of scattering files across the output root.
+pub struct RunDir {
+    root: std::path::PathBuf,
+}
+
+impl RunDir {
+    /// Create (or reuse) `base/name/`.
+    pub fn create(base: &std::path::Path, name: &str) -> std::io::Result<RunDir> {
+        let root = base.join(name.replace(['/', ' '], "_"));
+        std::fs::create_dir_all(&root)?;
+        Ok(RunDir { root })
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.root
+    }
+
+    /// Write a run's full artifact set (`<label>.eval.csv`, `<label>.batch.csv`,
+    /// `<label>.summary.json`, and `<label>.workers.csv` for cluster runs)
+    /// into this directory.
+    pub fn write_record(&self, rec: &RunRecord) -> std::io::Result<()> {
+        rec.write_to(&self.root)
+    }
+
+    /// Write a harness-level artifact (comparison table, sweep CSV, ...)
+    /// into this directory.
+    pub fn write_text(&self, file: &str, text: &str) -> std::io::Result<std::path::PathBuf> {
+        let path = self.root.join(file);
+        std::fs::write(&path, text)?;
+        Ok(path)
     }
 }
 
@@ -310,6 +351,31 @@ mod tests {
         // sequential records keep the summary shape unchanged
         r.worker_stats.clear();
         assert!(r.summary_json().get("workers").is_null());
+    }
+
+    #[test]
+    fn summary_reports_wire_bytes_and_ratio() {
+        let mut r = record();
+        r.comm.charge_compressed_allreduce(1000, 4, 4 * 1000, 1000);
+        let parsed = Json::parse(&r.summary_json().to_string()).unwrap();
+        assert_eq!(parsed.get("bytes_moved").as_u64(), Some(24_000));
+        assert_eq!(parsed.get("wire_bytes").as_u64(), Some(6_000));
+        assert_eq!(parsed.get("compression_ratio").as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn run_dir_groups_artifacts() {
+        let base = std::env::temp_dir().join("adaloco_rundir_test");
+        let _ = std::fs::remove_dir_all(&base);
+        let dir = RunDir::create(&base, "sweep demo").unwrap();
+        assert!(dir.path().ends_with("sweep_demo"));
+        dir.write_record(&record()).unwrap();
+        let table = dir.write_text("sweep_table.txt", "method H loss\n").unwrap();
+        assert!(table.exists());
+        assert!(dir.path().join("test_run.eval.csv").exists());
+        assert!(dir.path().join("test_run.summary.json").exists());
+        assert!(dir.path().join("sweep_table.txt").exists());
+        std::fs::remove_dir_all(&base).unwrap();
     }
 
     #[test]

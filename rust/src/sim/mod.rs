@@ -102,6 +102,23 @@ impl TimeModel {
         }
         t
     }
+
+    /// [`Self::sync_time`] under compressed model averaging: the model
+    /// all-reduce's bandwidth term is scaled by `wire_frac` (this round's wire
+    /// bytes over the dense logical bytes). The norm-test gradient all-reduce
+    /// stays dense — the controller needs the exact averaged gradient — so
+    /// only the model share compresses. `wire_frac = 1.0` reproduces
+    /// [`Self::sync_time`] bit for bit (identity-compression contract).
+    pub fn sync_time_compressed(&self, dim: usize, norm_test: bool, wire_frac: f64) -> f64 {
+        if wire_frac == 1.0 {
+            return self.sync_time(dim, norm_test);
+        }
+        let mut t = self.topo.allreduce_time_scaled(dim, wire_frac);
+        if norm_test {
+            t += self.topo.allreduce_time(dim) + self.norm_test_host_s;
+        }
+        t
+    }
 }
 
 #[cfg(test)]
@@ -129,6 +146,24 @@ mod tests {
             (slow.round_compute_time(512, 4) - 4.0 * fast.local_step_time(512, 0) * 4.0).abs()
                 < 1e-9
         );
+    }
+
+    #[test]
+    fn compressed_sync_is_cheaper_and_identity_is_exact() {
+        let t = tm();
+        let dense = t.sync_time(1_000_000, false);
+        let eighth = t.sync_time_compressed(1_000_000, false, 0.125);
+        assert!(eighth < dense, "compression must shrink sync time");
+        // latency floor survives even at extreme compression
+        assert!(eighth > 0.0);
+        assert_eq!(
+            t.sync_time_compressed(1_000_000, true, 1.0).to_bits(),
+            t.sync_time(1_000_000, true).to_bits(),
+            "wire_frac = 1.0 must reproduce the dense sync time bit for bit"
+        );
+        // the norm-test gradient all-reduce stays dense under compression
+        let with_nt = t.sync_time_compressed(1_000_000, true, 0.125);
+        assert!(with_nt > t.sync_time(1_000_000, false));
     }
 
     #[test]

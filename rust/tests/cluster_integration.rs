@@ -26,7 +26,14 @@ fn load(name: &str) -> ScenarioSpec {
 
 #[test]
 fn all_committed_scenarios_parse_and_roundtrip() {
-    for name in ["homogeneous4.json", "straggler8.json", "elastic4to8.json"] {
+    for name in [
+        "homogeneous4.json",
+        "straggler8.json",
+        "elastic4to8.json",
+        "topk8.json",
+        "signsgd_elastic.json",
+        "int8_straggler.json",
+    ] {
         let spec = load(name);
         let j = spec.to_json().to_string();
         let again = ScenarioSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
@@ -38,6 +45,7 @@ fn all_committed_scenarios_parse_and_roundtrip() {
 fn homogeneous_scenario_matches_sequential_bit_for_bit() {
     let spec = load("homogeneous4.json");
     assert!(spec.is_homogeneous(), "homogeneous4.json must stay fault-free");
+    assert!(spec.compression.is_dense(), "homogeneous4.json must stay uncompressed");
     let seq = run_config(&spec.run).expect("sequential run");
     let clu = run_scenario(&spec).expect("cluster run");
     assert_eq!(seq.comm, clu.comm, "CommCounters diverged");
@@ -80,6 +88,75 @@ fn straggler_scenario_completes_with_worker_metrics() {
         assert!(w.local_steps > 0, "worker {} never stepped", w.worker);
         assert!(w.samples > 0);
     }
+}
+
+/// The compressed flagship scenario: top-1/8 sparsification with error
+/// feedback on a homogeneous 4-worker run. Converges to a useful model while
+/// moving less than half (in fact ~1/4) of the dense bytes on the wire.
+#[test]
+fn topk8_scenario_compresses_and_converges() {
+    let spec = load("topk8.json");
+    assert!(!spec.compression.is_dense());
+    let rec = run_scenario(&spec).expect("topk8 run");
+    assert!(!rec.diverged);
+    assert!(
+        rec.comm.wire_bytes * 2 < rec.comm.bytes_moved,
+        "wire-byte ratio not < 0.5: {} of {}",
+        rec.comm.wire_bytes,
+        rec.comm.bytes_moved
+    );
+    assert!(rec.comm.compression_ratio() > 2.0);
+    let acc = rec.best_val_acc();
+    assert!(acc > 0.4, "compressed run failed to learn: best acc {acc} (chance = 0.125)");
+    // compression shows up in the simulated wall clock too: the same scenario
+    // without compression pays more sync time for the same round structure
+    let mut dense = spec.clone();
+    dense.compression = adaloco::comm::CompressionSpec::identity();
+    let dense_rec = run_scenario(&dense).expect("dense topk8 run");
+    assert_eq!(dense_rec.total_rounds, rec.total_rounds, "round structure must match");
+    assert!(rec.sim_time_s < dense_rec.sim_time_s);
+    // and the compressed run's accuracy stays in the same band (error
+    // feedback recovers the sparsified signal)
+    assert!(
+        acc > dense_rec.best_val_acc() - 0.1,
+        "compressed acc {acc} too far below dense {}",
+        dense_rec.best_val_acc()
+    );
+}
+
+/// signSGD (1-bit + rescale) composes with warmup and elastic scale-up.
+#[test]
+fn signsgd_elastic_scenario_completes() {
+    let spec = load("signsgd_elastic.json");
+    let rec = run_scenario(&spec).expect("signsgd_elastic run");
+    assert!(!rec.diverged);
+    assert_eq!(rec.worker_stats.len(), 6);
+    for w in 4..6 {
+        assert_eq!(rec.worker_stats[w].joined_round, 8, "late joiner {w}");
+    }
+    // 1-bit payloads: wire traffic collapses by more than an order of magnitude
+    assert!(
+        rec.comm.wire_bytes * 10 < rec.comm.bytes_moved,
+        "signSGD wire bytes {} not <10% of logical {}",
+        rec.comm.wire_bytes,
+        rec.comm.bytes_moved
+    );
+    assert!(rec.total_samples >= spec.run.total_samples);
+}
+
+/// int8 quantization under a straggling worker with the adaptive norm test:
+/// the gradient all-reduce stays dense, so the ratio lands between the model
+/// sync's ~1/4 and 1.
+#[test]
+fn int8_straggler_scenario_completes() {
+    let spec = load("int8_straggler.json");
+    let rec = run_scenario(&spec).expect("int8_straggler run");
+    assert!(!rec.diverged);
+    assert!(rec.comm.wire_bytes < rec.comm.bytes_moved);
+    assert!(rec.comm.compression_ratio() > 1.0);
+    let slow = &rec.worker_stats[3];
+    assert_eq!(slow.speed, 0.5);
+    assert!(slow.sim_compute_s > rec.worker_stats[0].sim_compute_s);
 }
 
 #[test]

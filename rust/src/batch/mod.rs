@@ -5,6 +5,11 @@
 //! gradient steps ... at the same time and frequency" as model averaging) and
 //! returns the next local batch size.
 //!
+//! The engines consume controllers only through the unified
+//! [`crate::policy::AdaptivePolicy`] surface: a controller + scheduler pair
+//! lifts in bit-for-bit via [`crate::policy::LegacyPolicy`], next to policies
+//! that also adapt the sync interval and the compression.
+//!
 //! Implemented strategies:
 //! - [`norm_test::ApproxNormTest`]   — Algorithm A.2 (across-worker gradient
 //!   variance; what the paper actually runs).

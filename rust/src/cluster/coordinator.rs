@@ -17,22 +17,26 @@
 //! parameters **over contributors only** (dropout re-weighting) in ascending
 //! worker order with exactly the reduction used by
 //! [`crate::collective::allreduce_mean_serial`], broadcast the consensus back,
-//! evaluate the norm-test statistics, and consult the batch-size controller
-//! and sync scheduler — the same [`EngineOpts`] contract as the sequential
-//! engine, which is what makes the two engines agree bit-for-bit on a
-//! homogeneous no-fault scenario (`cluster_matches_sequential_engine` below).
+//! evaluate the norm-test statistics, and consult the unified
+//! [`crate::policy::AdaptivePolicy`] for the next round's joint
+//! (b, H, compression) decision — the same [`EngineOpts`] contract as the
+//! sequential engine, which is what makes the two engines agree bit-for-bit
+//! on a homogeneous no-fault scenario (`cluster_matches_sequential_engine`
+//! below). A decision that changes compression is broadcast as
+//! [`ToWorker::SetCompression`]: every endpoint rebuilds its compressor and
+//! resets its error-feedback residual before the next round's sync.
 
 use super::membership::Roster;
 use super::messages::{FromWorker, RoundResult, ToWorker};
 use super::worker::spawn_worker;
-use crate::batch::SyncEvent;
 use crate::collective::CommCounters;
 use crate::comm::{ErrorFeedback, Payload};
 use crate::config::WorkerSpec;
 use crate::data::Dataset;
 use crate::engine::{EngineOpts, TrainEngine};
-use crate::metrics::{EvalPoint, RunRecord};
+use crate::metrics::{EvalPoint, PolicyPoint, RunRecord};
 use crate::model::GradModel;
+use crate::policy::RoundSignals;
 use crate::tensor;
 use crate::util::rng::Pcg64;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -146,6 +150,14 @@ impl TrainEngine for ClusterEngine {
         let x0 = models[0].init_params(&mut rng);
         let mut params = x0;
 
+        // The compression in effect (a compression-managing policy overrides
+        // the scenario's static spec before round 0, exactly like the
+        // sequential engine).
+        let mut comp_spec = opts
+            .policy
+            .initial_compression()
+            .unwrap_or_else(|| opts.compression.clone());
+
         // ---- WaitingForWorkers: spawn everyone, gather the Hellos ----------
         self.phase = Phase::WaitingForWorkers;
         let (from_tx, from_rx) = channel::<FromWorker>();
@@ -158,7 +170,7 @@ impl TrainEngine for ClusterEngine {
                 model,
                 dataset,
                 opts.optim.clone(),
-                opts.compression.clone(),
+                comp_spec.clone(),
                 from_tx.clone(),
             );
             txs.push(tx);
@@ -182,9 +194,10 @@ impl TrainEngine for ClusterEngine {
         };
         // The coordinator's side of the compressed-sync protocol: one
         // compressor (shared config with the workers) and the downlink
-        // error-feedback residual for the broadcast direction.
-        let compressor = opts.compression.build();
-        let mut downlink_ef = opts.compression.error_feedback.then(|| ErrorFeedback::new(d));
+        // error-feedback residual for the broadcast direction. Both are
+        // rebuilt when a policy decision switches the spec.
+        let mut compressor = comp_spec.build();
+        let mut downlink_ef = comp_spec.error_feedback.then(|| ErrorFeedback::new(d));
         // Founding members receive x_0 (dense: there is no reference yet).
         for w in roster.active() {
             Self::try_send(
@@ -196,7 +209,7 @@ impl TrainEngine for ClusterEngine {
             );
         }
 
-        let mut b_local = opts.controller.b0().min(opts.b_max_local).max(1);
+        let mut b_local = opts.policy.b0().min(opts.b_max_local).max(1);
         let mut samples: u64 = 0;
         let mut steps: u64 = 0;
         let mut sim_time = 0f64;
@@ -207,9 +220,12 @@ impl TrainEngine for ClusterEngine {
         };
         let mut weighted_b: f64 = 0.0;
         let mut total_local_steps: f64 = 0.0;
-        let needs_grad_ar = opts.controller.needs_grad_allreduce();
+        let needs_grad_ar = opts.policy.needs_grad_allreduce();
         let mut gbar = vec![0.0f32; d];
         let mut opts = opts;
+        // H decided at the previous live sync (None: bootstrap from the
+        // policy, mirroring the legacy top-of-loop scheduler call).
+        let mut pending_h: Option<u32> = None;
 
         let mut warmup_left = self.warmup_rounds;
         let mut cooldown_left = self.cooldown_rounds;
@@ -247,13 +263,28 @@ impl TrainEngine for ClusterEngine {
                     round,
                     ToWorker::SetParams { payload: Payload::Dense { values: params.clone() } },
                 );
+                // Catch the joiner up with the compression currently in effect
+                // (its spawn-time spec may predate a policy switch). Resets a
+                // residual that is still zero, so this is state-neutral for
+                // workers spawned on the current spec.
+                Self::try_send(
+                    &txs,
+                    &mut roster,
+                    w,
+                    round,
+                    ToWorker::SetCompression { spec: comp_spec.clone() },
+                );
             }
             if roster.active().is_empty() {
                 break; // everyone left or crashed: the run cannot proceed
             }
 
             // ---- round parameters per phase -------------------------------
-            let (h, controller_live) = match self.phase {
+            // Warmup/cooldown freeze the policy (H = 1 at the held batch
+            // size); live rounds consume the H decided at the previous sync,
+            // or bootstrap it from the policy with the same (round, samples,
+            // lr) triple the legacy scheduler call received.
+            let (h, policy_live) = match self.phase {
                 Phase::Warmup => {
                     warmup_left -= 1;
                     (1u32, false)
@@ -263,8 +294,14 @@ impl TrainEngine for ClusterEngine {
                     (1u32, false)
                 }
                 _ => {
-                    let lr_now = opts.lr.at(samples);
-                    (opts.scheduler.h_for_round(round, samples, lr_now), true)
+                    let h = pending_h
+                        .take()
+                        .unwrap_or_else(|| {
+                            let lr_now = opts.lr.at(samples);
+                            opts.policy.h_bootstrap(round, samples, lr_now)
+                        })
+                        .max(1);
+                    (h, true)
                 }
             };
             let b_eff = b_local.div_ceil(micro) * micro;
@@ -296,6 +333,10 @@ impl TrainEngine for ClusterEngine {
             }
             if assigned.is_empty() {
                 // every contributor dropped or crashed this round: skip it
+                // (hand the undecided H back so the next live round reuses it)
+                if policy_live {
+                    pending_h = Some(h);
+                }
                 round += 1;
                 continue;
             }
@@ -332,8 +373,10 @@ impl TrainEngine for ClusterEngine {
             // is compressed too, and decoded here exactly as every worker will
             // decode it; dense (identity) payloads are averaged straight from
             // the received buffers — no decode clones, the legacy dataflow.
+            let round_logical = CommCounters::ring_bytes(d, k);
+            let mut round_wire = round_logical;
             let mut wire_frac = 1.0f64;
-            let down = if opts.compression.is_dense() {
+            let down = if comp_spec.is_dense() {
                 let first = results[assigned[0]].as_ref().unwrap();
                 params.copy_from_slice(first.payload.as_dense().expect("dense payload"));
                 let rest_refs: Vec<&[f32]> = assigned[1..]
@@ -363,10 +406,9 @@ impl TrainEngine for ClusterEngine {
                 }
                 let down = compressor.encode(&params, &reference, downlink_ef.as_mut());
                 down.decode_into(&reference, &mut params);
-                let logical = CommCounters::ring_bytes(d, k);
-                let wire = CommCounters::compressed_wire_bytes(k, uplink, down.wire_bytes());
-                if logical > 0 {
-                    wire_frac = wire as f64 / logical as f64;
+                round_wire = CommCounters::compressed_wire_bytes(k, uplink, down.wire_bytes());
+                if round_logical > 0 {
+                    wire_frac = round_wire as f64 / round_logical as f64;
                 }
                 rec.comm.charge_compressed_allreduce(d, k, uplink, down.wire_bytes());
                 down
@@ -412,23 +454,6 @@ impl TrainEngine for ClusterEngine {
                 }
             };
 
-            if controller_live {
-                let ev = SyncEvent {
-                    round,
-                    samples,
-                    b_local: b_eff,
-                    m_workers: k,
-                    worker_scatter: scatter,
-                    gbar_norm_sq: nsq,
-                    per_sample_var: psv,
-                    mean_worker_norm_sq,
-                    inner_product_var: ip_var,
-                };
-                let decision = opts.controller.on_sync(&ev);
-                b_local = decision.b_next.min(opts.b_max_local).max(1);
-            }
-            rec.batch_trace.push((round, samples, b_eff));
-
             // ---- simulated wall-clock (straggler max over contributors) ---
             let mut worst = 0f64;
             for &w in &assigned {
@@ -442,8 +467,70 @@ impl TrainEngine for ClusterEngine {
                 roster.stats[w].sim_compute_s += compute;
                 worst = worst.max(t);
             }
+            let sync_s = opts.time_model.sync_time_compressed(d, needs_grad_ar, wire_frac);
             sim_time += worst;
-            sim_time += opts.time_model.sync_time_compressed(d, needs_grad_ar, wire_frac);
+            sim_time += sync_s;
+
+            // ---- the joint policy decision --------------------------------
+            if policy_live {
+                let signals = RoundSignals {
+                    round,
+                    samples,
+                    b_local: b_eff,
+                    h,
+                    m_workers: k,
+                    active_workers: roster.active().len(),
+                    worker_scatter: scatter,
+                    gbar_norm_sq: nsq,
+                    per_sample_var: psv,
+                    mean_worker_norm_sq,
+                    inner_product_var: ip_var,
+                    lr_next: opts.lr.at(samples),
+                    wire_bytes: round_wire,
+                    logical_bytes: round_logical,
+                    compression: comp_spec.clone(),
+                    round_compute_s: worst,
+                    sync_s,
+                };
+                let decision = opts.policy.on_sync(&signals);
+                b_local = decision.b_next.min(opts.b_max_local).max(1);
+                let h_next = decision.h_next.max(1);
+                pending_h = Some(h_next);
+                let mut switched = false;
+                if let Some(next_spec) = decision.compression {
+                    if next_spec != comp_spec {
+                        // Switch convention (shared with the sequential
+                        // engine): every endpoint rebuilds its compressor and
+                        // resets its error-feedback residual before the next
+                        // round's sync.
+                        comp_spec = next_spec;
+                        compressor = comp_spec.build();
+                        downlink_ef =
+                            comp_spec.error_feedback.then(|| ErrorFeedback::new(d));
+                        for w in roster.active() {
+                            Self::try_send(
+                                &txs,
+                                &mut roster,
+                                w,
+                                round,
+                                ToWorker::SetCompression { spec: comp_spec.clone() },
+                            );
+                        }
+                        switched = true;
+                    }
+                }
+                rec.policy_trace.push(PolicyPoint {
+                    round,
+                    samples,
+                    b_next: b_local,
+                    h_next,
+                    compression: comp_spec.label(),
+                    switched,
+                    test_violated: decision.test_violated,
+                    wire_frac,
+                });
+            }
+            rec.batch_trace.push((round, samples, b_eff));
 
             // ---- per-worker metrics ---------------------------------------
             for &w in &assigned {

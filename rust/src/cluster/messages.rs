@@ -7,7 +7,7 @@
 //! holds a `Receiver<ToWorker>` for commands and a clone of the coordinator's
 //! `Sender<FromWorker>` for replies.
 
-use crate::comm::Payload;
+use crate::comm::{CompressionSpec, Payload};
 use crate::model::EvalStats;
 
 /// Coordinator → worker commands.
@@ -19,6 +19,12 @@ pub enum ToWorker {
     /// previous round, which every active worker holds; admission payloads are
     /// always [`Payload::Dense`], since joiners hold no reference yet.
     SetParams { payload: Payload },
+    /// Install a new uplink compression spec (an adaptive-policy decision, or
+    /// the admission catch-up for a worker joining after a switch). The worker
+    /// rebuilds its compressor and **resets its error-feedback residual** —
+    /// the switch convention shared with the sequential engine, which keeps
+    /// homogeneous runs bit-for-bit across engines.
+    SetCompression { spec: CompressionSpec },
     /// Run `h` local steps at local batch `b_eff`, using `lrs[s]` as the
     /// learning rate of step `s` (the coordinator pre-resolves the sample-
     /// indexed schedule so workers stay schedule-agnostic).

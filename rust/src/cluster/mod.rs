@@ -34,8 +34,13 @@
 //! operation sequence of [`crate::collective::allreduce_mean_serial`]). This
 //! holds for compressed runs too, because every compressor is a deterministic
 //! function of (params, reference, residual)
-//! (`compressed_cluster_matches_sequential_engine` below). Batch-size
-//! controllers and sync schedulers plug in unchanged via [`EngineOpts`].
+//! (`compressed_cluster_matches_sequential_engine` below), and for runs whose
+//! [`crate::policy::AdaptivePolicy`] switches compression mid-run, because
+//! both engines share the switch convention — rebuild the compressor, reset
+//! the error-feedback residuals
+//! (`policy_driven_cluster_matches_sequential_engine` below). Policies plug
+//! into either engine unchanged via [`EngineOpts`]; legacy controller +
+//! scheduler pairs lift through [`crate::policy::LegacyPolicy`].
 
 pub mod coordinator;
 pub mod membership;
@@ -114,14 +119,14 @@ mod tests {
 
         let (mut models, mut data) = quad_workers(m, 0.5);
         let mut o = opts(m, n);
-        o.scheduler = Box::new(FixedH::new(4));
-        o.controller = Box::new(ApproxNormTest::new(0.8, 8, 256));
+        o.set_scheduler(Box::new(FixedH::new(4)));
+        o.set_controller(Box::new(ApproxNormTest::new(0.8, 8, 256)));
         let seq = run_local_sgd(&mut models, &mut data, o);
 
         let (models, data) = quad_workers(m, 0.5);
         let mut o = opts(m, n);
-        o.scheduler = Box::new(FixedH::new(4));
-        o.controller = Box::new(ApproxNormTest::new(0.8, 8, 256));
+        o.set_scheduler(Box::new(FixedH::new(4)));
+        o.set_controller(Box::new(ApproxNormTest::new(0.8, 8, 256)));
         let mut eng = ClusterEngine::new(m);
         let clu = eng.run(models, data, o);
 
@@ -152,7 +157,7 @@ mod tests {
         let run_once = || {
             let (models, data) = quad_workers(3, 1.0);
             let mut o = opts(3, 12_000);
-            o.controller = Box::new(ApproxNormTest::new(0.7, 8, 128));
+            o.set_controller(Box::new(ApproxNormTest::new(0.7, 8, 128)));
             ClusterEngine::new(3).run(models, data, o)
         };
         let a = run_once();
@@ -170,13 +175,13 @@ mod tests {
         let base = {
             let (models, data) = quad_workers(2, 0.2);
             let mut o = opts(2, 8_000);
-            o.controller = Box::new(ConstantSchedule::new(16));
+            o.set_controller(Box::new(ConstantSchedule::new(16)));
             ClusterEngine::new(2).run(models, data, o)
         };
         let straggler = {
             let (models, data) = quad_workers(2, 0.2);
             let mut o = opts(2, 8_000);
-            o.controller = Box::new(ConstantSchedule::new(16));
+            o.set_controller(Box::new(ConstantSchedule::new(16)));
             let mut eng = ClusterEngine::new(2);
             eng.workers[1].faults.push(FaultSpec::Straggle {
                 from_round: 0,
@@ -200,8 +205,8 @@ mod tests {
     fn dropout_reweights_and_still_converges() {
         let (models, data) = quad_workers(4, 0.2);
         let mut o = opts(4, 20_000);
-        o.controller = Box::new(ConstantSchedule::new(16));
-        o.scheduler = Box::new(FixedH::new(4));
+        o.set_controller(Box::new(ConstantSchedule::new(16)));
+        o.set_scheduler(Box::new(FixedH::new(4)));
         let mut eng = ClusterEngine::new(4);
         for r in [1u64, 3, 5] {
             eng.workers[2].faults.push(FaultSpec::Dropout { round: r });
@@ -225,8 +230,8 @@ mod tests {
     fn elastic_join_and_leave() {
         let (models, data) = quad_workers(4, 0.2);
         let mut o = opts(4, 16_000);
-        o.controller = Box::new(ConstantSchedule::new(16));
-        o.scheduler = Box::new(FixedH::new(2));
+        o.set_controller(Box::new(ConstantSchedule::new(16)));
+        o.set_scheduler(Box::new(FixedH::new(2)));
         let mut eng = ClusterEngine::new(4);
         eng.workers[2].join_round = 3; // slow joiner
         eng.workers[3].join_round = 3;
@@ -252,8 +257,8 @@ mod tests {
     fn warmup_and_cooldown_phases_run() {
         let (models, data) = quad_workers(2, 0.2);
         let mut o = opts(2, 4_000);
-        o.controller = Box::new(ApproxNormTest::new(0.8, 8, 64));
-        o.scheduler = Box::new(FixedH::new(4));
+        o.set_controller(Box::new(ApproxNormTest::new(0.8, 8, 64)));
+        o.set_scheduler(Box::new(FixedH::new(4)));
         let mut eng = ClusterEngine::new(2);
         eng.warmup_rounds = 3;
         eng.cooldown_rounds = 2;
@@ -357,7 +362,7 @@ mod tests {
         for eng in engines.iter_mut() {
             let (models, data) = quad_workers(2, 0.1);
             let mut o = opts(2, 2_000);
-            o.controller = Box::new(ConstantSchedule::new(8));
+            o.set_controller(Box::new(ConstantSchedule::new(8)));
             let rec = eng.run(models, data, o);
             assert!(!rec.diverged, "{} engine diverged", eng.name());
             assert!(rec.total_rounds > 0);
@@ -392,15 +397,15 @@ mod tests {
 
             let (mut models, mut data) = quad_workers(m, 0.3);
             let mut o = opts(m, n);
-            o.scheduler = Box::new(FixedH::new(4));
-            o.controller = Box::new(ConstantSchedule::new(16));
+            o.set_scheduler(Box::new(FixedH::new(4)));
+            o.set_controller(Box::new(ConstantSchedule::new(16)));
             o.compression = spec.clone();
             let seq = run_local_sgd(&mut models, &mut data, o);
 
             let (models, data) = quad_workers(m, 0.3);
             let mut o = opts(m, n);
-            o.scheduler = Box::new(FixedH::new(4));
-            o.controller = Box::new(ConstantSchedule::new(16));
+            o.set_scheduler(Box::new(FixedH::new(4)));
+            o.set_controller(Box::new(ConstantSchedule::new(16)));
             o.compression = spec.clone();
             let clu = ClusterEngine::new(m).run(models, data, o);
 
@@ -420,6 +425,76 @@ mod tests {
         }
     }
 
+    /// The tentpole cross-engine anchor: a composite policy that moves batch
+    /// size, sync interval, AND compression from one decision stream produces
+    /// bit-for-bit identical runs on both engines — the compression-switch
+    /// convention (rebuild compressor, reset error feedback) is shared, so
+    /// the decision streams and the bytes they move never fork.
+    #[test]
+    fn policy_driven_cluster_matches_sequential_engine() {
+        use crate::policy::PaperPolicy;
+        let policy = || {
+            Box::new(PaperPolicy::new(0.8, 8, 512, 2, 8, 0.05, 4.0, None))
+                as Box<dyn crate::policy::AdaptivePolicy>
+        };
+        let n = 60_000;
+        let m = 4;
+
+        let (mut models, mut data) = quad_workers(m, 1.0);
+        let mut o = opts(m, n);
+        o.policy = policy();
+        let seq = run_local_sgd(&mut models, &mut data, o);
+
+        let (models, data) = quad_workers(m, 1.0);
+        let mut o = opts(m, n);
+        o.policy = policy();
+        let clu = ClusterEngine::new(m).run(models, data, o);
+
+        assert_eq!(seq.policy_trace, clu.policy_trace, "decision streams diverged");
+        assert_eq!(seq.batch_trace, clu.batch_trace);
+        assert_eq!(seq.comm, clu.comm, "comm accounting diverged");
+        assert_eq!(seq.points.len(), clu.points.len());
+        for (a, b) in seq.points.iter().zip(&clu.points) {
+            assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits(), "val loss not bit-equal");
+            assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits(), "sim time not bit-equal");
+        }
+        // and the run actually exercised a switch (otherwise this test would
+        // silently degrade to the static-compression case)
+        assert!(
+            seq.policy_trace.iter().any(|p| p.switched),
+            "no compression switch happened"
+        );
+        assert!(seq.comm.wire_bytes < seq.comm.bytes_moved);
+    }
+
+    /// A policy-driven compression switch composes with warmup (frozen
+    /// rounds), elastic joins (the joiner is caught up with the current
+    /// spec at admission), and dropouts.
+    #[test]
+    fn policy_switch_composes_with_elastic_membership() {
+        use crate::policy::PaperPolicy;
+        let (models, data) = quad_workers(4, 1.0);
+        let mut o = opts(4, 40_000);
+        o.policy = Box::new(PaperPolicy::new(0.8, 8, 512, 2, 4, 0.05, 4.0, None));
+        let mut eng = ClusterEngine::new(4);
+        eng.warmup_rounds = 2;
+        eng.workers[3].join_round = 4; // joins after switches may have begun
+        eng.workers[1].faults.push(FaultSpec::Dropout { round: 5 });
+        let rec = eng.run(models, data, o);
+        assert!(!rec.diverged);
+        assert_eq!(rec.worker_stats[3].joined_round, 4);
+        assert_eq!(rec.worker_stats[1].dropped_rounds, 1);
+        // warmup rounds are frozen: no decisions recorded for them
+        assert_eq!(
+            rec.policy_trace.len() as u64,
+            rec.total_rounds - 2,
+            "warmup rounds must not consult the policy"
+        );
+        let first = rec.points.first().unwrap().val_loss;
+        let last = rec.points.last().unwrap().val_loss;
+        assert!(last < first, "no convergence under policy + elasticity: {first} -> {last}");
+    }
+
     /// Compression composes with the fault/elastic machinery: a top-k + EF
     /// run under dropouts and a late joiner still converges and reports wire
     /// savings.
@@ -428,8 +503,8 @@ mod tests {
         use crate::comm::{CompressMethod, CompressionSpec};
         let (models, data) = quad_workers(4, 0.1);
         let mut o = opts(4, 20_000);
-        o.controller = Box::new(ConstantSchedule::new(16));
-        o.scheduler = Box::new(FixedH::new(4));
+        o.set_controller(Box::new(ConstantSchedule::new(16)));
+        o.set_scheduler(Box::new(FixedH::new(4)));
         o.compression = CompressionSpec {
             method: CompressMethod::TopK { k_frac: 0.25 },
             error_feedback: true,

@@ -38,7 +38,7 @@ pub(crate) fn spawn_worker(
             if out.send(FromWorker::Hello { worker: id, dim, micro_batch }).is_err() {
                 return; // coordinator already gone
             }
-            let compressor = compression.build();
+            let mut compressor = compression.build();
             let mut ef = compression.error_feedback.then(|| ErrorFeedback::new(dim));
             let mut params = vec![0.0f32; dim];
             // The consensus this worker last applied — the payload reference
@@ -52,6 +52,12 @@ pub(crate) fn spawn_worker(
                         assert_eq!(payload.dim(), dim, "worker {id}: bad payload dim");
                         payload.decode_into(&reference, &mut params);
                         reference.copy_from_slice(&params);
+                    }
+                    ToWorker::SetCompression { spec } => {
+                        // Policy-driven switch: new codec, clean residual (the
+                        // convention shared with the sequential engine).
+                        compressor = spec.build();
+                        ef = spec.error_feedback.then(|| ErrorFeedback::new(dim));
                     }
                     ToWorker::RunRound { round, h, b_eff, lrs } => {
                         assert_eq!(lrs.len(), h as usize, "worker {id}: lrs/h mismatch");

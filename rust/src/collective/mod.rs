@@ -101,7 +101,14 @@ impl CommCounters {
     }
 
     /// logical / wire — how many times smaller the wire traffic is than the
-    /// dense equivalent (1.0 for uncompressed runs; 1.0 when nothing moved).
+    /// dense equivalent (1.0 for uncompressed runs).
+    ///
+    /// **Zero-bytes convention** (pinned by `fresh_counters_report_neutral_ratios`):
+    /// counters that have not moved any bytes — fresh counters before the
+    /// first sync, or single-worker runs where every charge is 0 — report the
+    /// *neutral* ratio 1.0, never NaN/∞, so dashboards and sweep tables can
+    /// divide blindly. Both guards key off their own denominator, so the pair
+    /// stays reciprocal exactly when bytes actually moved.
     pub fn compression_ratio(&self) -> f64 {
         if self.wire_bytes == 0 {
             1.0
@@ -110,8 +117,9 @@ impl CommCounters {
         }
     }
 
-    /// wire / logical — the fraction of dense bytes actually transmitted
-    /// (the acceptance metric "wire-byte ratio"; 1.0 when nothing moved).
+    /// wire / logical — the fraction of dense bytes actually transmitted (the
+    /// acceptance metric "wire-byte ratio"; 1.0 when nothing moved — see the
+    /// zero-bytes convention on [`CommCounters::compression_ratio`]).
     pub fn wire_fraction(&self) -> f64 {
         if self.bytes_moved == 0 {
             1.0
@@ -296,6 +304,38 @@ mod tests {
                 assert_eq!(plain, comp, "m={m} elems={elems}");
             }
         }
+    }
+
+    /// Satellite: the pinned zero-bytes convention. Fresh counters (no sync
+    /// has happened yet) and single-worker counters (every charge is 0 bytes)
+    /// must report the NEUTRAL ratio 1.0 from both quotients — never NaN or
+    /// ±∞ — and the two quotients must stay exact reciprocals once bytes move.
+    #[test]
+    fn fresh_counters_report_neutral_ratios() {
+        let fresh = CommCounters::default();
+        assert_eq!(fresh.bytes_moved, 0);
+        assert_eq!(fresh.wire_bytes, 0);
+        assert_eq!(fresh.compression_ratio(), 1.0, "fresh ratio must be neutral");
+        assert_eq!(fresh.wire_fraction(), 1.0, "fresh fraction must be neutral");
+        assert!(fresh.compression_ratio().is_finite());
+
+        // single worker: charges happen (calls/rounds advance) but move 0 bytes
+        let mut solo = CommCounters::default();
+        solo.charge_allreduce(1 << 20, 1);
+        solo.charge_compressed_allreduce(1 << 20, 1, 4 << 20, 4 << 20);
+        assert_eq!(solo.allreduce_calls, 2);
+        assert_eq!(solo.bytes_moved, 0);
+        assert_eq!(solo.compression_ratio(), 1.0);
+        assert_eq!(solo.wire_fraction(), 1.0);
+
+        // once bytes move, the quotients are exact reciprocals
+        let mut real = CommCounters::default();
+        real.charge_compressed_allreduce(1000, 4, 4 * 1000, 1000);
+        assert!(real.wire_bytes > 0);
+        let (r, f) = (real.compression_ratio(), real.wire_fraction());
+        assert_eq!(r, 4.0);
+        assert_eq!(f, 0.25);
+        assert_eq!(r * f, 1.0);
     }
 
     #[test]

@@ -133,6 +133,27 @@ impl CompressionSpec {
         }
     }
 
+    /// The shorthand string [`CompressionSpec::parse`] reads back to exactly
+    /// this spec (unlike [`CompressionSpec::label`], whose compact form drops
+    /// the `:` separator). Used to serialize compression ladders in policy
+    /// configs.
+    pub fn shorthand(&self) -> String {
+        let suffix = if self.is_dense() {
+            ""
+        } else if self.error_feedback {
+            "+ef"
+        } else {
+            "-ef"
+        };
+        let base = match &self.method {
+            CompressMethod::Identity => "identity".to_string(),
+            CompressMethod::QuantizeInt8 { chunk } => format!("int8:{chunk}"),
+            CompressMethod::SignSgd => "signsgd".to_string(),
+            CompressMethod::TopK { k_frac } => format!("topk:{k_frac}"),
+        };
+        format!("{base}{suffix}")
+    }
+
     /// Parse a CLI shorthand: `method[:param][+ef|-ef]`, where `param` is the
     /// chunk size for `int8` and the top fraction for `topk`. Lossy methods
     /// default to error feedback ON (the configuration that converges);
@@ -359,6 +380,27 @@ mod tests {
         for b in bad {
             let j = Json::parse(b).unwrap();
             assert!(CompressionSpec::from_json(&j).is_err(), "accepted malformed {b}");
+        }
+    }
+
+    #[test]
+    fn shorthand_roundtrips_through_parse() {
+        let specs = [
+            CompressionSpec::identity(),
+            CompressionSpec {
+                method: CompressMethod::QuantizeInt8 { chunk: 64 },
+                error_feedback: true,
+            },
+            CompressionSpec { method: CompressMethod::SignSgd, error_feedback: false },
+            CompressionSpec {
+                method: CompressMethod::TopK { k_frac: 0.0625 },
+                error_feedback: true,
+            },
+        ];
+        for s in specs {
+            let text = s.shorthand();
+            let back = CompressionSpec::parse(&text).unwrap();
+            assert_eq!(s, back, "shorthand '{text}' did not roundtrip");
         }
     }
 

@@ -13,6 +13,7 @@ use crate::batch::{
 use crate::comm::CompressionSpec;
 use crate::engine::{FixedH, PostLocal, Qsr, SyncScheduler};
 use crate::optim::{LrSchedule, OptimKind, OptimParams};
+use crate::policy::{AdaptivePolicy, PolicySpec};
 use crate::util::json::Json;
 
 #[derive(Debug, Clone, PartialEq)]
@@ -131,8 +132,18 @@ pub struct RunConfig {
     pub label: String,
     pub model: ModelSpec,
     pub data: DataSpec,
+    /// Legacy batch-size section. Ignored when `policy` is set (the JSON
+    /// parser rejects configs carrying both surfaces).
     pub strategy: BatchStrategy,
+    /// Legacy sync-interval section. Ignored when `policy` is set.
     pub sync: SyncSpec,
+    /// The unified adaptation surface: when set, one [`PolicySpec`] owns
+    /// batch size, sync interval, and (for compression-managing policies)
+    /// the wire format; `strategy`/`sync` must then be absent from the JSON.
+    /// `None` = legacy configs, which build a
+    /// [`crate::policy::LegacyPolicy`] from `strategy` + `sync` — bit-for-bit
+    /// the pre-policy behavior.
+    pub policy: Option<PolicySpec>,
     pub optim_kind: OptimKind,
     pub lr_peak: f64,
     pub lr_base: f64,
@@ -151,6 +162,32 @@ pub struct RunConfig {
 }
 
 impl RunConfig {
+    /// Placeholder legacy sections carried by policy-driven configs. Never
+    /// consulted: [`RunConfig::build_policy`] takes the policy path and
+    /// [`RunConfig::lr_schedule`] skips the constant-batch scaling rule when a
+    /// policy is set.
+    fn legacy_placeholders() -> (BatchStrategy, SyncSpec) {
+        (BatchStrategy::Constant { b: 1 }, SyncSpec::FixedH { h: 1 })
+    }
+
+    /// Build the run's single adaptation surface: the `policy` section when
+    /// present, otherwise the legacy `strategy` + `sync` pair lifted through
+    /// [`crate::policy::LegacyPolicy`] (bit-for-bit the pre-policy engines).
+    pub fn build_policy(&self) -> Box<dyn AdaptivePolicy> {
+        match &self.policy {
+            Some(p) => p.build(),
+            None => crate::policy::legacy(self.strategy.build(), self.sync.build()),
+        }
+    }
+
+    /// Label of the adaptation surface (tables / artifact names).
+    pub fn adaptation_label(&self) -> String {
+        match &self.policy {
+            Some(p) => p.label(),
+            None => self.strategy.label(),
+        }
+    }
+
     pub fn lr_schedule(&self) -> LrSchedule {
         let s = LrSchedule::paper_default(
             self.lr_peak,
@@ -159,7 +196,7 @@ impl RunConfig {
             self.warmup_frac,
         );
         match (&self.strategy, self.lr_scaling_base_batch) {
-            (BatchStrategy::Constant { b }, Some(base)) => {
+            (BatchStrategy::Constant { b }, Some(base)) if self.policy.is_none() => {
                 s.linear_scaled(*b * self.m_workers as u64, base)
             }
             _ => s,
@@ -234,7 +271,9 @@ impl RunConfig {
             ]),
             DataSpec::Synthetic => Json::obj(vec![("type", Json::str("synthetic"))]),
         };
-        let strategy = match &self.strategy {
+        // Lazy: policy-driven configs omit the legacy sections entirely, so
+        // their JSON is only built on the legacy path.
+        let strategy_json = || match &self.strategy {
             BatchStrategy::Constant { b } => Json::obj(vec![
                 ("type", Json::str("constant")),
                 ("b", Json::num(*b as f64)),
@@ -279,7 +318,7 @@ impl RunConfig {
                 ("every_samples", Json::num(*every_samples as f64)),
             ]),
         };
-        let sync = match &self.sync {
+        let sync_json = || match &self.sync {
             SyncSpec::FixedH { h } => Json::obj(vec![
                 ("type", Json::str("fixed")),
                 ("h", Json::num(*h as f64)),
@@ -296,12 +335,22 @@ impl RunConfig {
                 ("c", Json::num(*c)),
             ]),
         };
-        Json::obj(vec![
+        let mut pairs = vec![
             ("label", Json::str(&self.label)),
             ("model", model),
             ("data", data),
-            ("strategy", strategy),
-            ("sync", sync),
+        ];
+        // One adaptation surface per config: the unified `policy` section OR
+        // the legacy `strategy` + `sync` pair, never both (the parser rejects
+        // the combination).
+        match &self.policy {
+            Some(p) => pairs.push(("policy", p.to_json())),
+            None => {
+                pairs.push(("strategy", strategy_json()));
+                pairs.push(("sync", sync_json()));
+            }
+        }
+        pairs.extend(vec![
             ("optim", Json::str(self.optim_kind.name())),
             ("lr_peak", Json::num(self.lr_peak)),
             ("lr_base", Json::num(self.lr_base)),
@@ -323,7 +372,8 @@ impl RunConfig {
             ),
             ("weight_decay", Json::num(self.weight_decay)),
             ("momentum", Json::num(self.momentum)),
-        ])
+        ]);
+        Json::obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> Result<RunConfig, String> {
@@ -387,63 +437,87 @@ impl RunConfig {
             other => return Err(format!("unknown data type {other:?}")),
         };
 
-        let sj = j.get("strategy");
-        let strategy = match sj.get("type").as_str() {
-            Some("constant") => BatchStrategy::Constant { b: get_u64(sj, "b")? },
-            Some("norm_test") => BatchStrategy::NormTest {
-                eta: get_f64(sj, "eta")?,
-                b0: get_u64(sj, "b0")?,
-                b_max: get_u64(sj, "b_max")?,
-            },
-            Some("exact_norm_test") => BatchStrategy::ExactNormTest {
-                eta: get_f64(sj, "eta")?,
-                b0: get_u64(sj, "b0")?,
-                b_max: get_u64(sj, "b_max")?,
-            },
-            Some("inner_product") => BatchStrategy::InnerProduct {
-                theta: get_f64(sj, "theta")?,
-                nu: sj.get("nu").as_f64(),
-                b0: get_u64(sj, "b0")?,
-                b_max: get_u64(sj, "b_max")?,
-            },
-            Some("staged") => BatchStrategy::Staged {
-                b0: get_u64(sj, "b0")?,
-                stages: sj
-                    .get("stages")
-                    .as_arr()
-                    .ok_or("stages")?
-                    .iter()
-                    .map(|p| {
-                        let a = p.as_arr().ok_or("stage pair")?;
-                        Ok((
-                            a[0].as_u64().ok_or("stage samples")?,
-                            a[1].as_u64().ok_or("stage batch")?,
-                        ))
-                    })
-                    .collect::<Result<_, String>>()?,
-            },
-            Some("geometric") => BatchStrategy::Geometric {
-                b0: get_u64(sj, "b0")?,
-                b_max: get_u64(sj, "b_max")?,
-                growth: get_f64(sj, "growth")?,
-                every_samples: get_u64(sj, "every_samples")?,
-            },
-            other => return Err(format!("unknown strategy type {other:?}")),
+        // One adaptation surface per config: a `policy` section next to the
+        // legacy `strategy`/`sync` sections is an ambiguity, not a merge.
+        let policy = match j.get("policy") {
+            Json::Null => None,
+            pj => {
+                for legacy_key in ["strategy", "sync"] {
+                    if !j.get(legacy_key).is_null() {
+                        return Err(format!(
+                            "config has both a `policy` section and the legacy `{legacy_key}` \
+                             section — the unified policy owns batch size and sync interval; \
+                             delete `strategy` and `sync` (or drop `policy` to keep the legacy \
+                             surfaces)"
+                        ));
+                    }
+                }
+                Some(PolicySpec::from_json(pj)?)
+            }
         };
 
-        let yj = j.get("sync");
-        let sync = match yj.get("type").as_str() {
-            Some("fixed") => SyncSpec::FixedH { h: get_u64(yj, "h")? as u32 },
-            Some("post_local") => SyncSpec::PostLocal {
-                h_after: get_u64(yj, "h_after")? as u32,
-                switch_samples: get_u64(yj, "switch_samples")?,
-            },
-            Some("qsr") => SyncSpec::Qsr {
-                h_base: get_u64(yj, "h_base")? as u32,
-                h_max: get_u64(yj, "h_max")? as u32,
-                c: get_f64(yj, "c")?,
-            },
-            other => return Err(format!("unknown sync type {other:?}")),
+        let (strategy, sync) = if policy.is_some() {
+            Self::legacy_placeholders()
+        } else {
+            let sj = j.get("strategy");
+            let strategy = match sj.get("type").as_str() {
+                Some("constant") => BatchStrategy::Constant { b: get_u64(sj, "b")? },
+                Some("norm_test") => BatchStrategy::NormTest {
+                    eta: get_f64(sj, "eta")?,
+                    b0: get_u64(sj, "b0")?,
+                    b_max: get_u64(sj, "b_max")?,
+                },
+                Some("exact_norm_test") => BatchStrategy::ExactNormTest {
+                    eta: get_f64(sj, "eta")?,
+                    b0: get_u64(sj, "b0")?,
+                    b_max: get_u64(sj, "b_max")?,
+                },
+                Some("inner_product") => BatchStrategy::InnerProduct {
+                    theta: get_f64(sj, "theta")?,
+                    nu: sj.get("nu").as_f64(),
+                    b0: get_u64(sj, "b0")?,
+                    b_max: get_u64(sj, "b_max")?,
+                },
+                Some("staged") => BatchStrategy::Staged {
+                    b0: get_u64(sj, "b0")?,
+                    stages: sj
+                        .get("stages")
+                        .as_arr()
+                        .ok_or("stages")?
+                        .iter()
+                        .map(|p| {
+                            let a = p.as_arr().ok_or("stage pair")?;
+                            Ok((
+                                a[0].as_u64().ok_or("stage samples")?,
+                                a[1].as_u64().ok_or("stage batch")?,
+                            ))
+                        })
+                        .collect::<Result<_, String>>()?,
+                },
+                Some("geometric") => BatchStrategy::Geometric {
+                    b0: get_u64(sj, "b0")?,
+                    b_max: get_u64(sj, "b_max")?,
+                    growth: get_f64(sj, "growth")?,
+                    every_samples: get_u64(sj, "every_samples")?,
+                },
+                other => return Err(format!("unknown strategy type {other:?}")),
+            };
+
+            let yj = j.get("sync");
+            let sync = match yj.get("type").as_str() {
+                Some("fixed") => SyncSpec::FixedH { h: get_u64(yj, "h")? as u32 },
+                Some("post_local") => SyncSpec::PostLocal {
+                    h_after: get_u64(yj, "h_after")? as u32,
+                    switch_samples: get_u64(yj, "switch_samples")?,
+                },
+                Some("qsr") => SyncSpec::Qsr {
+                    h_base: get_u64(yj, "h_base")? as u32,
+                    h_max: get_u64(yj, "h_max")? as u32,
+                    c: get_f64(yj, "c")?,
+                },
+                other => return Err(format!("unknown sync type {other:?}")),
+            };
+            (strategy, sync)
         };
 
         Ok(RunConfig {
@@ -452,6 +526,7 @@ impl RunConfig {
             data,
             strategy,
             sync,
+            policy,
             optim_kind: OptimKind::parse(j.get("optim").as_str().unwrap_or("sgd"))
                 .ok_or("bad optim")?,
             lr_peak: get_f64(j, "lr_peak")?,
@@ -483,6 +558,12 @@ impl RunConfig {
         }
         if self.warmup_frac < 0.0 || self.warmup_frac >= 1.0 {
             errs.push("warmup_frac must be in [0,1)".into());
+        }
+        if let Some(p) = &self.policy {
+            errs.extend(p.validate());
+            if p.b_max() > self.b_max_local {
+                errs.push("policy b_max exceeds engine b_max_local".into());
+            }
         }
         match &self.strategy {
             BatchStrategy::NormTest { eta, b0, b_max }
@@ -527,6 +608,7 @@ impl Default for RunConfig {
             },
             strategy: BatchStrategy::NormTest { eta: 0.8, b0: 32, b_max: 4096 },
             sync: SyncSpec::FixedH { h: 16 },
+            policy: None,
             optim_kind: OptimKind::Shb,
             lr_peak: 0.05,
             lr_base: 0.005,
@@ -813,6 +895,17 @@ impl ScenarioSpec {
                  sequential engine)"
                     .into(),
             );
+        }
+        if let Some(p) = &self.run.policy {
+            if p.controls_compression() && !self.compression.is_dense() {
+                errs.push(format!(
+                    "scenario sets a static `compression` section ({}) but the `{}` policy \
+                     schedules compression itself — two owners for one knob; delete the \
+                     scenario-level compression section",
+                    self.compression.label(),
+                    p.label(),
+                ));
+            }
         }
         for (i, w) in self.workers.iter().enumerate() {
             if !(w.speed > 0.0) {
@@ -1158,6 +1251,122 @@ mod tests {
         };
         assert!(hom.is_homogeneous());
         assert!(hom.validate().is_empty());
+    }
+
+    fn policy_cfg() -> RunConfig {
+        let mut c = RunConfig::default();
+        c.policy = Some(crate::policy::PolicySpec::Paper {
+            eta: 0.8,
+            b0: 8,
+            b_max: 256,
+            h_base: 4,
+            h_max: 16,
+            qsr_c: 0.32,
+            compress_growth: 4.0,
+            ladder: None,
+        });
+        let (strategy, sync) = RunConfig::legacy_placeholders();
+        c.strategy = strategy;
+        c.sync = sync;
+        c.b_max_local = 1024;
+        c
+    }
+
+    #[test]
+    fn policy_config_roundtrips_and_omits_legacy_sections() {
+        let c = policy_cfg();
+        assert!(c.validate().is_empty(), "{:?}", c.validate());
+        let j = c.to_json();
+        let text = j.to_string();
+        assert!(!text.contains("\"strategy\""), "policy configs must omit strategy: {text}");
+        assert!(!text.contains("\"sync\""), "policy configs must omit sync: {text}");
+        assert!(text.contains("\"policy\""));
+        let c2 = RunConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn legacy_plus_policy_sections_conflict() {
+        // take a valid legacy config and bolt a policy section on top
+        let legacy = RunConfig::default().to_json();
+        let mut j = legacy;
+        if let Json::Obj(o) = &mut j {
+            o.insert("policy".into(), policy_cfg().policy.unwrap().to_json());
+        }
+        let err = RunConfig::from_json(&Json::parse(&j.to_string()).unwrap());
+        assert!(err.is_err(), "strategy+sync+policy must not parse");
+        let msg = err.unwrap_err();
+        assert!(
+            msg.contains("policy") && msg.contains("strategy"),
+            "conflict error must name both surfaces: {msg}"
+        );
+        assert!(
+            msg.contains("delete"),
+            "conflict error must say how to fix it: {msg}"
+        );
+    }
+
+    #[test]
+    fn policy_unknown_key_and_h_bounds_error_through_runconfig() {
+        let base = policy_cfg().to_json().to_string();
+        // unknown key inside the policy section
+        let bad = base.replacen("\"qsr_c\":0.32", "\"qsr_c\":0.32,\"qzr_d\":1", 1);
+        assert!(bad.contains("qzr_d"), "corruption failed: {bad}");
+        let err = RunConfig::from_json(&Json::parse(&bad).unwrap()).unwrap_err();
+        assert!(err.contains("unknown key 'qzr_d'"), "{err}");
+        // out-of-range H bounds
+        let bad = base.replacen("\"h_max\":16", "\"h_max\":2", 1);
+        let err = RunConfig::from_json(&Json::parse(&bad).unwrap()).unwrap_err();
+        assert!(err.contains("h_base") && err.contains("h_max"), "{err}");
+    }
+
+    #[test]
+    fn policy_b_max_checked_against_engine_cap() {
+        let mut c = policy_cfg();
+        c.b_max_local = 64; // policy b_max 256 exceeds it
+        assert!(
+            c.validate().iter().any(|e| e.contains("b_max_local")),
+            "{:?}",
+            c.validate()
+        );
+    }
+
+    #[test]
+    fn policy_config_builds_policy_and_skips_lr_scaling() {
+        let mut c = policy_cfg();
+        assert_eq!(c.build_policy().b0(), 8);
+        assert!(c.adaptation_label().starts_with("paper"));
+        // the constant-batch lr scaling rule must not fire off the placeholder
+        c.lr_scaling_base_batch = Some(1);
+        match c.lr_schedule() {
+            LrSchedule::WarmupCosine { peak, .. } => {
+                assert!((peak - c.lr_peak).abs() < 1e-12, "placeholder scaled the lr")
+            }
+            other => panic!("unexpected schedule {other:?}"),
+        }
+        // legacy configs still build the lifted pair
+        let legacy = RunConfig::default();
+        assert_eq!(legacy.build_policy().b0(), 32);
+        assert_eq!(legacy.adaptation_label(), "eta0.8");
+    }
+
+    #[test]
+    fn scenario_rejects_policy_plus_static_compression() {
+        let mut s = scenario_fixture();
+        s.run = policy_cfg();
+        s.run.m_workers = 3;
+        s.compression = CompressionSpec {
+            method: crate::comm::CompressMethod::TopK { k_frac: 0.125 },
+            error_feedback: true,
+        };
+        let errs = s.validate();
+        assert!(
+            errs.iter().any(|e| e.contains("two owners")),
+            "policy + static compression must be rejected: {errs:?}"
+        );
+        // identity static compression is fine (the policy overrides it)
+        s.compression = CompressionSpec::identity();
+        assert!(s.validate().is_empty(), "{:?}", s.validate());
     }
 
     #[test]

@@ -1,36 +1,44 @@
 //! The Local SGD engine — Algorithm A.2 of the paper, generalized over model,
-//! dataset, optimizer, batch-size controller, and sync scheduler.
+//! dataset, optimizer, and the unified adaptive policy.
 //!
 //! One communication round k:
 //!   1. each worker m runs H local steps: sample B^m of size b_k, compute the
 //!      batch gradient, inner-optimizer update with lr α(B) (sample-indexed);
 //!   2. all-reduce **average the model parameters** (eq. 3) and, when the
-//!      controller requires it, the workers' last batch gradients ḡ (the one
+//!      policy requires it, the workers' last batch gradients ḡ (the one
 //!      extra all-reduce of §4.3);
-//!   3. evaluate the norm-test statistics and ask the controller for b_{k+1};
+//!   3. assemble the round's [`RoundSignals`] (norm-test statistics plus wire
+//!      bytes and simulated times) and ask the [`AdaptivePolicy`] for the next
+//!      round's (b, H, compression) in one [`crate::policy::PolicyDecision`];
 //!   4. advance the processed-samples counter B += H·M·b_k; stop when B ≥ N.
 //!
 //! Workers execute sequentially in-process (deterministic); the *simulated*
 //! wall-clock ([`crate::sim::TimeModel`]) charges them as parallel devices with
 //! a straggler max, which is what the tables report.
+//!
+//! A decision that changes compression takes effect at the NEXT round's sync:
+//! the compressor is rebuilt on every endpoint and all error-feedback
+//! residuals reset to zero (the pinned switch convention — a new codec starts
+//! from a clean residual).
 
-use crate::batch::{BatchSizeController, SyncEvent};
 use crate::collective::{
     allreduce_mean_serial, allreduce_mean_threaded, mean_reduce_into, CommCounters,
 };
 use crate::comm::{CompressionSpec, ErrorFeedback, Payload};
 use crate::data::Dataset;
-use crate::engine::sync::SyncScheduler;
-use crate::metrics::{EvalPoint, RunRecord};
+use crate::metrics::{EvalPoint, PolicyPoint, RunRecord};
 use crate::model::GradModel;
 use crate::optim::{LrSchedule, OptimParams};
+use crate::policy::{AdaptivePolicy, RoundSignals};
 use crate::sim::TimeModel;
 use crate::tensor;
 use crate::util::rng::Pcg64;
 
 pub struct EngineOpts {
-    pub scheduler: Box<dyn SyncScheduler>,
-    pub controller: Box<dyn BatchSizeController>,
+    /// The single adaptation surface: batch size, sync interval, and
+    /// compression all flow through one [`AdaptivePolicy`]. Legacy
+    /// controller + scheduler pairs lift via [`crate::policy::legacy`].
+    pub policy: Box<dyn AdaptivePolicy>,
     pub optim: OptimParams,
     pub lr: LrSchedule,
     /// Total training budget N in samples (global, across workers). Must be
@@ -43,7 +51,7 @@ pub struct EngineOpts {
     /// [`EngineOpts::quick_defaults`]).
     pub eval_every_samples: u64,
     /// Hard cap on the local batch size (device memory; engine-level guard in
-    /// addition to the controller's own cap).
+    /// addition to the policy's own cap).
     pub b_max_local: u64,
     pub seed: u64,
     pub time_model: TimeModel,
@@ -54,8 +62,10 @@ pub struct EngineOpts {
     /// large d; serial reference otherwise). Only honored for dense (identity)
     /// compression — lossy methods go through the payload sync path.
     pub threaded_allreduce: bool,
-    /// Sync-payload compression (method + error feedback); the identity
-    /// default is bit-for-bit the uncompressed sync. See [`crate::comm`].
+    /// Initial sync-payload compression (method + error feedback); the
+    /// identity default is bit-for-bit the uncompressed sync. A policy that
+    /// manages compression overrides this via
+    /// [`AdaptivePolicy::initial_compression`] and its per-sync decisions.
     pub compression: CompressionSpec,
 }
 
@@ -70,8 +80,10 @@ impl EngineOpts {
     pub fn quick_defaults(label: &str, total_samples: u64) -> Self {
         assert!(total_samples > 0, "total_samples must be positive");
         EngineOpts {
-            scheduler: Box::new(crate::engine::sync::FixedH::new(4)),
-            controller: Box::new(crate::batch::ConstantSchedule::new(32)),
+            policy: crate::policy::legacy(
+                Box::new(crate::batch::ConstantSchedule::new(32)),
+                Box::new(crate::engine::sync::FixedH::new(4)),
+            ),
             optim: OptimParams::plain_sgd(),
             lr: LrSchedule::Constant { lr: 0.05 },
             total_samples,
@@ -84,6 +96,23 @@ impl EngineOpts {
             threaded_allreduce: false,
             compression: CompressionSpec::identity(),
         }
+    }
+
+    /// Swap the batch-size controller half of a legacy policy (test/config
+    /// sugar; panics when the current policy is not a [`crate::policy::LegacyPolicy`]).
+    pub fn set_controller(&mut self, c: Box<dyn crate::batch::BatchSizeController>) {
+        self.policy
+            .as_legacy_mut()
+            .expect("set_controller requires a legacy (controller+scheduler) policy")
+            .controller = c;
+    }
+
+    /// Swap the sync-scheduler half of a legacy policy (test/config sugar).
+    pub fn set_scheduler(&mut self, s: Box<dyn crate::engine::sync::SyncScheduler>) {
+        self.policy
+            .as_legacy_mut()
+            .expect("set_scheduler requires a legacy (controller+scheduler) policy")
+            .scheduler = s;
     }
 }
 
@@ -117,19 +146,24 @@ pub fn run_local_sgd(
     // Compressed-sync state: the consensus parameters every worker holds after
     // the previous sync (the payload reference), one uplink error-feedback
     // buffer per worker, and one for the coordinator's downlink broadcast.
-    let compressor = opts.compression.build();
-    let dense_method = opts.compression.is_dense();
+    // The policy may replace the spec at any sync point; a switch rebuilds the
+    // compressor and resets every residual.
+    let mut comp_spec = opts
+        .policy
+        .initial_compression()
+        .unwrap_or_else(|| opts.compression.clone());
+    let mut compressor = comp_spec.build();
     let mut uplink_efs: Vec<Option<ErrorFeedback>> = (0..m)
-        .map(|_| opts.compression.error_feedback.then(|| ErrorFeedback::new(d)))
+        .map(|_| comp_spec.error_feedback.then(|| ErrorFeedback::new(d)))
         .collect();
-    let mut downlink_ef = opts.compression.error_feedback.then(|| ErrorFeedback::new(d));
+    let mut downlink_ef = comp_spec.error_feedback.then(|| ErrorFeedback::new(d));
     let mut consensus = x0;
 
     let mut rec = RunRecord {
         label: opts.label.clone(),
         ..Default::default()
     };
-    let mut b_local = opts.controller.b0().min(opts.b_max_local).max(1);
+    let mut b_local = opts.policy.b0().min(opts.b_max_local).max(1);
     let mut samples: u64 = 0;
     let mut steps: u64 = 0;
     let mut sim_time = 0f64;
@@ -142,12 +176,17 @@ pub fn run_local_sgd(
     let mut total_local_steps: f64 = 0.0;
     let mut last_losses = vec![0f64; m];
     let mut last_psv: Vec<Option<f64>> = vec![None; m];
-    let needs_grad_ar = opts.controller.needs_grad_allreduce();
+    let needs_grad_ar = opts.policy.needs_grad_allreduce();
+    // H decided at the previous sync (None before round 0: bootstrap).
+    let mut pending_h: Option<u32> = None;
 
     let mut round: u64 = 0;
     while samples < opts.total_samples && round < opts.max_rounds {
         let lr_now = opts.lr.at(samples);
-        let h = opts.scheduler.h_for_round(round, samples, lr_now);
+        let h = pending_h
+            .take()
+            .unwrap_or_else(|| opts.policy.h_bootstrap(round, samples, lr_now))
+            .max(1);
         // Quantize to the artifact micro-batch (gradient accumulation granularity).
         let b_eff = b_local.div_ceil(micro) * micro;
 
@@ -177,8 +216,10 @@ pub fn run_local_sgd(
         // in-place all-reduce — zero allocations on the hot path — which is
         // bit-for-bit what identity payloads would produce
         // (`identity_payload_sync_matches_serial_bitwise`).
+        let round_logical = CommCounters::ring_bytes(d, m);
+        let mut round_wire = round_logical;
         let mut wire_frac = 1.0f64;
-        if dense_method {
+        if comp_spec.is_dense() {
             {
                 let mut bufs: Vec<&mut [f32]> =
                     params.iter_mut().map(|p| p.as_mut_slice()).collect();
@@ -209,10 +250,9 @@ pub fn run_local_sgd(
             for p in params.iter_mut() {
                 p.copy_from_slice(&consensus);
             }
-            let logical = CommCounters::ring_bytes(d, m);
-            let wire = CommCounters::compressed_wire_bytes(m, uplink, down.wire_bytes());
-            if logical > 0 {
-                wire_frac = wire as f64 / logical as f64;
+            round_wire = CommCounters::compressed_wire_bytes(m, uplink, down.wire_bytes());
+            if round_logical > 0 {
+                wire_frac = round_wire as f64 / round_logical as f64;
             }
             rec.comm.charge_compressed_allreduce(d, m, uplink, down.wire_bytes());
         }
@@ -246,24 +286,62 @@ pub fn run_local_sgd(
             }
         };
 
-        let ev = SyncEvent {
+        // ---- simulated wall-clock ------------------------------------------
+        let round_compute_s = opts.time_model.round_compute_time(b_eff, h);
+        let sync_s = opts.time_model.sync_time_compressed(d, needs_grad_ar, wire_frac);
+        sim_time += round_compute_s;
+        sim_time += sync_s;
+
+        // ---- the joint policy decision -------------------------------------
+        let signals = RoundSignals {
             round,
             samples,
             b_local: b_eff,
+            h,
             m_workers: m,
+            active_workers: m,
             worker_scatter: scatter,
             gbar_norm_sq: nsq,
             per_sample_var: psv,
             mean_worker_norm_sq,
             inner_product_var: ip_var,
+            lr_next: opts.lr.at(samples),
+            wire_bytes: round_wire,
+            logical_bytes: round_logical,
+            compression: comp_spec.clone(),
+            round_compute_s,
+            sync_s,
         };
-        let decision = opts.controller.on_sync(&ev);
+        let decision = opts.policy.on_sync(&signals);
         b_local = decision.b_next.min(opts.b_max_local).max(1);
+        let h_next = decision.h_next.max(1);
+        pending_h = Some(h_next);
+        let mut switched = false;
+        if let Some(next_spec) = decision.compression {
+            if next_spec != comp_spec {
+                // Switch convention: rebuild the compressor and reset every
+                // error-feedback residual (both engines do exactly this, which
+                // keeps homogeneous runs bit-for-bit across engines).
+                comp_spec = next_spec;
+                compressor = comp_spec.build();
+                for ef in uplink_efs.iter_mut() {
+                    *ef = comp_spec.error_feedback.then(|| ErrorFeedback::new(d));
+                }
+                downlink_ef = comp_spec.error_feedback.then(|| ErrorFeedback::new(d));
+                switched = true;
+            }
+        }
         rec.batch_trace.push((round, samples, b_eff));
-
-        // ---- simulated wall-clock ------------------------------------------
-        sim_time += opts.time_model.round_compute_time(b_eff, h);
-        sim_time += opts.time_model.sync_time_compressed(d, needs_grad_ar, wire_frac);
+        rec.policy_trace.push(PolicyPoint {
+            round,
+            samples,
+            b_next: b_local,
+            h_next,
+            compression: comp_spec.label(),
+            switched,
+            test_violated: decision.test_violated,
+            wire_frac,
+        });
 
         // ---- evaluation ------------------------------------------------------
         if samples >= next_eval || samples >= opts.total_samples {
@@ -313,6 +391,7 @@ mod tests {
     use crate::engine::sync::FixedH;
     use crate::model::convex::Quadratic;
     use crate::model::logistic::Logistic;
+    use crate::policy::PaperPolicy;
 
     fn quad_workers(m: usize, noise: f64) -> (Vec<Box<dyn GradModel>>, Vec<Box<dyn Dataset>>) {
         // Shared problem (seed 100) — the homogeneous setting; only the
@@ -346,8 +425,8 @@ mod tests {
     fn quadratic_converges_under_local_sgd() {
         let (mut models, mut data) = quad_workers(4, 0.1);
         let mut o = opts(4, 40_000);
-        o.scheduler = Box::new(FixedH::new(8));
-        o.controller = Box::new(ConstantSchedule::new(16));
+        o.set_scheduler(Box::new(FixedH::new(8)));
+        o.set_controller(Box::new(ConstantSchedule::new(16)));
         let rec = run_local_sgd(&mut models, &mut data, o);
         assert!(!rec.diverged);
         let first = rec.points.first().unwrap().val_loss;
@@ -359,8 +438,8 @@ mod tests {
     fn sample_accounting_exact_for_constant() {
         let (mut models, mut data) = quad_workers(2, 0.0);
         let mut o = opts(2, 10_000);
-        o.scheduler = Box::new(FixedH::new(4));
-        o.controller = Box::new(ConstantSchedule::new(25));
+        o.set_scheduler(Box::new(FixedH::new(4)));
+        o.set_controller(Box::new(ConstantSchedule::new(25)));
         let rec = run_local_sgd(&mut models, &mut data, o);
         // each round: 4 steps * 2 workers * 25 = 200 samples
         assert_eq!(rec.total_samples % 200, 0);
@@ -373,8 +452,8 @@ mod tests {
     fn adaptive_batches_are_monotone() {
         let (mut models, mut data) = quad_workers(4, 1.0);
         let mut o = opts(4, 60_000);
-        o.scheduler = Box::new(FixedH::new(4));
-        o.controller = Box::new(ApproxNormTest::new(0.8, 8, 512));
+        o.set_scheduler(Box::new(FixedH::new(4)));
+        o.set_controller(Box::new(ApproxNormTest::new(0.8, 8, 512)));
         let rec = run_local_sgd(&mut models, &mut data, o);
         let mut prev = 0u64;
         for &(_, _, b) in &rec.batch_trace {
@@ -405,8 +484,8 @@ mod tests {
             .collect();
         let mut o = opts(m, 40_000);
         o.lr = LrSchedule::Constant { lr: 0.05 };
-        o.scheduler = Box::new(FixedH::new(4));
-        o.controller = Box::new(ExactNormTest::new(0.7, 4, 4096));
+        o.set_scheduler(Box::new(FixedH::new(4)));
+        o.set_controller(Box::new(ExactNormTest::new(0.7, 4, 4096)));
         let rec = run_local_sgd(&mut models, &mut data, o);
         let last_b = rec.batch_trace.last().unwrap().2;
         assert!(last_b > 4, "exact test never grew the batch");
@@ -414,17 +493,17 @@ mod tests {
     }
 
     #[test]
-    fn comm_accounting_matches_controller_needs() {
+    fn comm_accounting_matches_policy_needs() {
         let (mut models, mut data) = quad_workers(2, 0.1);
         let mut o = opts(2, 5_000);
-        o.controller = Box::new(ConstantSchedule::new(16));
+        o.set_controller(Box::new(ConstantSchedule::new(16)));
         let rec_const = run_local_sgd(&mut models, &mut data, o);
         // constant: exactly one all-reduce per round
         assert_eq!(rec_const.comm.allreduce_calls, rec_const.total_rounds);
 
         let (mut models, mut data) = quad_workers(2, 0.1);
         let mut o = opts(2, 5_000);
-        o.controller = Box::new(ApproxNormTest::new(0.9, 16, 64));
+        o.set_controller(Box::new(ApproxNormTest::new(0.9, 16, 64)));
         let rec_nt = run_local_sgd(&mut models, &mut data, o);
         // norm test: two all-reduces per round
         assert_eq!(rec_nt.comm.allreduce_calls, 2 * rec_nt.total_rounds);
@@ -436,8 +515,8 @@ mod tests {
         // identical after every round.
         let (mut models, mut data) = quad_workers(3, 0.2);
         let mut o = opts(3, 3_000);
-        o.scheduler = Box::new(FixedH::new(1));
-        o.controller = Box::new(ConstantSchedule::new(8));
+        o.set_scheduler(Box::new(FixedH::new(1)));
+        o.set_controller(Box::new(ConstantSchedule::new(8)));
         let rec = run_local_sgd(&mut models, &mut data, o);
         assert_eq!(rec.total_steps, rec.total_rounds);
         assert!(!rec.diverged);
@@ -448,7 +527,7 @@ mod tests {
         let (mut models, mut data) = quad_workers(4, 0.1);
         let mut o = opts(4, 8_000);
         o.threaded_allreduce = true;
-        o.controller = Box::new(ConstantSchedule::new(16));
+        o.set_controller(Box::new(ConstantSchedule::new(16)));
         let rec = run_local_sgd(&mut models, &mut data, o);
         assert!(!rec.diverged);
         assert!(rec.points.last().unwrap().val_loss.is_finite());
@@ -485,7 +564,7 @@ mod tests {
         let (mut models, mut data) = quad_workers(1, 0.0);
         let mut o = EngineOpts::quick_defaults("t", 5);
         o.time_model = TimeModel::paper_vision(Topology::homogeneous(1));
-        o.controller = Box::new(ConstantSchedule::new(1));
+        o.set_controller(Box::new(ConstantSchedule::new(1)));
         let rec = run_local_sgd(&mut models, &mut data, o);
         assert!(!rec.points.is_empty(), "tiny budget produced no eval points");
     }
@@ -503,8 +582,8 @@ mod tests {
         let run = |spec: crate::comm::CompressionSpec| {
             let (mut models, mut data) = quad_workers(4, 0.5);
             let mut o = opts(4, 20_000);
-            o.scheduler = Box::new(FixedH::new(4));
-            o.controller = Box::new(ApproxNormTest::new(0.8, 8, 256));
+            o.set_scheduler(Box::new(FixedH::new(4)));
+            o.set_controller(Box::new(ApproxNormTest::new(0.8, 8, 256)));
             o.compression = spec;
             run_local_sgd(&mut models, &mut data, o)
         };
@@ -515,6 +594,7 @@ mod tests {
         assert_eq!(base.comm.bytes_moved, base.comm.wire_bytes, "identity must be ratio 1");
         assert!(base.comm.bytes_moved > 0);
         assert_eq!(base.batch_trace, with_ef.batch_trace);
+        assert_eq!(base.policy_trace, with_ef.policy_trace);
         assert_eq!(base.points.len(), with_ef.points.len());
         for (a, b) in base.points.iter().zip(&with_ef.points) {
             assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits(), "loss not bit-equal");
@@ -534,8 +614,8 @@ mod tests {
             // compression effects, not stochastic noise floors.
             let (mut models, mut data) = quad_workers(4, 0.0);
             let mut o = opts(4, 40_000);
-            o.scheduler = Box::new(FixedH::new(8));
-            o.controller = Box::new(ConstantSchedule::new(16));
+            o.set_scheduler(Box::new(FixedH::new(8)));
+            o.set_controller(Box::new(ConstantSchedule::new(16)));
             o.compression = spec;
             run_local_sgd(&mut models, &mut data, o)
         };
@@ -581,8 +661,8 @@ mod tests {
         ] {
             let (mut models, mut data) = quad_workers(2, 0.0);
             let mut o = opts(2, 20_000);
-            o.scheduler = Box::new(FixedH::new(4));
-            o.controller = Box::new(ConstantSchedule::new(16));
+            o.set_scheduler(Box::new(FixedH::new(4)));
+            o.set_controller(Box::new(ConstantSchedule::new(16)));
             o.compression = compressed(method.clone(), true);
             let rec = run_local_sgd(&mut models, &mut data, o);
             assert!(!rec.diverged, "{method:?} diverged");
@@ -597,10 +677,91 @@ mod tests {
     fn sim_time_accumulates() {
         let (mut models, mut data) = quad_workers(2, 0.1);
         let mut o = opts(2, 5_000);
-        o.controller = Box::new(ConstantSchedule::new(16));
+        o.set_controller(Box::new(ConstantSchedule::new(16)));
         let rec = run_local_sgd(&mut models, &mut data, o);
         assert!(rec.sim_time_s > 0.0);
         let per_round = rec.sim_time_s / rec.total_rounds as f64;
         assert!(per_round > 0.0 && per_round.is_finite());
+    }
+
+    #[test]
+    fn policy_trace_records_every_live_sync() {
+        let (mut models, mut data) = quad_workers(2, 0.5);
+        let mut o = opts(2, 8_000);
+        o.set_controller(Box::new(ApproxNormTest::new(0.8, 8, 256)));
+        let rec = run_local_sgd(&mut models, &mut data, o);
+        assert_eq!(rec.policy_trace.len(), rec.total_rounds as usize);
+        assert_eq!(rec.policy_trace.len(), rec.batch_trace.len());
+        for p in &rec.policy_trace {
+            assert_eq!(p.h_next, 4, "FixedH(4) must pin every h_next");
+            assert_eq!(p.compression, "identity");
+            assert_eq!(p.wire_frac, 1.0);
+        }
+    }
+
+    /// THE tentpole behavior: a composite policy moves batch size, sync
+    /// interval, and compression from one decision stream — something the old
+    /// controller/scheduler/static-spec triple could not express.
+    #[test]
+    fn paper_policy_switches_all_three_knobs_mid_run() {
+        let (mut models, mut data) = quad_workers(4, 1.0);
+        let mut o = opts(4, 120_000);
+        // decaying lr so QSR actually moves H during the run
+        o.lr = LrSchedule::paper_default(0.05, 0.005, 120_000, 0.0);
+        o.policy = Box::new(PaperPolicy::new(0.8, 8, 1024, 2, 16, 0.2, 4.0, None));
+        let rec = run_local_sgd(&mut models, &mut data, o);
+        assert!(!rec.diverged);
+
+        // batch grew (norm test on noisy quadratics)
+        let bs: Vec<u64> = rec.batch_trace.iter().map(|&(_, _, b)| b).collect();
+        assert!(bs.last().unwrap() > bs.first().unwrap(), "batch never grew: {bs:?}");
+
+        // compression ladder engaged: at least one decision rebuilt the codec
+        // (the run starts on the dense rung) and the run ends lossy
+        assert!(
+            rec.policy_trace.iter().any(|p| p.switched),
+            "compression never switched"
+        );
+        assert_ne!(
+            rec.policy_trace.last().unwrap().compression,
+            "identity",
+            "ladder must leave the dense rung as the batch grows"
+        );
+        assert!(
+            rec.comm.wire_bytes < rec.comm.bytes_moved,
+            "mixed-compression run must save wire bytes overall"
+        );
+
+        // H moved too (QSR under the decaying lr)
+        let hs: Vec<u32> = rec.policy_trace.iter().map(|p| p.h_next).collect();
+        assert!(
+            hs.iter().max() > hs.iter().min(),
+            "H never moved under QSR: {hs:?}"
+        );
+    }
+
+    /// Mid-run compression switches are deterministic: the same seed replays
+    /// the same decision stream and the same bytes, bit for bit.
+    #[test]
+    fn policy_compression_switch_is_deterministic() {
+        let run = || {
+            let (mut models, mut data) = quad_workers(4, 1.0);
+            let mut o = opts(4, 60_000);
+            o.policy = Box::new(PaperPolicy::new(0.8, 8, 512, 4, 4, 0.2, 4.0, None));
+            run_local_sgd(&mut models, &mut data, o)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.policy_trace, b.policy_trace);
+        assert_eq!(a.comm, b.comm);
+        assert_eq!(a.batch_trace, b.batch_trace);
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.val_loss.to_bits(), y.val_loss.to_bits());
+        }
+        // and the switch actually happened in this configuration
+        assert!(
+            a.policy_trace.iter().any(|p| p.switched),
+            "expected a compression switch"
+        );
     }
 }

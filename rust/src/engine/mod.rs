@@ -9,9 +9,14 @@
 //! - [`crate::cluster::ClusterEngine`] — real OS-thread workers talking to an
 //!   elastic coordinator over channels, with per-worker fault injection.
 //!
-//! Batch-size controllers ([`crate::batch`]) and sync schedulers ([`sync`])
-//! plug into either engine unchanged; on a homogeneous no-fault scenario the
-//! two agree bit-for-bit (`cluster::tests::cluster_matches_sequential_engine`).
+//! Adaptation flows through ONE surface: an [`crate::policy::AdaptivePolicy`]
+//! decides batch size, sync interval H, and compression jointly at every sync
+//! point. Legacy batch-size controllers ([`crate::batch`]) and sync
+//! schedulers ([`sync`]) lift into that surface via
+//! [`crate::policy::LegacyPolicy`], bit for bit; either way the same policy
+//! plugs into both engines unchanged, and on a homogeneous no-fault scenario
+//! the two agree bit-for-bit
+//! (`cluster::tests::cluster_matches_sequential_engine`).
 
 pub mod local_sgd;
 pub mod sync;

@@ -10,7 +10,10 @@
 //!   growth exponent (H ∝ η^{-2/3} in their parameterization; we expose the
 //!   exponent).
 //!
-//! These drive the sync-scheduler ablation (AB3 in DESIGN.md §4).
+//! These drive the sync-scheduler ablation (AB3 in DESIGN.md §4). The engines
+//! consume schedulers only through the unified
+//! [`crate::policy::AdaptivePolicy`] surface ([`crate::policy::LegacyPolicy`]
+//! reproduces the legacy per-round `h_for_round` calls bit for bit).
 
 pub trait SyncScheduler: Send {
     /// Number of local steps for round `round` starting at `samples` processed,

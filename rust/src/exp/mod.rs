@@ -123,11 +123,13 @@ pub fn time_model(cfg: &RunConfig) -> TimeModel {
 }
 
 /// Assemble [`EngineOpts`] from a run config (homogeneous topology; the
-/// cluster runtime swaps in the scenario topology afterwards).
+/// cluster runtime swaps in the scenario topology afterwards). The
+/// adaptation surface is always a single policy: the config's `policy`
+/// section when present, otherwise the legacy `strategy` + `sync` pair
+/// lifted through [`crate::policy::LegacyPolicy`].
 pub fn engine_opts(cfg: &RunConfig) -> EngineOpts {
     EngineOpts {
-        scheduler: cfg.sync.build(),
-        controller: cfg.strategy.build(),
+        policy: cfg.build_policy(),
         optim: cfg.optim_params(),
         lr: cfg.lr_schedule(),
         total_samples: cfg.total_samples,

@@ -32,6 +32,9 @@ struct SweepRow {
     wire_frac: f64,
     ratio: f64,
     sim_time_s: f64,
+    /// Last EXECUTED local batch size (the paper's growth-curve endpoint,
+    /// matching `<label>.batch.csv`; 0 when the run executed no rounds).
+    b_final: u64,
     diverged: bool,
 }
 
@@ -55,6 +58,14 @@ pub fn compression_sweep(
     anyhow::ensure!(!methods.is_empty(), "sweep needs at least one compression method");
     anyhow::ensure!(!hs.is_empty(), "sweep needs at least one sync interval H");
     anyhow::ensure!(hs.iter().all(|&h| h >= 1), "sync interval H must be >= 1");
+    anyhow::ensure!(
+        spec.run.policy.is_none(),
+        "scenario '{}' uses a unified `policy` section, which owns H and (for \
+         compression-scheduling policies) the wire format — the compression x H grid would \
+         silently not apply; run it with `adaloco cluster` instead, or switch the scenario \
+         back to the legacy `strategy`/`sync` sections to sweep it",
+        spec.name
+    );
     let dir = RunDir::create(out, &format!("sweep_{}", spec.name))?;
 
     let mut rows = Vec::with_capacity(methods.len() * hs.len());
@@ -80,6 +91,7 @@ pub fn compression_sweep(
                 wire_frac: rec.comm.wire_fraction(),
                 ratio: rec.comm.compression_ratio(),
                 sim_time_s: rec.sim_time_s,
+                b_final: rec.batch_trace.last().map(|t| t.2).unwrap_or(0),
                 diverged: rec.diverged,
             });
         }
@@ -100,9 +112,9 @@ fn render_table(spec: &ScenarioSpec, rows: &[SweepRow]) -> String {
         spec.run.seed
     );
     out.push_str(&format!(
-        "{:<14} {:>4} {:>7} {:>12} {:>12} {:>11} {:>11} {:>10} {:>10}\n",
-        "method", "H", "rounds", "final_loss", "best_loss", "logical", "wire", "wire_frac",
-        "sim_time"
+        "{:<14} {:>4} {:>7} {:>8} {:>12} {:>12} {:>11} {:>11} {:>10} {:>10}\n",
+        "method", "H", "rounds", "b_final", "final_loss", "best_loss", "logical", "wire",
+        "wire_frac", "sim_time"
     ));
     for r in rows {
         let loss = if r.diverged {
@@ -111,10 +123,11 @@ fn render_table(spec: &ScenarioSpec, rows: &[SweepRow]) -> String {
             format!("{:.4}", r.final_loss)
         };
         out.push_str(&format!(
-            "{:<14} {:>4} {:>7} {:>12} {:>12.4} {:>11} {:>11} {:>10.3} {:>10}\n",
+            "{:<14} {:>4} {:>7} {:>8} {:>12} {:>12.4} {:>11} {:>11} {:>10.3} {:>10}\n",
             r.method,
             r.h,
             r.rounds,
+            r.b_final,
             loss,
             r.best_loss,
             stats::fmt_bytes(r.logical_bytes),
@@ -128,16 +141,17 @@ fn render_table(spec: &ScenarioSpec, rows: &[SweepRow]) -> String {
 
 fn render_csv(rows: &[SweepRow]) -> String {
     let mut out = String::from(
-        "method,h,rounds,samples,final_loss,best_loss,logical_bytes,wire_bytes,wire_frac,\
-         compression_ratio,sim_time_s,diverged\n",
+        "method,h,rounds,samples,b_final,final_loss,best_loss,logical_bytes,wire_bytes,\
+         wire_frac,compression_ratio,sim_time_s,diverged\n",
     );
     for r in rows {
         out.push_str(&format!(
-            "{},{},{},{},{:.6},{:.6},{},{},{:.6},{:.6},{:.6},{}\n",
+            "{},{},{},{},{},{:.6},{:.6},{},{},{:.6},{:.6},{:.6},{}\n",
             r.method,
             r.h,
             r.rounds,
             r.samples,
+            r.b_final,
             r.final_loss,
             r.best_loss,
             r.logical_bytes,
@@ -163,6 +177,7 @@ fn render_json(spec: &ScenarioSpec, rows: &[SweepRow]) -> Json {
                     ("h", Json::num(r.h as f64)),
                     ("rounds", Json::num(r.rounds as f64)),
                     ("samples", Json::num(r.samples as f64)),
+                    ("b_final", Json::num(r.b_final as f64)),
                     ("final_loss", Json::num(r.final_loss)),
                     ("best_loss", Json::num(r.best_loss)),
                     ("logical_bytes", Json::num(r.logical_bytes as f64)),
@@ -230,6 +245,8 @@ mod tests {
         // per-run artifacts live in the SAME directory (satellite: one run dir)
         assert!(dir.join("sweep_unit_identity_h2.summary.json").exists());
         assert!(dir.join("sweep_unit_topk0.25+ef_h4.workers.csv").exists());
+        // per-round policy decisions land next to them
+        assert!(dir.join("sweep_unit_identity_h2.policy.csv").exists());
 
         let csv = std::fs::read_to_string(dir.join("sweep.csv")).unwrap();
         assert_eq!(csv.lines().count(), 5);
@@ -255,6 +272,26 @@ mod tests {
         assert!(
             compression_sweep(&spec, &[CompressionSpec::identity()], &[0], &out).is_err()
         );
+    }
+
+    #[test]
+    fn sweep_rejects_policy_scenarios_with_actionable_error() {
+        let mut spec = tiny_scenario();
+        spec.run.policy = Some(crate::policy::PolicySpec::Paper {
+            eta: 0.8,
+            b0: 8,
+            b_max: 128,
+            h_base: 2,
+            h_max: 8,
+            qsr_c: 0.3,
+            compress_growth: 4.0,
+            ladder: None,
+        });
+        let out = std::env::temp_dir().join("adaloco_sweep_policy_guard");
+        let err = compression_sweep(&spec, &[CompressionSpec::identity()], &[4], &out);
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("policy"), "{msg}");
+        assert!(msg.contains("adaloco cluster"), "error must point at the right command: {msg}");
     }
 
     #[test]

@@ -45,8 +45,10 @@ pub fn run_cell(h: u32, m: usize, eta: f64, mu: f64, l: f64, rounds: u64, seed: 
     let mut datasets: Vec<Box<dyn Dataset>> =
         (0..m).map(|_| Box::new(NullDataset::default()) as _).collect();
     let opts = EngineOpts {
-        scheduler: Box::new(FixedH::new(h)),
-        controller: Box::new(ExactNormTest::new(eta, 2, 1 << 20)),
+        policy: crate::policy::legacy(
+            Box::new(ExactNormTest::new(eta, 2, 1 << 20)),
+            Box::new(FixedH::new(h)),
+        ),
         optim: OptimParams::plain_sgd(),
         lr: LrSchedule::Constant { lr: alpha },
         // budget chosen so the run lasts exactly `rounds` rounds at b0=2:

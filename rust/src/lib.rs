@@ -44,6 +44,21 @@
 //! `adaloco sweep` crosses compression methods with sync intervals H into a
 //! paper-style comparison table.
 //!
+//! ## The unified policy surface
+//!
+//! All three adaptation knobs — local batch size b, sync interval H, and the
+//! wire format — flow through ONE trait: a [`policy::AdaptivePolicy`]
+//! observes a [`policy::RoundSignals`] at every sync (norm-test statistics
+//! plus per-round comm and timing telemetry) and emits a joint
+//! [`policy::PolicyDecision`]. Legacy [`batch::BatchSizeController`] +
+//! [`engine::SyncScheduler`] pairs lift in bit-for-bit via
+//! [`policy::LegacyPolicy`]; [`policy::PaperPolicy`] and
+//! [`policy::VarianceAdaptiveCompression`] exercise decisions the old
+//! three-surface API could not express (joint b/H/compression moves,
+//! telemetry-driven compression). Configs opt in with a strict-parsed
+//! `policy` JSON section; runs record per-round decisions in
+//! [`metrics::RunRecord::policy_trace`] (`<label>.policy.csv`).
+//!
 //! See DESIGN.md for the system inventory, README.md for the cluster scenario
 //! format, and EXPERIMENTS.md for the paper-vs-measured results of every table
 //! and figure.
@@ -60,6 +75,7 @@ pub mod exp;
 pub mod metrics;
 pub mod model;
 pub mod optim;
+pub mod policy;
 pub mod runtime;
 pub mod sim;
 pub mod tensor;

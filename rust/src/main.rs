@@ -37,6 +37,11 @@ COMPRESSION METHODS (sweep --methods, scenario "compression" sections):
   identity | int8[:chunk] | signsgd | topk[:frac], each with an optional
   +ef / -ef suffix for error feedback (lossy methods default to +ef).
 
+ADAPTIVE POLICIES (config/scenario "policy" section, replaces "strategy"+"sync"):
+  {"type": "paper", ...}                  norm-test b + QSR H + compression ladder
+  {"type": "variance_compression", ...}   norm-test b + top-k scheduled by the test
+  Runs report per-round decisions in <label>.policy.csv and the summary JSON.
+
 EXAMPLES:
   adaloco table --id t1 --scale 0.25       # quick Table-1 reproduction
   adaloco table --id t4 --seeds 1,2,3      # 3-seed mean(std) variant
@@ -76,6 +81,28 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// One-line summary of the run's per-round policy decisions (b / H /
+/// compression endpoints and switch count); silent for runs that recorded no
+/// live decisions.
+fn print_policy_line(rec: &adaloco::metrics::RunRecord) {
+    let (Some(first), Some(last)) = (rec.policy_trace.first(), rec.policy_trace.last()) else {
+        return;
+    };
+    let switches = rec.compression_switches();
+    println!(
+        "  policy: {} decisions | b {} -> {} | H {} -> {} | compression {} -> {} \
+         ({} switches) | trace in <label>.policy.csv",
+        rec.policy_trace.len(),
+        first.b_next,
+        last.b_next,
+        first.h_next,
+        last.h_next,
+        first.compression,
+        last.compression,
+        switches,
+    );
 }
 
 fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
@@ -119,6 +146,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         stats::fmt_bytes(rec.comm.wire_bytes),
         rec.comm.compression_ratio(),
     );
+    print_policy_line(&rec);
     if rec.diverged {
         anyhow::bail!("run diverged (non-finite parameters)");
     }
@@ -180,6 +208,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             stats::fmt_bytes(rec.comm.wire_bytes),
             rec.comm.compression_ratio(),
         );
+        print_policy_line(&rec);
         for w in &rec.worker_stats {
             println!(
                 "  worker {:>2}: speed={:.2} joined@r{}{} rounds={} dropped={} steps={} \

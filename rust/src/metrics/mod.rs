@@ -18,6 +18,29 @@ pub struct EvalPoint {
     pub val_top5: f64,
 }
 
+/// One adaptive-policy decision at a sync point: the joint (b, H,
+/// compression) emitted by [`crate::policy::AdaptivePolicy::on_sync`], after
+/// engine clamping — the values the next round actually runs with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyPoint {
+    pub round: u64,
+    pub samples: u64,
+    /// Next local batch size (engine-clamped).
+    pub b_next: u64,
+    /// Next round's local step count (engine-clamped).
+    pub h_next: u32,
+    /// Compression label in effect AFTER the decision (e.g. `topk0.125+ef`).
+    pub compression: String,
+    /// Whether THIS decision changed the wire format (codec rebuilt, error
+    /// feedback reset). Recorded by the engine, so a switch at the very first
+    /// decision — away from an initial spec the trace never shows — counts.
+    pub switched: bool,
+    /// Whether the adaptivity test failed at this sync.
+    pub test_violated: bool,
+    /// wire / logical bytes of the sync that fed this decision.
+    pub wire_frac: f64,
+}
+
 /// Per-worker summary emitted by the cluster runtime (one row per worker of
 /// the scenario, including workers that joined late, dropped rounds, or left).
 /// Empty for the sequential engine, whose workers are indistinguishable.
@@ -53,6 +76,10 @@ pub struct RunRecord {
     /// (round, b_local) trace at every sync — the batch-size growth curves of
     /// Figures 1/2/8-10.
     pub batch_trace: Vec<(u64, u64, u64)>, // (round, samples, b_local)
+    /// Per-round policy decisions (every live sync; empty only for runs that
+    /// never reach a live sync). Warmup/cooldown rounds freeze the policy and
+    /// record nothing here.
+    pub policy_trace: Vec<PolicyPoint>,
     /// Per-worker metrics (cluster runtime only; empty for sequential runs).
     pub worker_stats: Vec<WorkerSummary>,
     pub comm: CommCounters,
@@ -110,6 +137,50 @@ impl RunRecord {
         out
     }
 
+    /// CSV of the per-round policy decisions (the joint b/H/compression
+    /// trace; one row per live sync).
+    pub fn policy_trace_csv(&self) -> String {
+        let mut out = String::from(
+            "round,samples,b_next,h_next,compression,switched,test_violated,wire_frac\n",
+        );
+        for p in &self.policy_trace {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{:.6}\n",
+                p.round, p.samples, p.b_next, p.h_next, p.compression, p.switched,
+                p.test_violated, p.wire_frac,
+            ));
+        }
+        out
+    }
+
+    /// Number of compression switches over the run (decisions that actually
+    /// changed the wire format, including one away from the initial spec at
+    /// the first decision) — the single definition shared by the summary JSON
+    /// and the CLI's policy line.
+    pub fn compression_switches(&self) -> usize {
+        self.policy_trace.iter().filter(|p| p.switched).count()
+    }
+
+    /// Compact policy summary: how the three knobs moved over the run.
+    /// `None` when the run recorded no live decisions.
+    pub fn policy_summary_json(&self) -> Option<Json> {
+        let first = self.policy_trace.first()?;
+        let last = self.policy_trace.last()?;
+        let switches = self.compression_switches();
+        let violations = self.policy_trace.iter().filter(|p| p.test_violated).count();
+        Some(Json::obj(vec![
+            ("decisions", Json::num(self.policy_trace.len() as f64)),
+            ("b_first", Json::num(first.b_next as f64)),
+            ("b_final", Json::num(last.b_next as f64)),
+            ("h_first", Json::num(first.h_next as f64)),
+            ("h_final", Json::num(last.h_next as f64)),
+            ("compression_first", Json::str(&first.compression)),
+            ("compression_final", Json::str(&last.compression)),
+            ("compression_switches", Json::num(switches as f64)),
+            ("test_violations", Json::num(violations as f64)),
+        ]))
+    }
+
     /// CSV of the per-worker summaries (cluster runs; empty rows otherwise).
     pub fn worker_stats_csv(&self) -> String {
         let mut out = String::from(
@@ -155,18 +226,20 @@ impl RunRecord {
     }
 
     pub fn summary_json(&self) -> Json {
+        let mut obj = match self.summary_json_base() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
         if !self.worker_stats.is_empty() {
-            let mut obj = match self.summary_json_base() {
-                Json::Obj(o) => o,
-                _ => unreachable!(),
-            };
             obj.insert(
                 "workers".to_string(),
                 Json::arr(self.worker_stats.iter().map(Self::worker_json)),
             );
-            return Json::Obj(obj);
         }
-        self.summary_json_base()
+        if let Some(p) = self.policy_summary_json() {
+            obj.insert("policy".to_string(), p);
+        }
+        Json::Obj(obj)
     }
 
     fn summary_json_base(&self) -> Json {
@@ -201,6 +274,10 @@ impl RunRecord {
             .write_all(self.batch_trace_csv().as_bytes())?;
         std::fs::File::create(dir.join(format!("{base}.summary.json")))?
             .write_all(self.summary_json().to_string_pretty().as_bytes())?;
+        if !self.policy_trace.is_empty() {
+            std::fs::File::create(dir.join(format!("{base}.policy.csv")))?
+                .write_all(self.policy_trace_csv().as_bytes())?;
+        }
         if !self.worker_stats.is_empty() {
             std::fs::File::create(dir.join(format!("{base}.workers.csv")))?
                 .write_all(self.worker_stats_csv().as_bytes())?;
@@ -384,5 +461,66 @@ mod tests {
         assert_eq!(r.best_val_acc(), 0.0);
         assert!(r.final_val_loss().is_nan());
         assert_eq!(r.to_csv().lines().count(), 1);
+        assert!(r.policy_summary_json().is_none(), "no decisions => no policy block");
+        assert!(r.summary_json().get("policy").is_null());
+    }
+
+    fn policy_points() -> Vec<PolicyPoint> {
+        vec![
+            PolicyPoint {
+                round: 0,
+                samples: 100,
+                b_next: 32,
+                h_next: 4,
+                compression: "identity".into(),
+                switched: false,
+                test_violated: true,
+                wire_frac: 1.0,
+            },
+            PolicyPoint {
+                round: 1,
+                samples: 300,
+                b_next: 64,
+                h_next: 8,
+                compression: "topk0.125+ef".into(),
+                switched: true,
+                test_violated: false,
+                wire_frac: 0.25,
+            },
+        ]
+    }
+
+    #[test]
+    fn policy_trace_csv_and_summary() {
+        let mut r = record();
+        r.policy_trace = policy_points();
+        let csv = r.policy_trace_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("round,samples,b_next,h_next,compression"));
+        assert!(csv.contains("1,300,64,8,topk0.125+ef,true,false,0.250000"));
+
+        let parsed = Json::parse(&r.summary_json().to_string()).unwrap();
+        let p = parsed.get("policy");
+        assert_eq!(p.get("decisions").as_u64(), Some(2));
+        assert_eq!(p.get("b_final").as_u64(), Some(64));
+        assert_eq!(p.get("h_first").as_u64(), Some(4));
+        assert_eq!(p.get("h_final").as_u64(), Some(8));
+        assert_eq!(p.get("compression_final").as_str(), Some("topk0.125+ef"));
+        assert_eq!(p.get("compression_switches").as_u64(), Some(1));
+        assert_eq!(p.get("test_violations").as_u64(), Some(1));
+    }
+
+    #[test]
+    fn policy_trace_written_to_disk() {
+        let dir = std::env::temp_dir().join("adaloco_policy_trace_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut r = record();
+        // no trace: no file
+        r.write_to(&dir).unwrap();
+        assert!(!dir.join("test_run.policy.csv").exists());
+        r.policy_trace = policy_points();
+        r.write_to(&dir).unwrap();
+        assert!(dir.join("test_run.policy.csv").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,0 +1,176 @@
+//! Adapter lifting the legacy two-surface API (batch-size controller + sync
+//! scheduler) into [`AdaptivePolicy`], bit for bit.
+//!
+//! The pre-policy engines made exactly two calls per live round:
+//!
+//! 1. at the top of the loop: `scheduler.h_for_round(round, samples, lr_now)`
+//!    with `lr_now = lr.at(samples)`;
+//! 2. after the sync: `controller.on_sync(&SyncEvent { .. })`.
+//!
+//! [`LegacyPolicy`] reproduces both. [`AdaptivePolicy::h_bootstrap`] *is* call
+//! (1). At a sync for round k the adapter answers with the H the old loop
+//! would have computed at the top of round k+1: the post-round `samples`
+//! counter and `lr.at(samples)` are already in [`RoundSignals`] (`samples`,
+//! `lr_next`), so `scheduler.h_for_round(round + 1, samples, lr_next)`
+//! receives the identical argument triple. The decision never touches
+//! compression, so the engine keeps its static spec — together this makes
+//! every legacy config an unchanged run under the policy path (enforced by
+//! `lifted_*_match_raw_surfaces` below and the cross-engine scenario tests).
+//!
+//! **Scope of the bit-for-bit guarantee:** it holds for schedulers that are
+//! pure functions of their `(round, samples, lr)` arguments — which all
+//! shipped schedulers (FixedH / PostLocal / QSR, none of which read `round`)
+//! are. A custom `SyncScheduler` that keys on its own call count would see
+//! one call per live sync here instead of one per round (the legacy engines
+//! also called it for cluster rounds later skipped when every contributor
+//! dropped), and could diverge.
+
+use super::{AdaptivePolicy, PolicyDecision, RoundSignals};
+use crate::batch::BatchSizeController;
+use crate::engine::sync::SyncScheduler;
+
+/// A legacy controller + scheduler pair behind the unified surface.
+pub struct LegacyPolicy {
+    pub controller: Box<dyn BatchSizeController>,
+    pub scheduler: Box<dyn SyncScheduler>,
+}
+
+impl LegacyPolicy {
+    pub fn new(
+        controller: Box<dyn BatchSizeController>,
+        scheduler: Box<dyn SyncScheduler>,
+    ) -> Self {
+        LegacyPolicy { controller, scheduler }
+    }
+}
+
+/// Convenience: box a controller + scheduler pair as an [`AdaptivePolicy`].
+pub fn legacy(
+    controller: Box<dyn BatchSizeController>,
+    scheduler: Box<dyn SyncScheduler>,
+) -> Box<dyn AdaptivePolicy> {
+    Box::new(LegacyPolicy::new(controller, scheduler))
+}
+
+impl AdaptivePolicy for LegacyPolicy {
+    fn b0(&self) -> u64 {
+        self.controller.b0()
+    }
+
+    fn h_bootstrap(&mut self, round: u64, samples: u64, lr: f64) -> u32 {
+        self.scheduler.h_for_round(round, samples, lr)
+    }
+
+    fn on_sync(&mut self, signals: &RoundSignals) -> PolicyDecision {
+        let ev = signals.sync_event();
+        let d = self.controller.on_sync(&ev);
+        // The H the legacy loop would compute at the top of the next round.
+        let h_next = self
+            .scheduler
+            .h_for_round(signals.round + 1, signals.samples, signals.lr_next);
+        PolicyDecision {
+            b_next: d.b_next,
+            h_next,
+            compression: None,
+            test_violated: d.test_violated,
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("{} | {}", self.controller.name(), self.scheduler.name())
+    }
+
+    fn needs_grad_allreduce(&self) -> bool {
+        self.controller.needs_grad_allreduce()
+    }
+
+    fn as_legacy_mut(&mut self) -> Option<&mut LegacyPolicy> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::{ApproxNormTest, ConstantSchedule, SyncEvent};
+    use crate::engine::sync::{FixedH, PostLocal, Qsr};
+    use crate::policy::tests::signals;
+
+    /// Golden equivalence: over a simulated stream of sync points, the lifted
+    /// policy emits exactly the (b, H) sequence the raw controller + scheduler
+    /// pair would have produced through the legacy engine seams.
+    #[test]
+    fn lifted_norm_test_and_qsr_match_raw_surfaces() {
+        let mut raw_ctrl = ApproxNormTest::new(0.8, 8, 4096);
+        let mut raw_sched = Qsr::new(1, 64, 0.01);
+        let mut lifted = LegacyPolicy::new(
+            Box::new(ApproxNormTest::new(0.8, 8, 4096)),
+            Box::new(Qsr::new(1, 64, 0.01)),
+        );
+        assert_eq!(lifted.b0(), raw_ctrl.b0);
+        assert_eq!(
+            lifted.h_bootstrap(0, 0, 0.1),
+            raw_sched.h_for_round(0, 0, 0.1),
+            "bootstrap must be the legacy top-of-loop call"
+        );
+
+        let mut b = 8u64;
+        let mut samples = 0u64;
+        for round in 0..40u64 {
+            let lr_next = 0.1 / (1.0 + round as f64); // decaying, exercises QSR
+            let scatter = if round % 3 == 0 { 50.0 } else { 0.01 };
+            let mut s = signals(b, scatter, 1.0, 4);
+            samples += 4 * b * 4;
+            s.round = round;
+            s.samples = samples;
+            s.lr_next = lr_next;
+
+            let want = raw_ctrl.on_sync(&SyncEvent {
+                round,
+                samples,
+                b_local: b,
+                m_workers: 4,
+                worker_scatter: scatter,
+                gbar_norm_sq: 1.0,
+                per_sample_var: None,
+                mean_worker_norm_sq: 1.0,
+                inner_product_var: 0.0,
+            });
+            let want_h = raw_sched.h_for_round(round + 1, samples, lr_next);
+
+            let got = lifted.on_sync(&s);
+            assert_eq!(got.b_next, want.b_next, "round {round}: b diverged");
+            assert_eq!(got.test_violated, want.test_violated, "round {round}");
+            assert_eq!(got.h_next, want_h, "round {round}: H diverged");
+            assert!(got.compression.is_none(), "legacy policies never touch compression");
+            b = got.b_next;
+        }
+    }
+
+    #[test]
+    fn lifted_post_local_switches_on_samples() {
+        let mut p = LegacyPolicy::new(
+            Box::new(ConstantSchedule::new(16)),
+            Box::new(PostLocal::new(8, 1000)),
+        );
+        let mut s = signals(16, 0.0, 1.0, 4);
+        s.samples = 500;
+        assert_eq!(p.on_sync(&s).h_next, 1, "below the switch threshold");
+        s.samples = 1000;
+        assert_eq!(p.on_sync(&s).h_next, 8, "at the switch threshold");
+        assert_eq!(p.h_bootstrap(0, 0, 0.1), 1);
+    }
+
+    #[test]
+    fn legacy_forwards_comm_needs_and_downcast() {
+        let mut with_nt =
+            LegacyPolicy::new(Box::new(ApproxNormTest::new(0.8, 8, 64)), Box::new(FixedH::new(4)));
+        assert!(with_nt.needs_grad_allreduce());
+        assert!(with_nt.as_legacy_mut().is_some());
+        let without =
+            LegacyPolicy::new(Box::new(ConstantSchedule::new(8)), Box::new(FixedH::new(4)));
+        assert!(!without.needs_grad_allreduce());
+        assert!(without.name().contains("constant(8)"));
+        assert!(without.initial_compression().is_none());
+    }
+}

@@ -1,0 +1,273 @@
+//! Unified adaptive-policy API: **one controller surface for batch size, sync
+//! interval, and compression**.
+//!
+//! The paper adapts a single knob (the local batch size b_k) from a single
+//! signal (the across-worker gradient variance, §4) at sync points. Post-local
+//! SGD (Lin et al., 2020) and QSR (Gu et al., 2024) show the sync interval H
+//! is just as adaptable, and the comm subsystem ([`crate::comm`]) added a
+//! third knob — how many bytes each sync moves. Before this module the three
+//! knobs lived behind three unrelated surfaces
+//! ([`crate::batch::BatchSizeController`], [`crate::engine::SyncScheduler`],
+//! and a static [`crate::comm::CompressionSpec`]), so no controller could
+//! trade batch growth against H growth against wire bytes — even though the
+//! paper's efficiency story (Figures 2–4) is exactly that trade-off.
+//!
+//! ## The API
+//!
+//! An [`AdaptivePolicy`] observes a [`RoundSignals`] at every sync point —
+//! everything the legacy `SyncEvent` carried **plus** per-round communication
+//! telemetry (wire vs logical bytes, the compression in effect, simulated
+//! compute/sync seconds, roster size) — and emits a [`PolicyDecision`] that
+//! may move all three knobs at once:
+//!
+//! ```text
+//!                 ┌────────────────────────────────────────────┐
+//!   RoundSignals  │  AdaptivePolicy::on_sync                   │  PolicyDecision
+//!  (stats + comm  │    norm-test stats  ─┐                     │   b_next
+//!   telemetry)  ─▶│    wire/logical      ├─ one decision ──────│─▶ h_next
+//!                 │    sim times        ─┘                     │   compression
+//!                 └────────────────────────────────────────────┘   test_violated
+//! ```
+//!
+//! Both engines ([`crate::engine::run_local_sgd`] and
+//! [`crate::cluster::ClusterEngine`]) consume **only** this trait; the old
+//! twin plumbing paths are gone.
+//!
+//! ## Lifting the old surfaces
+//!
+//! [`LegacyPolicy`] wraps any `BatchSizeController` + `SyncScheduler` pair and
+//! reproduces the pre-policy engines bit for bit: the controller sees the
+//! exact `SyncEvent` it used to, the scheduler is called with the exact
+//! `(round, samples, lr)` arguments the old round loop passed, and the
+//! decision never touches compression (the engine keeps its static
+//! [`crate::comm::CompressionSpec`]). Every legacy `strategy`/`sync` config
+//! section builds a `LegacyPolicy` — pre-existing scenario JSONs are
+//! unchanged runs (enforced by the scenario integration tests and the
+//! cross-engine bitwise tests).
+//!
+//! ## Genuinely new policies
+//!
+//! - [`VarianceAdaptiveCompression`] — schedules the top-k sparsification
+//!   fraction from the norm-test statistic: noisy gradients (test violated)
+//!   tolerate aggressive sparsification, clean gradients demand fidelity.
+//! - [`PaperPolicy`] — the composite the old API could not express: norm-test
+//!   batch growth (§4.3) + QSR-style H growth (H ∝ η^{-2/3}) + a compression
+//!   ladder ramped as the batch grows, all decided jointly at one sync point.
+//!
+//! ## Declarative configs
+//!
+//! A [`PolicySpec`] is the strict-parsed `policy` JSON section of
+//! [`crate::config::RunConfig`]; unknown keys, out-of-range H bounds, and
+//! mixing the section with the legacy `strategy`/`sync` sections are hard
+//! errors with actionable messages.
+
+pub mod adapters;
+pub mod paper;
+pub mod spec;
+pub mod variance_compression;
+
+pub use adapters::{legacy, LegacyPolicy};
+pub use paper::PaperPolicy;
+pub use spec::PolicySpec;
+pub use variance_compression::VarianceAdaptiveCompression;
+
+use crate::batch::SyncEvent;
+use crate::comm::CompressionSpec;
+
+/// Everything a policy may observe at a sync point: the legacy sync-event
+/// statistics plus per-round communication and timing telemetry.
+#[derive(Debug, Clone)]
+pub struct RoundSignals {
+    /// Communication round index k.
+    pub round: u64,
+    /// Samples processed so far (global counter B, post-round).
+    pub samples: u64,
+    /// Local batch size b_k used this round (micro-batch quantized).
+    pub b_local: u64,
+    /// Local steps H executed this round.
+    pub h: u32,
+    /// Workers that contributed to this round's average (== active workers on
+    /// the sequential engine; < roster size under dropouts).
+    pub m_workers: usize,
+    /// Workers currently active in the roster (sequential engine: M).
+    pub active_workers: usize,
+    /// Σ_m ‖g_m − ḡ‖² over the contributors' last local batch gradients.
+    pub worker_scatter: f64,
+    /// ‖ḡ‖² of the averaged gradient.
+    pub gbar_norm_sq: f64,
+    /// Mean per-sample gradient variance, when the substrate provides it.
+    pub per_sample_var: Option<f64>,
+    /// Mean over workers of ‖g_m‖².
+    pub mean_worker_norm_sq: f64,
+    /// Variance over workers of ⟨g_m, ḡ⟩.
+    pub inner_product_var: f64,
+    /// Learning rate at the first step of the NEXT round (sample-indexed
+    /// schedule evaluated at the post-round counter) — what QSR-style interval
+    /// rules adapt on.
+    pub lr_next: f64,
+    /// Bytes this round's model sync actually put on the wire.
+    pub wire_bytes: u64,
+    /// Dense ring-all-reduce bytes the same sync would have moved.
+    pub logical_bytes: u64,
+    /// The compression in effect for this round's sync.
+    pub compression: CompressionSpec,
+    /// Simulated compute seconds of this round (straggler max over workers).
+    pub round_compute_s: f64,
+    /// Simulated communication seconds of this round's sync.
+    pub sync_s: f64,
+}
+
+impl RoundSignals {
+    /// The legacy controller view of this round (what [`LegacyPolicy`] feeds
+    /// the wrapped [`crate::batch::BatchSizeController`], field for field).
+    pub fn sync_event(&self) -> SyncEvent {
+        SyncEvent {
+            round: self.round,
+            samples: self.samples,
+            b_local: self.b_local,
+            m_workers: self.m_workers,
+            worker_scatter: self.worker_scatter,
+            gbar_norm_sq: self.gbar_norm_sq,
+            per_sample_var: self.per_sample_var,
+            mean_worker_norm_sq: self.mean_worker_norm_sq,
+            inner_product_var: self.inner_product_var,
+        }
+    }
+
+    /// wire / logical bytes of this round's sync; 1.0 when nothing moved
+    /// (single worker), matching the [`crate::collective::CommCounters`]
+    /// zero-bytes convention.
+    pub fn wire_fraction(&self) -> f64 {
+        if self.logical_bytes == 0 {
+            1.0
+        } else {
+            self.wire_bytes as f64 / self.logical_bytes as f64
+        }
+    }
+}
+
+/// One joint decision: the three knobs for the next round. Emitted at every
+/// live sync point and recorded in [`crate::metrics::RunRecord::policy_trace`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyDecision {
+    /// Next local batch size (the engine clamps to `[1, b_max_local]`).
+    pub b_next: u64,
+    /// Local steps of the next round (the engine clamps to `>= 1`).
+    pub h_next: u32,
+    /// Compression for the next round's sync; `None` keeps the current spec.
+    /// A `Some` that differs from the current spec rebuilds the compressor on
+    /// every endpoint and **resets the error-feedback residuals** (a new codec
+    /// starts from a clean residual — the pinned convention shared by both
+    /// engines, enforced bit-for-bit by
+    /// `cluster::tests::policy_driven_cluster_matches_sequential_engine`).
+    pub compression: Option<CompressionSpec>,
+    /// Whether the underlying adaptivity test failed (batch forced to grow) —
+    /// logged for the growth-trace figures.
+    pub test_violated: bool,
+}
+
+/// The single adaptation surface both engines consume.
+///
+/// Call protocol (mirrors the legacy round loop so adapters lift bit for bit):
+///
+/// 1. [`AdaptivePolicy::b0`] and, when the policy manages compression,
+///    [`AdaptivePolicy::initial_compression`] configure round 0;
+/// 2. [`AdaptivePolicy::h_bootstrap`] supplies H for a round with no preceding
+///    live decision — round 0, or the first live round after a frozen
+///    warmup phase (warmup/cooldown rounds force H = 1 and never consult the
+///    policy, exactly like the legacy engines froze the controller);
+/// 3. [`AdaptivePolicy::on_sync`] observes the completed round and decides all
+///    three knobs for the next one.
+pub trait AdaptivePolicy: Send {
+    /// Initial local batch size b_0.
+    fn b0(&self) -> u64;
+
+    /// H for a round with no preceding live sync decision. Receives the same
+    /// `(round, samples, lr)` the legacy `SyncScheduler::h_for_round` call
+    /// received at the top of the round loop.
+    fn h_bootstrap(&mut self, round: u64, samples: u64, lr: f64) -> u32;
+
+    /// Joint decision at a sync point.
+    fn on_sync(&mut self, signals: &RoundSignals) -> PolicyDecision;
+
+    /// Compression to install before round 0; `None` keeps the engine's
+    /// configured [`CompressionSpec`]. Policies that schedule compression
+    /// return `Some` so the run starts on their ladder.
+    fn initial_compression(&self) -> Option<CompressionSpec> {
+        None
+    }
+
+    fn name(&self) -> String;
+
+    /// Whether this policy needs the extra gradient all-reduce at sync time
+    /// (comm accounting: Alg. A.2 adds one all-reduce of d floats per round).
+    fn needs_grad_allreduce(&self) -> bool {
+        true
+    }
+
+    /// Downcast hook for the legacy adapter, so tests and helpers can swap a
+    /// controller or scheduler half without rebuilding the whole policy.
+    fn as_legacy_mut(&mut self) -> Option<&mut LegacyPolicy> {
+        None
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::comm::CompressionSpec;
+
+    /// Test fixture: signals with the given batch/scatter/norm/m and neutral
+    /// comm telemetry.
+    pub(crate) fn signals(b: u64, scatter: f64, nsq: f64, m: usize) -> RoundSignals {
+        RoundSignals {
+            round: 0,
+            samples: 0,
+            b_local: b,
+            h: 4,
+            m_workers: m,
+            active_workers: m,
+            worker_scatter: scatter,
+            gbar_norm_sq: nsq,
+            per_sample_var: None,
+            mean_worker_norm_sq: nsq,
+            inner_product_var: 0.0,
+            lr_next: 0.05,
+            wire_bytes: 1000,
+            logical_bytes: 1000,
+            compression: CompressionSpec::identity(),
+            round_compute_s: 1.0,
+            sync_s: 0.01,
+        }
+    }
+
+    #[test]
+    fn sync_event_mirrors_signals() {
+        let mut s = signals(32, 5.0, 2.0, 4);
+        s.round = 7;
+        s.samples = 999;
+        s.per_sample_var = Some(1.5);
+        s.inner_product_var = 0.25;
+        let ev = s.sync_event();
+        assert_eq!(ev.round, 7);
+        assert_eq!(ev.samples, 999);
+        assert_eq!(ev.b_local, 32);
+        assert_eq!(ev.m_workers, 4);
+        assert_eq!(ev.worker_scatter, 5.0);
+        assert_eq!(ev.gbar_norm_sq, 2.0);
+        assert_eq!(ev.per_sample_var, Some(1.5));
+        assert_eq!(ev.mean_worker_norm_sq, 2.0);
+        assert_eq!(ev.inner_product_var, 0.25);
+    }
+
+    #[test]
+    fn wire_fraction_guards_zero_bytes() {
+        let mut s = signals(32, 0.0, 1.0, 1);
+        s.wire_bytes = 0;
+        s.logical_bytes = 0; // single worker: nothing moved
+        assert_eq!(s.wire_fraction(), 1.0);
+        s.logical_bytes = 4000;
+        s.wire_bytes = 1000;
+        assert_eq!(s.wire_fraction(), 0.25);
+    }
+}

@@ -1,0 +1,238 @@
+//! The composite "paper policy": the joint controller the old three-surface
+//! API could not express.
+//!
+//! At every sync point one decision moves all three knobs together:
+//!
+//! - **batch size** — the paper's approximate norm test (Alg. A.2, eq. 14):
+//!   grow b_k when the across-worker gradient variance violates the test;
+//! - **sync interval** — QSR-style growth (Gu et al., 2024): H = max(h_base,
+//!   ⌈(c / η)^(2/3)⌉) capped at h_max, so syncs get rarer as the learning rate
+//!   decays;
+//! - **compression** — a wire ladder ramped with batch growth: every
+//!   `compress_growth`× increase of b over b_0 steps one rung harder. The
+//!   rationale is the paper's own efficiency story: a larger batch means a
+//!   more accurate local gradient and a costlier round, so the *relative*
+//!   price of lossy sync falls exactly when compute starts to dominate —
+//!   error feedback carries the residual either way.
+//!
+//! Because b, H, and the ladder rung can all change at the same sync point,
+//! runs under this policy are the acceptance example of a decision the legacy
+//! `BatchSizeController` / `SyncScheduler` / static-`CompressionSpec` triple
+//! had no way to produce.
+
+use super::{AdaptivePolicy, PolicyDecision, RoundSignals};
+use crate::batch::norm_test::ApproxNormTest;
+use crate::batch::BatchSizeController;
+use crate::comm::{CompressMethod, CompressionSpec};
+
+/// Norm-test batch growth + QSR H growth + batch-ramped compression ladder.
+pub struct PaperPolicy {
+    norm: ApproxNormTest,
+    h_base: u32,
+    h_max: u32,
+    /// QSR growth coefficient c: H = clamp(⌈(c / lr)^(2/3)⌉, h_base, h_max).
+    qsr_c: f64,
+    /// Exponent of the QSR rule (2/3 in the paper's parameterization).
+    qsr_exponent: f64,
+    /// Step one ladder rung harder every time b grows by this factor over b_0.
+    compress_growth: f64,
+    ladder: Vec<CompressionSpec>,
+    rung: usize,
+}
+
+impl PaperPolicy {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        eta: f64,
+        b0: u64,
+        b_max: u64,
+        h_base: u32,
+        h_max: u32,
+        qsr_c: f64,
+        compress_growth: f64,
+        ladder: Option<Vec<CompressionSpec>>,
+    ) -> Self {
+        assert!(h_base >= 1 && h_max >= h_base, "need 1 <= h_base <= h_max");
+        assert!(qsr_c > 0.0, "qsr_c must be positive");
+        assert!(compress_growth > 1.0, "compress_growth must be > 1");
+        let ladder = ladder.unwrap_or_else(Self::default_ladder);
+        assert!(!ladder.is_empty(), "compression ladder must not be empty");
+        PaperPolicy {
+            norm: ApproxNormTest::new(eta, b0, b_max),
+            h_base,
+            h_max,
+            qsr_c,
+            qsr_exponent: 2.0 / 3.0,
+            compress_growth,
+            ladder,
+            rung: 0,
+        }
+    }
+
+    /// Default wire ladder, ordered by decreasing wire bytes:
+    /// identity (4d) → top-25% (2d) → top-12.5% (d) → top-6.25% (d/2) →
+    /// signSGD (d/8), lossy rungs with error feedback.
+    pub fn default_ladder() -> Vec<CompressionSpec> {
+        let topk = |k_frac: f64| CompressionSpec {
+            method: CompressMethod::TopK { k_frac },
+            error_feedback: true,
+        };
+        vec![
+            CompressionSpec::identity(),
+            topk(0.25),
+            topk(0.125),
+            topk(0.0625),
+            CompressionSpec { method: CompressMethod::SignSgd, error_feedback: true },
+        ]
+    }
+
+    fn qsr_h(&self, lr: f64) -> u32 {
+        if lr <= 0.0 {
+            return self.h_max;
+        }
+        let h = (self.qsr_c / lr).powf(self.qsr_exponent).ceil();
+        (h as u32).clamp(self.h_base, self.h_max)
+    }
+
+    /// Ladder rung for batch size `b`: rung j needs b >= b0 · growth^j.
+    fn rung_for(&self, b: u64) -> usize {
+        let b0 = self.norm.b0 as f64;
+        let mut rung = 0usize;
+        let mut threshold = b0 * self.compress_growth;
+        while rung + 1 < self.ladder.len() && (b as f64) >= threshold {
+            rung += 1;
+            threshold *= self.compress_growth;
+        }
+        rung
+    }
+}
+
+impl AdaptivePolicy for PaperPolicy {
+    fn b0(&self) -> u64 {
+        self.norm.b0
+    }
+
+    fn h_bootstrap(&mut self, _round: u64, _samples: u64, lr: f64) -> u32 {
+        self.qsr_h(lr)
+    }
+
+    fn initial_compression(&self) -> Option<CompressionSpec> {
+        Some(self.ladder[0].clone())
+    }
+
+    fn on_sync(&mut self, signals: &RoundSignals) -> PolicyDecision {
+        let ev = signals.sync_event();
+        let d = self.norm.on_sync(&ev);
+        let h_next = self.qsr_h(signals.lr_next);
+        // The ladder never steps back: b is monotone under the norm test, and
+        // a monotone wire schedule keeps the trace interpretable.
+        let rung = self.rung_for(d.b_next).max(self.rung);
+        let compression = if rung != self.rung {
+            self.rung = rung;
+            Some(self.ladder[rung].clone())
+        } else {
+            None
+        };
+        PolicyDecision {
+            b_next: d.b_next,
+            h_next,
+            compression,
+            test_violated: d.test_violated,
+        }
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "paper(eta={}, H=[{},{}], qsr_c={}, ladder={} rungs)",
+            self.norm.eta,
+            self.h_base,
+            self.h_max,
+            self.qsr_c,
+            self.ladder.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::tests::signals;
+
+    fn policy() -> PaperPolicy {
+        PaperPolicy::new(0.8, 8, 4096, 4, 16, 0.32, 4.0, None)
+    }
+
+    #[test]
+    fn qsr_h_grows_as_lr_decays() {
+        let mut p = policy();
+        let h_hi = p.h_bootstrap(0, 0, 0.05);
+        let h_lo = p.h_bootstrap(0, 0, 0.005);
+        assert!(h_lo > h_hi, "H must grow as lr decays: {h_hi} -> {h_lo}");
+        assert_eq!(h_hi, 4, "(0.32/0.05)^(2/3) = 3.45 -> ceil 4");
+        assert_eq!(h_lo, 16, "(0.32/0.005)^(2/3) = 16 -> clamped at h_max");
+        assert_eq!(p.h_bootstrap(0, 0, 0.0), 16, "lr 0 degenerates to h_max");
+    }
+
+    #[test]
+    fn joint_decision_moves_all_three_knobs() {
+        // THE acceptance-criterion shape: one sync point where b, H, and the
+        // compression rung all change in a single decision.
+        let mut p = policy();
+        let mut s = signals(8, 1000.0, 0.1, 4); // noisy: test violated
+        s.lr_next = 0.005; // decayed lr: QSR wants long rounds
+        let d = p.on_sync(&s);
+        assert!(d.test_violated);
+        assert!(d.b_next > 8, "batch must grow");
+        assert_eq!(d.h_next, 16, "H must grow with the decayed lr");
+        let spec = d.compression.expect("ladder must step on 4x batch growth");
+        assert!(!spec.is_dense(), "rung 1+ is lossy");
+    }
+
+    #[test]
+    fn ladder_ramps_with_batch_growth_and_never_steps_back() {
+        let p = policy();
+        assert_eq!(p.rung_for(8), 0);
+        assert_eq!(p.rung_for(31), 0);
+        assert_eq!(p.rung_for(32), 1);
+        assert_eq!(p.rung_for(128), 2);
+        assert_eq!(p.rung_for(512), 3);
+        assert_eq!(p.rung_for(2048), 4);
+        assert_eq!(p.rung_for(1 << 20), 4, "rung saturates at the ladder end");
+
+        let mut p = policy();
+        // grow to rung 2...
+        let d = p.on_sync(&signals(128, 1e-9, 10.0, 4));
+        assert_eq!(p.rung, 2);
+        assert!(d.compression.is_some());
+        // ...then a clean low-b signal must NOT step back (monotone ladder)
+        let d = p.on_sync(&signals(128, 1e-9, 10.0, 4));
+        assert_eq!(p.rung, 2);
+        assert!(d.compression.is_none(), "unchanged rung must not re-emit");
+    }
+
+    #[test]
+    fn default_ladder_shrinks_on_the_wire() {
+        let ladder = PaperPolicy::default_ladder();
+        assert_eq!(ladder.len(), 5);
+        assert!(ladder[0].is_dense());
+        assert!(ladder.iter().skip(1).all(|s| s.error_feedback));
+        // every rung must validate (build()-able specs)
+        for s in &ladder {
+            assert!(s.validate().is_empty(), "invalid rung {s:?}");
+        }
+    }
+
+    #[test]
+    fn starts_dense() {
+        let p = policy();
+        assert_eq!(p.initial_compression().unwrap(), CompressionSpec::identity());
+        assert_eq!(p.b0(), 8);
+        assert!(p.needs_grad_allreduce());
+    }
+
+    #[test]
+    #[should_panic(expected = "h_base")]
+    fn rejects_inverted_h_bounds() {
+        PaperPolicy::new(0.8, 8, 64, 8, 4, 0.3, 4.0, None);
+    }
+}

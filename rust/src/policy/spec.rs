@@ -1,0 +1,503 @@
+//! Declarative policy configs: the strict-parsed `policy` section of
+//! [`crate::config::RunConfig`] JSON.
+//!
+//! Unlike the lenient legacy sections, this section is parsed **strictly**:
+//!
+//! - unknown keys are hard errors naming the allowed key set (a typo'd
+//!   `"k_mim"` must not silently run with the default);
+//! - out-of-range values (h_max < h_base, eta outside (0,1), k_frac bounds)
+//!   are hard errors naming the offending field and the valid range;
+//! - a config carrying BOTH a `policy` section and the legacy `strategy` /
+//!   `sync` sections is rejected by [`crate::config::RunConfig::from_json`]
+//!   with an actionable message — one adaptation surface per run.
+//!
+//! Legacy configs (no `policy` key) keep building a
+//! [`crate::policy::LegacyPolicy`] from their `strategy` + `sync` sections,
+//! unchanged.
+
+use super::{AdaptivePolicy, PaperPolicy, VarianceAdaptiveCompression};
+use crate::comm::CompressionSpec;
+use crate::util::json::Json;
+
+/// Declarative form of the policies the unified API ships. `build()` turns a
+/// validated spec into a live [`AdaptivePolicy`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicySpec {
+    /// [`VarianceAdaptiveCompression`]: norm-test batch growth + norm-test-
+    /// scheduled top-k fraction at a fixed H.
+    VarianceCompression {
+        eta: f64,
+        b0: u64,
+        b_max: u64,
+        h: u32,
+        k_min: f64,
+        k_max: f64,
+    },
+    /// [`PaperPolicy`]: norm-test batch growth + QSR H growth + batch-ramped
+    /// compression ladder.
+    Paper {
+        eta: f64,
+        b0: u64,
+        b_max: u64,
+        h_base: u32,
+        h_max: u32,
+        qsr_c: f64,
+        compress_growth: f64,
+        /// CLI-shorthand rungs (e.g. `["identity", "topk:0.125", "signsgd"]`);
+        /// `None` uses [`PaperPolicy::default_ladder`].
+        ladder: Option<Vec<CompressionSpec>>,
+    },
+}
+
+impl PolicySpec {
+    pub fn build(&self) -> Box<dyn AdaptivePolicy> {
+        match self {
+            PolicySpec::VarianceCompression { eta, b0, b_max, h, k_min, k_max } => Box::new(
+                VarianceAdaptiveCompression::new(*eta, *b0, *b_max, *h, *k_min, *k_max),
+            ),
+            PolicySpec::Paper {
+                eta,
+                b0,
+                b_max,
+                h_base,
+                h_max,
+                qsr_c,
+                compress_growth,
+                ladder,
+            } => Box::new(PaperPolicy::new(
+                *eta,
+                *b0,
+                *b_max,
+                *h_base,
+                *h_max,
+                *qsr_c,
+                *compress_growth,
+                ladder.clone(),
+            )),
+        }
+    }
+
+    /// Whether this policy schedules compression itself. A scenario that also
+    /// carries a static non-identity `compression` section then has two owners
+    /// for the same knob, which [`crate::config::ScenarioSpec::validate`]
+    /// rejects.
+    pub fn controls_compression(&self) -> bool {
+        match self {
+            PolicySpec::VarianceCompression { .. } => true,
+            PolicySpec::Paper { .. } => true,
+        }
+    }
+
+    /// The strategy-style b_max (checked against the engine cap in
+    /// [`crate::config::RunConfig::validate`]).
+    pub fn b_max(&self) -> u64 {
+        match self {
+            PolicySpec::VarianceCompression { b_max, .. } => *b_max,
+            PolicySpec::Paper { b_max, .. } => *b_max,
+        }
+    }
+
+    /// Compact label for tables and file names.
+    pub fn label(&self) -> String {
+        match self {
+            PolicySpec::VarianceCompression { eta, .. } => format!("varcomp{eta}"),
+            PolicySpec::Paper { eta, qsr_c, .. } => format!("paper{eta}_c{qsr_c}"),
+        }
+    }
+
+    /// Validate ranges; returns a list of problems (empty = ok). Every message
+    /// names the offending field and the valid range.
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        let common = |errs: &mut Vec<String>, eta: f64, b0: u64, b_max: u64| {
+            if !(eta > 0.0 && eta < 1.0) {
+                errs.push(format!("policy: eta {eta} must be in (0, 1)"));
+            }
+            if b0 < 1 {
+                errs.push("policy: b0 must be >= 1".into());
+            }
+            if b0 > b_max {
+                errs.push(format!("policy: b0 {b0} > b_max {b_max}"));
+            }
+        };
+        match self {
+            PolicySpec::VarianceCompression { eta, b0, b_max, h, k_min, k_max } => {
+                common(&mut errs, *eta, *b0, *b_max);
+                if *h < 1 {
+                    errs.push("policy: h must be >= 1".into());
+                }
+                if !(*k_min > 0.0 && k_min <= k_max && *k_max <= 1.0) {
+                    errs.push(format!(
+                        "policy: top-k bounds [{k_min}, {k_max}] must satisfy \
+                         0 < k_min <= k_max <= 1"
+                    ));
+                }
+            }
+            PolicySpec::Paper {
+                eta,
+                b0,
+                b_max,
+                h_base,
+                h_max,
+                qsr_c,
+                compress_growth,
+                ladder,
+            } => {
+                common(&mut errs, *eta, *b0, *b_max);
+                if *h_base < 1 || h_max < h_base {
+                    errs.push(format!(
+                        "policy: H bounds [h_base={h_base}, h_max={h_max}] must satisfy \
+                         1 <= h_base <= h_max (h_next is clamped into this range)"
+                    ));
+                }
+                if !(*qsr_c > 0.0) {
+                    errs.push(format!("policy: qsr_c {qsr_c} must be positive"));
+                }
+                if !(*compress_growth > 1.0) {
+                    errs.push(format!(
+                        "policy: compress_growth {compress_growth} must be > 1 \
+                         (the batch-growth factor per ladder rung)"
+                    ));
+                }
+                if let Some(l) = ladder {
+                    if l.is_empty() {
+                        errs.push("policy: ladder must have at least one rung".into());
+                    }
+                    for (i, s) in l.iter().enumerate() {
+                        for e in s.validate() {
+                            errs.push(format!("policy: ladder rung {i}: {e}"));
+                        }
+                    }
+                }
+            }
+        }
+        errs
+    }
+
+    // ---------------------------------------------------------------- JSON --
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            PolicySpec::VarianceCompression { eta, b0, b_max, h, k_min, k_max } => {
+                Json::obj(vec![
+                    ("type", Json::str("variance_compression")),
+                    ("eta", Json::num(*eta)),
+                    ("b0", Json::num(*b0 as f64)),
+                    ("b_max", Json::num(*b_max as f64)),
+                    ("h", Json::num(*h as f64)),
+                    ("k_min", Json::num(*k_min)),
+                    ("k_max", Json::num(*k_max)),
+                ])
+            }
+            PolicySpec::Paper {
+                eta,
+                b0,
+                b_max,
+                h_base,
+                h_max,
+                qsr_c,
+                compress_growth,
+                ladder,
+            } => {
+                let mut pairs = vec![
+                    ("type", Json::str("paper")),
+                    ("eta", Json::num(*eta)),
+                    ("b0", Json::num(*b0 as f64)),
+                    ("b_max", Json::num(*b_max as f64)),
+                    ("h_base", Json::num(*h_base as f64)),
+                    ("h_max", Json::num(*h_max as f64)),
+                    ("qsr_c", Json::num(*qsr_c)),
+                    ("compress_growth", Json::num(*compress_growth)),
+                ];
+                if let Some(l) = ladder {
+                    pairs.push((
+                        "ladder",
+                        Json::arr(l.iter().map(|s| Json::str(&s.shorthand()))),
+                    ));
+                }
+                Json::obj(pairs)
+            }
+        }
+    }
+
+    /// Strict parse: unknown keys and out-of-range values are hard errors.
+    pub fn from_json(j: &Json) -> Result<PolicySpec, String> {
+        let obj = j
+            .as_obj()
+            .ok_or("policy section must be an object with a \"type\" key")?;
+        let ty = j
+            .get("type")
+            .as_str()
+            .ok_or("policy.type must be a string (\"variance_compression\" or \"paper\")")?;
+
+        let allowed: &[&str] = match ty {
+            "variance_compression" => &["type", "eta", "b0", "b_max", "h", "k_min", "k_max"],
+            "paper" => &[
+                "type",
+                "eta",
+                "b0",
+                "b_max",
+                "h_base",
+                "h_max",
+                "qsr_c",
+                "compress_growth",
+                "ladder",
+            ],
+            other => {
+                return Err(format!(
+                    "unknown policy type '{other}' \
+                     (known: variance_compression, paper)"
+                ))
+            }
+        };
+        for key in obj.keys() {
+            if !allowed.contains(&key.as_str()) {
+                return Err(format!(
+                    "policy ({ty}): unknown key '{key}' — allowed keys: {}",
+                    allowed.join(", ")
+                ));
+            }
+        }
+
+        let req_f64 = |k: &str| {
+            j.get(k)
+                .as_f64()
+                .ok_or_else(|| format!("policy ({ty}): {k} must be a number"))
+        };
+        let req_u64 = |k: &str| {
+            j.get(k)
+                .as_u64()
+                .ok_or_else(|| format!("policy ({ty}): {k} must be a non-negative integer"))
+        };
+        // H values are u32 in the engines; out-of-range is a hard error, not a
+        // silent `as` truncation (the strict-parse contract).
+        let req_u32 = |k: &str| -> Result<u32, String> {
+            let v = req_u64(k)?;
+            u32::try_from(v)
+                .map_err(|_| format!("policy ({ty}): {k} {v} exceeds the u32 range"))
+        };
+        let opt_f64 = |k: &str, default: f64| match j.get(k) {
+            Json::Null => Ok(default),
+            v => v
+                .as_f64()
+                .ok_or_else(|| format!("policy ({ty}): {k} must be a number")),
+        };
+
+        let spec = match ty {
+            "variance_compression" => PolicySpec::VarianceCompression {
+                eta: req_f64("eta")?,
+                b0: req_u64("b0")?,
+                b_max: req_u64("b_max")?,
+                h: req_u32("h")?,
+                k_min: opt_f64("k_min", 0.03125)?,
+                k_max: opt_f64("k_max", 0.25)?,
+            },
+            "paper" => {
+                let ladder = match j.get("ladder") {
+                    Json::Null => None,
+                    v => {
+                        let arr = v
+                            .as_arr()
+                            .ok_or("policy (paper): ladder must be an array of method strings")?;
+                        let mut rungs = Vec::with_capacity(arr.len());
+                        for (i, rung) in arr.iter().enumerate() {
+                            let s = rung.as_str().ok_or_else(|| {
+                                format!(
+                                    "policy (paper): ladder rung {i} must be a method string \
+                                     (e.g. \"topk:0.125\")"
+                                )
+                            })?;
+                            rungs.push(
+                                CompressionSpec::parse(s)
+                                    .map_err(|e| format!("policy (paper): ladder rung {i}: {e}"))?,
+                            );
+                        }
+                        Some(rungs)
+                    }
+                };
+                PolicySpec::Paper {
+                    eta: req_f64("eta")?,
+                    b0: req_u64("b0")?,
+                    b_max: req_u64("b_max")?,
+                    h_base: req_u32("h_base")?,
+                    h_max: req_u32("h_max")?,
+                    qsr_c: req_f64("qsr_c")?,
+                    compress_growth: opt_f64("compress_growth", 4.0)?,
+                    ladder,
+                }
+            }
+            _ => unreachable!("type checked above"),
+        };
+        let errs = spec.validate();
+        if errs.is_empty() {
+            Ok(spec)
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_spec() -> PolicySpec {
+        PolicySpec::Paper {
+            eta: 0.8,
+            b0: 8,
+            b_max: 256,
+            h_base: 4,
+            h_max: 16,
+            qsr_c: 0.32,
+            compress_growth: 4.0,
+            ladder: None,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_both_variants() {
+        let with_ladder = PolicySpec::Paper {
+            eta: 0.8,
+            b0: 8,
+            b_max: 256,
+            h_base: 4,
+            h_max: 16,
+            qsr_c: 0.32,
+            compress_growth: 4.0,
+            ladder: Some(vec![
+                CompressionSpec::identity(),
+                CompressionSpec::parse("topk:0.125").unwrap(),
+                CompressionSpec::parse("signsgd-ef").unwrap(),
+            ]),
+        };
+        let specs = [
+            paper_spec(),
+            with_ladder,
+            PolicySpec::VarianceCompression {
+                eta: 0.7,
+                b0: 16,
+                b_max: 1024,
+                h: 8,
+                k_min: 0.03125,
+                k_max: 0.25,
+            },
+        ];
+        for s in specs {
+            assert!(s.validate().is_empty(), "{:?}", s.validate());
+            let j = s.to_json().to_string();
+            let s2 = PolicySpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+            assert_eq!(s, s2, "roundtrip failed for {j}");
+        }
+    }
+
+    #[test]
+    fn unknown_keys_error_with_allowed_list() {
+        let j = Json::parse(
+            r#"{"type": "paper", "eta": 0.8, "b0": 8, "b_max": 256,
+                "h_base": 4, "h_max": 16, "qsr_c": 0.32, "k_mim": 0.1}"#,
+        )
+        .unwrap();
+        let err = PolicySpec::from_json(&j).unwrap_err();
+        assert!(err.contains("unknown key 'k_mim'"), "{err}");
+        assert!(err.contains("allowed keys"), "error must list the allowed keys: {err}");
+    }
+
+    #[test]
+    fn out_of_range_h_bounds_error() {
+        let j = Json::parse(
+            r#"{"type": "paper", "eta": 0.8, "b0": 8, "b_max": 256,
+                "h_base": 16, "h_max": 4, "qsr_c": 0.32}"#,
+        )
+        .unwrap();
+        let err = PolicySpec::from_json(&j).unwrap_err();
+        assert!(
+            err.contains("h_base") && err.contains("h_max"),
+            "error must name both H bounds: {err}"
+        );
+        assert!(err.contains("1 <= h_base <= h_max"), "error must state the range: {err}");
+    }
+
+    #[test]
+    fn malformed_values_are_hard_errors() {
+        let bad = [
+            r#"{"type": "warp"}"#,
+            r#"{"type": 5}"#,
+            r#""paper""#,
+            r#"{"type": "paper", "eta": "high", "b0": 8, "b_max": 256,
+                "h_base": 4, "h_max": 16, "qsr_c": 0.32}"#,
+            r#"{"type": "paper", "eta": 1.5, "b0": 8, "b_max": 256,
+                "h_base": 4, "h_max": 16, "qsr_c": 0.32}"#,
+            r#"{"type": "paper", "eta": 0.8, "b0": 512, "b_max": 256,
+                "h_base": 4, "h_max": 16, "qsr_c": 0.32}"#,
+            r#"{"type": "paper", "eta": 0.8, "b0": 8, "b_max": 256,
+                "h_base": 4, "h_max": 16, "qsr_c": -1}"#,
+            r#"{"type": "paper", "eta": 0.8, "b0": 8, "b_max": 256,
+                "h_base": 4, "h_max": 16, "qsr_c": 0.32, "ladder": ["fft"]}"#,
+            r#"{"type": "paper", "eta": 0.8, "b0": 8, "b_max": 256,
+                "h_base": 4, "h_max": 16, "qsr_c": 0.32, "ladder": []}"#,
+            r#"{"type": "paper", "eta": 0.8, "b0": 8, "b_max": 256,
+                "h_base": 4, "h_max": 16, "qsr_c": 0.32, "compress_growth": 1.0}"#,
+            r#"{"type": "variance_compression", "eta": 0.8, "b0": 8, "b_max": 256,
+                "h": 0}"#,
+            r#"{"type": "paper", "eta": 0.8, "b0": 8, "b_max": 256,
+                "h_base": 4, "h_max": 4294967312, "qsr_c": 0.32}"#,
+            r#"{"type": "variance_compression", "eta": 0.8, "b0": 8, "b_max": 256,
+                "h": 8, "k_min": 0.5, "k_max": 0.25}"#,
+            r#"{"type": "variance_compression", "eta": 0.8, "b0": 8, "b_max": 256,
+                "h": 8, "k_max": 1.5}"#,
+        ];
+        for b in bad {
+            let j = Json::parse(b).unwrap();
+            assert!(PolicySpec::from_json(&j).is_err(), "accepted malformed {b}");
+        }
+    }
+
+    #[test]
+    fn build_produces_live_policies() {
+        use crate::policy::AdaptivePolicy;
+        let mut p = paper_spec().build();
+        assert_eq!(p.b0(), 8);
+        assert!(p.h_bootstrap(0, 0, 0.05) >= 4);
+        assert!(paper_spec().controls_compression());
+        assert_eq!(paper_spec().b_max(), 256);
+        let v = PolicySpec::VarianceCompression {
+            eta: 0.8,
+            b0: 8,
+            b_max: 256,
+            h: 8,
+            k_min: 0.0625,
+            k_max: 0.25,
+        };
+        assert!(v.controls_compression());
+        assert_eq!(v.build().b0(), 8);
+        assert!(v.label().starts_with("varcomp"));
+        assert!(paper_spec().label().starts_with("paper"));
+    }
+
+    #[test]
+    fn optional_keys_take_documented_defaults() {
+        let j = Json::parse(
+            r#"{"type": "variance_compression", "eta": 0.8, "b0": 8, "b_max": 256, "h": 8}"#,
+        )
+        .unwrap();
+        match PolicySpec::from_json(&j).unwrap() {
+            PolicySpec::VarianceCompression { k_min, k_max, .. } => {
+                assert_eq!(k_min, 0.03125);
+                assert_eq!(k_max, 0.25);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        let j = Json::parse(
+            r#"{"type": "paper", "eta": 0.8, "b0": 8, "b_max": 256,
+                "h_base": 4, "h_max": 16, "qsr_c": 0.32}"#,
+        )
+        .unwrap();
+        match PolicySpec::from_json(&j).unwrap() {
+            PolicySpec::Paper { compress_growth, ladder, .. } => {
+                assert_eq!(compress_growth, 4.0);
+                assert!(ladder.is_none());
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+}

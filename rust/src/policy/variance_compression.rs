@@ -1,0 +1,213 @@
+//! Variance-adaptive compression: the top-k sparsification fraction scheduled
+//! by the norm-test statistic — the ROADMAP's "adaptive compression
+//! (schedule k_frac/chunk by round or by norm-test signal)" item, and the
+//! first policy the old three-surface API could not express.
+//!
+//! Intuition: the norm-test ratio ρ = T / b_k (eq. 14 statistic over the
+//! current batch) measures how much of the averaged gradient is noise. While
+//! ρ ≥ 1 the test is violated — the gradient is noise-dominated, so throwing
+//! away small coordinates costs little signal and top-k can be aggressive
+//! (k_frac → k_min). As the batch grows and ρ falls, the gradient becomes
+//! trustworthy and the sync needs fidelity (k_frac → k_max). The fraction is
+//! snapped to a halving ladder (k_max, k_max/2, k_max/4, … ≥ k_min) so
+//! decisions are discrete and a run's compression trace is readable.
+
+use super::{AdaptivePolicy, PolicyDecision, RoundSignals};
+use crate::batch::norm_test::ApproxNormTest;
+use crate::batch::BatchSizeController;
+use crate::comm::{CompressMethod, CompressionSpec};
+
+/// Norm-test batch growth + norm-test-scheduled top-k compression at a fixed
+/// sync interval H.
+pub struct VarianceAdaptiveCompression {
+    norm: ApproxNormTest,
+    h: u32,
+    k_min: f64,
+    k_max: f64,
+    current_k: f64,
+}
+
+impl VarianceAdaptiveCompression {
+    pub fn new(eta: f64, b0: u64, b_max: u64, h: u32, k_min: f64, k_max: f64) -> Self {
+        assert!(h >= 1, "H must be >= 1");
+        assert!(
+            k_min > 0.0 && k_min <= k_max && k_max <= 1.0,
+            "need 0 < k_min <= k_max <= 1, got [{k_min}, {k_max}]"
+        );
+        VarianceAdaptiveCompression {
+            norm: ApproxNormTest::new(eta, b0, b_max),
+            h,
+            k_min,
+            k_max,
+            current_k: k_max,
+        }
+    }
+
+    fn spec_for(k_frac: f64) -> CompressionSpec {
+        CompressionSpec {
+            method: CompressMethod::TopK { k_frac },
+            error_feedback: true,
+        }
+    }
+
+    /// Map the noise ratio ρ = T / b onto the halving ladder
+    /// {k_max, k_max/2, k_max/4, … ≥ k_min}: ρ ≥ 1 (noise-dominated) lands on
+    /// the smallest rung, ρ → 0 on k_max.
+    fn k_for_ratio(&self, rho: f64) -> f64 {
+        let rho = rho.clamp(0.0, 1.0);
+        // continuous target, then snap down to the halving ladder
+        let target = self.k_max - (self.k_max - self.k_min) * rho;
+        let mut k = self.k_max;
+        while k / 2.0 >= self.k_min && k / 2.0 >= target {
+            k /= 2.0;
+        }
+        k.max(self.k_min)
+    }
+}
+
+impl AdaptivePolicy for VarianceAdaptiveCompression {
+    fn b0(&self) -> u64 {
+        self.norm.b0
+    }
+
+    fn h_bootstrap(&mut self, _round: u64, _samples: u64, _lr: f64) -> u32 {
+        self.h
+    }
+
+    fn initial_compression(&self) -> Option<CompressionSpec> {
+        // No signal before the first sync: start at full fidelity.
+        Some(Self::spec_for(self.k_max))
+    }
+
+    fn on_sync(&mut self, signals: &RoundSignals) -> PolicyDecision {
+        let ev = signals.sync_event();
+        let d = self.norm.on_sync(&ev);
+        // Degenerate statistics — a single contributor (cluster dropouts) or a
+        // zero averaged gradient — carry NO noise information: the norm test
+        // deliberately answers "keep the batch" there, and we keep the current
+        // rung rather than misreading ρ = T/b = 1 as maximum noise (which
+        // would flip to k_min and reset every error-feedback residual over a
+        // membership event).
+        let compression = if ev.m_workers < 2 || ev.gbar_norm_sq <= 0.0 {
+            None
+        } else {
+            let t = self.norm.statistic(&ev);
+            let rho = if ev.b_local > 0 { t as f64 / ev.b_local as f64 } else { 1.0 };
+            let k = self.k_for_ratio(rho);
+            if k != self.current_k {
+                self.current_k = k;
+                Some(Self::spec_for(k))
+            } else {
+                None
+            }
+        };
+        PolicyDecision {
+            b_next: d.b_next,
+            h_next: self.h,
+            compression,
+            test_violated: d.test_violated,
+        }
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "var_adaptive_compression(eta={}, H={}, k=[{}, {}])",
+            self.norm.eta, self.h, self.k_min, self.k_max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::tests::signals;
+
+    fn policy() -> VarianceAdaptiveCompression {
+        VarianceAdaptiveCompression::new(0.8, 8, 4096, 8, 0.03125, 0.25)
+    }
+
+    #[test]
+    fn noisy_gradients_compress_hard_and_grow_batch() {
+        let mut p = policy();
+        // huge scatter vs ||gbar||²: test violated, ρ clamps to 1
+        let d = p.on_sync(&signals(32, 1000.0, 0.1, 4));
+        assert!(d.test_violated);
+        assert!(d.b_next > 32);
+        match d.compression {
+            Some(CompressionSpec { method: CompressMethod::TopK { k_frac }, error_feedback }) => {
+                assert!(error_feedback, "lossy rungs must carry error feedback");
+                assert!((k_frac - 0.03125).abs() < 1e-12, "noise floor must hit k_min, got {k_frac}");
+            }
+            other => panic!("expected a top-k decision, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_gradients_back_off_to_k_max() {
+        let mut p = policy();
+        // first drive it to the aggressive end...
+        p.on_sync(&signals(32, 1000.0, 0.1, 4));
+        // ...then a clean signal (tiny scatter): fidelity restored
+        let d = p.on_sync(&signals(512, 1e-9, 10.0, 4));
+        assert!(!d.test_violated);
+        match d.compression {
+            Some(CompressionSpec { method: CompressMethod::TopK { k_frac }, .. }) => {
+                assert_eq!(k_frac, 0.25, "clean signal must restore k_max");
+            }
+            other => panic!("expected a top-k decision, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unchanged_rung_emits_no_decision() {
+        let mut p = policy();
+        let first = p.on_sync(&signals(32, 1000.0, 0.1, 4));
+        assert!(first.compression.is_some());
+        // same regime again: rung unchanged, no redundant switch
+        let second = p.on_sync(&signals(64, 1000.0, 0.1, 4));
+        assert!(second.compression.is_none(), "identical rung must not re-emit");
+    }
+
+    #[test]
+    fn ladder_is_monotone_in_noise() {
+        let p = policy();
+        let mut prev = f64::INFINITY;
+        for rho in [0.0, 0.2, 0.4, 0.6, 0.8, 1.0] {
+            let k = p.k_for_ratio(rho);
+            assert!(k <= prev, "k must fall as noise rises: rho={rho} k={k}");
+            assert!((0.03125..=0.25).contains(&k));
+            prev = k;
+        }
+        assert_eq!(p.k_for_ratio(0.0), 0.25);
+        assert_eq!(p.k_for_ratio(1.0), 0.03125);
+    }
+
+    #[test]
+    fn degenerate_signals_keep_the_current_rung() {
+        let mut p = policy();
+        // drive to the aggressive end first
+        p.on_sync(&signals(32, 1000.0, 0.1, 4));
+        // single contributor (dropout round): no information, no switch
+        let d = p.on_sync(&signals(64, 0.0, 1.0, 1));
+        assert!(d.compression.is_none(), "m=1 must not move the rung");
+        // zero averaged gradient: same
+        let d = p.on_sync(&signals(64, 1.0, 0.0, 4));
+        assert!(d.compression.is_none(), "zero gradient must not move the rung");
+    }
+
+    #[test]
+    fn fixed_h_and_initial_spec() {
+        let mut p = policy();
+        assert_eq!(p.h_bootstrap(0, 0, 0.1), 8);
+        assert_eq!(p.b0(), 8);
+        let init = p.initial_compression().unwrap();
+        assert_eq!(init.method, CompressMethod::TopK { k_frac: 0.25 });
+        assert!(p.needs_grad_allreduce(), "rides on the approximate norm test");
+    }
+
+    #[test]
+    #[should_panic(expected = "k_min")]
+    fn rejects_bad_k_bounds() {
+        VarianceAdaptiveCompression::new(0.8, 8, 64, 4, 0.5, 0.25);
+    }
+}

@@ -33,12 +33,90 @@ fn all_committed_scenarios_parse_and_roundtrip() {
         "topk8.json",
         "signsgd_elastic.json",
         "int8_straggler.json",
+        "adaptive_policy.json",
     ] {
         let spec = load(name);
         let j = spec.to_json().to_string();
         let again = ScenarioSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(spec, again, "{name} does not roundtrip");
     }
+}
+
+/// Adapter-equivalence acceptance sweep: every pre-existing (legacy-section)
+/// homogeneous scenario must produce bit-for-bit identical final loss and
+/// CommCounters through the unified policy path on BOTH engines. The
+/// heterogeneous scenarios are covered by their own completion tests (the
+/// sequential engine cannot express their fault timelines at all).
+#[test]
+fn legacy_scenarios_stay_bit_for_bit_across_engines() {
+    for name in ["homogeneous4.json", "topk8.json"] {
+        let spec = load(name);
+        assert!(spec.run.policy.is_none(), "{name} must stay a legacy-section scenario");
+        assert!(spec.is_homogeneous(), "{name} must stay homogeneous for this anchor");
+        // Sequential run with the scenario's exact compression (run_config
+        // always runs dense, so assemble the opts by hand).
+        let mut models = adaloco::exp::build_native_models(&spec.run);
+        let mut datasets = adaloco::exp::build_datasets(&spec.run);
+        let mut opts = adaloco::exp::engine_opts(&spec.run);
+        opts.compression = spec.compression.clone();
+        let seq = adaloco::engine::run_local_sgd(&mut models, &mut datasets, opts);
+
+        let clu = run_scenario(&spec).expect("cluster run");
+        assert_eq!(seq.comm, clu.comm, "{name}: CommCounters diverged");
+        assert_eq!(seq.batch_trace, clu.batch_trace, "{name}: batch schedule diverged");
+        assert_eq!(seq.policy_trace, clu.policy_trace, "{name}: decision streams diverged");
+        assert_eq!(
+            seq.points.last().unwrap().val_loss.to_bits(),
+            clu.points.last().unwrap().val_loss.to_bits(),
+            "{name}: final loss not bit-equal"
+        );
+        assert!(!clu.diverged, "{name} diverged");
+    }
+}
+
+/// The flagship policy scenario: the composite paper policy grows the batch
+/// (norm test), moves H (QSR over the cosine lr), and ramps the compression
+/// ladder as the batch grows — a joint decision the legacy three-surface API
+/// could not express — while the run still learns and saves wire bytes.
+#[test]
+fn adaptive_policy_scenario_moves_all_three_knobs() {
+    let spec = load("adaptive_policy.json");
+    assert!(spec.run.policy.is_some(), "scenario must use the unified policy section");
+    let rec = run_scenario(&spec).expect("adaptive_policy run");
+    assert!(!rec.diverged);
+
+    // per-round decisions were recorded
+    assert!(!rec.policy_trace.is_empty(), "policy trace missing");
+
+    // knob 1: the batch grew
+    let bs: Vec<u64> = rec.batch_trace.iter().map(|&(_, _, b)| b).collect();
+    assert!(
+        bs.last().unwrap() > bs.first().unwrap(),
+        "batch never grew: {bs:?}"
+    );
+
+    // knob 2: H moved (QSR across warmup + cosine decay)
+    let hs: Vec<u32> = rec.policy_trace.iter().map(|p| p.h_next).collect();
+    assert!(
+        hs.iter().max() > hs.iter().min(),
+        "H never moved under QSR: {hs:?}"
+    );
+
+    // knob 3: compression switched off the dense rung and saved wire bytes
+    assert!(
+        rec.policy_trace.iter().any(|p| p.switched),
+        "compression never switched"
+    );
+    assert!(
+        rec.comm.wire_bytes < rec.comm.bytes_moved,
+        "wire ratio not < 1: {} of {}",
+        rec.comm.wire_bytes,
+        rec.comm.bytes_moved
+    );
+
+    // and the model still learns
+    let acc = rec.best_val_acc();
+    assert!(acc > 0.4, "policy run failed to learn: best acc {acc} (chance = 0.125)");
 }
 
 #[test]

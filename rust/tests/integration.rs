@@ -254,8 +254,8 @@ fn heterogeneous_shards_still_converge() {
         })
         .collect();
     let mut opts = EngineOpts::quick_defaults("hetero", 120_000);
-    opts.scheduler = Box::new(FixedH::new(8));
-    opts.controller = Box::new(ApproxNormTest::new(0.8, 32, 1024));
+    opts.set_scheduler(Box::new(FixedH::new(8)));
+    opts.set_controller(Box::new(ApproxNormTest::new(0.8, 32, 1024)));
     opts.lr = adaloco::optim::LrSchedule::Constant { lr: 0.05 };
     let rec = run_local_sgd(&mut models, &mut datasets, opts);
     assert!(!rec.diverged);

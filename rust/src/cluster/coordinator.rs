@@ -28,16 +28,18 @@
 
 use super::membership::Roster;
 use super::messages::{FromWorker, RoundResult, ToWorker};
-use super::worker::spawn_worker;
+use super::worker::{spawn_worker, WorkerResume};
 use crate::collective::CommCounters;
 use crate::comm::{ErrorFeedback, Payload};
 use crate::config::WorkerSpec;
 use crate::data::Dataset;
 use crate::engine::{EngineOpts, TrainEngine};
+use crate::journal::{ClusterSnapshot, JournalEvent, JournalWriter, RunSnapshot, WorkerSnapshot};
 use crate::metrics::{EvalPoint, PolicyPoint, RunRecord};
 use crate::model::GradModel;
 use crate::policy::RoundSignals;
 use crate::tensor;
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Duration;
@@ -150,6 +152,16 @@ impl TrainEngine for ClusterEngine {
         let x0 = models[0].init_params(&mut rng);
         let mut params = x0;
 
+        let mut opts = opts;
+        // ---- durability: rebuild from a snapshot before anything spawns ----
+        // All m workers spawn on resume too — the Hello handshake and the
+        // micro-batch reduction then run the exact float/int sequence of the
+        // uninterrupted run — and departed members are stopped right after.
+        // Model/dataset internals are restored here, while the coordinator
+        // still owns the boxes; thread-private optimizer/error-feedback state
+        // travels in each worker's [`WorkerResume`].
+        let resume = opts.durability.resume.take();
+
         // The compression in effect (a compression-managing policy overrides
         // the scenario's static spec before round 0, exactly like the
         // sequential engine).
@@ -158,12 +170,46 @@ impl TrainEngine for ClusterEngine {
             .initial_compression()
             .unwrap_or_else(|| opts.compression.clone());
 
+        let mut datasets = datasets;
+        let mut worker_resume: Vec<Option<WorkerResume>> = (0..m).map(|_| None).collect();
+        if let Some(snap) = &resume {
+            assert_eq!(
+                snap.engine, "cluster",
+                "snapshot was written by the {:?} engine — resume it there",
+                snap.engine
+            );
+            assert_eq!(snap.dim, d, "snapshot dim {} != model dim {d}", snap.dim);
+            assert_eq!(
+                snap.m_workers, m,
+                "snapshot has {} workers but this scenario builds {m}",
+                snap.m_workers
+            );
+            opts.policy
+                .load_state(&snap.policy)
+                .unwrap_or_else(|e| panic!("resume: {e}"));
+            comp_spec = snap.comp_spec.clone();
+            params.copy_from_slice(&snap.consensus);
+            for ws in &snap.workers {
+                let w = ws.worker;
+                assert!(w < m, "snapshot worker {w} out of range for {m} workers");
+                models[w]
+                    .load_state(&ws.model_state)
+                    .unwrap_or_else(|e| panic!("resume worker {w}: {e}"));
+                datasets[w]
+                    .load_state(&ws.data_state)
+                    .unwrap_or_else(|e| panic!("resume worker {w}: {e}"));
+                worker_resume[w] = Some(WorkerResume {
+                    opt_state: ws.opt.clone(),
+                    ef_residual: ws.uplink_ef.clone(),
+                });
+            }
+        }
+
         // ---- WaitingForWorkers: spawn everyone, gather the Hellos ----------
         self.phase = Phase::WaitingForWorkers;
         let (from_tx, from_rx) = channel::<FromWorker>();
         let mut txs = Vec::with_capacity(m);
         let mut handles = Vec::with_capacity(m);
-        let mut datasets = datasets;
         for (w, (model, dataset)) in models.drain(..).zip(datasets.drain(..)).enumerate() {
             let (tx, handle) = spawn_worker(
                 w,
@@ -171,6 +217,7 @@ impl TrainEngine for ClusterEngine {
                 dataset,
                 opts.optim.clone(),
                 comp_spec.clone(),
+                worker_resume[w].take(),
                 from_tx.clone(),
             );
             txs.push(tx);
@@ -187,18 +234,53 @@ impl TrainEngine for ClusterEngine {
             }
         }
 
-        let mut roster = Roster::new(self.workers.clone());
+        let mut roster = match &resume {
+            Some(snap) => {
+                let c = snap
+                    .cluster
+                    .as_ref()
+                    .expect("cluster snapshot carries a cluster section");
+                assert_eq!(
+                    micro, c.micro,
+                    "micro-batch granularity changed across resume"
+                );
+                Roster::restore(self.workers.clone(), &c.members, c.stats.clone())
+                    .unwrap_or_else(|e| panic!("resume: {e}"))
+            }
+            None => Roster::new(self.workers.clone()),
+        };
+        if resume.is_some() {
+            // Members that left before the checkpoint are out of the run for
+            // good; their threads only existed for the Hello handshake.
+            for (w, tx) in txs.iter().enumerate() {
+                if roster.is_left(w) {
+                    let _ = tx.send(ToWorker::Stop);
+                }
+            }
+        }
         let mut rec = RunRecord {
             label: opts.label.clone(),
             ..Default::default()
         };
+        if let Some(snap) = &resume {
+            rec.points = snap.points.clone();
+            rec.batch_trace = snap.batch_trace.clone();
+            rec.policy_trace = snap.policy_trace.clone();
+            rec.comm = snap.comm;
+            rec.diverged = snap.diverged;
+        }
         // The coordinator's side of the compressed-sync protocol: one
         // compressor (shared config with the workers) and the downlink
         // error-feedback residual for the broadcast direction. Both are
         // rebuilt when a policy decision switches the spec.
         let mut compressor = comp_spec.build();
         let mut downlink_ef = comp_spec.error_feedback.then(|| ErrorFeedback::new(d));
-        // Founding members receive x_0 (dense: there is no reference yet).
+        if let Some(snap) = &resume {
+            downlink_ef = snap.downlink_ef.clone().map(|residual| ErrorFeedback { residual });
+        }
+        // Founding members receive x_0 (dense: there is no reference yet). On
+        // resume `params` is the snapshot consensus, which doubles as every
+        // active worker's payload reference — exactly the boundary state.
         for w in roster.active() {
             Self::try_send(
                 &txs,
@@ -222,16 +304,68 @@ impl TrainEngine for ClusterEngine {
         let mut total_local_steps: f64 = 0.0;
         let needs_grad_ar = opts.policy.needs_grad_allreduce();
         let mut gbar = vec![0.0f32; d];
-        let mut opts = opts;
         // H decided at the previous live sync (None: bootstrap from the
         // policy, mirroring the legacy top-of-loop scheduler call).
         let mut pending_h: Option<u32> = None;
 
         let mut warmup_left = self.warmup_rounds;
         let mut cooldown_left = self.cooldown_rounds;
-        self.phase = if warmup_left > 0 { Phase::Warmup } else { Phase::Round };
-
         let mut round: u64 = 0;
+        if let Some(snap) = &resume {
+            b_local = snap.b_local;
+            samples = snap.samples;
+            steps = snap.steps;
+            sim_time = snap.sim_time_s;
+            next_eval = snap.next_eval;
+            weighted_b = snap.weighted_b;
+            total_local_steps = snap.total_local_steps;
+            pending_h = snap.pending_h;
+            let c = snap.cluster.as_ref().unwrap();
+            warmup_left = c.warmup_left;
+            cooldown_left = c.cooldown_left;
+            round = snap.round + 1;
+        }
+        // The phase a just-synced coordinator would carry into this round —
+        // the same expression as the end-of-round reassignment below, so a
+        // resume lands in exactly the phase the uninterrupted run was in.
+        self.phase = if warmup_left > 0 {
+            Phase::Warmup
+        } else if cooldown_left > 0 && samples >= opts.total_samples {
+            Phase::Cooldown
+        } else {
+            Phase::Round
+        };
+
+        let mut journal = opts.durability.journal.clone().map(|path| match &resume {
+            Some(snap) => JournalWriter::resume(&path, snap.journal_bytes, snap.journal_seq)
+                .unwrap_or_else(|e| panic!("resume: {e}")),
+            None => JournalWriter::create(&path).unwrap_or_else(|e| panic!("{e}")),
+        });
+        if resume.is_none() {
+            if let Some(jw) = journal.as_mut() {
+                jw.append(&JournalEvent::RunStarted {
+                    version: crate::journal::SNAPSHOT_VERSION,
+                    engine: "cluster".to_string(),
+                    label: opts.label.clone(),
+                    seed: opts.seed,
+                    dim: d as u64,
+                    m_workers: m as u64,
+                    policy: opts.policy.name(),
+                    total_samples: opts.total_samples,
+                    compression: comp_spec.label(),
+                })
+                .unwrap_or_else(|e| panic!("{e}"));
+                for w in roster.active() {
+                    jw.append(&JournalEvent::WorkerJoined {
+                        round: 0,
+                        worker: w as u64,
+                        founding: true,
+                    })
+                    .unwrap_or_else(|e| panic!("{e}"));
+                }
+            }
+        }
+
         while round < opts.max_rounds {
             // ---- phase transitions ----------------------------------------
             if self.phase == Phase::Warmup && warmup_left == 0 {
@@ -253,8 +387,24 @@ impl TrainEngine for ClusterEngine {
             // ---- elastic membership for this round ------------------------
             for w in roster.retire_due(round) {
                 let _ = txs[w].send(ToWorker::Stop);
+                if let Some(jw) = journal.as_mut() {
+                    jw.append(&JournalEvent::WorkerLeft {
+                        round,
+                        worker: w as u64,
+                        reason: "scheduled".to_string(),
+                    })
+                    .unwrap_or_else(|e| panic!("{e}"));
+                }
             }
             for w in roster.admit_due(round) {
+                if let Some(jw) = journal.as_mut() {
+                    jw.append(&JournalEvent::WorkerJoined {
+                        round,
+                        worker: w as u64,
+                        founding: false,
+                    })
+                    .unwrap_or_else(|e| panic!("{e}"));
+                }
                 // Admission payload is dense: the joiner holds no reference.
                 Self::try_send(
                     &txs,
@@ -284,6 +434,11 @@ impl TrainEngine for ClusterEngine {
             // size); live rounds consume the H decided at the previous sync,
             // or bootstrap it from the policy with the same (round, samples,
             // lr) triple the legacy scheduler call received.
+            let phase_name = match self.phase {
+                Phase::Warmup => "warmup",
+                Phase::Cooldown => "cooldown",
+                _ => "round",
+            };
             let (h, policy_live) = match self.phase {
                 Phase::Warmup => {
                     warmup_left -= 1;
@@ -329,6 +484,14 @@ impl TrainEngine for ClusterEngine {
             for w in roster.active() {
                 if roster.spec(w).drops_round(round) {
                     roster.stats[w].dropped_rounds += 1;
+                    if let Some(jw) = journal.as_mut() {
+                        jw.append(&JournalEvent::FaultInjected {
+                            round,
+                            worker: w as u64,
+                            kind: "dropout".to_string(),
+                        })
+                        .unwrap_or_else(|e| panic!("{e}"));
+                    }
                 }
             }
             if assigned.is_empty() {
@@ -470,6 +633,22 @@ impl TrainEngine for ClusterEngine {
             let sync_s = opts.time_model.sync_time_compressed(d, needs_grad_ar, wire_frac);
             sim_time += worst;
             sim_time += sync_s;
+            if let Some(jw) = journal.as_mut() {
+                jw.append(&JournalEvent::SyncCommitted {
+                    round,
+                    phase: phase_name.to_string(),
+                    h,
+                    b_eff,
+                    contributors: k as u64,
+                    samples,
+                    steps,
+                    comm: rec.comm,
+                    compute_s: worst,
+                    sync_s,
+                    sim_time_s: sim_time,
+                })
+                .unwrap_or_else(|e| panic!("{e}"));
+            }
 
             // ---- the joint policy decision --------------------------------
             if policy_live {
@@ -496,6 +675,7 @@ impl TrainEngine for ClusterEngine {
                 b_local = decision.b_next.min(opts.b_max_local).max(1);
                 let h_next = decision.h_next.max(1);
                 pending_h = Some(h_next);
+                let prev_label = comp_spec.label();
                 let mut switched = false;
                 if let Some(next_spec) = decision.compression {
                     if next_spec != comp_spec {
@@ -529,6 +709,20 @@ impl TrainEngine for ClusterEngine {
                     test_violated: decision.test_violated,
                     wire_frac,
                 });
+                if let Some(jw) = journal.as_mut() {
+                    jw.append(&JournalEvent::PolicyDecision {
+                        point: rec.policy_trace.last().unwrap().clone(),
+                    })
+                    .unwrap_or_else(|e| panic!("{e}"));
+                    if switched {
+                        jw.append(&JournalEvent::CompressionSwitched {
+                            round,
+                            from: prev_label,
+                            to: comp_spec.label(),
+                        })
+                        .unwrap_or_else(|e| panic!("{e}"));
+                    }
+                }
             }
             rec.batch_trace.push((round, samples, b_eff));
 
@@ -577,6 +771,12 @@ impl TrainEngine for ClusterEngine {
                         val_acc: evs.accuracy,
                         val_top5: evs.top5,
                     });
+                    if let Some(jw) = journal.as_mut() {
+                        jw.append(&JournalEvent::Evaluated {
+                            point: *rec.points.last().unwrap(),
+                        })
+                        .unwrap_or_else(|e| panic!("{e}"));
+                    }
                 }
                 while next_eval <= samples {
                     next_eval = next_eval.saturating_add(opts.eval_every_samples.max(1));
@@ -595,6 +795,104 @@ impl TrainEngine for ClusterEngine {
             } else {
                 Phase::Round
             };
+
+            // ---- durability: checkpoint / kill-switch at this boundary ----
+            // The worker-held state (optimizer, uplink residual, model/data
+            // internals) is gathered over the message channel — read-only on
+            // the worker side — and the checkpoint_written event lands in the
+            // journal BEFORE the snapshot file, so the snapshot's recorded
+            // journal offset covers it.
+            if opts.durability.wants_checkpoint(round) {
+                let mut gathered: Vec<Option<(Json, Option<Vec<f32>>, Json, Json)>> =
+                    (0..m).map(|_| None).collect();
+                let mut asked = Vec::new();
+                for w in roster.active() {
+                    if Self::try_send(&txs, &mut roster, w, round, ToWorker::Checkpoint { round })
+                    {
+                        asked.push(w);
+                    }
+                }
+                let mut outstanding = asked.len();
+                while outstanding > 0 {
+                    match Self::recv(&from_rx) {
+                        FromWorker::CheckpointState { worker, round: r, opt, ef, model, data }
+                            if r == round =>
+                        {
+                            gathered[worker] = Some((opt, ef, model, data));
+                            outstanding -= 1;
+                        }
+                        other => panic!("unexpected message during checkpoint: {other:?}"),
+                    }
+                }
+                let path = opts
+                    .durability
+                    .snapshot_path(&opts.label, round)
+                    .expect("wants_checkpoint implies a checkpoint dir");
+                if let Some(jw) = journal.as_mut() {
+                    jw.append(&JournalEvent::CheckpointWritten {
+                        round,
+                        samples,
+                        path: path.display().to_string(),
+                    })
+                    .unwrap_or_else(|e| panic!("{e}"));
+                    jw.sync().unwrap_or_else(|e| panic!("{e}"));
+                }
+                let workers: Vec<WorkerSnapshot> = asked
+                    .iter()
+                    .map(|&w| {
+                        let (opt, ef, model, data) = gathered[w].take().unwrap();
+                        WorkerSnapshot {
+                            worker: w,
+                            opt,
+                            uplink_ef: ef,
+                            model_state: model,
+                            data_state: data,
+                        }
+                    })
+                    .collect();
+                let snap = RunSnapshot {
+                    version: crate::journal::SNAPSHOT_VERSION,
+                    engine: "cluster".to_string(),
+                    label: opts.label.clone(),
+                    seed: opts.seed,
+                    dim: d,
+                    m_workers: m,
+                    round,
+                    samples,
+                    steps,
+                    b_local,
+                    pending_h,
+                    next_eval,
+                    weighted_b,
+                    total_local_steps,
+                    sim_time_s: sim_time,
+                    comp_spec: comp_spec.clone(),
+                    consensus: params.clone(),
+                    downlink_ef: downlink_ef.as_ref().map(|ef| ef.residual.clone()),
+                    policy: opts.policy.save_state(),
+                    comm: rec.comm,
+                    points: rec.points.clone(),
+                    batch_trace: rec.batch_trace.clone(),
+                    policy_trace: rec.policy_trace.clone(),
+                    diverged: rec.diverged,
+                    workers,
+                    cluster: Some(ClusterSnapshot {
+                        warmup_left,
+                        cooldown_left,
+                        micro,
+                        members: roster.member_states(),
+                        stats: roster.stats.clone(),
+                    }),
+                    journal_bytes: journal.as_ref().map(|j| j.bytes()).unwrap_or(0),
+                    journal_seq: journal.as_ref().map(|j| j.seq()).unwrap_or(0),
+                };
+                snap.save(&path).unwrap_or_else(|e| panic!("checkpoint: {e}"));
+            }
+            if opts.durability.should_exit(round) {
+                rec.interrupted = true;
+                round += 1;
+                break;
+            }
             round += 1;
         }
 
@@ -620,6 +918,19 @@ impl TrainEngine for ClusterEngine {
             0.0
         };
         rec.worker_stats = roster.stats;
+        if let Some(jw) = journal.as_mut() {
+            jw.append(&JournalEvent::RunCompleted {
+                total_steps: rec.total_steps,
+                total_rounds: rec.total_rounds,
+                total_samples: rec.total_samples,
+                sim_time_s: rec.sim_time_s,
+                avg_local_batch: rec.avg_local_batch,
+                diverged: rec.diverged,
+                interrupted: rec.interrupted,
+            })
+            .unwrap_or_else(|e| panic!("{e}"));
+            jw.sync().unwrap_or_else(|e| panic!("{e}"));
+        }
         rec
     }
 }

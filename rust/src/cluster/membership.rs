@@ -45,6 +45,58 @@ impl Roster {
         Roster { specs, state, stats }
     }
 
+    /// Rebuild a roster from a run snapshot: the member states as serialized
+    /// by [`Roster::member_states`] plus the accumulated per-worker metrics.
+    /// Lengths must match the scenario's worker specs — a mismatch means the
+    /// snapshot was taken under a different scenario.
+    pub fn restore(
+        specs: Vec<WorkerSpec>,
+        members: &[String],
+        stats: Vec<WorkerSummary>,
+    ) -> Result<Self, String> {
+        if members.len() != specs.len() || stats.len() != specs.len() {
+            return Err(format!(
+                "snapshot roster has {} members / {} stats for {} worker specs — \
+                 scenario/snapshot mismatch",
+                members.len(),
+                stats.len(),
+                specs.len()
+            ));
+        }
+        let state = members
+            .iter()
+            .map(|s| match s.as_str() {
+                "pending" => Ok(MemberState::Pending),
+                "active" => Ok(MemberState::Active),
+                "left" => Ok(MemberState::Left),
+                other => Err(format!("unknown member state {other:?} in snapshot")),
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Roster { specs, state, stats })
+    }
+
+    /// Member states for the run snapshot (`"pending"`/`"active"`/`"left"`,
+    /// indexed by worker id) — the inverse of [`Roster::restore`].
+    pub fn member_states(&self) -> Vec<String> {
+        self.state
+            .iter()
+            .map(|s| {
+                match s {
+                    MemberState::Pending => "pending",
+                    MemberState::Active => "active",
+                    MemberState::Left => "left",
+                }
+                .to_string()
+            })
+            .collect()
+    }
+
+    /// Whether worker `w` has left the run (resume uses this to stop the
+    /// threads of departed members immediately after the spawn handshake).
+    pub fn is_left(&self, w: usize) -> bool {
+        self.state[w] == MemberState::Left
+    }
+
     pub fn spec(&self, w: usize) -> &WorkerSpec {
         &self.specs[w]
     }
@@ -148,6 +200,39 @@ mod tests {
         let r = Roster::new(specs());
         assert_eq!(r.contributors(0), vec![0, 2]);
         assert_eq!(r.contributors(1), vec![0]);
+    }
+
+    #[test]
+    fn member_states_round_trip_through_restore() {
+        let mut r = Roster::new(specs());
+        r.admit_due(2);
+        r.retire_due(5);
+        r.stats[0].rounds_contributed = 7;
+        let members = r.member_states();
+        assert_eq!(members, vec!["active", "left", "active"]);
+        let restored = Roster::restore(specs(), &members, r.stats.clone()).unwrap();
+        assert_eq!(restored.active(), r.active());
+        assert!(restored.is_left(1));
+        assert_eq!(restored.stats[0].rounds_contributed, 7);
+        // a restored pending worker still admits later
+        let fresh = Roster::new(specs());
+        let again =
+            Roster::restore(specs(), &fresh.member_states(), fresh.stats.clone()).unwrap();
+        assert_eq!(again.admit_due(2), vec![1]);
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_snapshots() {
+        let r = Roster::new(specs());
+        assert!(Roster::restore(specs(), &r.member_states()[..2], r.stats.clone())
+            .map(|_| ())
+            .unwrap_err()
+            .contains("mismatch"));
+        let bogus: Vec<String> = (0..3).map(|_| "bogus".to_string()).collect();
+        assert!(Roster::restore(specs(), &bogus, r.stats.clone())
+            .map(|_| ())
+            .unwrap_err()
+            .contains("bogus"));
     }
 
     #[test]

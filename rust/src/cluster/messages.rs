@@ -9,6 +9,7 @@
 
 use crate::comm::{CompressionSpec, Payload};
 use crate::model::EvalStats;
+use crate::util::json::Json;
 
 /// Coordinator → worker commands.
 #[derive(Debug, Clone)]
@@ -31,6 +32,10 @@ pub enum ToWorker {
     RunRound { round: u64, h: u32, b_eff: u64, lrs: Vec<f64> },
     /// Evaluate the current parameters on the worker's held-out set.
     Evaluate { round: u64 },
+    /// Report the worker-held durable state (optimizer, error-feedback
+    /// residual, model/dataset internals) for a [`crate::journal::RunSnapshot`].
+    /// Read-only on the worker side: a checkpoint must not perturb the run.
+    Checkpoint { round: u64 },
     /// Graceful shutdown (round barrier reached, or the worker left the run).
     Stop,
 }
@@ -63,4 +68,14 @@ pub enum FromWorker {
     Hello { worker: usize, dim: usize, micro_batch: usize },
     RoundDone(RoundResult),
     EvalDone { worker: usize, round: u64, stats: EvalStats },
+    /// Reply to [`ToWorker::Checkpoint`]: everything only this thread holds.
+    /// The coordinator folds it into the run snapshot's per-worker section.
+    CheckpointState {
+        worker: usize,
+        round: u64,
+        opt: Json,
+        ef: Option<Vec<f32>>,
+        model: Json,
+        data: Json,
+    },
 }

@@ -58,14 +58,37 @@ use crate::metrics::RunRecord;
 /// and datasets exactly like the sequential harness, swap in the scenario's
 /// heterogeneous topology, and drive the cluster engine.
 pub fn run_scenario(spec: &ScenarioSpec) -> anyhow::Result<RunRecord> {
+    run_scenario_durable(spec, crate::journal::Durability::none())
+}
+
+/// [`run_scenario`] with journal / checkpoint / resume wiring (the
+/// `--journal`, `--checkpoint-*`, and `--resume` CLI surface of
+/// `adaloco cluster`). The scenario must be the one the snapshot was taken
+/// under — worker timelines and model/data shapes are cross-checked, the
+/// rest is trusted exactly like a config re-run.
+pub fn run_scenario_durable(
+    spec: &ScenarioSpec,
+    durability: crate::journal::Durability,
+) -> anyhow::Result<RunRecord> {
     let errs = spec.validate();
     anyhow::ensure!(errs.is_empty(), "invalid scenario: {}", errs.join("; "));
+    if let Some(snap) = &durability.resume {
+        anyhow::ensure!(
+            snap.engine == "cluster",
+            "snapshot was taken by the {} engine; use the matching subcommand to resume it",
+            snap.engine
+        );
+    }
     let models = crate::exp::build_native_models(&spec.run);
     let datasets = crate::exp::build_datasets(&spec.run);
     let mut opts = crate::exp::engine_opts(&spec.run);
     opts.time_model.topo = spec.topology();
     opts.label = spec.name.clone();
     opts.compression = spec.compression.clone();
+    opts.durability = durability;
+    if opts.durability.checkpoint_every == 0 {
+        opts.durability.checkpoint_every = spec.run.checkpoint_every;
+    }
     let mut engine = ClusterEngine::from_scenario(spec);
     Ok(engine.run(models, datasets, opts))
 }

@@ -12,8 +12,18 @@ use crate::comm::{CompressionSpec, ErrorFeedback};
 use crate::data::Dataset;
 use crate::model::GradModel;
 use crate::optim::OptimParams;
+use crate::util::json::Json;
 use std::sync::mpsc::{channel, Sender};
 use std::thread::JoinHandle;
+
+/// Thread-private state a resumed worker starts from, as gathered by a
+/// previous run's [`ToWorker::Checkpoint`]. Model/dataset internals are
+/// re-applied by the coordinator *before* the spawn (it still owns the
+/// boxes then); only what lives strictly inside the thread travels here.
+pub(crate) struct WorkerResume {
+    pub opt_state: Json,
+    pub ef_residual: Option<Vec<f32>>,
+}
 
 /// Spawn worker `id` as an OS thread. Returns its command channel and join
 /// handle; the thread immediately reports `Hello` on `out` and then serves
@@ -27,6 +37,7 @@ pub(crate) fn spawn_worker(
     mut dataset: Box<dyn Dataset>,
     optim: OptimParams,
     compression: CompressionSpec,
+    resume: Option<WorkerResume>,
     out: Sender<FromWorker>,
 ) -> (Sender<ToWorker>, JoinHandle<()>) {
     let (cmd_tx, cmd_rx) = channel::<ToWorker>();
@@ -46,6 +57,13 @@ pub(crate) fn spawn_worker(
             let mut reference = vec![0.0f32; dim];
             let mut grad = vec![0.0f32; dim];
             let mut opt = optim.build(dim);
+            if let Some(r) = resume {
+                opt.load_state(&r.opt_state)
+                    .unwrap_or_else(|e| panic!("worker {id} resume: {e}"));
+                if let Some(residual) = r.ef_residual {
+                    ef = Some(ErrorFeedback { residual });
+                }
+            }
             for cmd in cmd_rx {
                 match cmd {
                     ToWorker::SetParams { payload } => {
@@ -88,6 +106,19 @@ pub(crate) fn spawn_worker(
                     ToWorker::Evaluate { round } => {
                         let stats = model.eval(&params, dataset.eval_set());
                         if out.send(FromWorker::EvalDone { worker: id, round, stats }).is_err() {
+                            break;
+                        }
+                    }
+                    ToWorker::Checkpoint { round } => {
+                        let state = FromWorker::CheckpointState {
+                            worker: id,
+                            round,
+                            opt: opt.state_json(),
+                            ef: ef.as_ref().map(|e| e.residual.clone()),
+                            model: model.state_json(),
+                            data: dataset.state_json(),
+                        };
+                        if out.send(state).is_err() {
                             break;
                         }
                     }

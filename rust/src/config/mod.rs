@@ -159,6 +159,9 @@ pub struct RunConfig {
     pub grad_clip: Option<f64>,
     pub weight_decay: f64,
     pub momentum: f64,
+    /// Write a [`crate::journal::RunSnapshot`] every K sync rounds (0 = never).
+    /// Only takes effect when a checkpoint directory is supplied at run time.
+    pub checkpoint_every: u64,
 }
 
 impl RunConfig {
@@ -372,6 +375,7 @@ impl RunConfig {
             ),
             ("weight_decay", Json::num(self.weight_decay)),
             ("momentum", Json::num(self.momentum)),
+            ("checkpoint_every", Json::num(self.checkpoint_every as f64)),
         ]);
         Json::obj(pairs)
     }
@@ -541,6 +545,7 @@ impl RunConfig {
             grad_clip: j.get("grad_clip").as_f64(),
             weight_decay: get_f64(j, "weight_decay")?,
             momentum: get_f64(j, "momentum")?,
+            checkpoint_every: j.get("checkpoint_every").as_u64().unwrap_or(0),
         })
     }
 
@@ -622,6 +627,7 @@ impl Default for RunConfig {
             grad_clip: None,
             weight_decay: 1e-4,
             momentum: 0.9,
+            checkpoint_every: 0,
         }
     }
 }

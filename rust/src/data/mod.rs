@@ -74,6 +74,27 @@ pub trait Dataset: Send {
 
     /// Human-readable name for logs.
     fn name(&self) -> &'static str;
+
+    /// Serialize the sampler's mutable state for a checkpoint. The virtual
+    /// datasets are pure functions of an internal RNG, so this is just that
+    /// RNG's position; `Json::Null` marks a stateless source.
+    fn state_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::Null
+    }
+
+    /// Restore state written by [`Dataset::state_json`]. The default accepts
+    /// only the stateless `Null` marker.
+    fn load_state(&mut self, state: &crate::util::json::Json) -> Result<(), String> {
+        if state.is_null() {
+            Ok(())
+        } else {
+            Err(format!(
+                "dataset {:?} is stateless but the snapshot carries sampler state — \
+                 snapshot/config mismatch",
+                self.name()
+            ))
+        }
+    }
 }
 
 #[cfg(test)]

@@ -107,6 +107,17 @@ impl Dataset for GaussianMixture {
     fn name(&self) -> &'static str {
         "gaussian_mixture"
     }
+
+    fn state_json(&self) -> crate::util::json::Json {
+        // Means, eval set, and shard are pure functions of the spec; only the
+        // sampling stream advances.
+        crate::util::json::Json::obj(vec![("rng", crate::journal::rng_to_json(&self.rng))])
+    }
+
+    fn load_state(&mut self, state: &crate::util::json::Json) -> Result<(), String> {
+        self.rng = crate::journal::rng_from_json(state.get("rng"), "gaussian_mixture state: rng")?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

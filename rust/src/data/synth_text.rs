@@ -100,6 +100,17 @@ impl Dataset for MarkovZipf {
     fn name(&self) -> &'static str {
         "markov_zipf"
     }
+
+    fn state_json(&self) -> crate::util::json::Json {
+        // The bigram table and eval set are pure functions of the spec; only
+        // the sampling stream advances.
+        crate::util::json::Json::obj(vec![("rng", crate::journal::rng_to_json(&self.rng))])
+    }
+
+    fn load_state(&mut self, state: &crate::util::json::Json) -> Result<(), String> {
+        self.rng = crate::journal::rng_from_json(state.get("rng"), "markov_zipf state: rng")?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -26,6 +26,7 @@ use crate::collective::{
 };
 use crate::comm::{CompressionSpec, ErrorFeedback, Payload};
 use crate::data::Dataset;
+use crate::journal::{Durability, JournalEvent, JournalWriter, RunSnapshot, WorkerSnapshot};
 use crate::metrics::{EvalPoint, PolicyPoint, RunRecord};
 use crate::model::GradModel;
 use crate::optim::{LrSchedule, OptimParams};
@@ -67,6 +68,9 @@ pub struct EngineOpts {
     /// manages compression overrides this via
     /// [`AdaptivePolicy::initial_compression`] and its per-sync decisions.
     pub compression: CompressionSpec,
+    /// Journal / checkpoint / resume wiring ([`Durability::none`] by default:
+    /// no journaling, no checkpoints — byte-identical to pre-journal runs).
+    pub durability: Durability,
 }
 
 impl EngineOpts {
@@ -95,6 +99,7 @@ impl EngineOpts {
             max_rounds: 1_000_000,
             threaded_allreduce: false,
             compression: CompressionSpec::identity(),
+            durability: Durability::none(),
         }
     }
 
@@ -179,8 +184,97 @@ pub fn run_local_sgd(
     let needs_grad_ar = opts.policy.needs_grad_allreduce();
     // H decided at the previous sync (None before round 0: bootstrap).
     let mut pending_h: Option<u32> = None;
-
     let mut round: u64 = 0;
+
+    // ---- durability: rebuild from a snapshot, open the journal -------------
+    // Resume overwrites the freshly-initialized state wholesale: counters,
+    // consensus (every worker's parameters equal it at a boundary), the
+    // compressor + every error-feedback residual, the policy's internals, and
+    // each worker's optimizer/model/data state. IO failures panic with
+    // context — a run that silently dropped its durability guarantees would
+    // be worse than a dead one.
+    let resume = opts.durability.resume.take();
+    if let Some(snap) = &resume {
+        assert_eq!(
+            snap.engine, "sequential",
+            "snapshot was written by the {:?} engine — resume it there",
+            snap.engine
+        );
+        assert_eq!(snap.dim, d, "snapshot dim {} != model dim {d}", snap.dim);
+        assert_eq!(
+            snap.m_workers, m,
+            "snapshot has {} workers but this run builds {m}",
+            snap.m_workers
+        );
+        opts.policy
+            .load_state(&snap.policy)
+            .unwrap_or_else(|e| panic!("resume: {e}"));
+        comp_spec = snap.comp_spec.clone();
+        compressor = comp_spec.build();
+        consensus.copy_from_slice(&snap.consensus);
+        for p in params.iter_mut() {
+            p.copy_from_slice(&snap.consensus);
+        }
+        downlink_ef = snap.downlink_ef.clone().map(|residual| ErrorFeedback { residual });
+        for ws in &snap.workers {
+            let w = ws.worker;
+            assert!(w < m, "snapshot worker {w} out of range for {m} workers");
+            opt_states[w]
+                .load_state(&ws.opt)
+                .unwrap_or_else(|e| panic!("resume worker {w}: {e}"));
+            models[w]
+                .load_state(&ws.model_state)
+                .unwrap_or_else(|e| panic!("resume worker {w}: {e}"));
+            datasets[w]
+                .load_state(&ws.data_state)
+                .unwrap_or_else(|e| panic!("resume worker {w}: {e}"));
+            uplink_efs[w] = ws.uplink_ef.clone().map(|residual| ErrorFeedback { residual });
+        }
+        b_local = snap.b_local;
+        samples = snap.samples;
+        steps = snap.steps;
+        sim_time = snap.sim_time_s;
+        next_eval = snap.next_eval;
+        weighted_b = snap.weighted_b;
+        total_local_steps = snap.total_local_steps;
+        pending_h = snap.pending_h;
+        round = snap.round + 1;
+        rec.points = snap.points.clone();
+        rec.batch_trace = snap.batch_trace.clone();
+        rec.policy_trace = snap.policy_trace.clone();
+        rec.comm = snap.comm;
+        rec.diverged = snap.diverged;
+    }
+    let mut journal = opts.durability.journal.clone().map(|path| match &resume {
+        Some(snap) => JournalWriter::resume(&path, snap.journal_bytes, snap.journal_seq)
+            .unwrap_or_else(|e| panic!("resume: {e}")),
+        None => JournalWriter::create(&path).unwrap_or_else(|e| panic!("{e}")),
+    });
+    if resume.is_none() {
+        if let Some(jw) = journal.as_mut() {
+            jw.append(&JournalEvent::RunStarted {
+                version: crate::journal::SNAPSHOT_VERSION,
+                engine: "sequential".to_string(),
+                label: opts.label.clone(),
+                seed: opts.seed,
+                dim: d as u64,
+                m_workers: m as u64,
+                policy: opts.policy.name(),
+                total_samples: opts.total_samples,
+                compression: comp_spec.label(),
+            })
+            .unwrap_or_else(|e| panic!("{e}"));
+            for w in 0..m {
+                jw.append(&JournalEvent::WorkerJoined {
+                    round: 0,
+                    worker: w as u64,
+                    founding: true,
+                })
+                .unwrap_or_else(|e| panic!("{e}"));
+            }
+        }
+    }
+
     while samples < opts.total_samples && round < opts.max_rounds {
         let lr_now = opts.lr.at(samples);
         let h = pending_h
@@ -291,6 +385,22 @@ pub fn run_local_sgd(
         let sync_s = opts.time_model.sync_time_compressed(d, needs_grad_ar, wire_frac);
         sim_time += round_compute_s;
         sim_time += sync_s;
+        if let Some(jw) = journal.as_mut() {
+            jw.append(&JournalEvent::SyncCommitted {
+                round,
+                phase: "round".to_string(),
+                h,
+                b_eff,
+                contributors: m as u64,
+                samples,
+                steps,
+                comm: rec.comm,
+                compute_s: round_compute_s,
+                sync_s,
+                sim_time_s: sim_time,
+            })
+            .unwrap_or_else(|e| panic!("{e}"));
+        }
 
         // ---- the joint policy decision -------------------------------------
         let signals = RoundSignals {
@@ -317,6 +427,7 @@ pub fn run_local_sgd(
         let h_next = decision.h_next.max(1);
         pending_h = Some(h_next);
         let mut switched = false;
+        let prev_label = comp_spec.label();
         if let Some(next_spec) = decision.compression {
             if next_spec != comp_spec {
                 // Switch convention: rebuild the compressor and reset every
@@ -342,6 +453,20 @@ pub fn run_local_sgd(
             test_violated: decision.test_violated,
             wire_frac,
         });
+        if let Some(jw) = journal.as_mut() {
+            jw.append(&JournalEvent::PolicyDecision {
+                point: rec.policy_trace.last().unwrap().clone(),
+            })
+            .unwrap_or_else(|e| panic!("{e}"));
+            if switched {
+                jw.append(&JournalEvent::CompressionSwitched {
+                    round,
+                    from: prev_label,
+                    to: comp_spec.label(),
+                })
+                .unwrap_or_else(|e| panic!("{e}"));
+            }
+        }
 
         // ---- evaluation ------------------------------------------------------
         if samples >= next_eval || samples >= opts.total_samples {
@@ -357,6 +482,10 @@ pub fn run_local_sgd(
                 val_acc: evs.accuracy,
                 val_top5: evs.top5,
             });
+            if let Some(jw) = journal.as_mut() {
+                jw.append(&JournalEvent::Evaluated { point: *rec.points.last().unwrap() })
+                    .unwrap_or_else(|e| panic!("{e}"));
+            }
             while next_eval <= samples {
                 next_eval = next_eval.saturating_add(opts.eval_every_samples.max(1));
             }
@@ -364,6 +493,70 @@ pub fn run_local_sgd(
 
         if !tensor::all_finite(&params[0]) {
             rec.diverged = true;
+            break;
+        }
+
+        // ---- durability: checkpoint / kill-switch at this sync boundary ----
+        // The checkpoint_written event goes to the journal BEFORE the snapshot
+        // file, so the snapshot's recorded journal offset covers it and a
+        // resumed journal stays byte-identical to an uninterrupted one.
+        if opts.durability.wants_checkpoint(round) {
+            let path = opts
+                .durability
+                .snapshot_path(&opts.label, round)
+                .expect("wants_checkpoint implies a checkpoint dir");
+            if let Some(jw) = journal.as_mut() {
+                jw.append(&JournalEvent::CheckpointWritten {
+                    round,
+                    samples,
+                    path: path.display().to_string(),
+                })
+                .unwrap_or_else(|e| panic!("{e}"));
+                jw.sync().unwrap_or_else(|e| panic!("{e}"));
+            }
+            let snap = RunSnapshot {
+                version: crate::journal::SNAPSHOT_VERSION,
+                engine: "sequential".to_string(),
+                label: opts.label.clone(),
+                seed: opts.seed,
+                dim: d,
+                m_workers: m,
+                round,
+                samples,
+                steps,
+                b_local,
+                pending_h,
+                next_eval,
+                weighted_b,
+                total_local_steps,
+                sim_time_s: sim_time,
+                comp_spec: comp_spec.clone(),
+                consensus: consensus.clone(),
+                downlink_ef: downlink_ef.as_ref().map(|ef| ef.residual.clone()),
+                policy: opts.policy.save_state(),
+                comm: rec.comm,
+                points: rec.points.clone(),
+                batch_trace: rec.batch_trace.clone(),
+                policy_trace: rec.policy_trace.clone(),
+                diverged: rec.diverged,
+                workers: (0..m)
+                    .map(|w| WorkerSnapshot {
+                        worker: w,
+                        opt: opt_states[w].state_json(),
+                        uplink_ef: uplink_efs[w].as_ref().map(|ef| ef.residual.clone()),
+                        model_state: models[w].state_json(),
+                        data_state: datasets[w].state_json(),
+                    })
+                    .collect(),
+                cluster: None,
+                journal_bytes: journal.as_ref().map(|j| j.bytes()).unwrap_or(0),
+                journal_seq: journal.as_ref().map(|j| j.seq()).unwrap_or(0),
+            };
+            snap.save(&path).unwrap_or_else(|e| panic!("checkpoint: {e}"));
+        }
+        if opts.durability.should_exit(round) {
+            rec.interrupted = true;
+            round += 1;
             break;
         }
         round += 1;
@@ -379,6 +572,19 @@ pub fn run_local_sgd(
     } else {
         0.0
     };
+    if let Some(jw) = journal.as_mut() {
+        jw.append(&JournalEvent::RunCompleted {
+            total_steps: rec.total_steps,
+            total_rounds: rec.total_rounds,
+            total_samples: rec.total_samples,
+            sim_time_s: rec.sim_time_s,
+            avg_local_batch: rec.avg_local_batch,
+            diverged: rec.diverged,
+            interrupted: rec.interrupted,
+        })
+        .unwrap_or_else(|e| panic!("{e}"));
+        jw.sync().unwrap_or_else(|e| panic!("{e}"));
+    }
     rec
 }
 

@@ -141,15 +141,37 @@ pub fn engine_opts(cfg: &RunConfig) -> EngineOpts {
         max_rounds: 10_000_000,
         threaded_allreduce: false,
         compression: crate::comm::CompressionSpec::identity(),
+        durability: crate::journal::Durability::none(),
     }
 }
 
 /// Run a config end-to-end, returning the full record.
 pub fn run_config(cfg: &RunConfig) -> anyhow::Result<RunRecord> {
+    run_config_durable(cfg, crate::journal::Durability::none())
+}
+
+/// Run a config with journal / checkpoint / resume wiring (the `--journal`,
+/// `--checkpoint-*`, and `--resume` CLI surface). `run_config` is the
+/// durability-free special case.
+pub fn run_config_durable(
+    cfg: &RunConfig,
+    durability: crate::journal::Durability,
+) -> anyhow::Result<RunRecord> {
     let errs = cfg.validate();
     anyhow::ensure!(errs.is_empty(), "invalid config: {}", errs.join("; "));
+    if let Some(snap) = &durability.resume {
+        anyhow::ensure!(
+            snap.engine == "sequential",
+            "snapshot was taken by the {} engine; use the matching subcommand to resume it",
+            snap.engine
+        );
+    }
     let mut datasets = build_datasets(cfg);
-    let opts = engine_opts(cfg);
+    let mut opts = engine_opts(cfg);
+    opts.durability = durability;
+    if opts.durability.checkpoint_every == 0 {
+        opts.durability.checkpoint_every = cfg.checkpoint_every;
+    }
     let rec = match &cfg.model {
         ModelSpec::Artifact { name } => {
             let mut rt = PjrtRuntime::cpu()?;

@@ -1,0 +1,697 @@
+//! The append-only run journal: CRC-framed coordinator events + replay.
+//!
+//! ## Format
+//!
+//! One event per line:
+//!
+//! ```text
+//! XXXXXXXX {"event":"sync_committed", ...}
+//! ```
+//!
+//! where `XXXXXXXX` is the lowercase hex CRC32 of the JSON text that follows
+//! the single separating space. A line whose CRC does not match, whose JSON
+//! does not parse, or that is missing its trailing newline (a torn write) ends
+//! the valid prefix: [`scan_journal`] returns every event before it plus the
+//! byte offset of the last good line's end, and a human-readable description
+//! of the corruption — it never panics and never silently replays a bad tail.
+//!
+//! ## Replay
+//!
+//! [`replay_events`] folds a valid event sequence back into a
+//! [`RunRecord`]: eval points from `evaluated`, the batch trace and cumulative
+//! comm counters from `sync_committed`, the policy trace from
+//! `policy_decision`, totals from `run_completed`. Worker wall-clock stats are
+//! *not* reconstructible from the journal (they are measured, not derived) and
+//! stay empty — everything deterministic is recovered bit for bit.
+
+use super::{
+    comm_from_json, comm_to_json, crc32, eval_point_from_json, eval_point_to_json, f64_bits_json,
+    need_bool, need_f64_bits, need_str, need_u32, need_u64, policy_point_from_json,
+    policy_point_to_json,
+};
+use crate::collective::CommCounters;
+use crate::metrics::{EvalPoint, PolicyPoint, RunRecord};
+use crate::util::json::Json;
+use std::io::{Seek, Write};
+
+/// One coordinator transition. Every variant serializes losslessly (enforced
+/// by the round-trip property tests below).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JournalEvent {
+    /// Run header: identity + configuration fingerprint of the run.
+    RunStarted {
+        version: u32,
+        engine: String,
+        label: String,
+        seed: u64,
+        dim: u64,
+        m_workers: u64,
+        policy: String,
+        total_samples: u64,
+        compression: String,
+    },
+    /// A worker was admitted to the roster (round 0 = founding member).
+    WorkerJoined { round: u64, worker: u64, founding: bool },
+    /// A worker left the roster permanently.
+    WorkerLeft { round: u64, worker: u64, reason: String },
+    /// An injected fault fired (e.g. a per-round dropout).
+    FaultInjected { round: u64, worker: u64, kind: String },
+    /// A sync committed: the averaged consensus was broadcast. Counters are
+    /// cumulative (post-round), so replay recovers them from the last event.
+    SyncCommitted {
+        round: u64,
+        phase: String,
+        h: u32,
+        b_eff: u64,
+        contributors: u64,
+        samples: u64,
+        steps: u64,
+        comm: CommCounters,
+        compute_s: f64,
+        sync_s: f64,
+        sim_time_s: f64,
+    },
+    /// A live policy decision (the engine-clamped values the next round runs
+    /// with) — exactly the [`PolicyPoint`] the run record traces.
+    PolicyDecision { point: PolicyPoint },
+    /// The wire format changed (codec rebuilt, error feedback reset).
+    CompressionSwitched { round: u64, from: String, to: String },
+    /// An evaluation fired — exactly the [`EvalPoint`] the run record traces.
+    Evaluated { point: EvalPoint },
+    /// A snapshot was written for the boundary of `round`. Appended *before*
+    /// the snapshot file so the snapshot's journal offset covers this line and
+    /// a resumed journal stays byte-identical to an uninterrupted one.
+    CheckpointWritten { round: u64, samples: u64, path: String },
+    /// Run footer: final totals.
+    RunCompleted {
+        total_steps: u64,
+        total_rounds: u64,
+        total_samples: u64,
+        sim_time_s: f64,
+        avg_local_batch: f64,
+        diverged: bool,
+        interrupted: bool,
+    },
+}
+
+impl JournalEvent {
+    /// The `"event"` discriminator string.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JournalEvent::RunStarted { .. } => "run_started",
+            JournalEvent::WorkerJoined { .. } => "worker_joined",
+            JournalEvent::WorkerLeft { .. } => "worker_left",
+            JournalEvent::FaultInjected { .. } => "fault_injected",
+            JournalEvent::SyncCommitted { .. } => "sync_committed",
+            JournalEvent::PolicyDecision { .. } => "policy_decision",
+            JournalEvent::CompressionSwitched { .. } => "compression_switched",
+            JournalEvent::Evaluated { .. } => "evaluated",
+            JournalEvent::CheckpointWritten { .. } => "checkpoint_written",
+            JournalEvent::RunCompleted { .. } => "run_completed",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("event", Json::str(self.kind()))];
+        match self {
+            JournalEvent::RunStarted {
+                version,
+                engine,
+                label,
+                seed,
+                dim,
+                m_workers,
+                policy,
+                total_samples,
+                compression,
+            } => pairs.extend(vec![
+                ("version", Json::num(*version as f64)),
+                ("engine", Json::str(engine)),
+                ("label", Json::str(label)),
+                ("seed", Json::num(*seed as f64)),
+                ("dim", Json::num(*dim as f64)),
+                ("m_workers", Json::num(*m_workers as f64)),
+                ("policy", Json::str(policy)),
+                ("total_samples", Json::num(*total_samples as f64)),
+                ("compression", Json::str(compression)),
+            ]),
+            JournalEvent::WorkerJoined { round, worker, founding } => pairs.extend(vec![
+                ("round", Json::num(*round as f64)),
+                ("worker", Json::num(*worker as f64)),
+                ("founding", Json::Bool(*founding)),
+            ]),
+            JournalEvent::WorkerLeft { round, worker, reason } => pairs.extend(vec![
+                ("round", Json::num(*round as f64)),
+                ("worker", Json::num(*worker as f64)),
+                ("reason", Json::str(reason)),
+            ]),
+            JournalEvent::FaultInjected { round, worker, kind } => pairs.extend(vec![
+                ("round", Json::num(*round as f64)),
+                ("worker", Json::num(*worker as f64)),
+                ("kind", Json::str(kind)),
+            ]),
+            JournalEvent::SyncCommitted {
+                round,
+                phase,
+                h,
+                b_eff,
+                contributors,
+                samples,
+                steps,
+                comm,
+                compute_s,
+                sync_s,
+                sim_time_s,
+            } => pairs.extend(vec![
+                ("round", Json::num(*round as f64)),
+                ("phase", Json::str(phase)),
+                ("h", Json::num(*h as f64)),
+                ("b_eff", Json::num(*b_eff as f64)),
+                ("contributors", Json::num(*contributors as f64)),
+                ("samples", Json::num(*samples as f64)),
+                ("steps", Json::num(*steps as f64)),
+                ("comm", comm_to_json(comm)),
+                ("compute_s", f64_bits_json(*compute_s)),
+                ("sync_s", f64_bits_json(*sync_s)),
+                ("sim_time_s", f64_bits_json(*sim_time_s)),
+            ]),
+            JournalEvent::PolicyDecision { point } => {
+                pairs.push(("point", policy_point_to_json(point)))
+            }
+            JournalEvent::CompressionSwitched { round, from, to } => pairs.extend(vec![
+                ("round", Json::num(*round as f64)),
+                ("from", Json::str(from)),
+                ("to", Json::str(to)),
+            ]),
+            JournalEvent::Evaluated { point } => pairs.push(("point", eval_point_to_json(point))),
+            JournalEvent::CheckpointWritten { round, samples, path } => pairs.extend(vec![
+                ("round", Json::num(*round as f64)),
+                ("samples", Json::num(*samples as f64)),
+                ("path", Json::str(path)),
+            ]),
+            JournalEvent::RunCompleted {
+                total_steps,
+                total_rounds,
+                total_samples,
+                sim_time_s,
+                avg_local_batch,
+                diverged,
+                interrupted,
+            } => pairs.extend(vec![
+                ("total_steps", Json::num(*total_steps as f64)),
+                ("total_rounds", Json::num(*total_rounds as f64)),
+                ("total_samples", Json::num(*total_samples as f64)),
+                ("sim_time_s", f64_bits_json(*sim_time_s)),
+                ("avg_local_batch", f64_bits_json(*avg_local_batch)),
+                ("diverged", Json::Bool(*diverged)),
+                ("interrupted", Json::Bool(*interrupted)),
+            ]),
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<JournalEvent, String> {
+        let kind = need_str(j, "event", "journal event")?;
+        let w = kind.as_str();
+        Ok(match w {
+            "run_started" => JournalEvent::RunStarted {
+                version: need_u32(j, "version", w)?,
+                engine: need_str(j, "engine", w)?,
+                label: need_str(j, "label", w)?,
+                seed: need_u64(j, "seed", w)?,
+                dim: need_u64(j, "dim", w)?,
+                m_workers: need_u64(j, "m_workers", w)?,
+                policy: need_str(j, "policy", w)?,
+                total_samples: need_u64(j, "total_samples", w)?,
+                compression: need_str(j, "compression", w)?,
+            },
+            "worker_joined" => JournalEvent::WorkerJoined {
+                round: need_u64(j, "round", w)?,
+                worker: need_u64(j, "worker", w)?,
+                founding: need_bool(j, "founding", w)?,
+            },
+            "worker_left" => JournalEvent::WorkerLeft {
+                round: need_u64(j, "round", w)?,
+                worker: need_u64(j, "worker", w)?,
+                reason: need_str(j, "reason", w)?,
+            },
+            "fault_injected" => JournalEvent::FaultInjected {
+                round: need_u64(j, "round", w)?,
+                worker: need_u64(j, "worker", w)?,
+                kind: need_str(j, "kind", w)?,
+            },
+            "sync_committed" => JournalEvent::SyncCommitted {
+                round: need_u64(j, "round", w)?,
+                phase: need_str(j, "phase", w)?,
+                h: need_u32(j, "h", w)?,
+                b_eff: need_u64(j, "b_eff", w)?,
+                contributors: need_u64(j, "contributors", w)?,
+                samples: need_u64(j, "samples", w)?,
+                steps: need_u64(j, "steps", w)?,
+                comm: comm_from_json(j.get("comm"), w)?,
+                compute_s: need_f64_bits(j, "compute_s", w)?,
+                sync_s: need_f64_bits(j, "sync_s", w)?,
+                sim_time_s: need_f64_bits(j, "sim_time_s", w)?,
+            },
+            "policy_decision" => JournalEvent::PolicyDecision {
+                point: policy_point_from_json(j.get("point"))?,
+            },
+            "compression_switched" => JournalEvent::CompressionSwitched {
+                round: need_u64(j, "round", w)?,
+                from: need_str(j, "from", w)?,
+                to: need_str(j, "to", w)?,
+            },
+            "evaluated" => JournalEvent::Evaluated { point: eval_point_from_json(j.get("point"))? },
+            "checkpoint_written" => JournalEvent::CheckpointWritten {
+                round: need_u64(j, "round", w)?,
+                samples: need_u64(j, "samples", w)?,
+                path: need_str(j, "path", w)?,
+            },
+            "run_completed" => JournalEvent::RunCompleted {
+                total_steps: need_u64(j, "total_steps", w)?,
+                total_rounds: need_u64(j, "total_rounds", w)?,
+                total_samples: need_u64(j, "total_samples", w)?,
+                sim_time_s: need_f64_bits(j, "sim_time_s", w)?,
+                avg_local_batch: need_f64_bits(j, "avg_local_batch", w)?,
+                diverged: need_bool(j, "diverged", w)?,
+                interrupted: need_bool(j, "interrupted", w)?,
+            },
+            other => return Err(format!("unknown journal event type {other:?}")),
+        })
+    }
+
+    /// The CRC-framed journal line for this event (with trailing newline).
+    pub fn encode_line(&self) -> String {
+        let body = self.to_json().to_string();
+        format!("{:08x} {body}\n", crc32(body.as_bytes()))
+    }
+}
+
+/// Appending journal writer. Tracks the byte offset after every append so
+/// snapshots can record where their journal prefix ends.
+pub struct JournalWriter {
+    file: std::fs::File,
+    bytes: u64,
+    seq: u64,
+}
+
+impl JournalWriter {
+    /// Start a fresh journal (truncates any existing file).
+    pub fn create(path: &std::path::Path) -> Result<JournalWriter, String> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| format!("journal: cannot create {}: {e}", parent.display()))?;
+            }
+        }
+        let file = std::fs::File::create(path)
+            .map_err(|e| format!("journal: cannot create {}: {e}", path.display()))?;
+        Ok(JournalWriter { file, bytes: 0, seq: 0 })
+    }
+
+    /// Reopen an existing journal for resume: truncate to the snapshot's
+    /// recorded offset (discarding events the dead run wrote past its last
+    /// checkpoint) and append from there. The combined file is then
+    /// byte-identical to an uninterrupted run's journal.
+    pub fn resume(path: &std::path::Path, offset: u64, seq: u64) -> Result<JournalWriter, String> {
+        let len = std::fs::metadata(path)
+            .map_err(|e| format!("journal: cannot stat {}: {e}", path.display()))?
+            .len();
+        if len < offset {
+            return Err(format!(
+                "journal {} is {len} bytes but the snapshot expects at least {offset} — \
+                 this is not the journal the checkpoint was written against",
+                path.display()
+            ));
+        }
+        let file = std::fs::OpenOptions::new()
+            .write(true)
+            .open(path)
+            .map_err(|e| format!("journal: cannot open {}: {e}", path.display()))?;
+        file.set_len(offset)
+            .map_err(|e| format!("journal: cannot truncate {}: {e}", path.display()))?;
+        let mut file = file;
+        file.seek(std::io::SeekFrom::Start(offset))
+            .map_err(|e| format!("journal: cannot seek {}: {e}", path.display()))?;
+        Ok(JournalWriter { file, bytes: offset, seq })
+    }
+
+    /// Append one event; returns the byte offset after the write.
+    pub fn append(&mut self, event: &JournalEvent) -> Result<u64, String> {
+        let line = event.encode_line();
+        self.file
+            .write_all(line.as_bytes())
+            .map_err(|e| format!("journal: append failed: {e}"))?;
+        self.bytes += line.len() as u64;
+        self.seq += 1;
+        Ok(self.bytes)
+    }
+
+    /// Byte offset after the last appended event.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Number of events appended over the journal's lifetime (resume-adjusted).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Flush to the OS (called before every snapshot rename).
+    pub fn sync(&mut self) -> Result<(), String> {
+        self.file.sync_all().map_err(|e| format!("journal: sync failed: {e}"))
+    }
+}
+
+/// Result of scanning a journal: the valid event prefix, where it ends, and
+/// what (if anything) is wrong with the tail.
+#[derive(Debug)]
+pub struct JournalScan {
+    pub events: Vec<JournalEvent>,
+    /// Byte offset of the end of the last valid line (= safe truncation point).
+    pub clean_bytes: u64,
+    /// Human-readable description of the corrupt/torn tail, naming the
+    /// last-good offset; `None` for a fully valid journal.
+    pub corruption: Option<String>,
+}
+
+/// Scan journal text into its valid prefix. Never panics: a corrupt or torn
+/// tail ends the scan and is described in [`JournalScan::corruption`].
+pub fn scan_journal(text: &str) -> JournalScan {
+    let mut events = Vec::new();
+    let mut clean = 0u64;
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        let rest = &text[pos..];
+        let Some(nl) = rest.find('\n') else {
+            return JournalScan {
+                events,
+                clean_bytes: clean,
+                corruption: Some(format!(
+                    "torn tail: {} bytes past the last complete line at offset {clean} \
+                     (no trailing newline — likely a write cut short)",
+                    rest.len()
+                )),
+            };
+        };
+        let line = &rest[..nl];
+        let corrupt = |detail: String| JournalScan {
+            events: Vec::new(),
+            clean_bytes: clean,
+            corruption: Some(detail),
+        };
+        let parsed = (|| -> Result<JournalEvent, String> {
+            let (crc_hex, body) = line
+                .split_once(' ')
+                .ok_or_else(|| "line has no CRC frame".to_string())?;
+            let want = u32::from_str_radix(crc_hex, 16)
+                .map_err(|_| format!("bad CRC field {crc_hex:?}"))?;
+            let got = crc32(body.as_bytes());
+            if want != got {
+                return Err(format!("CRC mismatch: line claims {want:08x}, body hashes {got:08x}"));
+            }
+            let j = Json::parse(body).map_err(|e| format!("bad JSON body: {e}"))?;
+            JournalEvent::from_json(&j)
+        })();
+        match parsed {
+            Ok(ev) => {
+                events.push(ev);
+                pos += nl + 1;
+                clean = pos as u64;
+            }
+            Err(detail) => {
+                let mut scan = corrupt(format!(
+                    "corrupt journal line at offset {clean}: {detail} \
+                     (valid prefix ends at byte {clean})"
+                ));
+                scan.events = events;
+                return scan;
+            }
+        }
+    }
+    JournalScan { events, clean_bytes: clean, corruption: None }
+}
+
+/// Read and scan a journal file.
+pub fn scan_journal_file(path: &std::path::Path) -> Result<JournalScan, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read journal {}: {e}", path.display()))?;
+    Ok(scan_journal(&text))
+}
+
+/// Fold a journal's events back into a [`RunRecord`] — the per-round metrics
+/// (eval series, batch trace, policy trace, cumulative comm counters, totals)
+/// re-derived from the log alone. Worker wall-clock stats are measured rather
+/// than derived and are not reconstructible; they stay empty.
+pub fn replay_events(events: &[JournalEvent]) -> Result<RunRecord, String> {
+    let mut rec = RunRecord::default();
+    let mut started = false;
+    for ev in events {
+        match ev {
+            JournalEvent::RunStarted { label, .. } => {
+                rec.label = label.clone();
+                started = true;
+            }
+            JournalEvent::SyncCommitted {
+                round, b_eff, samples, steps, comm, sim_time_s, ..
+            } => {
+                rec.batch_trace.push((*round, *samples, *b_eff));
+                rec.comm = *comm;
+                rec.total_rounds = *round + 1;
+                rec.total_samples = *samples;
+                rec.total_steps = *steps;
+                rec.sim_time_s = *sim_time_s;
+            }
+            JournalEvent::PolicyDecision { point } => rec.policy_trace.push(point.clone()),
+            JournalEvent::Evaluated { point } => rec.points.push(*point),
+            JournalEvent::RunCompleted {
+                total_steps,
+                total_rounds,
+                total_samples,
+                sim_time_s,
+                avg_local_batch,
+                diverged,
+                interrupted,
+            } => {
+                rec.total_steps = *total_steps;
+                rec.total_rounds = *total_rounds;
+                rec.total_samples = *total_samples;
+                rec.sim_time_s = *sim_time_s;
+                rec.avg_local_batch = *avg_local_batch;
+                rec.diverged = *diverged;
+                rec.interrupted = *interrupted;
+            }
+            _ => {}
+        }
+    }
+    if !started {
+        return Err(
+            "journal has no run_started event — not a run journal (or the header was lost)"
+                .to_string(),
+        );
+    }
+    Ok(rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One instance of every event variant, with values exercising the
+    /// bit-exact paths (NaN payloads, negative zero, >2^53 counters).
+    fn all_events() -> Vec<JournalEvent> {
+        vec![
+            JournalEvent::RunStarted {
+                version: 1,
+                engine: "cluster".into(),
+                label: "prop test".into(),
+                seed: 42,
+                dim: 330,
+                m_workers: 6,
+                policy: "paper(eta=0.6, H=[4,16], qsr_c=0.32, ladder=4 rungs)".into(),
+                total_samples: 60_000,
+                compression: "identity".into(),
+            },
+            JournalEvent::WorkerJoined { round: 0, worker: 3, founding: true },
+            JournalEvent::WorkerLeft { round: 9, worker: 1, reason: "scheduled".into() },
+            JournalEvent::FaultInjected { round: 4, worker: 2, kind: "dropout".into() },
+            JournalEvent::SyncCommitted {
+                round: 7,
+                phase: "round".into(),
+                h: 8,
+                b_eff: 64,
+                contributors: 5,
+                samples: 14_336,
+                steps: 56,
+                comm: CommCounters {
+                    allreduce_calls: 14,
+                    bytes_moved: (1u64 << 53) + 17, // beyond the f64-exact window
+                    wire_bytes: 1_234_567,
+                    rounds: 8,
+                },
+                compute_s: 1.5,
+                sync_s: -0.0, // sign of zero must survive
+                sim_time_s: 12.0625,
+            },
+            JournalEvent::PolicyDecision {
+                point: crate::metrics::PolicyPoint {
+                    round: 7,
+                    samples: 14_336,
+                    b_next: 128,
+                    h_next: 8,
+                    compression: "topk0.125+ef".into(),
+                    switched: true,
+                    test_violated: false,
+                    wire_frac: 0.25,
+                },
+            },
+            JournalEvent::CompressionSwitched {
+                round: 7,
+                from: "identity".into(),
+                to: "topk0.125+ef".into(),
+            },
+            JournalEvent::Evaluated {
+                point: crate::metrics::EvalPoint {
+                    step: 56,
+                    round: 7,
+                    samples: 14_336,
+                    sim_time_s: 12.0625,
+                    b_local: 64,
+                    train_loss: f64::from_bits(0x7ff8_0000_0000_0001), // NaN payload
+                    val_loss: 1.25,
+                    val_acc: 0.5,
+                    val_top5: 0.875,
+                },
+            },
+            JournalEvent::CheckpointWritten {
+                round: 7,
+                samples: 14_336,
+                path: "/tmp/run.r7.snap.json".into(),
+            },
+            JournalEvent::RunCompleted {
+                total_steps: 80,
+                total_rounds: 10,
+                total_samples: 60_000,
+                sim_time_s: 17.5,
+                avg_local_batch: 52.25,
+                diverged: false,
+                interrupted: true,
+            },
+        ]
+    }
+
+    #[test]
+    fn every_event_type_roundtrips_losslessly() {
+        for ev in all_events() {
+            let j = ev.to_json();
+            let back = JournalEvent::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            // Compare JSON (covers NaN fields where PartialEq would be false).
+            assert_eq!(
+                j.to_string(),
+                back.to_json().to_string(),
+                "event {} must round-trip bit for bit",
+                ev.kind()
+            );
+        }
+    }
+
+    #[test]
+    fn scan_reads_back_a_written_journal() {
+        let text: String = all_events().iter().map(|e| e.encode_line()).collect();
+        let scan = scan_journal(&text);
+        assert!(scan.corruption.is_none(), "{:?}", scan.corruption);
+        assert_eq!(scan.events.len(), all_events().len());
+        assert_eq!(scan.clean_bytes, text.len() as u64);
+        for (a, b) in all_events().iter().zip(&scan.events) {
+            assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        }
+    }
+
+    #[test]
+    fn torn_tail_reports_last_good_offset() {
+        let events = all_events();
+        let mut text: String = events[..3].iter().map(|e| e.encode_line()).collect();
+        let good = text.len() as u64;
+        // a write cut mid-line: no trailing newline
+        let torn = events[3].encode_line();
+        text.push_str(&torn[..torn.len() / 2]);
+        let scan = scan_journal(&text);
+        assert_eq!(scan.events.len(), 3, "valid prefix must survive");
+        assert_eq!(scan.clean_bytes, good);
+        let msg = scan.corruption.expect("torn tail must be reported");
+        assert!(msg.contains(&format!("offset {good}")), "message must name the offset: {msg}");
+    }
+
+    #[test]
+    fn corrupted_line_reports_crc_mismatch_not_panic() {
+        let events = all_events();
+        let mut text: String = events[..2].iter().map(|e| e.encode_line()).collect();
+        let good = text.len() as u64;
+        // flip one byte inside the third line's JSON body
+        let mut bad = events[2].encode_line().into_bytes();
+        let k = bad.len() - 5;
+        bad[k] = bad[k].wrapping_add(1);
+        text.push_str(std::str::from_utf8(&bad).unwrap());
+        text.push_str(&events[3].encode_line()); // a good line AFTER the corruption
+        let scan = scan_journal(&text);
+        assert_eq!(scan.events.len(), 2, "scan must stop at the corruption");
+        assert_eq!(scan.clean_bytes, good);
+        let msg = scan.corruption.expect("corruption must be reported");
+        assert!(
+            msg.contains("CRC mismatch") || msg.contains("bad JSON"),
+            "message must say what broke: {msg}"
+        );
+        assert!(msg.contains(&format!("offset {good}")), "message must name the offset: {msg}");
+    }
+
+    #[test]
+    fn writer_appends_and_resume_truncates() {
+        let dir = std::env::temp_dir().join(format!("adaloco_journal_w_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("run.journal");
+        let events = all_events();
+
+        let mut w = JournalWriter::create(&path).unwrap();
+        let mut offsets = Vec::new();
+        for e in &events[..4] {
+            offsets.push(w.append(e).unwrap());
+        }
+        assert_eq!(w.seq(), 4);
+        drop(w);
+
+        // resume from after event 2: events 3..4 are discarded, new tail appended
+        let mut w = JournalWriter::resume(&path, offsets[1], 2).unwrap();
+        w.append(&events[4]).unwrap();
+        drop(w);
+        let scan = scan_journal_file(&path).unwrap();
+        assert!(scan.corruption.is_none());
+        assert_eq!(scan.events.len(), 3);
+        assert_eq!(scan.events[2].to_json().to_string(), events[4].to_json().to_string());
+
+        // resume past EOF is a config error, not silent data loss
+        let err = JournalWriter::resume(&path, 1 << 40, 99).unwrap_err();
+        assert!(err.contains("snapshot expects"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn replay_rebuilds_metrics_from_the_log_alone() {
+        let rec = replay_events(&all_events()).unwrap();
+        assert_eq!(rec.label, "prop test");
+        assert_eq!(rec.batch_trace, vec![(7, 14_336, 64)]);
+        assert_eq!(rec.policy_trace.len(), 1);
+        assert_eq!(rec.policy_trace[0].compression, "topk0.125+ef");
+        assert_eq!(rec.points.len(), 1);
+        assert_eq!(rec.comm.wire_bytes, 1_234_567);
+        assert_eq!(rec.comm.bytes_moved, (1 << 53) + 17);
+        // footer totals win over per-sync running values
+        assert_eq!(rec.total_rounds, 10);
+        assert_eq!(rec.total_steps, 80);
+        assert_eq!(rec.avg_local_batch, 52.25);
+        assert!(rec.interrupted);
+
+        let err = replay_events(&all_events()[1..]).unwrap_err();
+        assert!(err.contains("run_started"), "{err}");
+    }
+}

@@ -1,0 +1,434 @@
+//! Checkpoint/restore + event-sourced run journal: durability for long runs.
+//!
+//! A production run must survive coordinator death. Before this module the
+//! entire run state — consensus parameters, optimizer moments, the
+//! [`crate::policy::AdaptivePolicy`] internals, per-endpoint
+//! [`crate::comm::ErrorFeedback`] residuals, data-sampler RNG streams, the
+//! membership roster, [`crate::collective::CommCounters`], and the simulated
+//! clock — lived only in memory. The repo's determinism discipline (bit-for-bit
+//! cross-engine equality, pinned float-op ordering) makes durability *provable*
+//! rather than aspirational, and this module exploits that in three pieces:
+//!
+//! 1. **Snapshot** ([`snapshot::RunSnapshot`]) — a versioned, self-describing
+//!    serialization of the full run state, written atomically (temp file +
+//!    rename, CRC32 footer) at sync boundaries: every K syncs
+//!    ([`Durability::checkpoint_every`]) and at the kill-switch boundary
+//!    ([`Durability::exit_at`], the "checkpoint then die" flag the
+//!    kill-and-resume tests and the CI smoke step use).
+//! 2. **Journal** ([`events::JournalEvent`]) — an append-only log of every
+//!    coordinator transition (worker joins/leaves, sync commits, policy
+//!    decisions, compression switches, fault injections, evaluations). Each
+//!    line is CRC32-framed so a torn tail is *detected and reported with the
+//!    last-good byte offset*, never silently replayed.
+//!    `adaloco replay <journal>` re-derives the run's metrics — eval series,
+//!    batch trace, policy trace, comm counters — from the log alone
+//!    ([`events::replay_events`]).
+//! 3. **Restore** — both engines accept a snapshot through
+//!    [`Durability::resume`] and rebuild themselves mid-run. A resumed run
+//!    continues **bit for bit**: identical final parameters, comm counters,
+//!    and policy trace versus an uninterrupted run, enforced by
+//!    kill-at-every-sync-boundary integration tests (including elastic
+//!    membership and mid-run compression switches with error-feedback reset).
+//!
+//! ## Why sync boundaries
+//!
+//! A snapshot is taken only at the end of a committed round, after the policy
+//! decision and evaluation, before the round counter advances. At that instant
+//! every worker's parameters equal the broadcast consensus, so one parameter
+//! vector suffices; everything else (optimizer `t/m/v`, EF residuals, RNG
+//! words, the policy's internal ladder position) is captured per endpoint.
+//!
+//! ## Bit-exactness on the wire
+//!
+//! JSON numbers round-trip through `f64`, which would corrupt `f32` parameter
+//! bits and `f64` clock values. All floating state is therefore serialized as
+//! raw bit patterns: `f32` vectors as a hex string of bit patterns (8 hex
+//! chars per value, vector order — [`f32s_to_hex`]) and `f64` scalars as the
+//! 16-hex-char `to_bits()` word ([`f64_bits_json`]). RNG streams are saved as
+//! the four `u64` words of [`crate::util::rng::Pcg64::save`].
+//!
+//! ## Determinism audit (iteration order)
+//!
+//! Byte-stable serialization requires that nothing in the run depends on a
+//! nondeterministic iteration order. Audit result: [`crate::util::json::Json`]
+//! objects are `BTreeMap`s, so every serialized artifact is key-ordered; the
+//! crate's only non-test `HashSet` lives in
+//! [`crate::util::rng::Pcg64::sample_indices`], where it is a membership
+//! filter that is never iterated (output order follows the RNG draw order);
+//! and the cluster coordinator walks workers in roster order, a `Vec`. There
+//! are no `HashMap`s. Snapshots and journals taken on different runs of the
+//! same configuration are therefore byte-identical.
+
+pub mod events;
+pub mod snapshot;
+
+pub use events::{
+    replay_events, scan_journal, scan_journal_file, JournalEvent, JournalScan, JournalWriter,
+};
+pub use snapshot::{ClusterSnapshot, RunSnapshot, WorkerSnapshot, SNAPSHOT_VERSION};
+
+use crate::collective::CommCounters;
+use crate::metrics::{EvalPoint, PolicyPoint, WorkerSummary};
+use crate::util::json::Json;
+
+/// Durability options carried by [`crate::engine::EngineOpts`]. The default
+/// ([`Durability::none`]) journals nothing, checkpoints nothing, and resumes
+/// nothing — runs without durability are byte-identical to pre-journal runs.
+#[derive(Debug, Clone, Default)]
+pub struct Durability {
+    /// Append-only event journal path. On resume the file is truncated to the
+    /// snapshot's recorded offset and appended, so the combined journal equals
+    /// an uninterrupted run's journal.
+    pub journal: Option<std::path::PathBuf>,
+    /// Directory receiving `<label>.r<round>.snap.json` snapshots.
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Checkpoint every K committed syncs (0 = only at `exit_at`).
+    pub checkpoint_every: u64,
+    /// Kill switch: checkpoint at the first sync boundary with
+    /// `round >= exit_at`, then stop the run (the record is marked
+    /// interrupted). This is how tests and CI kill a run *at* a boundary.
+    pub exit_at: Option<u64>,
+    /// Snapshot to rebuild the run from instead of starting at round 0.
+    pub resume: Option<RunSnapshot>,
+}
+
+impl Durability {
+    /// No journaling, no checkpoints, no resume.
+    pub fn none() -> Durability {
+        Durability::default()
+    }
+
+    /// Whether the boundary of committed round `round` should write a snapshot.
+    pub fn wants_checkpoint(&self, round: u64) -> bool {
+        if self.checkpoint_dir.is_none() {
+            return false;
+        }
+        let cadence = self.checkpoint_every > 0 && (round + 1) % self.checkpoint_every == 0;
+        cadence || self.should_exit(round)
+    }
+
+    /// Whether the run should stop at the boundary of committed round `round`.
+    pub fn should_exit(&self, round: u64) -> bool {
+        self.exit_at.is_some_and(|x| round >= x)
+    }
+
+    /// Snapshot path for the boundary of `round` (requires `checkpoint_dir`).
+    pub fn snapshot_path(&self, label: &str, round: u64) -> Option<std::path::PathBuf> {
+        let base = label.replace(['/', ' '], "_");
+        self.checkpoint_dir.as_ref().map(|d| d.join(format!("{base}.r{round}.snap.json")))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, reflected) — frames journal lines and snapshot footers.
+// ---------------------------------------------------------------------------
+
+/// CRC32 (IEEE polynomial, the zlib/`cksum -o3` variant).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+// ---------------------------------------------------------------------------
+// Bit-exact codecs: floats as bit patterns, wide integers as hex strings.
+// ---------------------------------------------------------------------------
+
+/// Serialize an `f64` as its 16-hex-char `to_bits()` word (bit-exact; JSON
+/// numbers would round-trip through decimal).
+pub fn f64_bits_json(x: f64) -> Json {
+    Json::str(&format!("{:016x}", x.to_bits()))
+}
+
+/// Parse a value written by [`f64_bits_json`].
+pub fn f64_from_bits_json(j: &Json, what: &str) -> Result<f64, String> {
+    let s = j.as_str().ok_or_else(|| format!("{what}: expected an f64 bits hex string"))?;
+    let bits = u64::from_str_radix(s, 16)
+        .map_err(|e| format!("{what}: bad f64 bits hex {s:?}: {e}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+/// Serialize a `u64` as a 16-hex-char string (exact beyond the 2^53 window a
+/// JSON number survives).
+pub fn u64_hex_json(x: u64) -> Json {
+    Json::str(&format!("{x:016x}"))
+}
+
+/// Parse a value written by [`u64_hex_json`].
+pub fn u64_from_hex_json(j: &Json, what: &str) -> Result<u64, String> {
+    let s = j.as_str().ok_or_else(|| format!("{what}: expected a u64 hex string"))?;
+    u64::from_str_radix(s, 16).map_err(|e| format!("{what}: bad u64 hex {s:?}: {e}"))
+}
+
+/// Serialize an `f32` slice as one hex string of bit patterns, 8 hex chars per
+/// value, in vector order ("f32hex"). Byte-stable: same bits in, same string
+/// out, no float formatting involved.
+pub fn f32s_to_hex(xs: &[f32]) -> String {
+    let mut s = String::with_capacity(xs.len() * 8);
+    for x in xs {
+        s.push_str(&format!("{:08x}", x.to_bits()));
+    }
+    s
+}
+
+/// Parse a string written by [`f32s_to_hex`].
+pub fn f32s_from_hex(s: &str, what: &str) -> Result<Vec<f32>, String> {
+    if s.len() % 8 != 0 {
+        return Err(format!("{what}: f32hex length {} is not a multiple of 8", s.len()));
+    }
+    let mut out = Vec::with_capacity(s.len() / 8);
+    for i in (0..s.len()).step_by(8) {
+        let chunk = s
+            .get(i..i + 8)
+            .ok_or_else(|| format!("{what}: f32hex not ASCII at byte {i}"))?;
+        let bits = u32::from_str_radix(chunk, 16)
+            .map_err(|e| format!("{what}: bad f32hex chunk {chunk:?}: {e}"))?;
+        out.push(f32::from_bits(bits));
+    }
+    Ok(out)
+}
+
+/// Serialize a [`Pcg64`] stream position as its four save words (hex strings).
+pub fn rng_to_json(rng: &crate::util::rng::Pcg64) -> Json {
+    Json::arr(rng.save().iter().map(|&w| u64_hex_json(w)))
+}
+
+/// Rebuild a [`Pcg64`] from a value written by [`rng_to_json`].
+pub fn rng_from_json(j: &Json, what: &str) -> Result<crate::util::rng::Pcg64, String> {
+    let arr = j.as_arr().ok_or_else(|| format!("{what}: expected a 4-word rng array"))?;
+    if arr.len() != 4 {
+        return Err(format!("{what}: rng array has {} words, expected 4", arr.len()));
+    }
+    let mut words = [0u64; 4];
+    for (i, w) in arr.iter().enumerate() {
+        words[i] = u64_from_hex_json(w, &format!("{what}[{i}]"))?;
+    }
+    Ok(crate::util::rng::Pcg64::restore(words))
+}
+
+// ---------------------------------------------------------------------------
+// Shared serializers for metric types (used by both snapshot and events).
+// ---------------------------------------------------------------------------
+
+pub(crate) fn need_u64(j: &Json, key: &str, what: &str) -> Result<u64, String> {
+    j.get(key).as_u64().ok_or_else(|| format!("{what}: missing/invalid {key}"))
+}
+
+pub(crate) fn need_u32(j: &Json, key: &str, what: &str) -> Result<u32, String> {
+    need_u64(j, key, what).map(|v| v as u32)
+}
+
+pub(crate) fn need_usize(j: &Json, key: &str, what: &str) -> Result<usize, String> {
+    j.get(key).as_usize().ok_or_else(|| format!("{what}: missing/invalid {key}"))
+}
+
+pub(crate) fn need_bool(j: &Json, key: &str, what: &str) -> Result<bool, String> {
+    j.get(key).as_bool().ok_or_else(|| format!("{what}: missing/invalid {key}"))
+}
+
+pub(crate) fn need_str(j: &Json, key: &str, what: &str) -> Result<String, String> {
+    j.get(key)
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| format!("{what}: missing/invalid {key}"))
+}
+
+pub(crate) fn need_f64_bits(j: &Json, key: &str, what: &str) -> Result<f64, String> {
+    f64_from_bits_json(j.get(key), &format!("{what}.{key}"))
+}
+
+pub(crate) fn comm_to_json(c: &CommCounters) -> Json {
+    Json::obj(vec![
+        ("allreduce_calls", u64_hex_json(c.allreduce_calls)),
+        ("bytes_moved", u64_hex_json(c.bytes_moved)),
+        ("wire_bytes", u64_hex_json(c.wire_bytes)),
+        ("rounds", u64_hex_json(c.rounds)),
+    ])
+}
+
+pub(crate) fn comm_from_json(j: &Json, what: &str) -> Result<CommCounters, String> {
+    Ok(CommCounters {
+        allreduce_calls: u64_from_hex_json(j.get("allreduce_calls"), what)?,
+        bytes_moved: u64_from_hex_json(j.get("bytes_moved"), what)?,
+        wire_bytes: u64_from_hex_json(j.get("wire_bytes"), what)?,
+        rounds: u64_from_hex_json(j.get("rounds"), what)?,
+    })
+}
+
+pub(crate) fn eval_point_to_json(p: &EvalPoint) -> Json {
+    Json::obj(vec![
+        ("step", Json::num(p.step as f64)),
+        ("round", Json::num(p.round as f64)),
+        ("samples", Json::num(p.samples as f64)),
+        ("sim_time_s", f64_bits_json(p.sim_time_s)),
+        ("b_local", Json::num(p.b_local as f64)),
+        ("train_loss", f64_bits_json(p.train_loss)),
+        ("val_loss", f64_bits_json(p.val_loss)),
+        ("val_acc", f64_bits_json(p.val_acc)),
+        ("val_top5", f64_bits_json(p.val_top5)),
+    ])
+}
+
+pub(crate) fn eval_point_from_json(j: &Json) -> Result<EvalPoint, String> {
+    let w = "eval point";
+    Ok(EvalPoint {
+        step: need_u64(j, "step", w)?,
+        round: need_u64(j, "round", w)?,
+        samples: need_u64(j, "samples", w)?,
+        sim_time_s: need_f64_bits(j, "sim_time_s", w)?,
+        b_local: need_u64(j, "b_local", w)?,
+        train_loss: need_f64_bits(j, "train_loss", w)?,
+        val_loss: need_f64_bits(j, "val_loss", w)?,
+        val_acc: need_f64_bits(j, "val_acc", w)?,
+        val_top5: need_f64_bits(j, "val_top5", w)?,
+    })
+}
+
+pub(crate) fn policy_point_to_json(p: &PolicyPoint) -> Json {
+    Json::obj(vec![
+        ("round", Json::num(p.round as f64)),
+        ("samples", Json::num(p.samples as f64)),
+        ("b_next", Json::num(p.b_next as f64)),
+        ("h_next", Json::num(p.h_next as f64)),
+        ("compression", Json::str(&p.compression)),
+        ("switched", Json::Bool(p.switched)),
+        ("test_violated", Json::Bool(p.test_violated)),
+        ("wire_frac", f64_bits_json(p.wire_frac)),
+    ])
+}
+
+pub(crate) fn policy_point_from_json(j: &Json) -> Result<PolicyPoint, String> {
+    let w = "policy point";
+    Ok(PolicyPoint {
+        round: need_u64(j, "round", w)?,
+        samples: need_u64(j, "samples", w)?,
+        b_next: need_u64(j, "b_next", w)?,
+        h_next: need_u32(j, "h_next", w)?,
+        compression: need_str(j, "compression", w)?,
+        switched: need_bool(j, "switched", w)?,
+        test_violated: need_bool(j, "test_violated", w)?,
+        wire_frac: need_f64_bits(j, "wire_frac", w)?,
+    })
+}
+
+pub(crate) fn worker_summary_to_json(w: &WorkerSummary) -> Json {
+    Json::obj(vec![
+        ("worker", Json::num(w.worker as f64)),
+        ("speed", f64_bits_json(w.speed)),
+        ("joined_round", Json::num(w.joined_round as f64)),
+        (
+            "left_round",
+            w.left_round.map(|r| Json::num(r as f64)).unwrap_or(Json::Null),
+        ),
+        ("rounds_contributed", Json::num(w.rounds_contributed as f64)),
+        ("dropped_rounds", Json::num(w.dropped_rounds as f64)),
+        ("local_steps", Json::num(w.local_steps as f64)),
+        ("samples", Json::num(w.samples as f64)),
+        ("sim_compute_s", f64_bits_json(w.sim_compute_s)),
+        ("wall_compute_s", f64_bits_json(w.wall_compute_s)),
+        ("last_loss", f64_bits_json(w.last_loss)),
+    ])
+}
+
+pub(crate) fn worker_summary_from_json(j: &Json) -> Result<WorkerSummary, String> {
+    let w = "worker summary";
+    Ok(WorkerSummary {
+        worker: need_usize(j, "worker", w)?,
+        speed: need_f64_bits(j, "speed", w)?,
+        joined_round: need_u64(j, "joined_round", w)?,
+        left_round: j.get("left_round").as_u64(),
+        rounds_contributed: need_u64(j, "rounds_contributed", w)?,
+        dropped_rounds: need_u64(j, "dropped_rounds", w)?,
+        local_steps: need_u64(j, "local_steps", w)?,
+        samples: need_u64(j, "samples", w)?,
+        sim_compute_s: need_f64_bits(j, "sim_compute_s", w)?,
+        wall_compute_s: need_f64_bits(j, "wall_compute_s", w)?,
+        last_loss: need_f64_bits(j, "last_loss", w)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard IEEE CRC32 check values.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn f64_bits_roundtrip_exact() {
+        for x in [0.0, -0.0, 1.0, -1.5, f64::MIN_POSITIVE, 1e300, std::f64::consts::PI] {
+            let j = f64_bits_json(x);
+            let back = f64_from_bits_json(&j, "t").unwrap();
+            assert_eq!(x.to_bits(), back.to_bits(), "bits must survive for {x}");
+        }
+        // NaN payloads survive too (JSON numbers could never carry these).
+        let nan = f64::from_bits(0x7ff8_0000_dead_beef);
+        let back = f64_from_bits_json(&f64_bits_json(nan), "t").unwrap();
+        assert_eq!(nan.to_bits(), back.to_bits());
+    }
+
+    #[test]
+    fn f32s_hex_roundtrip_exact() {
+        let xs = vec![0.0f32, -0.0, 1.25, -3.5e-7, f32::INFINITY, f32::from_bits(0x7fc0_1234)];
+        let hex = f32s_to_hex(&xs);
+        assert_eq!(hex.len(), xs.len() * 8);
+        let back = f32s_from_hex(&hex, "t").unwrap();
+        assert_eq!(xs.len(), back.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(f32s_from_hex("abc", "t").is_err(), "ragged length must error");
+        assert!(f32s_from_hex("zzzzzzzz", "t").is_err(), "non-hex must error");
+    }
+
+    #[test]
+    fn u64_hex_roundtrip_beyond_f64_window() {
+        for x in [0u64, 1, u64::MAX, (1 << 53) + 1] {
+            let back = u64_from_hex_json(&u64_hex_json(x), "t").unwrap();
+            assert_eq!(x, back);
+        }
+    }
+
+    #[test]
+    fn rng_json_roundtrip_continues_the_stream() {
+        let mut rng = crate::util::rng::Pcg64::new(42, 7);
+        for _ in 0..23 {
+            rng.next_u64();
+        }
+        let mut back = rng_from_json(&rng_to_json(&rng), "t").unwrap();
+        for _ in 0..32 {
+            assert_eq!(rng.next_u64(), back.next_u64());
+        }
+        assert!(rng_from_json(&Json::arr(vec![Json::Null]), "t").is_err());
+    }
+
+    #[test]
+    fn durability_cadence_and_exit() {
+        let mut d = Durability::none();
+        assert!(!d.wants_checkpoint(0));
+        d.checkpoint_dir = Some(std::path::PathBuf::from("/tmp/x"));
+        d.checkpoint_every = 3;
+        assert!(!d.wants_checkpoint(0));
+        assert!(!d.wants_checkpoint(1));
+        assert!(d.wants_checkpoint(2), "K=3 checkpoints the 3rd committed sync");
+        assert!(d.wants_checkpoint(5));
+        d.exit_at = Some(4);
+        assert!(d.wants_checkpoint(4), "exit boundary always checkpoints");
+        assert!(d.should_exit(4));
+        assert!(d.should_exit(7), "skipped boundaries exit at the next one");
+        assert!(!d.should_exit(3));
+        let p = d.snapshot_path("my run", 4).unwrap();
+        assert!(p.to_string_lossy().ends_with("my_run.r4.snap.json"));
+    }
+}

@@ -1,0 +1,582 @@
+//! Versioned, self-describing run snapshots.
+//!
+//! A [`RunSnapshot`] captures everything a run needs to continue bit for bit
+//! from a sync boundary: the consensus parameters, every worker's optimizer
+//! moments and error-feedback residual, the policy's internal state, the
+//! data/model RNG stream positions, the membership roster, the comm counters,
+//! the simulated clock, and the accumulated metric traces. Floating state is
+//! serialized as raw bit patterns (see [`crate::journal`] module docs), so
+//! `save` → `load` is the identity on every `f32`/`f64` involved.
+//!
+//! ## File format
+//!
+//! Pretty-printed JSON followed by one footer line:
+//!
+//! ```text
+//! { ... snapshot object ... }
+//! #crc32:xxxxxxxx
+//! ```
+//!
+//! The CRC covers the JSON text, so torn or bit-flipped snapshots are detected
+//! at load rather than silently resumed. Writes are atomic: the file is
+//! written to `<path>.tmp` and renamed into place, so a crash mid-checkpoint
+//! leaves the previous snapshot intact.
+//!
+//! ## Versioning
+//!
+//! `version` is checked before any other field: a snapshot written by a newer
+//! build fails with an actionable message instead of a cascade of missing-key
+//! errors.
+
+use super::{
+    comm_from_json, comm_to_json, crc32, eval_point_from_json, eval_point_to_json, f32s_from_hex,
+    f32s_to_hex, f64_bits_json, need_bool, need_f64_bits, need_str, need_u32, need_u64, need_usize,
+    policy_point_from_json, policy_point_to_json, u64_from_hex_json, u64_hex_json,
+    worker_summary_from_json, worker_summary_to_json,
+};
+use crate::collective::CommCounters;
+use crate::comm::CompressionSpec;
+use crate::metrics::{EvalPoint, PolicyPoint, WorkerSummary};
+use crate::policy::PolicyState;
+use crate::util::json::Json;
+
+/// Highest snapshot format version this build can read and the version it
+/// writes.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// One worker's endpoint state. The sequential engine snapshots every worker;
+/// the cluster engine snapshots active workers only (pending workers are
+/// spawn-fresh and left workers never run again — both reconstruct from the
+/// config).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerSnapshot {
+    pub worker: usize,
+    /// Optimizer state ([`crate::optim::Optimizer::state_json`]).
+    pub opt: Json,
+    /// Uplink error-feedback residual; `None` when the spec carries none.
+    pub uplink_ef: Option<Vec<f32>>,
+    /// Model-side state ([`crate::model::GradModel::state_json`]).
+    pub model_state: Json,
+    /// Dataset sampler state ([`crate::data::Dataset::state_json`]).
+    pub data_state: Json,
+}
+
+/// Cluster-engine extras: the coordinator's phase counters and the membership
+/// roster with its per-worker metric accumulators.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSnapshot {
+    pub warmup_left: u64,
+    pub cooldown_left: u64,
+    /// Gradient-accumulation granularity gathered from the Hello handshake.
+    pub micro: u64,
+    /// Per-worker membership: `"pending"`, `"active"`, or `"left"`.
+    pub members: Vec<String>,
+    pub stats: Vec<WorkerSummary>,
+}
+
+/// The full run state at the boundary of committed round `round`. Resume
+/// continues at `round + 1`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSnapshot {
+    pub version: u32,
+    /// `"sequential"` or `"cluster"` — resume refuses a cross-engine mismatch.
+    pub engine: String,
+    pub label: String,
+    pub seed: u64,
+    pub dim: usize,
+    pub m_workers: usize,
+    /// The committed round this snapshot closes.
+    pub round: u64,
+    pub samples: u64,
+    pub steps: u64,
+    pub b_local: u64,
+    /// H decided at this boundary for the next live round (`None`: bootstrap).
+    pub pending_h: Option<u32>,
+    pub next_eval: u64,
+    pub weighted_b: f64,
+    pub total_local_steps: f64,
+    pub sim_time_s: f64,
+    /// The compression spec in effect after this boundary's policy decision.
+    pub comp_spec: CompressionSpec,
+    /// Consensus parameters (every worker holds exactly these at a boundary).
+    pub consensus: Vec<f32>,
+    /// Coordinator-side downlink error-feedback residual.
+    pub downlink_ef: Option<Vec<f32>>,
+    pub policy: PolicyState,
+    pub comm: CommCounters,
+    pub points: Vec<EvalPoint>,
+    pub batch_trace: Vec<(u64, u64, u64)>,
+    pub policy_trace: Vec<PolicyPoint>,
+    pub diverged: bool,
+    pub workers: Vec<WorkerSnapshot>,
+    pub cluster: Option<ClusterSnapshot>,
+    /// Journal length (bytes) after this boundary's `checkpoint_written`
+    /// event. Resume truncates the journal here, so the resumed journal is
+    /// byte-identical to an uninterrupted run's.
+    pub journal_bytes: u64,
+    /// Journal event count at the same point.
+    pub journal_seq: u64,
+}
+
+impl WorkerSnapshot {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("worker", Json::num(self.worker as f64)),
+            ("opt", self.opt.clone()),
+            (
+                "uplink_ef",
+                self.uplink_ef.as_ref().map(|v| Json::str(&f32s_to_hex(v))).unwrap_or(Json::Null),
+            ),
+            ("model", self.model_state.clone()),
+            ("data", self.data_state.clone()),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<WorkerSnapshot, String> {
+        let w = "worker snapshot";
+        Ok(WorkerSnapshot {
+            worker: need_usize(j, "worker", w)?,
+            opt: j.get("opt").clone(),
+            uplink_ef: opt_f32s(j.get("uplink_ef"), "worker snapshot: uplink_ef")?,
+            model_state: j.get("model").clone(),
+            data_state: j.get("data").clone(),
+        })
+    }
+}
+
+impl ClusterSnapshot {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("warmup_left", u64_hex_json(self.warmup_left)),
+            ("cooldown_left", u64_hex_json(self.cooldown_left)),
+            ("micro", u64_hex_json(self.micro)),
+            ("members", Json::arr(self.members.iter().map(|m| Json::str(m)))),
+            ("stats", Json::arr(self.stats.iter().map(worker_summary_to_json))),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<ClusterSnapshot, String> {
+        let w = "cluster snapshot";
+        let members = j
+            .get("members")
+            .as_arr()
+            .ok_or_else(|| format!("{w}: missing members array"))?
+            .iter()
+            .map(|m| {
+                let s = m.as_str().ok_or_else(|| format!("{w}: non-string member state"))?;
+                if !matches!(s, "pending" | "active" | "left") {
+                    return Err(format!("{w}: unknown member state {s:?}"));
+                }
+                Ok(s.to_string())
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let stats = j
+            .get("stats")
+            .as_arr()
+            .ok_or_else(|| format!("{w}: missing stats array"))?
+            .iter()
+            .map(worker_summary_from_json)
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(ClusterSnapshot {
+            warmup_left: u64_from_hex_json(j.get("warmup_left"), w)?,
+            cooldown_left: u64_from_hex_json(j.get("cooldown_left"), w)?,
+            micro: u64_from_hex_json(j.get("micro"), w)?,
+            members,
+            stats,
+        })
+    }
+}
+
+fn opt_f32s(j: &Json, what: &str) -> Result<Option<Vec<f32>>, String> {
+    if j.is_null() {
+        return Ok(None);
+    }
+    let s = j.as_str().ok_or_else(|| format!("{what}: expected an f32hex string or null"))?;
+    f32s_from_hex(s, what).map(Some)
+}
+
+impl RunSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(self.version as f64)),
+            ("engine", Json::str(&self.engine)),
+            ("label", Json::str(&self.label)),
+            ("seed", u64_hex_json(self.seed)),
+            ("dim", Json::num(self.dim as f64)),
+            ("m_workers", Json::num(self.m_workers as f64)),
+            ("round", u64_hex_json(self.round)),
+            ("samples", u64_hex_json(self.samples)),
+            ("steps", u64_hex_json(self.steps)),
+            ("b_local", u64_hex_json(self.b_local)),
+            (
+                "pending_h",
+                self.pending_h.map(|h| Json::num(h as f64)).unwrap_or(Json::Null),
+            ),
+            ("next_eval", u64_hex_json(self.next_eval)),
+            ("weighted_b", f64_bits_json(self.weighted_b)),
+            ("total_local_steps", f64_bits_json(self.total_local_steps)),
+            ("sim_time_s", f64_bits_json(self.sim_time_s)),
+            ("comp_spec", self.comp_spec.to_json()),
+            ("consensus", Json::str(&f32s_to_hex(&self.consensus))),
+            (
+                "downlink_ef",
+                self.downlink_ef
+                    .as_ref()
+                    .map(|v| Json::str(&f32s_to_hex(v)))
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "policy",
+                Json::obj(vec![
+                    ("policy", Json::str(&self.policy.policy)),
+                    ("data", self.policy.data.clone()),
+                ]),
+            ),
+            ("comm", comm_to_json(&self.comm)),
+            ("points", Json::arr(self.points.iter().map(eval_point_to_json))),
+            (
+                "batch_trace",
+                Json::arr(self.batch_trace.iter().map(|&(r, s, b)| {
+                    Json::arr(vec![u64_hex_json(r), u64_hex_json(s), u64_hex_json(b)])
+                })),
+            ),
+            (
+                "policy_trace",
+                Json::arr(self.policy_trace.iter().map(policy_point_to_json)),
+            ),
+            ("diverged", Json::Bool(self.diverged)),
+            ("workers", Json::arr(self.workers.iter().map(|w| w.to_json()))),
+            (
+                "cluster",
+                self.cluster.as_ref().map(|c| c.to_json()).unwrap_or(Json::Null),
+            ),
+            ("journal_bytes", u64_hex_json(self.journal_bytes)),
+            ("journal_seq", u64_hex_json(self.journal_seq)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunSnapshot, String> {
+        let w = "snapshot";
+        // Version gate first: a future format must fail with one clear message,
+        // not a cascade of missing-key errors from a changed schema.
+        let version = need_u32(j, "version", w)?;
+        if version > SNAPSHOT_VERSION {
+            return Err(format!(
+                "snapshot format version {version} was written by a newer adaloco \
+                 (this build reads <= {SNAPSHOT_VERSION}) — resume with the newer binary \
+                 or restart the run from round 0"
+            ));
+        }
+        let consensus = f32s_from_hex(
+            j.get("consensus").as_str().ok_or_else(|| format!("{w}: missing consensus"))?,
+            "snapshot: consensus",
+        )?;
+        let batch_trace = j
+            .get("batch_trace")
+            .as_arr()
+            .ok_or_else(|| format!("{w}: missing batch_trace array"))?
+            .iter()
+            .map(|e| {
+                let t = e.as_arr().filter(|t| t.len() == 3).ok_or_else(|| {
+                    format!("{w}: batch_trace entry is not a 3-element array")
+                })?;
+                Ok((
+                    u64_from_hex_json(&t[0], "batch_trace round")?,
+                    u64_from_hex_json(&t[1], "batch_trace samples")?,
+                    u64_from_hex_json(&t[2], "batch_trace b")?,
+                ))
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let points = j
+            .get("points")
+            .as_arr()
+            .ok_or_else(|| format!("{w}: missing points array"))?
+            .iter()
+            .map(eval_point_from_json)
+            .collect::<Result<Vec<_>, String>>()?;
+        let policy_trace = j
+            .get("policy_trace")
+            .as_arr()
+            .ok_or_else(|| format!("{w}: missing policy_trace array"))?
+            .iter()
+            .map(policy_point_from_json)
+            .collect::<Result<Vec<_>, String>>()?;
+        let workers = j
+            .get("workers")
+            .as_arr()
+            .ok_or_else(|| format!("{w}: missing workers array"))?
+            .iter()
+            .map(WorkerSnapshot::from_json)
+            .collect::<Result<Vec<_>, String>>()?;
+        let cluster = if j.get("cluster").is_null() {
+            None
+        } else {
+            Some(ClusterSnapshot::from_json(j.get("cluster"))?)
+        };
+        Ok(RunSnapshot {
+            version,
+            engine: need_str(j, "engine", w)?,
+            label: need_str(j, "label", w)?,
+            seed: u64_from_hex_json(j.get("seed"), "snapshot: seed")?,
+            dim: need_usize(j, "dim", w)?,
+            m_workers: need_usize(j, "m_workers", w)?,
+            round: u64_from_hex_json(j.get("round"), "snapshot: round")?,
+            samples: u64_from_hex_json(j.get("samples"), "snapshot: samples")?,
+            steps: u64_from_hex_json(j.get("steps"), "snapshot: steps")?,
+            b_local: u64_from_hex_json(j.get("b_local"), "snapshot: b_local")?,
+            pending_h: j.get("pending_h").as_u64().map(|h| h as u32),
+            next_eval: u64_from_hex_json(j.get("next_eval"), "snapshot: next_eval")?,
+            weighted_b: need_f64_bits(j, "weighted_b", w)?,
+            total_local_steps: need_f64_bits(j, "total_local_steps", w)?,
+            sim_time_s: need_f64_bits(j, "sim_time_s", w)?,
+            comp_spec: CompressionSpec::from_json(j.get("comp_spec"))
+                .map_err(|e| format!("{w}: comp_spec: {e}"))?,
+            consensus,
+            downlink_ef: opt_f32s(j.get("downlink_ef"), "snapshot: downlink_ef")?,
+            policy: PolicyState {
+                policy: need_str(j.get("policy"), "policy", "snapshot policy state")?,
+                data: j.get("policy").get("data").clone(),
+            },
+            comm: comm_from_json(j.get("comm"), "snapshot: comm")?,
+            points,
+            batch_trace,
+            policy_trace,
+            diverged: need_bool(j, "diverged", w)?,
+            workers,
+            cluster,
+            journal_bytes: u64_from_hex_json(j.get("journal_bytes"), "snapshot: journal_bytes")?,
+            journal_seq: u64_from_hex_json(j.get("journal_seq"), "snapshot: journal_seq")?,
+        })
+    }
+
+    /// Serialize to the on-disk format: pretty JSON + `#crc32` footer.
+    pub fn encode(&self) -> String {
+        let body = self.to_json().to_string_pretty();
+        let crc = crc32(body.as_bytes());
+        format!("{body}\n#crc32:{crc:08x}\n")
+    }
+
+    /// Parse the on-disk format, verifying the CRC footer.
+    pub fn decode(text: &str) -> Result<RunSnapshot, String> {
+        let idx = text
+            .rfind("\n#crc32:")
+            .ok_or("snapshot is missing its #crc32 footer (truncated write?)")?;
+        let body = &text[..idx];
+        let footer = text[idx + "\n#crc32:".len()..].trim();
+        let want = u32::from_str_radix(footer, 16)
+            .map_err(|e| format!("snapshot footer {footer:?} is not a crc32 hex word: {e}"))?;
+        let got = crc32(body.as_bytes());
+        if got != want {
+            return Err(format!(
+                "snapshot is corrupt: crc32 {got:08x} != footer {want:08x}"
+            ));
+        }
+        let j = Json::parse(body).map_err(|e| format!("snapshot JSON is invalid: {e}"))?;
+        RunSnapshot::from_json(&j)
+    }
+
+    /// Atomically write the snapshot: `<path>.tmp` then rename into place.
+    pub fn save(&self, path: &std::path::Path) -> Result<(), String> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| format!("creating snapshot dir {parent:?}: {e}"))?;
+            }
+        }
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, self.encode())
+            .map_err(|e| format!("writing snapshot temp file {tmp:?}: {e}"))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| format!("renaming snapshot into place at {path:?}: {e}"))
+    }
+
+    /// Load and verify a snapshot file.
+    pub fn load(path: &std::path::Path) -> Result<RunSnapshot, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading snapshot {path:?}: {e}"))?;
+        RunSnapshot::decode(&text).map_err(|e| format!("snapshot {path:?}: {e}"))
+    }
+}
+
+// `need_str` on a nested object: the shared helper takes (json, key, what).
+// A tiny shim would obscure more than it saves, so `from_json` above calls it
+// with `j.get("policy")` as the object.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CompressMethod;
+
+    fn sample_snapshot() -> RunSnapshot {
+        RunSnapshot {
+            version: SNAPSHOT_VERSION,
+            engine: "cluster".to_string(),
+            label: "resume test".to_string(),
+            seed: 42,
+            dim: 3,
+            m_workers: 2,
+            round: 7,
+            samples: (1 << 53) + 11, // beyond the exact-f64 integer window
+            steps: 31,
+            b_local: 64,
+            pending_h: Some(8),
+            next_eval: 9000,
+            weighted_b: 123.456,
+            total_local_steps: 31.0,
+            sim_time_s: f64::from_bits(0x3ff0_0000_0000_0001), // 1.0 + 1 ulp
+            comp_spec: CompressionSpec {
+                method: CompressMethod::TopK { k_frac: 0.125 },
+                error_feedback: true,
+            },
+            consensus: vec![1.0, -0.0, f32::from_bits(0x7fc0_1234)],
+            downlink_ef: Some(vec![0.25, -1.5e-9, 0.0]),
+            policy: PolicyState {
+                policy: "paper(test)".to_string(),
+                data: Json::obj(vec![("rung", Json::num(2.0))]),
+            },
+            comm: CommCounters {
+                allreduce_calls: 14,
+                bytes_moved: 1 << 40,
+                wire_bytes: 77,
+                rounds: 8,
+            },
+            points: vec![EvalPoint {
+                step: 31,
+                round: 7,
+                samples: 4096,
+                sim_time_s: 2.5,
+                b_local: 64,
+                train_loss: 0.5,
+                val_loss: f64::NAN,
+                val_acc: 0.25,
+                val_top5: 0.75,
+            }],
+            batch_trace: vec![(6, 2048, 32), (7, 4096, 64)],
+            policy_trace: vec![PolicyPoint {
+                round: 7,
+                samples: 4096,
+                b_next: 64,
+                h_next: 8,
+                compression: "topk0.125+ef".to_string(),
+                switched: true,
+                test_violated: false,
+                wire_frac: 0.25,
+            }],
+            diverged: false,
+            workers: vec![
+                WorkerSnapshot {
+                    worker: 0,
+                    opt: Json::obj(vec![("kind", Json::str("sgd"))]),
+                    uplink_ef: Some(vec![0.5, 0.0, -2.0]),
+                    model_state: Json::Null,
+                    data_state: Json::obj(vec![("rng", Json::arr(vec![
+                        Json::str("0000000000000001"),
+                        Json::str("0000000000000002"),
+                        Json::str("0000000000000003"),
+                        Json::str("0000000000000004"),
+                    ]))]),
+                },
+                WorkerSnapshot {
+                    worker: 1,
+                    opt: Json::Null,
+                    uplink_ef: None,
+                    model_state: Json::Null,
+                    data_state: Json::Null,
+                },
+            ],
+            cluster: Some(ClusterSnapshot {
+                warmup_left: 0,
+                cooldown_left: 1,
+                micro: 1,
+                members: vec!["active".to_string(), "left".to_string()],
+                stats: vec![WorkerSummary {
+                    worker: 0,
+                    speed: 1.5,
+                    joined_round: 0,
+                    left_round: None,
+                    rounds_contributed: 8,
+                    dropped_rounds: 1,
+                    local_steps: 31,
+                    samples: 2048,
+                    sim_compute_s: 3.25,
+                    wall_compute_s: 0.125,
+                    last_loss: 0.375,
+                }],
+            }),
+            journal_bytes: 5311,
+            journal_seq: 23,
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrips_bit_for_bit() {
+        let snap = sample_snapshot();
+        let back = RunSnapshot::decode(&snap.encode()).unwrap();
+        // PartialEq would reject the NaN eval point; compare the JSON text,
+        // which carries every float as bits and is deterministic (BTreeMap).
+        assert_eq!(snap.to_json().to_string(), back.to_json().to_string());
+        assert_eq!(back.samples, (1 << 53) + 11);
+        assert_eq!(back.sim_time_s.to_bits(), 0x3ff0_0000_0000_0001);
+        assert_eq!(back.consensus[2].to_bits(), 0x7fc0_1234);
+        assert!(back.points[0].val_loss.is_nan());
+        assert_eq!(back.workers[1].uplink_ef, None);
+        assert_eq!(back.cluster.as_ref().unwrap().members[1], "left");
+    }
+
+    #[test]
+    fn sequential_snapshot_has_no_cluster_section() {
+        let mut snap = sample_snapshot();
+        snap.engine = "sequential".to_string();
+        snap.cluster = None;
+        snap.pending_h = None;
+        let back = RunSnapshot::decode(&snap.encode()).unwrap();
+        assert!(back.cluster.is_none());
+        assert_eq!(back.pending_h, None);
+    }
+
+    #[test]
+    fn future_version_errors_with_actionable_message() {
+        let mut snap = sample_snapshot();
+        snap.version = SNAPSHOT_VERSION + 1;
+        let err = RunSnapshot::decode(&snap.encode()).unwrap_err();
+        assert!(err.contains("newer adaloco"), "unhelpful version error: {err}");
+        assert!(
+            err.contains(&format!("version {}", SNAPSHOT_VERSION + 1)),
+            "error must name the offending version: {err}"
+        );
+    }
+
+    #[test]
+    fn corrupt_body_fails_crc() {
+        let text = sample_snapshot().encode();
+        // flip one byte inside the JSON body
+        let mut bytes = text.clone().into_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] = if bytes[mid] == b'0' { b'1' } else { b'0' };
+        let err = RunSnapshot::decode(std::str::from_utf8(&bytes).unwrap()).unwrap_err();
+        assert!(err.contains("crc32"), "corruption must be a crc error: {err}");
+    }
+
+    #[test]
+    fn truncated_file_reports_missing_footer() {
+        let text = sample_snapshot().encode();
+        let err = RunSnapshot::decode(&text[..text.len() / 2]).unwrap_err();
+        assert!(err.contains("footer"), "truncation must mention the footer: {err}");
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_atomic() {
+        let dir = std::env::temp_dir()
+            .join(format!("adaloco-snap-test-{}", std::process::id()));
+        let path = dir.join("nested").join("t.r7.snap.json");
+        let snap = sample_snapshot();
+        snap.save(&path).unwrap();
+        // no temp file left behind
+        assert!(!path.with_extension("json.tmp").exists());
+        let back = RunSnapshot::load(&path).unwrap();
+        assert_eq!(snap.to_json().to_string(), back.to_json().to_string());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

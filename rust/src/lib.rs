@@ -72,6 +72,7 @@ pub mod config;
 pub mod data;
 pub mod engine;
 pub mod exp;
+pub mod journal;
 pub mod metrics;
 pub mod model;
 pub mod optim;

@@ -8,10 +8,13 @@
 //!            scenario and emit a paper-style comparison table.
 //!   table    Regenerate a paper table: t1 t2 t4 t6 t8 t1-pjrt t2-pjrt theory ab2 ab3.
 //!   figure   Regenerate a paper figure's series: f1 f2 f8.
+//!   replay   Re-derive a run's metrics from its event journal alone.
 //!   inspect  Show artifact manifests and runtime info.
 //!
 //! Common flags: --scale <f64> (sample-budget multiplier), --out <dir>,
-//! --seeds 1,2,3, --config <json>, --save <json>.
+//! --seeds 1,2,3, --config <json>, --save <json>. `train` and `cluster`
+//! additionally take the durability flags (--journal, --checkpoint-dir,
+//! --checkpoint-every, --checkpoint-exit, --resume) described in USAGE.
 
 use adaloco::config::RunConfig;
 use adaloco::exp::{figures, tables, theory};
@@ -24,14 +27,28 @@ const USAGE: &str = r#"adaloco — adaptive batch size strategies for local grad
 
 USAGE:
   adaloco train   [--config cfg.json] [--save out.json] [--seed N]
+                  [durability flags]
   adaloco cluster (--config scenario.json | --suite scenarios/)
-                  [--seed N] [--out results]
+                  [--seed N] [--out results] [durability flags]
   adaloco sweep   --config scenario.json [--methods identity,int8,signsgd,topk]
                   [--hs 1,4,16] [--seed N] [--out results]
   adaloco table   --id <t1|t2|t4|t6|t8|t1-pjrt|t2-pjrt|theory|ab2|ab3>
                   [--scale S] [--seeds 1,2,3] [--out results]
   adaloco figure  --id <f1|f2|f8> [--scale S] [--out results]
+  adaloco replay  <run.journal> [--out results]
   adaloco inspect [--model name]
+
+DURABILITY FLAGS (train, cluster with a single --config):
+  --journal run.journal      append a CRC-framed event log of every transition
+  --checkpoint-dir dir/      where run snapshots (*.snap.json) land
+  --checkpoint-every K       snapshot every K sync rounds (also via the
+                             config's "checkpoint_every" key)
+  --checkpoint-exit R        snapshot at the first sync boundary >= round R,
+                             then exit (the crash-drill kill switch)
+  --resume dir/run.rN.snap.json
+                             rebuild the run from a snapshot and continue —
+                             bit-for-bit the uninterrupted run. Pass the SAME
+                             config/scenario and the same --journal path.
 
 COMPRESSION METHODS (sweep --methods, scenario "compression" sections):
   identity | int8[:chunk] | signsgd | topk[:frac], each with an optional
@@ -67,6 +84,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "table" => cmd_table(&args),
         "figure" => cmd_figure(&args),
+        "replay" => cmd_replay(&args),
         "inspect" => cmd_inspect(&args),
         "" | "help" | "--help" => {
             println!("{USAGE}");
@@ -105,6 +123,44 @@ fn print_policy_line(rec: &adaloco::metrics::RunRecord) {
     );
 }
 
+/// Assemble the journal/checkpoint/resume wiring from the durability flags.
+fn durability_from_args(args: &Args) -> anyhow::Result<adaloco::journal::Durability> {
+    let mut dur = adaloco::journal::Durability::none();
+    if let Some(p) = args.get("journal") {
+        dur.journal = Some(PathBuf::from(p));
+    }
+    if let Some(d) = args.get("checkpoint-dir") {
+        dur.checkpoint_dir = Some(PathBuf::from(d));
+    }
+    dur.checkpoint_every = args
+        .parse_or("checkpoint-every", dur.checkpoint_every)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.get("checkpoint-exit").is_some() {
+        dur.exit_at = Some(
+            args.parse_or("checkpoint-exit", 0u64)
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+        );
+        anyhow::ensure!(
+            dur.checkpoint_dir.is_some(),
+            "--checkpoint-exit needs --checkpoint-dir (the exit boundary writes a snapshot)"
+        );
+    }
+    if let Some(path) = args.get("resume") {
+        let snap = adaloco::journal::RunSnapshot::load(std::path::Path::new(path))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        dur.resume = Some(snap);
+    }
+    Ok(dur)
+}
+
+/// True when any durability flag is present (used to gate --suite, where a
+/// single journal/snapshot path would be ambiguous).
+fn has_durability_flags(args: &Args) -> bool {
+    ["journal", "checkpoint-dir", "checkpoint-every", "checkpoint-exit", "resume"]
+        .iter()
+        .any(|k| args.get(k).is_some())
+}
+
 fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
     let mut cfg = match args.get("config") {
         Some(path) => {
@@ -126,8 +182,16 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         std::fs::write(path, cfg.to_json().to_string_pretty())?;
         println!("config written to {path}");
     }
-    println!("running '{}' ...", cfg.label);
-    let rec = adaloco::exp::run_config(&cfg)?;
+    let dur = durability_from_args(args)?;
+    if let Some(snap) = &dur.resume {
+        println!(
+            "resuming '{}' from round {} ({} samples in) ...",
+            cfg.label, snap.round, snap.samples
+        );
+    } else {
+        println!("running '{}' ...", cfg.label);
+    }
+    let rec = adaloco::exp::run_config_durable(&cfg, dur)?;
     let out = PathBuf::from(args.str_or("out", "results"));
     rec.write_to(&out)?;
     println!(
@@ -147,6 +211,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         rec.comm.compression_ratio(),
     );
     print_policy_line(&rec);
+    if rec.interrupted {
+        println!("  interrupted at the kill-switch boundary — continue with --resume <snapshot>");
+    }
     if rec.diverged {
         anyhow::bail!("run diverged (non-finite parameters)");
     }
@@ -155,6 +222,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     use adaloco::config::ScenarioSpec;
+    anyhow::ensure!(
+        !(has_durability_flags(args) && args.get("suite").is_some()),
+        "durability flags need a single --config scenario, not --suite"
+    );
+    let mut durability = Some(durability_from_args(args)?);
     let out = PathBuf::from(args.str_or("out", "results"));
     let mut paths: Vec<PathBuf> = Vec::new();
     if let Some(cfg) = args.get("config") {
@@ -192,7 +264,13 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             spec.cooldown_rounds,
             spec.compression.label(),
         );
-        let rec = adaloco::cluster::run_scenario(&spec)?;
+        let dur = durability
+            .take()
+            .unwrap_or_else(adaloco::journal::Durability::none);
+        if let Some(snap) = &dur.resume {
+            println!("  resuming from round {} ({} samples in)", snap.round, snap.samples);
+        }
+        let rec = adaloco::cluster::run_scenario_durable(&spec, dur)?;
         rec.write_to(&out)?;
         println!(
             "  rounds={} samples={} avg_bsz={:.0} sim_time={} wall={} best_loss={:.4} \
@@ -222,6 +300,11 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
                 w.local_steps,
                 w.samples,
                 stats::fmt_duration(w.sim_compute_s),
+            );
+        }
+        if rec.interrupted {
+            println!(
+                "  interrupted at the kill-switch boundary — continue with --resume <snapshot>"
             );
         }
         if rec.diverged {
@@ -308,6 +391,59 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
     };
     println!("{text}");
     std::fs::write(out.join("figure.txt"), &text)?;
+    Ok(())
+}
+
+/// Re-derive a run's metrics purely from its event journal: scan the valid
+/// prefix (warning about a torn/corrupt tail rather than failing), fold the
+/// events into a [`adaloco::metrics::RunRecord`], and print the same summary
+/// a live run would — optionally writing the full artifact set with --out.
+fn cmd_replay(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .cloned()
+        .or_else(|| args.get("journal").map(str::to_string))
+        .ok_or_else(|| {
+            anyhow::anyhow!("replay: pass the journal path (adaloco replay run.journal)")
+        })?;
+    let scan = adaloco::journal::scan_journal_file(std::path::Path::new(&path))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    if let Some(c) = &scan.corruption {
+        eprintln!("WARNING: {c}");
+        eprintln!(
+            "         replaying the valid prefix: {} events, {} clean bytes",
+            scan.events.len(),
+            scan.clean_bytes
+        );
+    }
+    let rec = adaloco::journal::replay_events(&scan.events)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    println!(
+        "replayed '{}': {} events -> rounds={} steps={} samples={} avg_bsz={:.0} \
+         sim_time={} evals={} policy_decisions={} bytes={} wire={} (x{:.1})",
+        rec.label,
+        scan.events.len(),
+        rec.total_rounds,
+        rec.total_steps,
+        rec.total_samples,
+        rec.avg_local_batch,
+        stats::fmt_duration(rec.sim_time_s),
+        rec.points.len(),
+        rec.policy_trace.len(),
+        stats::fmt_bytes(rec.comm.bytes_moved),
+        stats::fmt_bytes(rec.comm.wire_bytes),
+        rec.comm.compression_ratio(),
+    );
+    print_policy_line(&rec);
+    if rec.interrupted {
+        println!("  note: the journal ends in an interrupted run (resume it to finish)");
+    }
+    if let Some(out) = args.get("out") {
+        let out = PathBuf::from(out);
+        rec.write_to(&out)?;
+        println!("replayed artifacts written to {}", out.display());
+    }
     Ok(())
 }
 

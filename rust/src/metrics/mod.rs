@@ -91,6 +91,10 @@ pub struct RunRecord {
     /// Sample-weighted average local batch size (the paper's "bsz." column).
     pub avg_local_batch: f64,
     pub diverged: bool,
+    /// True when the run stopped at a checkpoint-then-exit boundary
+    /// ([`crate::journal::Durability::exit_at`]) instead of finishing its
+    /// sample budget — the record holds a valid prefix of the run.
+    pub interrupted: bool,
 }
 
 impl RunRecord {
@@ -261,6 +265,7 @@ impl RunRecord {
             ("wire_bytes", Json::num(self.comm.wire_bytes as f64)),
             ("compression_ratio", Json::num(self.comm.compression_ratio())),
             ("diverged", Json::Bool(self.diverged)),
+            ("interrupted", Json::Bool(self.interrupted)),
         ])
     }
 

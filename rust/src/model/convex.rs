@@ -146,6 +146,17 @@ impl GradModel for Quadratic {
         Some(self.l)
     }
 
+    fn state_json(&self) -> crate::util::json::Json {
+        // The noise stream is the only mutable state: spectrum and x* are
+        // pure functions of the seed and reconstructed by the config.
+        crate::util::json::Json::obj(vec![("rng", crate::journal::rng_to_json(&self.rng))])
+    }
+
+    fn load_state(&mut self, state: &crate::util::json::Json) -> Result<(), String> {
+        self.rng = crate::journal::rng_from_json(state.get("rng"), "quadratic state: rng")?;
+        Ok(())
+    }
+
     fn name(&self) -> String {
         format!("quadratic(d={},mu={},L={})", self.dim, self.mu, self.l)
     }
@@ -255,6 +266,17 @@ impl GradModel for LeastSquares {
 
     fn smoothness(&self) -> Option<f64> {
         Some(self.l_cached)
+    }
+
+    fn state_json(&self) -> crate::util::json::Json {
+        // Only the row-sampling stream mutates: the design matrix, labels, and
+        // cached L are deterministic in the seed.
+        crate::util::json::Json::obj(vec![("rng", crate::journal::rng_to_json(&self.rng))])
+    }
+
+    fn load_state(&mut self, state: &crate::util::json::Json) -> Result<(), String> {
+        self.rng = crate::journal::rng_from_json(state.get("rng"), "least_squares state: rng")?;
+        Ok(())
     }
 
     fn name(&self) -> String {

@@ -74,6 +74,29 @@ pub trait GradModel: Send {
         None
     }
 
+    /// Serialize mutable model-side state for a checkpoint. Most models are
+    /// pure functions of (params, batch) and return `Json::Null`; models that
+    /// draw from an internal RNG mid-gradient ([`convex::Quadratic`]'s noise
+    /// stream, [`convex::LeastSquares`]' row sampler) override this so a
+    /// resumed run replays the exact stochastic sequence.
+    fn state_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::Null
+    }
+
+    /// Restore state written by [`GradModel::state_json`]. The default accepts
+    /// only the stateless `Null` marker.
+    fn load_state(&mut self, state: &crate::util::json::Json) -> Result<(), String> {
+        if state.is_null() {
+            Ok(())
+        } else {
+            Err(format!(
+                "model {:?} is stateless but the snapshot carries model state — \
+                 snapshot/config mismatch",
+                self.name()
+            ))
+        }
+    }
+
     fn name(&self) -> String;
 }
 

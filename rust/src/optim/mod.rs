@@ -137,6 +137,57 @@ impl Optimizer {
         ((self.m.len() + self.v.len()) * std::mem::size_of::<f32>()) as u64
     }
 
+    /// Serialize the mutable state (step counter + moment buffers) for a
+    /// checkpoint. Buffers are written as raw f32 bit patterns: AdamW's bias
+    /// correction depends on the exact `t` and a resumed run must replay the
+    /// exact float sequence.
+    pub fn state_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("kind", Json::str(self.params.kind.name())),
+            ("t", crate::journal::u64_hex_json(self.t)),
+            ("m", Json::str(&crate::journal::f32s_to_hex(&self.m))),
+            ("v", Json::str(&crate::journal::f32s_to_hex(&self.v))),
+        ])
+    }
+
+    /// Restore state written by [`Optimizer::state_json`]. The buffers must
+    /// match this optimizer's shape (same kind, same dimension) — a mismatch
+    /// means the snapshot belongs to a different configuration.
+    pub fn load_state(&mut self, j: &crate::util::json::Json) -> Result<(), String> {
+        let kind = j.get("kind").as_str().ok_or("optimizer state: missing kind")?;
+        if kind != self.params.kind.name() {
+            return Err(format!(
+                "optimizer state was saved by {kind:?} but this run builds {:?} — \
+                 resume with the config the checkpoint was written from",
+                self.params.kind.name()
+            ));
+        }
+        let t = crate::journal::u64_from_hex_json(j.get("t"), "optimizer state: t")?;
+        let m = crate::journal::f32s_from_hex(
+            j.get("m").as_str().ok_or("optimizer state: missing m")?,
+            "optimizer state: m",
+        )?;
+        let v = crate::journal::f32s_from_hex(
+            j.get("v").as_str().ok_or("optimizer state: missing v")?,
+            "optimizer state: v",
+        )?;
+        if m.len() != self.m.len() || v.len() != self.v.len() {
+            return Err(format!(
+                "optimizer state shape mismatch: snapshot has m[{}]/v[{}], \
+                 this run allocates m[{}]/v[{}]",
+                m.len(),
+                v.len(),
+                self.m.len(),
+                self.v.len()
+            ));
+        }
+        self.t = t;
+        self.m = m;
+        self.v = v;
+        Ok(())
+    }
+
     /// One update: params <- params - lr * direction(grad). `grad` may be clipped
     /// in-place via the scratch copy (caller's buffer is not modified).
     pub fn step(&mut self, x: &mut [f32], grad: &[f32], lr: f64) {
@@ -326,6 +377,40 @@ mod tests {
         shb.kind = OptimKind::Shb;
         assert_eq!(shb.build(100).state_bytes(), 400);
         assert_eq!(OptimParams::paper_adamw().build(100).state_bytes(), 800);
+    }
+
+    #[test]
+    fn state_roundtrip_continues_adamw_exactly() {
+        let mut p = OptimParams::paper_adamw();
+        p.grad_clip = None;
+        let mut x = vec![1.0f32, -2.0, 3.0];
+        let mut opt = p.build(3);
+        for _ in 0..5 {
+            let g = quad_grad(&x);
+            opt.step(&mut x, &g, 0.05);
+        }
+        // checkpoint mid-run, keep stepping the original
+        let state = opt.state_json();
+        let x_at_ckpt = x.clone();
+        for _ in 0..7 {
+            let g = quad_grad(&x);
+            opt.step(&mut x, &g, 0.05);
+        }
+        // restore into a fresh instance and replay the tail
+        let mut opt2 = p.build(3);
+        opt2.load_state(&state).unwrap();
+        assert_eq!(opt2.steps_taken(), 5, "bias-correction t must survive");
+        let mut x2 = x_at_ckpt;
+        for _ in 0..7 {
+            let g = quad_grad(&x2);
+            opt2.step(&mut x2, &g, 0.05);
+        }
+        for (a, b) in x.iter().zip(&x2) {
+            assert_eq!(a.to_bits(), b.to_bits(), "restored run must be bit-identical");
+        }
+        // kind mismatch is loud
+        let mut sgd = OptimParams::plain_sgd().build(3);
+        assert!(sgd.load_state(&state).unwrap_err().contains("adamw"));
     }
 
     #[test]

@@ -73,6 +73,20 @@ pub use variance_compression::VarianceAdaptiveCompression;
 
 use crate::batch::SyncEvent;
 use crate::comm::CompressionSpec;
+use crate::util::json::Json;
+
+/// A policy's serialized internal state, as written into a
+/// [`crate::journal::RunSnapshot`]. The `policy` field is the policy's
+/// [`AdaptivePolicy::name`] (which encodes its parameters), so loading state
+/// into a differently-configured policy fails loudly instead of silently
+/// diverging from the schedule the checkpointed run was on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyState {
+    /// [`AdaptivePolicy::name`] of the policy that saved this state.
+    pub policy: String,
+    /// Policy-specific payload (`Json::Null` for stateless policies).
+    pub data: Json,
+}
 
 /// Everything a policy may observe at a sync point: the legacy sync-event
 /// statistics plus per-round communication and timing telemetry.
@@ -209,6 +223,36 @@ pub trait AdaptivePolicy: Send {
     /// controller or scheduler half without rebuilding the whole policy.
     fn as_legacy_mut(&mut self) -> Option<&mut LegacyPolicy> {
         None
+    }
+
+    /// Serialize internal state for a checkpoint. The default covers
+    /// stateless policies (every legacy controller/scheduler pair): the name
+    /// alone, no payload. Stateful policies ([`PaperPolicy`]'s ladder rung,
+    /// [`VarianceAdaptiveCompression`]'s current k) override both methods.
+    fn save_state(&self) -> PolicyState {
+        PolicyState { policy: self.name(), data: Json::Null }
+    }
+
+    /// Restore internal state from a checkpoint. Fails with an actionable
+    /// message when the snapshot was written by a differently-configured
+    /// policy — resuming must continue the exact schedule, not start a new one.
+    fn load_state(&mut self, state: &PolicyState) -> Result<(), String> {
+        if state.policy != self.name() {
+            return Err(format!(
+                "snapshot policy state was saved by {:?} but this run builds {:?} — \
+                 resume with the config the checkpoint was written from",
+                state.policy,
+                self.name()
+            ));
+        }
+        if !state.data.is_null() {
+            return Err(format!(
+                "policy {:?} is stateless but the snapshot carries an internal-state \
+                 payload — snapshot/config mismatch",
+                self.name()
+            ));
+        }
+        Ok(())
     }
 }
 

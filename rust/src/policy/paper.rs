@@ -151,6 +151,42 @@ impl AdaptivePolicy for PaperPolicy {
             self.ladder.len()
         )
     }
+
+    fn save_state(&self) -> super::PolicyState {
+        // The only mutable state is the monotone ladder position: the norm
+        // test itself is stateless (it reads each round's signals afresh).
+        super::PolicyState {
+            policy: self.name(),
+            data: crate::util::json::Json::obj(vec![(
+                "rung",
+                crate::util::json::Json::num(self.rung as f64),
+            )]),
+        }
+    }
+
+    fn load_state(&mut self, state: &super::PolicyState) -> Result<(), String> {
+        if state.policy != self.name() {
+            return Err(format!(
+                "snapshot policy state was saved by {:?} but this run builds {:?} — \
+                 resume with the config the checkpoint was written from",
+                state.policy,
+                self.name()
+            ));
+        }
+        let rung = state
+            .data
+            .get("rung")
+            .as_usize()
+            .ok_or("paper policy state: missing/invalid rung")?;
+        if rung >= self.ladder.len() {
+            return Err(format!(
+                "paper policy state: rung {rung} out of range for a {}-rung ladder",
+                self.ladder.len()
+            ));
+        }
+        self.rung = rung;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -115,6 +115,42 @@ impl AdaptivePolicy for VarianceAdaptiveCompression {
             self.norm.eta, self.h, self.k_min, self.k_max
         )
     }
+
+    fn save_state(&self) -> super::PolicyState {
+        // current_k lives on a halving ladder of k_max so it is exactly
+        // representable, but it is serialized as raw f64 bits anyway — the
+        // restored rung must compare equal (`k != self.current_k`) bit for bit.
+        super::PolicyState {
+            policy: self.name(),
+            data: crate::util::json::Json::obj(vec![(
+                "current_k",
+                crate::journal::f64_bits_json(self.current_k),
+            )]),
+        }
+    }
+
+    fn load_state(&mut self, state: &super::PolicyState) -> Result<(), String> {
+        if state.policy != self.name() {
+            return Err(format!(
+                "snapshot policy state was saved by {:?} but this run builds {:?} — \
+                 resume with the config the checkpoint was written from",
+                state.policy,
+                self.name()
+            ));
+        }
+        let k = crate::journal::f64_from_bits_json(
+            state.data.get("current_k"),
+            "var_adaptive_compression state: current_k",
+        )?;
+        if !(self.k_min..=self.k_max).contains(&k) {
+            return Err(format!(
+                "var_adaptive_compression state: current_k {k} outside [{}, {}]",
+                self.k_min, self.k_max
+            ));
+        }
+        self.current_k = k;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -127,6 +127,12 @@ impl Pcg64 {
     }
 
     /// Sample `k` indices from [0, n) without replacement (partial Fisher–Yates).
+    ///
+    /// Output order is fully determined by the RNG stream: the `HashSet` on the
+    /// sparse path is a membership filter only (never iterated), and `out` is
+    /// appended in draw order. This is the crate's sole `HashSet` use outside
+    /// tests, so sampling — and therefore every checkpointed RNG stream — is
+    /// byte-stable across runs and across checkpoint/restore.
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
         assert!(k <= n, "sample_indices: k={k} > n={n}");
         // For small k relative to n, use a set-based approach; else shuffle prefix.
@@ -162,6 +168,27 @@ impl Pcg64 {
     /// Fork a child generator (e.g., per-worker) deterministically.
     pub fn fork(&mut self, stream: u64) -> Pcg64 {
         Pcg64::new(self.next_u64(), stream)
+    }
+
+    /// Snapshot the generator as four words: `[state_hi, state_lo, inc_hi,
+    /// inc_lo]`. Together with [`Pcg64::restore`] this makes RNG streams
+    /// checkpointable — a restored generator continues the exact sequence.
+    pub fn save(&self) -> [u64; 4] {
+        [
+            (self.state >> 64) as u64,
+            self.state as u64,
+            (self.inc >> 64) as u64,
+            self.inc as u64,
+        ]
+    }
+
+    /// Rebuild a generator from [`Pcg64::save`] words. No warmup draw is
+    /// performed: the words already encode a mid-stream position.
+    pub fn restore(words: [u64; 4]) -> Pcg64 {
+        Pcg64 {
+            state: ((words[0] as u128) << 64) | words[1] as u128,
+            inc: ((words[2] as u128) << 64) | words[3] as u128,
+        }
     }
 }
 
@@ -252,6 +279,19 @@ mod tests {
         sorted.sort();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
         assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn save_restore_continues_the_exact_stream() {
+        let mut r = Pcg64::new(42, 7);
+        for _ in 0..17 {
+            r.next_u64();
+        }
+        let words = r.save();
+        let tail: Vec<u64> = (0..64).map(|_| r.next_u64()).collect();
+        let mut restored = Pcg64::restore(words);
+        let replayed: Vec<u64> = (0..64).map(|_| restored.next_u64()).collect();
+        assert_eq!(tail, replayed, "restored stream must continue bit for bit");
     }
 
     #[test]

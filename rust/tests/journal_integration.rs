@@ -1,0 +1,351 @@
+//! Crash-recovery integration tests: kill a run at EVERY sync boundary via the
+//! checkpoint-exit kill switch, resume it from the snapshot, and demand the
+//! continuation is bit-for-bit identical to an uninterrupted run — metrics,
+//! journal events, and the final snapshot itself. Exercised on both engines,
+//! with the cluster scenario stacking stragglers, a dropout, elastic
+//! join/leave, and policy-driven mid-run compression switches (the EF-reset
+//! convention) on top.
+
+use adaloco::cluster::run_scenario_durable;
+use adaloco::comm::CompressionSpec;
+use adaloco::config::{
+    BatchStrategy, DataSpec, FaultSpec, ModelSpec, RunConfig, ScenarioSpec, SyncSpec, WorkerSpec,
+};
+use adaloco::exp::run_config_durable;
+use adaloco::journal::{
+    replay_events, scan_journal_file, Durability, JournalEvent, RunSnapshot,
+};
+use adaloco::metrics::RunRecord;
+use adaloco::policy::PolicySpec;
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------- fixtures --
+
+/// A small-but-real sequential workload driven by the paper policy: batch
+/// growth, QSR H growth, and a compression ladder that switches mid-run.
+fn seq_cfg() -> RunConfig {
+    let mut c = RunConfig::default();
+    c.label = "seq resume".into();
+    c.model = ModelSpec::Logistic { feat: 16, classes: 4, l2: 1e-4 };
+    c.data = DataSpec::GaussianMixture {
+        feat: 16,
+        classes: 4,
+        separation: 2.0,
+        noise: 1.2,
+        eval_size: 256,
+    };
+    c.m_workers = 3;
+    c.total_samples = 30_000;
+    c.eval_every_samples = 6_000;
+    c.b_max_local = 512;
+    // Placeholder legacy sections (never consulted when `policy` is set, but
+    // validate() still bounds-checks them against b_max_local).
+    c.strategy = BatchStrategy::Constant { b: 1 };
+    c.sync = SyncSpec::FixedH { h: 1 };
+    c.policy = Some(PolicySpec::Paper {
+        eta: 0.8,
+        b0: 8,
+        b_max: 256,
+        h_base: 2,
+        h_max: 8,
+        qsr_c: 0.32,
+        compress_growth: 4.0,
+        ladder: None,
+    });
+    c
+}
+
+/// The cluster fixture: the same policy under warmup/cooldown phases, a
+/// straggler, an injected dropout, one worker joining late, and one leaving.
+fn cluster_scenario() -> ScenarioSpec {
+    let mut run = seq_cfg();
+    run.label = "cluster resume".into();
+    run.m_workers = 4;
+    run.total_samples = 24_000;
+    ScenarioSpec {
+        name: "resume faults".into(),
+        run,
+        warmup_rounds: 2,
+        cooldown_rounds: 1,
+        compression: CompressionSpec::identity(), // the policy owns the wire format
+        workers: vec![
+            WorkerSpec::default(),
+            WorkerSpec { leave_round: Some(6), ..Default::default() },
+            WorkerSpec { join_round: 3, ..Default::default() },
+            WorkerSpec {
+                faults: vec![
+                    FaultSpec::Straggle { from_round: 2, until_round: 5, factor: 3.0 },
+                    FaultSpec::Dropout { round: 4 },
+                ],
+                ..Default::default()
+            },
+        ],
+    }
+}
+
+// ----------------------------------------------------------------- helpers --
+
+fn temp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("adaloco_jrn_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn dur(dir: &Path, every: u64) -> Durability {
+    Durability {
+        journal: Some(dir.join("run.journal")),
+        checkpoint_dir: Some(dir.to_path_buf()),
+        checkpoint_every: every,
+        exit_at: None,
+        resume: None,
+    }
+}
+
+/// Bit-for-bit record equality on everything deterministic. Wall-clock fields
+/// (`wall_time_s`, per-worker `wall_compute_s`) are measured, not derived, and
+/// are the ONLY fields allowed to differ.
+fn assert_same_record(what: &str, a: &RunRecord, b: &RunRecord) {
+    assert_eq!(a.points.len(), b.points.len(), "{what}: eval point count");
+    for (i, (x, y)) in a.points.iter().zip(&b.points).enumerate() {
+        assert_eq!(
+            (x.step, x.round, x.samples, x.b_local),
+            (y.step, y.round, y.samples, y.b_local),
+            "{what}: eval point {i} identity"
+        );
+        for (f, xa, ya) in [
+            ("sim_time_s", x.sim_time_s, y.sim_time_s),
+            ("train_loss", x.train_loss, y.train_loss),
+            ("val_loss", x.val_loss, y.val_loss),
+            ("val_acc", x.val_acc, y.val_acc),
+            ("val_top5", x.val_top5, y.val_top5),
+        ] {
+            assert_eq!(xa.to_bits(), ya.to_bits(), "{what}: eval point {i} {f}");
+        }
+    }
+    assert_eq!(a.batch_trace, b.batch_trace, "{what}: batch trace");
+    assert_eq!(a.policy_trace, b.policy_trace, "{what}: policy trace");
+    assert_eq!(a.comm, b.comm, "{what}: comm counters");
+    assert_eq!(a.total_steps, b.total_steps, "{what}: total_steps");
+    assert_eq!(a.total_rounds, b.total_rounds, "{what}: total_rounds");
+    assert_eq!(a.total_samples, b.total_samples, "{what}: total_samples");
+    assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits(), "{what}: sim_time_s");
+    assert_eq!(
+        a.avg_local_batch.to_bits(),
+        b.avg_local_batch.to_bits(),
+        "{what}: avg_local_batch"
+    );
+    assert_eq!(a.diverged, b.diverged, "{what}: diverged");
+    assert_eq!(a.worker_stats.len(), b.worker_stats.len(), "{what}: worker stats count");
+    for (x, y) in a.worker_stats.iter().zip(&b.worker_stats) {
+        let mut y = y.clone();
+        y.wall_compute_s = x.wall_compute_s; // measured, legitimately differs
+        assert_eq!(*x, y, "{what}: worker {} stats", x.worker);
+    }
+}
+
+/// Journal equality modulo checkpoint paths: a resumed run's journal must
+/// carry exactly the uninterrupted run's events, except that
+/// `checkpoint_written` lines name snapshots in a different directory.
+fn assert_same_events(what: &str, a: &[JournalEvent], b: &[JournalEvent]) {
+    assert_eq!(a.len(), b.len(), "{what}: journal event count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        match (x, y) {
+            (
+                JournalEvent::CheckpointWritten { round: ra, samples: sa, .. },
+                JournalEvent::CheckpointWritten { round: rb, samples: sb, .. },
+            ) => {
+                assert_eq!((ra, sa), (rb, sb), "{what}: journal event {i} (checkpoint)");
+            }
+            _ => assert_eq!(
+                x.to_json().to_string(),
+                y.to_json().to_string(),
+                "{what}: journal event {i}"
+            ),
+        }
+    }
+}
+
+/// Snapshot identity modulo the journal offset (checkpoint paths differ in
+/// length between directories, so byte offsets legitimately differ).
+fn snapshot_fingerprint(mut s: RunSnapshot) -> String {
+    s.journal_bytes = 0;
+    s.journal_seq = 0;
+    s.to_json().to_string()
+}
+
+fn scan_clean(path: &Path, what: &str) -> Vec<JournalEvent> {
+    let scan = scan_journal_file(path).unwrap();
+    assert!(scan.corruption.is_none(), "{what}: journal corrupt: {:?}", scan.corruption);
+    scan.events
+}
+
+/// The shared kill/resume harness: given the reference record + journal and a
+/// closure running the workload under a given [`Durability`], kill the run at
+/// every sync boundary, resume it, and check metrics, journal, and the final
+/// snapshot against the uninterrupted reference.
+fn check_every_boundary(
+    what: &str,
+    label: &str,
+    reference: &RunRecord,
+    ref_events: &[JournalEvent],
+    ref_dir: &Path,
+    run: impl Fn(Durability) -> RunRecord,
+) {
+    let last = reference.total_rounds - 1;
+    let ref_final =
+        RunSnapshot::load(&dur(ref_dir, 1).snapshot_path(label, last).unwrap()).unwrap();
+    for r in 0..reference.total_rounds {
+        let dir = temp_dir(&format!("{what}_kill_r{r}"));
+        let what = format!("{what}, kill at round {r}");
+
+        let mut d = dur(&dir, 1);
+        d.exit_at = Some(r);
+        let killed = run(d);
+        assert!(killed.interrupted, "{what}: kill run must report interruption");
+
+        let snap_path = dur(&dir, 1).snapshot_path(label, r).unwrap();
+        let snap = RunSnapshot::load(&snap_path).unwrap();
+        assert_eq!(snap.round, r, "{what}: snapshot closes the killed round");
+
+        let mut d = dur(&dir, 1);
+        d.resume = Some(snap);
+        let resumed = run(d);
+        assert!(!resumed.interrupted, "{what}: resumed run must complete");
+        assert_same_record(&what, reference, &resumed);
+
+        // The resumed journal (truncated at the snapshot offset, then appended)
+        // must replay the exact event sequence of the uninterrupted run.
+        assert_same_events(&what, ref_events, &scan_clean(&dir.join("run.journal"), &what));
+
+        // And the final checkpoint of the resumed run must be the final
+        // checkpoint of the uninterrupted run, field for field.
+        let resumed_final =
+            RunSnapshot::load(&dur(&dir, 1).snapshot_path(label, last).unwrap()).unwrap();
+        assert_eq!(
+            snapshot_fingerprint(ref_final.clone()),
+            snapshot_fingerprint(resumed_final),
+            "{what}: final snapshot"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+// ------------------------------------------------------------------- tests --
+
+#[test]
+fn sequential_kill_at_every_boundary_resumes_bit_for_bit() {
+    let cfg = seq_cfg();
+    let ref_dir = temp_dir("seq_ref");
+    let reference = run_config_durable(&cfg, dur(&ref_dir, 1)).unwrap();
+    assert!(!reference.interrupted);
+    assert!(
+        reference.total_rounds >= 4,
+        "workload too small to exercise resume: {} rounds",
+        reference.total_rounds
+    );
+    assert!(
+        reference.policy_trace.iter().any(|p| p.switched),
+        "fixture must include a mid-run compression switch"
+    );
+    let ref_events = scan_clean(&ref_dir.join("run.journal"), "sequential reference");
+
+    check_every_boundary(
+        "sequential",
+        &cfg.label,
+        &reference,
+        &ref_events,
+        &ref_dir,
+        |d| run_config_durable(&cfg, d).unwrap(),
+    );
+    std::fs::remove_dir_all(&ref_dir).ok();
+}
+
+#[test]
+fn cluster_kill_at_every_boundary_resumes_bit_for_bit_under_faults() {
+    let spec = cluster_scenario();
+    let ref_dir = temp_dir("cluster_ref");
+    let reference = run_scenario_durable(&spec, dur(&ref_dir, 1)).unwrap();
+    assert!(!reference.interrupted);
+    assert!(
+        reference.total_rounds > spec.workers[1].leave_round.unwrap(),
+        "fixture must outlive the scheduled leave ({} rounds)",
+        reference.total_rounds
+    );
+    let ref_events = scan_clean(&ref_dir.join("run.journal"), "cluster reference");
+    // The scenario's whole fault surface must actually be on the log.
+    for kind in ["worker_joined", "worker_left", "fault_injected", "compression_switched"] {
+        assert!(
+            ref_events.iter().any(|e| e.kind() == kind),
+            "fixture journal is missing a {kind} event"
+        );
+    }
+
+    check_every_boundary(
+        "cluster",
+        &spec.name,
+        &reference,
+        &ref_events,
+        &ref_dir,
+        |d| run_scenario_durable(&spec, d).unwrap(),
+    );
+
+    // Replay of the cluster journal re-derives the fault-scenario metrics too.
+    let rec = replay_events(&ref_events).unwrap();
+    assert_eq!(rec.batch_trace, reference.batch_trace);
+    assert_eq!(rec.policy_trace, reference.policy_trace);
+    assert_eq!(rec.comm, reference.comm);
+    std::fs::remove_dir_all(&ref_dir).ok();
+}
+
+#[test]
+fn replay_rebuilds_the_record_from_the_journal_alone() {
+    let cfg = seq_cfg();
+    let dir = temp_dir("seq_replay");
+    // Journal only — no checkpoints — so replay has nothing but the log.
+    let mut d = dur(&dir, 0);
+    d.checkpoint_dir = None;
+    let reference = run_config_durable(&cfg, d).unwrap();
+
+    let events = scan_clean(&dir.join("run.journal"), "replay");
+    let rec = replay_events(&events).unwrap();
+    assert_eq!(rec.label, cfg.label);
+    assert!(!rec.interrupted);
+    assert_same_record("replay", &reference, &rec);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Kill a one-round run and hand back its boundary-0 snapshot.
+fn snapshot_from_killed_run(dir: &Path) -> RunSnapshot {
+    let cfg = seq_cfg();
+    let mut d = dur(dir, 1);
+    d.exit_at = Some(0);
+    run_config_durable(&cfg, d).unwrap();
+    let snap = RunSnapshot::load(&dur(dir, 1).snapshot_path(&cfg.label, 0).unwrap()).unwrap();
+    assert_eq!(snap.engine, "sequential");
+    snap
+}
+
+#[test]
+fn resume_refuses_a_cross_engine_snapshot() {
+    let dir = temp_dir("seq_guard_engine");
+    let mut d = dur(&dir, 1);
+    d.resume = Some(snapshot_from_killed_run(&dir));
+    let err = run_scenario_durable(&cluster_scenario(), d).unwrap_err().to_string();
+    assert!(err.contains("sequential"), "engine-mismatch error must name the engine: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+#[should_panic(expected = "snapshot expects")]
+fn resume_refuses_a_journal_shorter_than_the_snapshot_offset() {
+    // A journal shorter than the snapshot's recorded offset is not the journal
+    // the checkpoint was written against; the engine refuses to truncate it.
+    let dir = temp_dir("seq_guard_journal");
+    let snap = snapshot_from_killed_run(&dir);
+    let other = temp_dir("seq_guard_journal_other");
+    std::fs::write(other.join("run.journal"), b"").unwrap();
+    let mut d = dur(&other, 1);
+    d.resume = Some(snap);
+    let _ = run_config_durable(&seq_cfg(), d);
+}

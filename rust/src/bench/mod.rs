@@ -4,7 +4,22 @@
 //! batches until a target wall budget, and reports median/mean ns per iteration
 //! plus optional throughput. Output format is stable so `cargo bench` logs diff
 //! cleanly across the perf-pass iterations recorded in EXPERIMENTS.md §Perf.
+//!
+//! `adaloco bench` runs the built-in [`run_suite`] and writes the results as
+//! machine-readable `BENCH_<n>.json` (next free `n` in the output dir):
+//!
+//! ```json
+//! {"schema": 1, "fast": false, "results": [
+//!   {"name": "...", "iters": 123, "mean_ns": 4.5,
+//!    "median_ns": 4.0, "p95_ns": 9.0, "sim_s": 1.25}]}
+//! ```
+//!
+//! `sim_s` appears only on benches that also drive the simulated clock (it is
+//! the deterministic model output, useful for regression-diffing the time
+//! model itself); every other field is wall-clock and machine-dependent.
 
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 pub struct Bencher {
@@ -29,6 +44,9 @@ pub struct BenchResult {
     pub mean_ns: f64,
     pub median_ns: f64,
     pub p95_ns: f64,
+    /// Deterministic simulated-seconds output for benches that drive the
+    /// [`crate::sim::TimeModel`]; `None` for pure wall-clock benches.
+    pub sim_s: Option<f64>,
 }
 
 impl BenchResult {
@@ -110,8 +128,95 @@ impl Bencher {
             mean_ns: mean,
             median_ns: samples_ns[n / 2],
             p95_ns: samples_ns[(n as f64 * 0.95) as usize % n.max(1)],
+            sim_s: None,
         }
     }
+}
+
+impl BenchResult {
+    /// One entry of the `BENCH_<n>.json` `results` array.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("median_ns", Json::num(self.median_ns)),
+            ("p95_ns", Json::num(self.p95_ns)),
+        ];
+        if let Some(s) = self.sim_s {
+            fields.push(("sim_s", Json::num(s)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// The built-in suite behind `adaloco bench`: one micro-bench per hot path
+/// (tensor reduction, collective average, compression encode, metric
+/// histogram) plus a sim-clock bench whose `sim_s` regression-guards the
+/// time model's deterministic output.
+pub fn run_suite(b: &Bencher) -> Vec<BenchResult> {
+    let mut out = Vec::new();
+    let d = 1 << 16;
+
+    let v: Vec<f32> = (0..d).map(|i| (i as f32).sin()).collect();
+    out.push(b.run("tensor.norm_sq/65536", || {
+        black_box(crate::tensor::norm_sq(black_box(&v)));
+    }));
+
+    let peers: Vec<Vec<f32>> = (0..7).map(|w| vec![w as f32 * 0.25; d]).collect();
+    let mut acc = vec![0.0f32; d];
+    out.push(b.run("collective.mean_reduce/8x65536", || {
+        acc.copy_from_slice(&v);
+        let refs: Vec<&[f32]> = peers.iter().map(|p| p.as_slice()).collect();
+        crate::collective::mean_reduce_into(black_box(&mut acc), &refs);
+    }));
+
+    let spec = crate::comm::CompressionSpec::parse("int8").expect("int8 spec");
+    let mut compressor = spec.build();
+    let reference = vec![0.0f32; d];
+    out.push(b.run("comm.int8_encode/65536", || {
+        black_box(compressor.encode(black_box(&v), &reference, None));
+    }));
+
+    out.push(b.run("obs.histogram_observe/4096", || {
+        let mut h = crate::obs::Histogram::new();
+        for i in 0..4096u32 {
+            h.observe(i as f64 * 0.001 + 0.001);
+        }
+        black_box(h);
+    }));
+
+    let topo = crate::collective::Topology::homogeneous(8);
+    let tm = crate::sim::TimeModel::paper_vision(topo);
+    let mut r = b.run("sim.round_compute_time/b4096_h16", || {
+        black_box(tm.round_compute_time(black_box(4096), black_box(16)));
+    });
+    r.sim_s = Some(tm.round_compute_time(4096, 16));
+    out.push(r);
+
+    out
+}
+
+/// Next free `BENCH_<n>.json` path under `dir` (1-based, gap-skipping: the
+/// first `n` with no existing file wins, so repeated runs never overwrite).
+pub fn next_bench_path(dir: &Path) -> PathBuf {
+    let mut n = 1u32;
+    loop {
+        let p = dir.join(format!("BENCH_{n}.json"));
+        if !p.exists() {
+            return p;
+        }
+        n += 1;
+    }
+}
+
+/// The whole-suite JSON document (schema above).
+pub fn suite_json(results: &[BenchResult], fast: bool) -> Json {
+    Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("fast", Json::Bool(fast)),
+        ("results", Json::arr(results.iter().map(|r| r.to_json()))),
+    ])
 }
 
 /// Prevent the optimizer from eliding a computed value.

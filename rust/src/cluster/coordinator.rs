@@ -37,6 +37,7 @@ use crate::engine::{EngineOpts, TrainEngine};
 use crate::journal::{ClusterSnapshot, JournalEvent, JournalWriter, RunSnapshot, WorkerSnapshot};
 use crate::metrics::{EvalPoint, PolicyPoint, RunRecord};
 use crate::model::GradModel;
+use crate::obs::{RoundTrace, RoundWorkerTiming};
 use crate::policy::RoundSignals;
 use crate::tensor;
 use crate::util::json::Json;
@@ -266,6 +267,8 @@ impl TrainEngine for ClusterEngine {
             rec.points = snap.points.clone();
             rec.batch_trace = snap.batch_trace.clone();
             rec.policy_trace = snap.policy_trace.clone();
+            rec.trace = snap.trace.clone();
+            rec.checkpoints = snap.checkpoints.clone();
             rec.comm = snap.comm;
             rec.diverged = snap.diverged;
         }
@@ -618,21 +621,56 @@ impl TrainEngine for ClusterEngine {
             };
 
             // ---- simulated wall-clock (straggler max over contributors) ---
+            let round_start_s = sim_time;
             let mut worst = 0f64;
+            let mut timing: Vec<RoundWorkerTiming> = Vec::with_capacity(assigned.len());
             for &w in &assigned {
                 let spec = roster.spec(w);
                 let compute =
                     opts.time_model
                         .worker_round_time(b_eff, h, w, spec.straggle_factor(round), 0.0);
                 // Injected latency gates the round barrier but is not compute:
-                // only the compute share lands in the per-worker metric.
+                // only the compute share lands in the per-worker metric. The
+                // trace keeps the two apart so attribution can tell a slow
+                // worker from a slow link; `ready_s` (compute + latency) uses
+                // exactly this `t` expression, so the attribution's
+                // reconstructed gate is bit-equal to `worst`.
                 let t = compute + spec.extra_latency(round);
+                timing.push(RoundWorkerTiming {
+                    worker: w,
+                    compute_s: compute,
+                    latency_s: spec.extra_latency(round),
+                });
                 roster.stats[w].sim_compute_s += compute;
                 worst = worst.max(t);
             }
             let sync_s = opts.time_model.sync_time_compressed(d, needs_grad_ar, wire_frac);
             sim_time += worst;
             sim_time += sync_s;
+
+            // Signals are built for every committed round (not just live ones)
+            // so the journal event and trace carry the policy-facing
+            // statistics; the policy itself is only consulted when live.
+            let signals = RoundSignals {
+                round,
+                samples,
+                b_local: b_eff,
+                h,
+                m_workers: k,
+                active_workers: roster.active().len(),
+                worker_scatter: scatter,
+                gbar_norm_sq: nsq,
+                per_sample_var: psv,
+                mean_worker_norm_sq,
+                inner_product_var: ip_var,
+                lr_next: opts.lr.at(samples),
+                wire_bytes: round_wire,
+                logical_bytes: round_logical,
+                compression: comp_spec.clone(),
+                round_compute_s: worst,
+                sync_s,
+            };
+            let ann = signals.annotations();
             if let Some(jw) = journal.as_mut() {
                 jw.append(&JournalEvent::SyncCommitted {
                     round,
@@ -646,31 +684,34 @@ impl TrainEngine for ClusterEngine {
                     compute_s: worst,
                     sync_s,
                     sim_time_s: sim_time,
+                    wire_bytes: round_wire,
+                    logical_bytes: round_logical,
+                    timing: timing.clone(),
+                    worker_scatter: Some(ann.worker_scatter),
+                    gbar_norm_sq: Some(ann.gbar_norm_sq),
+                    per_sample_var: ann.per_sample_var,
                 })
                 .unwrap_or_else(|e| panic!("{e}"));
             }
+            rec.trace.push(RoundTrace {
+                round,
+                phase: phase_name.to_string(),
+                h,
+                b_eff,
+                start_s: round_start_s,
+                compute_s: worst,
+                sync_s,
+                end_s: sim_time,
+                wire_bytes: round_wire,
+                logical_bytes: round_logical,
+                worker_scatter: Some(ann.worker_scatter),
+                gbar_norm_sq: Some(ann.gbar_norm_sq),
+                per_sample_var: ann.per_sample_var,
+                workers: timing,
+            });
 
             // ---- the joint policy decision --------------------------------
             if policy_live {
-                let signals = RoundSignals {
-                    round,
-                    samples,
-                    b_local: b_eff,
-                    h,
-                    m_workers: k,
-                    active_workers: roster.active().len(),
-                    worker_scatter: scatter,
-                    gbar_norm_sq: nsq,
-                    per_sample_var: psv,
-                    mean_worker_norm_sq,
-                    inner_product_var: ip_var,
-                    lr_next: opts.lr.at(samples),
-                    wire_bytes: round_wire,
-                    logical_bytes: round_logical,
-                    compression: comp_spec.clone(),
-                    round_compute_s: worst,
-                    sync_s,
-                };
                 let decision = opts.policy.on_sync(&signals);
                 b_local = decision.b_next.min(opts.b_max_local).max(1);
                 let h_next = decision.h_next.max(1);
@@ -733,7 +774,9 @@ impl TrainEngine for ClusterEngine {
                 s.rounds_contributed += 1;
                 s.local_steps += h as u64;
                 s.samples += h as u64 * b_eff;
-                s.wall_compute_s += r.wall_s;
+                // Wall-clock spans measured on the worker thread fold into the
+                // one nondeterministic stat only — never into the trace.
+                s.wall_compute_s += r.spans.iter().map(|sp| sp.dur_s).sum::<f64>();
                 s.last_loss = r.loss;
             }
 
@@ -837,6 +880,10 @@ impl TrainEngine for ClusterEngine {
                     .unwrap_or_else(|e| panic!("{e}"));
                     jw.sync().unwrap_or_else(|e| panic!("{e}"));
                 }
+                // The checkpoint mark lands before the snapshot is built so a
+                // resumed record carries its own checkpoint span, matching
+                // journal replay.
+                rec.checkpoints.push((round, sim_time));
                 let workers: Vec<WorkerSnapshot> = asked
                     .iter()
                     .map(|&w| {
@@ -874,6 +921,8 @@ impl TrainEngine for ClusterEngine {
                     points: rec.points.clone(),
                     batch_trace: rec.batch_trace.clone(),
                     policy_trace: rec.policy_trace.clone(),
+                    trace: rec.trace.clone(),
+                    checkpoints: rec.checkpoints.clone(),
                     diverged: rec.diverged,
                     workers,
                     cluster: Some(ClusterSnapshot {

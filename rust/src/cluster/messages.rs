@@ -9,6 +9,7 @@
 
 use crate::comm::{CompressionSpec, Payload};
 use crate::model::EvalStats;
+use crate::obs::WallSpan;
 use crate::util::json::Json;
 
 /// Coordinator → worker commands.
@@ -57,8 +58,11 @@ pub struct RoundResult {
     /// Per-sample gradient variance of the last step, when the substrate
     /// provides it (exact norm test, Algorithm A.1).
     pub per_sample_var: Option<f64>,
-    /// Measured wall-clock seconds spent in the gradient loop.
-    pub wall_s: f64,
+    /// Wall-clock spans measured on the worker thread (gradient loop, payload
+    /// encode). Shipped on the uplink so the coordinator never takes a shared
+    /// lock; nondeterministic, so the coordinator folds them only into the
+    /// `wall_compute_s` stat, never into the deterministic trace.
+    pub spans: Vec<WallSpan>,
 }
 
 /// Worker → coordinator replies.

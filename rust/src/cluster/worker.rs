@@ -9,6 +9,7 @@
 
 use super::messages::{FromWorker, RoundResult, ToWorker};
 use crate::comm::{CompressionSpec, ErrorFeedback};
+use crate::obs::{SpanKind, WallSpan};
 use crate::data::Dataset;
 use crate::model::GradModel;
 use crate::optim::OptimParams;
@@ -79,6 +80,9 @@ pub(crate) fn spawn_worker(
                     }
                     ToWorker::RunRound { round, h, b_eff, lrs } => {
                         assert_eq!(lrs.len(), h as usize, "worker {id}: lrs/h mismatch");
+                        // Wall-clock spans are measured here on the worker's
+                        // own thread and shipped with the uplink — the hot
+                        // loop never touches a shared buffer or lock.
                         let t0 = std::time::Instant::now();
                         let mut loss = 0.0;
                         let mut per_sample_var = None;
@@ -89,7 +93,10 @@ pub(crate) fn spawn_worker(
                             loss = stats.loss;
                             per_sample_var = stats.per_sample_var;
                         }
+                        let compute_wall = t0.elapsed().as_secs_f64();
+                        let t1 = std::time::Instant::now();
                         let payload = compressor.encode(&params, &reference, ef.as_mut());
+                        let encode_wall = t1.elapsed().as_secs_f64();
                         let done = FromWorker::RoundDone(RoundResult {
                             worker: id,
                             round,
@@ -97,7 +104,10 @@ pub(crate) fn spawn_worker(
                             grad: grad.clone(),
                             loss,
                             per_sample_var,
-                            wall_s: t0.elapsed().as_secs_f64(),
+                            spans: vec![
+                                WallSpan { kind: SpanKind::LocalCompute, dur_s: compute_wall },
+                                WallSpan { kind: SpanKind::GradEncode, dur_s: encode_wall },
+                            ],
                         });
                         if out.send(done).is_err() {
                             break;

@@ -29,6 +29,7 @@ use crate::data::Dataset;
 use crate::journal::{Durability, JournalEvent, JournalWriter, RunSnapshot, WorkerSnapshot};
 use crate::metrics::{EvalPoint, PolicyPoint, RunRecord};
 use crate::model::GradModel;
+use crate::obs::{RoundTrace, RoundWorkerTiming};
 use crate::optim::{LrSchedule, OptimParams};
 use crate::policy::{AdaptivePolicy, RoundSignals};
 use crate::sim::TimeModel;
@@ -242,6 +243,8 @@ pub fn run_local_sgd(
         rec.points = snap.points.clone();
         rec.batch_trace = snap.batch_trace.clone();
         rec.policy_trace = snap.policy_trace.clone();
+        rec.trace = snap.trace.clone();
+        rec.checkpoints = snap.checkpoints.clone();
         rec.comm = snap.comm;
         rec.diverged = snap.diverged;
     }
@@ -381,28 +384,24 @@ pub fn run_local_sgd(
         };
 
         // ---- simulated wall-clock ------------------------------------------
+        let round_start_s = sim_time;
         let round_compute_s = opts.time_model.round_compute_time(b_eff, h);
         let sync_s = opts.time_model.sync_time_compressed(d, needs_grad_ar, wire_frac);
         sim_time += round_compute_s;
         sim_time += sync_s;
-        if let Some(jw) = journal.as_mut() {
-            jw.append(&JournalEvent::SyncCommitted {
-                round,
-                phase: "round".to_string(),
-                h,
-                b_eff,
-                contributors: m as u64,
-                samples,
-                steps,
-                comm: rec.comm,
-                compute_s: round_compute_s,
-                sync_s,
-                sim_time_s: sim_time,
+        // Per-worker timings for the trace: fault-free worker_round_time, whose
+        // max is bit-equal to round_compute_s (sim's equivalence test), so the
+        // attribution gate reconstructs the journaled barrier exactly.
+        let timing: Vec<RoundWorkerTiming> = (0..m)
+            .map(|w| RoundWorkerTiming {
+                worker: w,
+                compute_s: opts.time_model.worker_round_time(b_eff, h, w, 1.0, 0.0),
+                latency_s: 0.0,
             })
-            .unwrap_or_else(|e| panic!("{e}"));
-        }
+            .collect();
 
-        // ---- the joint policy decision -------------------------------------
+        // Signals are built before the journal append so the SyncCommitted
+        // event can carry the policy-facing statistics for trace replay.
         let signals = RoundSignals {
             round,
             samples,
@@ -422,6 +421,47 @@ pub fn run_local_sgd(
             round_compute_s,
             sync_s,
         };
+        let ann = signals.annotations();
+        if let Some(jw) = journal.as_mut() {
+            jw.append(&JournalEvent::SyncCommitted {
+                round,
+                phase: "round".to_string(),
+                h,
+                b_eff,
+                contributors: m as u64,
+                samples,
+                steps,
+                comm: rec.comm,
+                compute_s: round_compute_s,
+                sync_s,
+                sim_time_s: sim_time,
+                wire_bytes: round_wire,
+                logical_bytes: round_logical,
+                timing: timing.clone(),
+                worker_scatter: Some(ann.worker_scatter),
+                gbar_norm_sq: Some(ann.gbar_norm_sq),
+                per_sample_var: ann.per_sample_var,
+            })
+            .unwrap_or_else(|e| panic!("{e}"));
+        }
+        rec.trace.push(RoundTrace {
+            round,
+            phase: "round".to_string(),
+            h,
+            b_eff,
+            start_s: round_start_s,
+            compute_s: round_compute_s,
+            sync_s,
+            end_s: sim_time,
+            wire_bytes: round_wire,
+            logical_bytes: round_logical,
+            worker_scatter: Some(ann.worker_scatter),
+            gbar_norm_sq: Some(ann.gbar_norm_sq),
+            per_sample_var: ann.per_sample_var,
+            workers: timing,
+        });
+
+        // ---- the joint policy decision -------------------------------------
         let decision = opts.policy.on_sync(&signals);
         b_local = decision.b_next.min(opts.b_max_local).max(1);
         let h_next = decision.h_next.max(1);
@@ -514,6 +554,9 @@ pub fn run_local_sgd(
                 .unwrap_or_else(|e| panic!("{e}"));
                 jw.sync().unwrap_or_else(|e| panic!("{e}"));
             }
+            // The checkpoint mark lands before the snapshot is built so a
+            // resumed record carries its own checkpoint span, matching replay.
+            rec.checkpoints.push((round, sim_time));
             let snap = RunSnapshot {
                 version: crate::journal::SNAPSHOT_VERSION,
                 engine: "sequential".to_string(),
@@ -538,6 +581,8 @@ pub fn run_local_sgd(
                 points: rec.points.clone(),
                 batch_trace: rec.batch_trace.clone(),
                 policy_trace: rec.policy_trace.clone(),
+                trace: rec.trace.clone(),
+                checkpoints: rec.checkpoints.clone(),
                 diverged: rec.diverged,
                 workers: (0..m)
                     .map(|w| WorkerSnapshot {

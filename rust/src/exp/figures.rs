@@ -85,7 +85,7 @@ fn run_grid(
             let rec = run_config(&c)?;
             rec.write_to(out_dir)?;
             out.push_str(&describe(&rec, vision));
-            eprintln!("  done {}", rec.label);
+            crate::log_info!("  done {}", rec.label);
         }
         out.push('\n');
     }

@@ -111,7 +111,7 @@ pub fn render(
 fn save_recs(recs: &[RunRecord], dir: &Path) {
     for r in recs {
         if let Err(e) = r.write_to(dir) {
-            eprintln!("warn: could not write {}: {e}", r.label);
+            crate::log_error!("warn: could not write {}: {e}", r.label);
         }
     }
 }
@@ -134,7 +134,7 @@ fn grid_cells(
             let recs = run_seeds(&c, seeds)?;
             save_recs(&recs, out);
             let cell = aggregate(name, h, &recs, vision);
-            eprintln!(
+            crate::log_info!(
                 "  done {:<16} H={:<3} steps={:<8.0} bsz={:<7.0} metric={:.3}",
                 name, h, cell.steps, cell.bsz, cell.metric
             );
@@ -528,7 +528,7 @@ pub fn ablation_sync(scale: f64, out_dir: &Path) -> anyhow::Result<String> {
             cell.metric,
             rec.comm.allreduce_calls
         ));
-        eprintln!("  done {name}");
+        crate::log_info!("  done {name}");
     }
     Ok(out)
 }

@@ -26,11 +26,12 @@
 
 use super::{
     comm_from_json, comm_to_json, crc32, eval_point_from_json, eval_point_to_json, f64_bits_json,
-    need_bool, need_f64_bits, need_str, need_u32, need_u64, policy_point_from_json,
-    policy_point_to_json,
+    f64_from_bits_json, need_bool, need_f64_bits, need_str, need_u32, need_u64,
+    policy_point_from_json, policy_point_to_json, u64_from_hex_json, u64_hex_json,
 };
 use crate::collective::CommCounters;
 use crate::metrics::{EvalPoint, PolicyPoint, RunRecord};
+use crate::obs::{RoundTrace, RoundWorkerTiming};
 use crate::util::json::Json;
 use std::io::{Seek, Write};
 
@@ -70,6 +71,20 @@ pub enum JournalEvent {
         compute_s: f64,
         sync_s: f64,
         sim_time_s: f64,
+        /// This round's wire/logical bytes (NOT cumulative — unlike `comm`,
+        /// and excluding norm-test gradient traffic, matching the engine's
+        /// per-round accounting). Absent in pre-trace journals, read as 0.
+        wire_bytes: u64,
+        logical_bytes: u64,
+        /// Per-contributor simulated compute/latency split, in roster order —
+        /// the trace facts the straggler attribution decomposes. Absent in
+        /// pre-trace journals, read as empty.
+        timing: Vec<RoundWorkerTiming>,
+        /// Norm-test statistics of this sync, when ≥2 contributors computed
+        /// them: Σ‖g_w − ḡ‖², ‖ḡ‖², and the mean per-sample variance.
+        worker_scatter: Option<f64>,
+        gbar_norm_sq: Option<f64>,
+        per_sample_var: Option<f64>,
     },
     /// A live policy decision (the engine-clamped values the next round runs
     /// with) — exactly the [`PolicyPoint`] the run record traces.
@@ -162,19 +177,50 @@ impl JournalEvent {
                 compute_s,
                 sync_s,
                 sim_time_s,
-            } => pairs.extend(vec![
-                ("round", Json::num(*round as f64)),
-                ("phase", Json::str(phase)),
-                ("h", Json::num(*h as f64)),
-                ("b_eff", Json::num(*b_eff as f64)),
-                ("contributors", Json::num(*contributors as f64)),
-                ("samples", Json::num(*samples as f64)),
-                ("steps", Json::num(*steps as f64)),
-                ("comm", comm_to_json(comm)),
-                ("compute_s", f64_bits_json(*compute_s)),
-                ("sync_s", f64_bits_json(*sync_s)),
-                ("sim_time_s", f64_bits_json(*sim_time_s)),
-            ]),
+                wire_bytes,
+                logical_bytes,
+                timing,
+                worker_scatter,
+                gbar_norm_sq,
+                per_sample_var,
+            } => {
+                pairs.extend(vec![
+                    ("round", Json::num(*round as f64)),
+                    ("phase", Json::str(phase)),
+                    ("h", Json::num(*h as f64)),
+                    ("b_eff", Json::num(*b_eff as f64)),
+                    ("contributors", Json::num(*contributors as f64)),
+                    ("samples", Json::num(*samples as f64)),
+                    ("steps", Json::num(*steps as f64)),
+                    ("comm", comm_to_json(comm)),
+                    ("compute_s", f64_bits_json(*compute_s)),
+                    ("sync_s", f64_bits_json(*sync_s)),
+                    ("sim_time_s", f64_bits_json(*sim_time_s)),
+                    ("wire_bytes", u64_hex_json(*wire_bytes)),
+                    ("logical_bytes", u64_hex_json(*logical_bytes)),
+                    (
+                        "timing",
+                        Json::arr(timing.iter().map(|t| {
+                            Json::obj(vec![
+                                ("w", Json::num(t.worker as f64)),
+                                ("c", f64_bits_json(t.compute_s)),
+                                ("l", f64_bits_json(t.latency_s)),
+                            ])
+                        })),
+                    ),
+                ]);
+                // Optional norm-test stats: serialized only when present, so
+                // warmup/cooldown/single-contributor rounds stay compact.
+                if let Some(v) = worker_scatter {
+                    pairs.push(("worker_scatter", f64_bits_json(*v)));
+                }
+                if let Some(v) = gbar_norm_sq {
+                    pairs.push(("gbar_norm_sq", f64_bits_json(*v)));
+                }
+                if let Some(v) = per_sample_var {
+                    pairs.push(("per_sample_var", f64_bits_json(*v)));
+                }
+            }
             JournalEvent::PolicyDecision { point } => {
                 pairs.push(("point", policy_point_to_json(point)))
             }
@@ -252,6 +298,14 @@ impl JournalEvent {
                 compute_s: need_f64_bits(j, "compute_s", w)?,
                 sync_s: need_f64_bits(j, "sync_s", w)?,
                 sim_time_s: need_f64_bits(j, "sim_time_s", w)?,
+                // Trace fields are absent in pre-trace journals; default them
+                // so old logs stay replayable (with an empty trace).
+                wire_bytes: opt_u64_hex(j, "wire_bytes", w)?,
+                logical_bytes: opt_u64_hex(j, "logical_bytes", w)?,
+                timing: timing_from_json(j.get("timing"), w)?,
+                worker_scatter: opt_f64_bits(j, "worker_scatter", w)?,
+                gbar_norm_sq: opt_f64_bits(j, "gbar_norm_sq", w)?,
+                per_sample_var: opt_f64_bits(j, "per_sample_var", w)?,
             },
             "policy_decision" => JournalEvent::PolicyDecision {
                 point: policy_point_from_json(j.get("point"))?,
@@ -286,6 +340,45 @@ impl JournalEvent {
         format!("{:08x} {body}\n", crc32(body.as_bytes()))
     }
 }
+
+/// Optional f64-bits field: `None` when the key is absent (pre-trace journal).
+fn opt_f64_bits(j: &Json, key: &str, what: &str) -> Result<Option<f64>, String> {
+    let v = j.get(key);
+    if v.is_null() {
+        return Ok(None);
+    }
+    f64_from_bits_json(v, &format!("{what}.{key}")).map(Some)
+}
+
+/// Optional u64-hex field: 0 when the key is absent (pre-trace journal).
+fn opt_u64_hex(j: &Json, key: &str, what: &str) -> Result<u64, String> {
+    let v = j.get(key);
+    if v.is_null() {
+        return Ok(0);
+    }
+    u64_from_hex_json(v, &format!("{what}.{key}"))
+}
+
+/// Per-worker timing array: empty when absent (pre-trace journal).
+fn timing_from_json(j: &Json, what: &str) -> Result<Vec<RoundWorkerTiming>, String> {
+    if j.is_null() {
+        return Ok(Vec::new());
+    }
+    let arr = j.as_arr().ok_or_else(|| format!("{what}: timing must be an array"))?;
+    arr.iter()
+        .map(|t| {
+            Ok(RoundWorkerTiming {
+                worker: t
+                    .get("w")
+                    .as_usize()
+                    .ok_or_else(|| format!("{what}: timing entry missing worker id"))?,
+                compute_s: f64_from_bits_json(t.get("c"), &format!("{what}.timing.c"))?,
+                latency_s: f64_from_bits_json(t.get("l"), &format!("{what}.timing.l"))?,
+            })
+        })
+        .collect()
+}
+
 
 /// Appending journal writer. Tracks the byte offset after every append so
 /// snapshots can record where their journal prefix ends.
@@ -447,6 +540,11 @@ pub fn scan_journal_file(path: &std::path::Path) -> Result<JournalScan, String> 
 pub fn replay_events(events: &[JournalEvent]) -> Result<RunRecord, String> {
     let mut rec = RunRecord::default();
     let mut started = false;
+    // Running simulated clock: the previous sync's committed sim_time_s. The
+    // engines record each round's `start_s` as the clock *before* advancing
+    // it, so copying the last event's value (no float arithmetic) makes the
+    // replayed trace bit-identical to the live one.
+    let mut clock = 0.0f64;
     for ev in events {
         match ev {
             JournalEvent::RunStarted { label, .. } => {
@@ -454,9 +552,42 @@ pub fn replay_events(events: &[JournalEvent]) -> Result<RunRecord, String> {
                 started = true;
             }
             JournalEvent::SyncCommitted {
-                round, b_eff, samples, steps, comm, sim_time_s, ..
+                round,
+                phase,
+                h,
+                b_eff,
+                samples,
+                steps,
+                comm,
+                compute_s,
+                sync_s,
+                sim_time_s,
+                wire_bytes,
+                logical_bytes,
+                timing,
+                worker_scatter,
+                gbar_norm_sq,
+                per_sample_var,
+                ..
             } => {
                 rec.batch_trace.push((*round, *samples, *b_eff));
+                rec.trace.push(RoundTrace {
+                    round: *round,
+                    phase: phase.clone(),
+                    h: *h,
+                    b_eff: *b_eff,
+                    start_s: clock,
+                    compute_s: *compute_s,
+                    sync_s: *sync_s,
+                    end_s: *sim_time_s,
+                    wire_bytes: *wire_bytes,
+                    logical_bytes: *logical_bytes,
+                    worker_scatter: *worker_scatter,
+                    gbar_norm_sq: *gbar_norm_sq,
+                    per_sample_var: *per_sample_var,
+                    workers: timing.clone(),
+                });
+                clock = *sim_time_s;
                 rec.comm = *comm;
                 rec.total_rounds = *round + 1;
                 rec.total_samples = *samples;
@@ -465,6 +596,9 @@ pub fn replay_events(events: &[JournalEvent]) -> Result<RunRecord, String> {
             }
             JournalEvent::PolicyDecision { point } => rec.policy_trace.push(point.clone()),
             JournalEvent::Evaluated { point } => rec.points.push(*point),
+            JournalEvent::CheckpointWritten { round, .. } => {
+                rec.checkpoints.push((*round, clock));
+            }
             JournalEvent::RunCompleted {
                 total_steps,
                 total_rounds,
@@ -533,6 +667,15 @@ mod tests {
                 compute_s: 1.5,
                 sync_s: -0.0, // sign of zero must survive
                 sim_time_s: 12.0625,
+                wire_bytes: 262_144,
+                logical_bytes: 1_048_576,
+                timing: vec![
+                    RoundWorkerTiming { worker: 0, compute_s: 1.25, latency_s: 0.0 },
+                    RoundWorkerTiming { worker: 2, compute_s: 1.45, latency_s: 0.05 },
+                ],
+                worker_scatter: Some(3.5),
+                gbar_norm_sq: Some(0.125),
+                per_sample_var: None, // absent keys must survive the round-trip
             },
             JournalEvent::PolicyDecision {
                 point: crate::metrics::PolicyPoint {
@@ -680,6 +823,19 @@ mod tests {
         let rec = replay_events(&all_events()).unwrap();
         assert_eq!(rec.label, "prop test");
         assert_eq!(rec.batch_trace, vec![(7, 14_336, 64)]);
+        // the round trace is reconstructed: start from the running clock
+        // (0.0 — first sync), end from the event, timing/stats verbatim
+        assert_eq!(rec.trace.len(), 1);
+        let rt = &rec.trace[0];
+        assert_eq!(rt.start_s, 0.0);
+        assert_eq!(rt.end_s, 12.0625);
+        assert_eq!(rt.wire_bytes, 262_144);
+        assert_eq!(rt.workers.len(), 2);
+        assert_eq!(rt.workers[1].worker, 2);
+        assert_eq!(rt.worker_scatter, Some(3.5));
+        assert_eq!(rt.per_sample_var, None);
+        // the checkpoint mark lands at the clock of the sync it follows
+        assert_eq!(rec.checkpoints, vec![(7, 12.0625)]);
         assert_eq!(rec.policy_trace.len(), 1);
         assert_eq!(rec.policy_trace[0].compression, "topk0.125+ef");
         assert_eq!(rec.points.len(), 1);

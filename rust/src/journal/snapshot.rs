@@ -34,9 +34,11 @@ use super::{
     policy_point_from_json, policy_point_to_json, u64_from_hex_json, u64_hex_json,
     worker_summary_from_json, worker_summary_to_json,
 };
+use super::f64_from_bits_json;
 use crate::collective::CommCounters;
 use crate::comm::CompressionSpec;
 use crate::metrics::{EvalPoint, PolicyPoint, WorkerSummary};
+use crate::obs::{RoundTrace, RoundWorkerTiming};
 use crate::policy::PolicyState;
 use crate::util::json::Json;
 
@@ -107,6 +109,13 @@ pub struct RunSnapshot {
     pub points: Vec<EvalPoint>,
     pub batch_trace: Vec<(u64, u64, u64)>,
     pub policy_trace: Vec<PolicyPoint>,
+    /// Per-round observability trace ([`crate::obs::RoundTrace`]), carried
+    /// bit-exactly so a resumed run's trace artifacts equal an uninterrupted
+    /// run's. Absent in pre-trace snapshots, read as empty.
+    pub trace: Vec<RoundTrace>,
+    /// `(round, sim_time_s)` checkpoint marks accumulated so far (including
+    /// this snapshot's own mark — it is pushed before the snapshot is built).
+    pub checkpoints: Vec<(u64, f64)>,
     pub diverged: bool,
     pub workers: Vec<WorkerSnapshot>,
     pub cluster: Option<ClusterSnapshot>,
@@ -195,6 +204,85 @@ fn opt_f32s(j: &Json, what: &str) -> Result<Option<Vec<f32>>, String> {
     f32s_from_hex(s, what).map(Some)
 }
 
+fn round_trace_to_json(rt: &RoundTrace) -> Json {
+    let mut pairs = vec![
+        ("round", u64_hex_json(rt.round)),
+        ("phase", Json::str(&rt.phase)),
+        ("h", Json::num(rt.h as f64)),
+        ("b_eff", u64_hex_json(rt.b_eff)),
+        ("start_s", f64_bits_json(rt.start_s)),
+        ("compute_s", f64_bits_json(rt.compute_s)),
+        ("sync_s", f64_bits_json(rt.sync_s)),
+        ("end_s", f64_bits_json(rt.end_s)),
+        ("wire_bytes", u64_hex_json(rt.wire_bytes)),
+        ("logical_bytes", u64_hex_json(rt.logical_bytes)),
+        (
+            "workers",
+            Json::arr(rt.workers.iter().map(|t| {
+                Json::obj(vec![
+                    ("w", Json::num(t.worker as f64)),
+                    ("c", f64_bits_json(t.compute_s)),
+                    ("l", f64_bits_json(t.latency_s)),
+                ])
+            })),
+        ),
+    ];
+    if let Some(v) = rt.worker_scatter {
+        pairs.push(("worker_scatter", f64_bits_json(v)));
+    }
+    if let Some(v) = rt.gbar_norm_sq {
+        pairs.push(("gbar_norm_sq", f64_bits_json(v)));
+    }
+    if let Some(v) = rt.per_sample_var {
+        pairs.push(("per_sample_var", f64_bits_json(v)));
+    }
+    Json::obj(pairs)
+}
+
+fn round_trace_from_json(j: &Json) -> Result<RoundTrace, String> {
+    let w = "snapshot round trace";
+    let opt = |key: &str| -> Result<Option<f64>, String> {
+        let v = j.get(key);
+        if v.is_null() {
+            Ok(None)
+        } else {
+            f64_from_bits_json(v, &format!("{w}.{key}")).map(Some)
+        }
+    };
+    let workers = j
+        .get("workers")
+        .as_arr()
+        .ok_or_else(|| format!("{w}: missing workers array"))?
+        .iter()
+        .map(|t| {
+            Ok(RoundWorkerTiming {
+                worker: t
+                    .get("w")
+                    .as_usize()
+                    .ok_or_else(|| format!("{w}: timing entry missing worker id"))?,
+                compute_s: f64_from_bits_json(t.get("c"), &format!("{w}.workers.c"))?,
+                latency_s: f64_from_bits_json(t.get("l"), &format!("{w}.workers.l"))?,
+            })
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(RoundTrace {
+        round: u64_from_hex_json(j.get("round"), w)?,
+        phase: need_str(j, "phase", w)?,
+        h: need_u32(j, "h", w)?,
+        b_eff: u64_from_hex_json(j.get("b_eff"), w)?,
+        start_s: need_f64_bits(j, "start_s", w)?,
+        compute_s: need_f64_bits(j, "compute_s", w)?,
+        sync_s: need_f64_bits(j, "sync_s", w)?,
+        end_s: need_f64_bits(j, "end_s", w)?,
+        wire_bytes: u64_from_hex_json(j.get("wire_bytes"), w)?,
+        logical_bytes: u64_from_hex_json(j.get("logical_bytes"), w)?,
+        worker_scatter: opt("worker_scatter")?,
+        gbar_norm_sq: opt("gbar_norm_sq")?,
+        per_sample_var: opt("per_sample_var")?,
+        workers,
+    })
+}
+
 impl RunSnapshot {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -243,6 +331,13 @@ impl RunSnapshot {
             (
                 "policy_trace",
                 Json::arr(self.policy_trace.iter().map(policy_point_to_json)),
+            ),
+            ("trace", Json::arr(self.trace.iter().map(round_trace_to_json))),
+            (
+                "checkpoints",
+                Json::arr(self.checkpoints.iter().map(|&(r, t)| {
+                    Json::arr(vec![u64_hex_json(r), f64_bits_json(t)])
+                })),
             ),
             ("diverged", Json::Bool(self.diverged)),
             ("workers", Json::arr(self.workers.iter().map(|w| w.to_json()))),
@@ -308,6 +403,26 @@ impl RunSnapshot {
             .iter()
             .map(WorkerSnapshot::from_json)
             .collect::<Result<Vec<_>, String>>()?;
+        // Pre-trace snapshots carry no trace/checkpoints: read as empty.
+        let trace = match j.get("trace").as_arr() {
+            Some(arr) => arr.iter().map(round_trace_from_json).collect::<Result<Vec<_>, _>>()?,
+            None => Vec::new(),
+        };
+        let checkpoints = match j.get("checkpoints").as_arr() {
+            Some(arr) => arr
+                .iter()
+                .map(|e| {
+                    let t = e.as_arr().filter(|t| t.len() == 2).ok_or_else(|| {
+                        format!("{w}: checkpoints entry is not a 2-element array")
+                    })?;
+                    Ok((
+                        u64_from_hex_json(&t[0], "checkpoints round")?,
+                        f64_from_bits_json(&t[1], "checkpoints sim_time")?,
+                    ))
+                })
+                .collect::<Result<Vec<_>, String>>()?,
+            None => Vec::new(),
+        };
         let cluster = if j.get("cluster").is_null() {
             None
         } else {
@@ -341,6 +456,8 @@ impl RunSnapshot {
             points,
             batch_trace,
             policy_trace,
+            trace,
+            checkpoints,
             diverged: need_bool(j, "diverged", w)?,
             workers,
             cluster,
@@ -464,6 +581,23 @@ mod tests {
                 test_violated: false,
                 wire_frac: 0.25,
             }],
+            trace: vec![RoundTrace {
+                round: 7,
+                phase: "round".to_string(),
+                h: 8,
+                b_eff: 64,
+                start_s: 2.25,
+                compute_s: f64::from_bits(0x3fe0_0000_0000_0001), // 0.5 + 1 ulp
+                sync_s: -0.0,
+                end_s: 2.75,
+                wire_bytes: (1 << 53) + 5,
+                logical_bytes: 1 << 54,
+                worker_scatter: Some(1.5),
+                gbar_norm_sq: None, // absent key must survive
+                per_sample_var: Some(0.0625),
+                workers: vec![RoundWorkerTiming { worker: 1, compute_s: 0.5, latency_s: 0.05 }],
+            }],
+            checkpoints: vec![(3, 1.125), (7, 2.75)],
             diverged: false,
             workers: vec![
                 WorkerSnapshot {
@@ -523,6 +657,27 @@ mod tests {
         assert!(back.points[0].val_loss.is_nan());
         assert_eq!(back.workers[1].uplink_ef, None);
         assert_eq!(back.cluster.as_ref().unwrap().members[1], "left");
+        assert_eq!(back.trace.len(), 1);
+        assert_eq!(back.trace[0].compute_s.to_bits(), 0x3fe0_0000_0000_0001);
+        assert_eq!(back.trace[0].sync_s.to_bits(), (-0.0f64).to_bits());
+        assert_eq!(back.trace[0].wire_bytes, (1 << 53) + 5);
+        assert_eq!(back.trace[0].gbar_norm_sq, None);
+        assert_eq!(back.trace[0].workers[0].latency_s, 0.05);
+        assert_eq!(back.checkpoints, vec![(3, 1.125), (7, 2.75)]);
+    }
+
+    #[test]
+    fn pre_trace_snapshot_reads_with_empty_trace() {
+        // simulate an old snapshot: strip the trace/checkpoints keys
+        let mut j = match sample_snapshot().to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        j.remove("trace");
+        j.remove("checkpoints");
+        let back = RunSnapshot::from_json(&Json::Obj(j)).unwrap();
+        assert!(back.trace.is_empty());
+        assert!(back.checkpoints.is_empty());
     }
 
     #[test]

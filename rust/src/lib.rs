@@ -59,6 +59,19 @@
 //! `policy` JSON section; runs record per-round decisions in
 //! [`metrics::RunRecord::policy_trace`] (`<label>.policy.csv`).
 //!
+//! ## Observability
+//!
+//! The [`obs`] module is a zero-dependency structured tracing + metrics
+//! layer: both engines record a deterministic per-round
+//! [`obs::RoundTrace`] (per-worker compute/latency, barrier gate, sync cost,
+//! wire bytes, norm-test statistics) on the simulated clock, from which
+//! [`obs::derive_spans`] expands per-worker span timelines, exported as
+//! Chrome trace-event JSON (Perfetto), Prometheus text exposition,
+//! per-round CSVs, and a straggler [`obs::Attribution`] report naming the
+//! worker that gated each barrier. Round facts ride the PR-4 event journal,
+//! so `adaloco trace <journal>` re-derives the identical artifacts from a
+//! crashed or resumed run.
+//!
 //! See DESIGN.md for the system inventory, README.md for the cluster scenario
 //! format, and EXPERIMENTS.md for the paper-vs-measured results of every table
 //! and figure.
@@ -75,6 +88,7 @@ pub mod exp;
 pub mod journal;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod policy;
 pub mod runtime;

@@ -9,18 +9,27 @@
 //!   table    Regenerate a paper table: t1 t2 t4 t6 t8 t1-pjrt t2-pjrt theory ab2 ab3.
 //!   figure   Regenerate a paper figure's series: f1 f2 f8.
 //!   replay   Re-derive a run's metrics from its event journal alone.
+//!   trace    Re-derive a run's observability artifacts (Chrome trace,
+//!            Prometheus snapshot, CSVs, straggler attribution) from its
+//!            journal alone.
+//!   bench    Run the built-in micro-benchmark suite, write BENCH_<n>.json.
 //!   inspect  Show artifact manifests and runtime info.
 //!
 //! Common flags: --scale <f64> (sample-budget multiplier), --out <dir>,
 //! --seeds 1,2,3, --config <json>, --save <json>. `train` and `cluster`
 //! additionally take the durability flags (--journal, --checkpoint-dir,
 //! --checkpoint-every, --checkpoint-exit, --resume) described in USAGE.
+//!
+//! Diagnostics go through the leveled logger (`ADALOCO_LOG=error|info|debug`,
+//! default `info`) on stderr; product output (tables, summaries, artifacts)
+//! stays on stdout.
 
 use adaloco::config::RunConfig;
 use adaloco::exp::{figures, tables, theory};
 use adaloco::util::cli::Args;
 use adaloco::util::json::Json;
 use adaloco::util::stats;
+use adaloco::{log_error, log_info};
 use std::path::PathBuf;
 
 const USAGE: &str = r#"adaloco — adaptive batch size strategies for local gradient methods
@@ -36,7 +45,13 @@ USAGE:
                   [--scale S] [--seeds 1,2,3] [--out results]
   adaloco figure  --id <f1|f2|f8> [--scale S] [--out results]
   adaloco replay  <run.journal> [--out results]
+  adaloco trace   <run.journal | rundir> [--out results]
+  adaloco bench   [--out results]
   adaloco inspect [--model name]
+
+LOGGING:
+  ADALOCO_LOG=error|info|debug   stderr diagnostic level (default info);
+                                 product output on stdout is unaffected
 
 DURABILITY FLAGS (train, cluster with a single --config):
   --journal run.journal      append a CRC-framed event log of every transition
@@ -73,7 +88,7 @@ fn main() {
     let args = match Args::from_env() {
         Ok(a) => a,
         Err(e) => {
-            eprintln!("error: {e}\n{USAGE}");
+            log_error!("error: {e}\n{USAGE}");
             std::process::exit(2);
         }
     };
@@ -85,18 +100,20 @@ fn main() {
         "table" => cmd_table(&args),
         "figure" => cmd_figure(&args),
         "replay" => cmd_replay(&args),
+        "trace" => cmd_trace(&args),
+        "bench" => cmd_bench(&args),
         "inspect" => cmd_inspect(&args),
         "" | "help" | "--help" => {
             println!("{USAGE}");
             Ok(())
         }
         other => {
-            eprintln!("unknown command '{other}'\n{USAGE}");
+            log_error!("unknown command '{other}'\n{USAGE}");
             std::process::exit(2);
         }
     };
     if let Err(e) = result {
-        eprintln!("error: {e:#}");
+        log_error!("error: {e:#}");
         std::process::exit(1);
     }
 }
@@ -180,16 +197,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     if let Some(path) = args.get("save") {
         std::fs::write(path, cfg.to_json().to_string_pretty())?;
-        println!("config written to {path}");
+        log_info!("config written to {path}");
     }
     let dur = durability_from_args(args)?;
     if let Some(snap) = &dur.resume {
-        println!(
+        log_info!(
             "resuming '{}' from round {} ({} samples in) ...",
-            cfg.label, snap.round, snap.samples
+            cfg.label,
+            snap.round,
+            snap.samples
         );
     } else {
-        println!("running '{}' ...", cfg.label);
+        log_info!("running '{}' ...", cfg.label);
     }
     let rec = adaloco::exp::run_config_durable(&cfg, dur)?;
     let out = PathBuf::from(args.str_or("out", "results"));
@@ -256,7 +275,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         if let Some(seed) = args.get("seed") {
             spec.run.seed = seed.parse()?;
         }
-        println!(
+        log_info!(
             "scenario '{}': {} workers, warmup={} cooldown={} compression={} ...",
             spec.name,
             spec.workers.len(),
@@ -268,7 +287,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             .take()
             .unwrap_or_else(adaloco::journal::Durability::none);
         if let Some(snap) = &dur.resume {
-            println!("  resuming from round {} ({} samples in)", snap.round, snap.samples);
+            log_info!("  resuming from round {} ({} samples in)", snap.round, snap.samples);
         }
         let rec = adaloco::cluster::run_scenario_durable(&spec, dur)?;
         rec.write_to(&out)?;
@@ -308,7 +327,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             );
         }
         if rec.diverged {
-            eprintln!("  WARNING: scenario '{}' diverged", spec.name);
+            log_error!("  WARNING: scenario '{}' diverged", spec.name);
             any_diverged = true;
         }
     }
@@ -340,7 +359,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     };
     let hs: Vec<u32> = args.list_or("hs", &[1u32, 4, 16]).map_err(|e| anyhow::anyhow!("{e}"))?;
     let out = PathBuf::from(args.str_or("out", "results"));
-    eprintln!(
+    log_info!(
         "sweep '{}': {} methods x {} intervals -> {}",
         spec.name,
         methods.len(),
@@ -358,7 +377,7 @@ fn cmd_table(args: &Args) -> anyhow::Result<()> {
     let seeds: Vec<u64> = args.list_or("seeds", &[1u64]).map_err(|e| anyhow::anyhow!("{e}"))?;
     let out = PathBuf::from(args.str_or("out", "results")).join(&id);
     std::fs::create_dir_all(&out)?;
-    eprintln!("table {id} (scale={scale}, seeds={seeds:?}) -> {}", out.display());
+    log_info!("table {id} (scale={scale}, seeds={seeds:?}) -> {}", out.display());
     let three_seeds = [1u64, 2, 3];
     let text = match id.as_str() {
         "t1" => tables::table1(scale, &seeds, &out)?,
@@ -410,8 +429,8 @@ fn cmd_replay(args: &Args) -> anyhow::Result<()> {
     let scan = adaloco::journal::scan_journal_file(std::path::Path::new(&path))
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     if let Some(c) = &scan.corruption {
-        eprintln!("WARNING: {c}");
-        eprintln!(
+        log_error!("WARNING: {c}");
+        log_error!(
             "         replaying the valid prefix: {} events, {} clean bytes",
             scan.events.len(),
             scan.clean_bytes
@@ -444,6 +463,86 @@ fn cmd_replay(args: &Args) -> anyhow::Result<()> {
         rec.write_to(&out)?;
         println!("replayed artifacts written to {}", out.display());
     }
+    Ok(())
+}
+
+/// Re-derive a run's observability artifacts purely from its event journal:
+/// Chrome trace (Perfetto-loadable), Prometheus text snapshot, per-round and
+/// per-worker-stall CSVs, and the straggler attribution report. Accepts the
+/// journal file itself or a run directory holding exactly one `*.journal`.
+/// Because journal replay reconstructs the trace bit-for-bit, the artifacts
+/// are byte-identical to the ones the live run wrote.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let arg = args
+        .positional
+        .get(1)
+        .cloned()
+        .or_else(|| args.get("journal").map(str::to_string))
+        .ok_or_else(|| {
+            anyhow::anyhow!("trace: pass a journal or run dir (adaloco trace run.journal)")
+        })?;
+    let mut path = PathBuf::from(&arg);
+    if path.is_dir() {
+        let mut journals: Vec<PathBuf> = std::fs::read_dir(&path)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map_or(false, |x| x == "journal"))
+            .collect();
+        journals.sort();
+        anyhow::ensure!(!journals.is_empty(), "no *.journal under {}", path.display());
+        anyhow::ensure!(
+            journals.len() == 1,
+            "{} journals under {} — pass one explicitly",
+            journals.len(),
+            path.display()
+        );
+        path = journals.remove(0);
+    }
+    let scan = adaloco::journal::scan_journal_file(&path).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if let Some(c) = &scan.corruption {
+        log_error!("WARNING: {c}");
+        log_error!(
+            "         tracing the valid prefix: {} events, {} clean bytes",
+            scan.events.len(),
+            scan.clean_bytes
+        );
+    }
+    let rec = adaloco::journal::replay_events(&scan.events)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    anyhow::ensure!(
+        !rec.trace.is_empty(),
+        "{}: no sync_committed events — nothing to trace",
+        path.display()
+    );
+    let out = PathBuf::from(args.str_or("out", "results"));
+    std::fs::create_dir_all(&out)?;
+    rec.write_trace_artifacts(&out)?;
+    let attr = adaloco::obs::Attribution::from_trace(&rec.trace);
+    println!("{}", attr.report());
+    println!(
+        "trace artifacts for '{}' written to {} \
+         (.trace.json .prom.txt .rounds.csv .stalls.csv .attribution.txt)",
+        rec.label,
+        out.display()
+    );
+    Ok(())
+}
+
+/// Run the built-in micro-benchmark suite and write machine-readable results
+/// as `BENCH_<n>.json` (schema documented in [`adaloco::bench`]).
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let fast = std::env::var("ADALOCO_BENCH_FAST").as_deref() == Ok("1");
+    log_info!("bench suite ({} mode) ...", if fast { "fast" } else { "full" });
+    let b = adaloco::bench::Bencher::from_env();
+    let results = adaloco::bench::run_suite(&b);
+    for r in &results {
+        r.report();
+    }
+    let out = PathBuf::from(args.str_or("out", "results"));
+    std::fs::create_dir_all(&out)?;
+    let path = adaloco::bench::next_bench_path(&out);
+    std::fs::write(&path, adaloco::bench::suite_json(&results, fast).to_string_pretty())?;
+    println!("bench results written to {}", path.display());
     Ok(())
 }
 

@@ -82,6 +82,14 @@ pub struct RunRecord {
     pub policy_trace: Vec<PolicyPoint>,
     /// Per-worker metrics (cluster runtime only; empty for sequential runs).
     pub worker_stats: Vec<WorkerSummary>,
+    /// Per committed round, the deterministic timing/size facts the
+    /// observability layer expands into span timelines, histograms, and the
+    /// straggler attribution (`obs::RoundTrace`). Journaled, checkpointed,
+    /// and replayable bit-for-bit.
+    pub trace: Vec<crate::obs::RoundTrace>,
+    /// `(round, sim_time_s)` marks of every checkpoint written, for the
+    /// coordinator track of the Chrome trace.
+    pub checkpoints: Vec<(u64, f64)>,
     pub comm: CommCounters,
     pub total_steps: u64,
     pub total_rounds: u64,
@@ -287,6 +295,31 @@ impl RunRecord {
             std::fs::File::create(dir.join(format!("{base}.workers.csv")))?
                 .write_all(self.worker_stats_csv().as_bytes())?;
         }
+        if !self.trace.is_empty() {
+            self.write_trace_artifacts(dir)?;
+        }
+        Ok(())
+    }
+
+    /// Write the observability artifact set (`<label>.trace.json` Chrome
+    /// trace, `<label>.prom.txt` Prometheus exposition, `<label>.rounds.csv`,
+    /// `<label>.stalls.csv`, `<label>.attribution.txt`). All five derive only
+    /// from deterministic state, so live and journal-replayed records emit
+    /// byte-identical files.
+    pub fn write_trace_artifacts(&self, dir: &std::path::Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let base = self.label.replace(['/', ' '], "_");
+        std::fs::File::create(dir.join(format!("{base}.trace.json")))?
+            .write_all(crate::obs::chrome_trace(self).to_string_pretty().as_bytes())?;
+        std::fs::File::create(dir.join(format!("{base}.prom.txt")))?
+            .write_all(crate::obs::MetricRegistry::from_record(self).prometheus().as_bytes())?;
+        std::fs::File::create(dir.join(format!("{base}.rounds.csv")))?
+            .write_all(crate::obs::rounds_csv(&self.trace).as_bytes())?;
+        let attr = crate::obs::Attribution::from_trace(&self.trace);
+        std::fs::File::create(dir.join(format!("{base}.stalls.csv")))?
+            .write_all(crate::obs::stalls_csv(&attr).as_bytes())?;
+        std::fs::File::create(dir.join(format!("{base}.attribution.txt")))?
+            .write_all(attr.report().as_bytes())?;
         Ok(())
     }
 }

@@ -1,0 +1,247 @@
+//! Straggler attribution: who gated each barrier, by how much, and where the
+//! roster's time went.
+//!
+//! Every committed sync is a barrier: the round's simulated duration is
+//! `max_w(compute_w + latency_w) + sync_s`, so exactly one contributor sets
+//! the critical path while everyone else waits. This module decomposes that
+//! per round — the gating worker, its margin over the runner-up, and the
+//! compute vs. injected-latency split of its gate time — and aggregates a
+//! per-worker stall ranking, making fault-injection scenarios
+//! (`straggler8`, `int8_straggler`, `elastic4to8`) *explainable* rather than
+//! just survivable. Built purely from the deterministic
+//! [`crate::obs::RoundTrace`] records, so a journal-replayed attribution is
+//! identical to the live run's.
+
+use super::span::RoundTrace;
+
+/// The critical-path decomposition of one committed sync.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundAttribution {
+    pub round: u64,
+    /// The contributor that released the barrier last (ties: lowest id).
+    pub gater: usize,
+    /// How much later the gater arrived than the runner-up (0 for a single
+    /// contributor).
+    pub margin_s: f64,
+    /// The gater's compute share of its gate time.
+    pub gater_compute_s: f64,
+    /// The gater's injected-latency share of its gate time.
+    pub gater_latency_s: f64,
+    /// Total time the *other* contributors spent waiting at this barrier.
+    pub wait_total_s: f64,
+}
+
+/// One worker's aggregate over every round it contributed to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerStall {
+    pub worker: usize,
+    /// Rounds this worker contributed to.
+    pub rounds: u64,
+    /// Rounds where this worker gated the barrier.
+    pub gated_rounds: u64,
+    /// Σ margin over the runner-up, across the rounds it gated — the
+    /// simulated time this worker *cost the whole roster*.
+    pub gated_margin_s: f64,
+    /// Σ time this worker spent waiting for someone slower.
+    pub stall_s: f64,
+    pub compute_s: f64,
+    pub latency_s: f64,
+}
+
+/// The full attribution: per-round critical paths plus the per-worker stall
+/// ranking (sorted worst-gater first).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Attribution {
+    pub rounds: Vec<RoundAttribution>,
+    /// Sorted by (gated rounds desc, gated margin desc, worker asc).
+    pub ranking: Vec<WorkerStall>,
+}
+
+impl Attribution {
+    pub fn from_trace(trace: &[RoundTrace]) -> Attribution {
+        let mut rounds = Vec::with_capacity(trace.len());
+        let mut per_worker: std::collections::BTreeMap<usize, WorkerStall> = Default::default();
+        for rt in trace {
+            if rt.workers.is_empty() {
+                continue; // pre-trace journal: no per-worker timing recorded
+            }
+            let mut gater = rt.workers[0].worker;
+            let (mut best, mut second) = (f64::NEG_INFINITY, f64::NEG_INFINITY);
+            let (mut g_compute, mut g_latency) = (0.0, 0.0);
+            for wt in &rt.workers {
+                let t = wt.ready_s();
+                if t > best {
+                    second = best;
+                    best = t;
+                    gater = wt.worker;
+                    g_compute = wt.compute_s;
+                    g_latency = wt.latency_s;
+                } else if t > second {
+                    second = t;
+                }
+            }
+            let margin_s = if rt.workers.len() > 1 { best - second } else { 0.0 };
+            let mut wait_total_s = 0.0;
+            for wt in &rt.workers {
+                let entry = per_worker.entry(wt.worker).or_insert_with(|| WorkerStall {
+                    worker: wt.worker,
+                    rounds: 0,
+                    gated_rounds: 0,
+                    gated_margin_s: 0.0,
+                    stall_s: 0.0,
+                    compute_s: 0.0,
+                    latency_s: 0.0,
+                });
+                entry.rounds += 1;
+                entry.compute_s += wt.compute_s;
+                entry.latency_s += wt.latency_s;
+                let wait = rt.compute_s - wt.ready_s();
+                if wait > 0.0 {
+                    entry.stall_s += wait;
+                    wait_total_s += wait;
+                }
+            }
+            let g = per_worker.get_mut(&gater).unwrap();
+            g.gated_rounds += 1;
+            g.gated_margin_s += margin_s;
+            rounds.push(RoundAttribution {
+                round: rt.round,
+                gater,
+                margin_s,
+                gater_compute_s: g_compute,
+                gater_latency_s: g_latency,
+                wait_total_s,
+            });
+        }
+        let mut ranking: Vec<WorkerStall> = per_worker.into_values().collect();
+        ranking.sort_by(|a, b| {
+            b.gated_rounds
+                .cmp(&a.gated_rounds)
+                .then(b.gated_margin_s.total_cmp(&a.gated_margin_s))
+                .then(a.worker.cmp(&b.worker))
+        });
+        Attribution { rounds, ranking }
+    }
+
+    /// The worker that gated the most barriers (the headline straggler).
+    pub fn top_gater(&self) -> Option<usize> {
+        self.ranking.first().map(|w| w.worker)
+    }
+
+    /// Human-readable report (also written as `<label>.attribution.txt`).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "straggler attribution over {} committed rounds\n",
+            self.rounds.len()
+        ));
+        if let Some(top) = self.ranking.first() {
+            out.push_str(&format!(
+                "  top barrier-gater: worker {} — gated {}/{} rounds, costing the roster \
+                 {:.4}s (gate time split: {:.4}s compute, {:.4}s injected latency)\n",
+                top.worker,
+                top.gated_rounds,
+                self.rounds.len(),
+                top.gated_margin_s,
+                top.compute_s,
+                top.latency_s,
+            ));
+        }
+        out.push_str(
+            "  worker  rounds  gated  gated_margin_s  stall_s  compute_s  latency_s\n",
+        );
+        for w in &self.ranking {
+            out.push_str(&format!(
+                "  {:>6}  {:>6}  {:>5}  {:>14.6}  {:>7.4}  {:>9.4}  {:>9.4}\n",
+                w.worker, w.rounds, w.gated_rounds, w.gated_margin_s, w.stall_s, w.compute_s,
+                w.latency_s,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::RoundWorkerTiming;
+
+    fn rt(round: u64, workers: &[(usize, f64, f64)]) -> RoundTrace {
+        let gate = workers.iter().map(|&(_, c, l)| c + l).fold(0.0f64, f64::max);
+        RoundTrace {
+            round,
+            phase: "round".into(),
+            h: 1,
+            b_eff: 8,
+            start_s: 0.0,
+            compute_s: gate,
+            sync_s: 0.1,
+            end_s: gate + 0.1,
+            wire_bytes: 0,
+            logical_bytes: 0,
+            worker_scatter: None,
+            gbar_norm_sq: None,
+            per_sample_var: None,
+            workers: workers
+                .iter()
+                .map(|&(w, c, l)| RoundWorkerTiming { worker: w, compute_s: c, latency_s: l })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn slowest_worker_is_the_gater_with_the_right_margin() {
+        let trace = vec![
+            rt(0, &[(0, 1.0, 0.0), (1, 3.0, 0.0), (2, 2.0, 0.0)]),
+            rt(1, &[(0, 1.0, 0.0), (1, 3.0, 0.0), (2, 2.0, 0.0)]),
+        ];
+        let a = Attribution::from_trace(&trace);
+        assert_eq!(a.top_gater(), Some(1));
+        assert_eq!(a.rounds[0].gater, 1);
+        assert_eq!(a.rounds[0].margin_s, 1.0); // 3.0 over the 2.0 runner-up
+        assert_eq!(a.rounds[0].wait_total_s, 2.0 + 1.0); // workers 0 and 2
+        let top = &a.ranking[0];
+        assert_eq!(top.gated_rounds, 2);
+        assert_eq!(top.gated_margin_s, 2.0);
+        assert_eq!(top.stall_s, 0.0, "the gater never waits");
+        // worker 0 waited 2s per round
+        let w0 = a.ranking.iter().find(|w| w.worker == 0).unwrap();
+        assert_eq!(w0.stall_s, 4.0);
+        assert_eq!(w0.gated_rounds, 0);
+    }
+
+    #[test]
+    fn injected_latency_can_gate_without_compute() {
+        let trace = vec![rt(0, &[(0, 1.0, 0.0), (1, 0.5, 1.0)])];
+        let a = Attribution::from_trace(&trace);
+        assert_eq!(a.top_gater(), Some(1));
+        assert_eq!(a.rounds[0].gater_compute_s, 0.5);
+        assert_eq!(a.rounds[0].gater_latency_s, 1.0);
+        assert_eq!(a.rounds[0].margin_s, 0.5);
+    }
+
+    #[test]
+    fn single_contributor_round_has_zero_margin() {
+        let a = Attribution::from_trace(&[rt(0, &[(3, 2.0, 0.0)])]);
+        assert_eq!(a.rounds[0].margin_s, 0.0);
+        assert_eq!(a.rounds[0].wait_total_s, 0.0);
+        assert_eq!(a.top_gater(), Some(3));
+    }
+
+    #[test]
+    fn report_names_the_top_gater() {
+        let a = Attribution::from_trace(&[rt(0, &[(0, 1.0, 0.0), (7, 9.0, 0.0)])]);
+        let rep = a.report();
+        assert!(rep.contains("top barrier-gater: worker 7"), "{rep}");
+        assert!(rep.contains("gated 1/1 rounds"), "{rep}");
+    }
+
+    #[test]
+    fn empty_timing_rounds_are_skipped() {
+        let mut r = rt(0, &[]);
+        r.workers.clear();
+        let a = Attribution::from_trace(&[r]);
+        assert!(a.rounds.is_empty());
+        assert_eq!(a.top_gater(), None);
+    }
+}

@@ -1,0 +1,241 @@
+//! Trace/metric exporters: Chrome trace-event JSON (Perfetto-loadable),
+//! Prometheus text exposition, and per-round CSVs.
+//!
+//! All exporters consume only the deterministic trace state on a
+//! [`RunRecord`] — never measured wall clocks — so exporting an engine-built
+//! record and a journal-replayed record of the same run yields **byte
+//! identical** artifacts (the `adaloco trace` acceptance criterion, enforced
+//! end-to-end by the CI observability smoke step).
+
+use super::attribution::Attribution;
+use super::span::{derive_spans, RoundTrace, Span};
+use crate::metrics::RunRecord;
+use crate::util::json::Json;
+use std::collections::BTreeSet;
+
+/// Microseconds, the trace-event format's time unit, from simulated seconds.
+fn us(s: f64) -> f64 {
+    s * 1e6
+}
+
+/// The coordinator is tid 0; worker `w` is tid `w + 1`.
+fn tid(worker: Option<usize>) -> usize {
+    worker.map(|w| w + 1).unwrap_or(0)
+}
+
+fn meta_event(t: usize, thread_name: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("M")),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(t as f64)),
+        ("name", Json::str("thread_name")),
+        ("args", Json::obj(vec![("name", Json::str(thread_name))])),
+    ])
+}
+
+fn span_event(s: &Span) -> Json {
+    let mut pairs = vec![
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(tid(s.worker) as f64)),
+        ("name", Json::str(s.kind.name())),
+        ("cat", Json::str("sim")),
+        ("ts", Json::num(us(s.start_s))),
+        ("args", Json::obj(vec![("round", Json::num(s.round as f64))])),
+    ];
+    if s.is_instant() {
+        pairs.push(("ph", Json::str("i")));
+        pairs.push(("s", Json::str("p")));
+    } else {
+        pairs.push(("ph", Json::str("X")));
+        pairs.push(("dur", Json::num(us(s.end_s) - us(s.start_s))));
+    }
+    Json::obj(pairs)
+}
+
+/// The sorted worker-id set a trace mentions — derived from the trace alone
+/// (not worker stats) so engine-built and replayed records agree.
+pub fn trace_workers(trace: &[RoundTrace]) -> Vec<usize> {
+    let ids: BTreeSet<usize> =
+        trace.iter().flat_map(|rt| rt.workers.iter().map(|w| w.worker)).collect();
+    ids.into_iter().collect()
+}
+
+/// Chrome trace-event JSON (`{"traceEvents": [...]}`), loadable in Perfetto /
+/// `chrome://tracing`: one track per worker plus a coordinator track,
+/// duration events for compute/uplink/wait/reduce spans, instant events for
+/// evals, checkpoints, and policy decisions. Timestamps are the simulated
+/// clock in microseconds.
+pub fn chrome_trace(rec: &RunRecord) -> Json {
+    let evals: Vec<(u64, f64)> = rec.points.iter().map(|p| (p.round, p.sim_time_s)).collect();
+    let spans = derive_spans(&rec.trace, &evals, &rec.checkpoints);
+
+    let mut events = Vec::new();
+    events.push(meta_event(0, "coordinator"));
+    for w in trace_workers(&rec.trace) {
+        events.push(meta_event(tid(Some(w)), &format!("worker {w}")));
+    }
+    for s in &spans.spans {
+        events.push(span_event(s));
+    }
+    // Policy decisions as annotated instant marks on the coordinator track
+    // (PolicyPoint is journaled, so this is replay-identical too). sim time
+    // joins through the round's trace record.
+    for p in &rec.policy_trace {
+        if let Some(rt) = rec.trace.iter().find(|rt| rt.round == p.round) {
+            events.push(Json::obj(vec![
+                ("ph", Json::str("i")),
+                ("s", Json::str("p")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(0.0)),
+                ("name", Json::str("policy_decision")),
+                ("cat", Json::str("policy")),
+                ("ts", Json::num(us(rt.end_s))),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("round", Json::num(p.round as f64)),
+                        ("b_next", Json::num(p.b_next as f64)),
+                        ("h_next", Json::num(p.h_next as f64)),
+                        ("compression", Json::str(&p.compression)),
+                        ("switched", Json::Bool(p.switched)),
+                        ("test_violated", Json::Bool(p.test_violated)),
+                        ("wire_frac", Json::num(p.wire_frac)),
+                    ]),
+                ),
+            ]));
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("otherData", Json::obj(vec![("label", Json::str(&rec.label))])),
+    ])
+}
+
+/// Per-round CSV of the committed trace (`<label>.rounds.csv`).
+pub fn rounds_csv(trace: &[RoundTrace]) -> String {
+    let mut out = String::from(
+        "round,phase,h,b_eff,contributors,start_s,gate_s,sync_s,end_s,\
+         wire_bytes,logical_bytes,norm_test_stat\n",
+    );
+    for rt in trace {
+        let stat = rt.norm_test_stat().map(|s| s.to_string()).unwrap_or_default();
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            rt.round,
+            rt.phase,
+            rt.h,
+            rt.b_eff,
+            rt.workers.len(),
+            rt.start_s,
+            rt.compute_s,
+            rt.sync_s,
+            rt.end_s,
+            rt.wire_bytes,
+            rt.logical_bytes,
+            stat,
+        ));
+    }
+    out
+}
+
+/// Per-worker stall-ranking CSV (`<label>.stalls.csv`), worst gater first.
+pub fn stalls_csv(attr: &Attribution) -> String {
+    let mut out = String::from(
+        "worker,rounds,gated_rounds,gated_margin_s,stall_s,compute_s,latency_s\n",
+    );
+    for w in &attr.ranking {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{}\n",
+            w.worker, w.rounds, w.gated_rounds, w.gated_margin_s, w.stall_s, w.compute_s,
+            w.latency_s,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::RoundWorkerTiming;
+
+    fn tiny_record() -> RunRecord {
+        let mut rec = RunRecord::default();
+        rec.label = "tiny".into();
+        for round in 0..3u64 {
+            let start = round as f64 * 1.5;
+            rec.trace.push(RoundTrace {
+                round,
+                phase: "round".into(),
+                h: 2,
+                b_eff: 16,
+                start_s: start,
+                compute_s: 1.0,
+                sync_s: 0.5,
+                end_s: start + 1.5,
+                wire_bytes: 256,
+                logical_bytes: 256,
+                worker_scatter: Some(1.0),
+                gbar_norm_sq: Some(4.0),
+                per_sample_var: None,
+                workers: vec![
+                    RoundWorkerTiming { worker: 0, compute_s: 1.0, latency_s: 0.0 },
+                    RoundWorkerTiming { worker: 1, compute_s: 0.5, latency_s: 0.0 },
+                ],
+            });
+        }
+        rec.checkpoints.push((2, rec.trace[2].end_s));
+        rec
+    }
+
+    #[test]
+    fn chrome_trace_has_a_track_per_worker_plus_coordinator() {
+        let j = chrome_trace(&tiny_record());
+        let events = j.get("traceEvents").as_arr().unwrap();
+        let names: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("M"))
+            .map(|e| e.get("args").get("name").as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["coordinator", "worker 0", "worker 1"]);
+    }
+
+    #[test]
+    fn chrome_trace_timestamps_are_monotone_per_track() {
+        let j = chrome_trace(&tiny_record());
+        let events = j.get("traceEvents").as_arr().unwrap();
+        let mut last: std::collections::BTreeMap<u64, f64> = Default::default();
+        for e in events {
+            if e.get("ph").as_str() == Some("M") {
+                continue;
+            }
+            let t = e.get("tid").as_u64().unwrap();
+            let ts = e.get("ts").as_f64().unwrap();
+            if let Some(prev) = last.get(&t) {
+                assert!(ts >= *prev, "track {t} went backwards: {prev} -> {ts}");
+            }
+            last.insert(t, ts);
+        }
+        assert_eq!(last.len(), 3, "expected 3 tracks with events");
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_as_json_text() {
+        let j = chrome_trace(&tiny_record());
+        let text = j.to_string();
+        let re = Json::parse(&text).expect("trace must be valid JSON");
+        assert_eq!(re.to_string(), text, "serialization must be stable");
+    }
+
+    #[test]
+    fn csvs_cover_every_round_and_worker() {
+        let rec = tiny_record();
+        let rounds = rounds_csv(&rec.trace);
+        assert_eq!(rounds.lines().count(), 1 + 3);
+        assert!(rounds.lines().nth(1).unwrap().starts_with("0,round,2,16,2,"));
+        let attr = Attribution::from_trace(&rec.trace);
+        let stalls = stalls_csv(&attr);
+        assert_eq!(stalls.lines().count(), 1 + 2);
+        assert!(stalls.lines().nth(1).unwrap().starts_with("0,"), "worker 0 gates every round");
+    }
+}

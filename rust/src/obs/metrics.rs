@@ -1,0 +1,430 @@
+//! Counters and log-bucketed histograms with **merge-associative, purely
+//! integer state**.
+//!
+//! The run journal and [`crate::collective::CommCounters`] both rely on
+//! merge-associative accounting: fold order must never change the result.
+//! A histogram that keeps a floating-point running sum breaks that promise —
+//! `(a + b) + c != a + (b + c)` under rounding — so [`Histogram`] keeps *no*
+//! float accumulator at all. Its state is u64 bucket counts (indexed by the
+//! raw IEEE-754 exponent of the observed value), u64 special-value counts,
+//! and min/max tracked as monotone total-order bit keys. Merging two
+//! histograms is elementwise u64 addition plus integer min/max: associative,
+//! commutative, and bit-deterministic regardless of threading
+//! (`threaded_merge_is_bit_identical_to_serial` below). The price is that the
+//! Prometheus exposition has no `_sum` series; it exports `_count`, the
+//! cumulative buckets, and exact `_min`/`_max` gauges instead.
+//!
+//! Buckets are powers of two: bucket `i` covers `[2^(i−32), 2^(i−31))`, i.e.
+//! `2^-32 .. 2^32`, with dedicated under/overflow, zero, negative, and NaN
+//! counters — wide enough for seconds, bytes, batch sizes, and norm-test
+//! statistics alike, with no configuration to disagree on at merge time.
+
+use crate::metrics::RunRecord;
+use std::collections::BTreeMap;
+
+/// Number of power-of-two buckets: exponents −32..=31.
+pub const HIST_BUCKETS: usize = 64;
+const EXP_MIN: i64 = -32;
+const EXP_MAX: i64 = 31;
+
+/// Map an f64 to a key that orders like the number line (IEEE-754 total
+/// order for non-NaN values). Used for exact min/max without float compares
+/// in merge.
+fn total_key(v: f64) -> u64 {
+    let b = v.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | 0x8000_0000_0000_0000
+    }
+}
+
+fn from_total_key(k: u64) -> f64 {
+    if k >> 63 == 1 {
+        f64::from_bits(k & 0x7fff_ffff_ffff_ffff)
+    } else {
+        f64::from_bits(!k)
+    }
+}
+
+/// A log-bucketed histogram with purely integer state (see module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    /// Total observations, including specials and NaN.
+    pub count: u64,
+    /// Observations equal to ±0.0.
+    pub zeros: u64,
+    /// Negative observations (finite or −∞).
+    pub negatives: u64,
+    /// NaN observations (excluded from min/max).
+    pub nans: u64,
+    /// Positive observations below 2^−32 (subnormals included).
+    pub underflow: u64,
+    /// Positive observations at or above 2^32 (+∞ included).
+    pub overflow: u64,
+    /// Bucket `i` counts observations in `[2^(i−32), 2^(i−31))`.
+    pub buckets: [u64; HIST_BUCKETS],
+    min_key: u64,
+    max_key: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            count: 0,
+            zeros: 0,
+            negatives: 0,
+            nans: 0,
+            underflow: 0,
+            overflow: 0,
+            buckets: [0; HIST_BUCKETS],
+            // Sentinels outside the reachable key range for non-NaN values:
+            // merge min/max absorbs them for free.
+            min_key: u64::MAX,
+            max_key: 0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.count += 1;
+        if v.is_nan() {
+            self.nans += 1;
+            return;
+        }
+        let k = total_key(v);
+        self.min_key = self.min_key.min(k);
+        self.max_key = self.max_key.max(k);
+        if v == 0.0 {
+            self.zeros += 1;
+        } else if v < 0.0 {
+            self.negatives += 1;
+        } else if v.is_infinite() {
+            self.overflow += 1;
+        } else {
+            let raw_exp = ((v.to_bits() >> 52) & 0x7ff) as i64;
+            let e = raw_exp - 1023; // raw_exp == 0 (subnormal) lands below EXP_MIN
+            if e < EXP_MIN {
+                self.underflow += 1;
+            } else if e > EXP_MAX {
+                self.overflow += 1;
+            } else {
+                self.buckets[(e - EXP_MIN) as usize] += 1;
+            }
+        }
+    }
+
+    /// Merge `other` into `self`. Associative, commutative, and
+    /// bit-deterministic: every field is a u64 sum or an integer min/max.
+    pub fn merge(&mut self, other: &Histogram) {
+        self.count += other.count;
+        self.zeros += other.zeros;
+        self.negatives += other.negatives;
+        self.nans += other.nans;
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+        for i in 0..HIST_BUCKETS {
+            self.buckets[i] += other.buckets[i];
+        }
+        self.min_key = self.min_key.min(other.min_key);
+        self.max_key = self.max_key.max(other.max_key);
+    }
+
+    /// Smallest non-NaN observation, exact.
+    pub fn min(&self) -> Option<f64> {
+        (self.count > self.nans).then(|| from_total_key(self.min_key))
+    }
+
+    /// Largest non-NaN observation, exact.
+    pub fn max(&self) -> Option<f64> {
+        (self.count > self.nans).then(|| from_total_key(self.max_key))
+    }
+
+    /// Exclusive upper bound of bucket `i`: 2^(i−31), an exact power of two.
+    pub fn bucket_upper(i: usize) -> f64 {
+        2f64.powi(i as i32 + (EXP_MIN as i32) + 1)
+    }
+
+    /// Cumulative count of observations ≤ [`Histogram::bucket_upper`]`(i)`
+    /// (Prometheus `le` semantics; NaN excluded).
+    pub fn cumulative(&self, i: usize) -> u64 {
+        self.negatives
+            + self.zeros
+            + self.underflow
+            + self.buckets[..=i].iter().sum::<u64>()
+    }
+}
+
+/// A named set of counters + histograms with deterministic (BTreeMap)
+/// iteration order, mirroring the merge discipline of `CommCounters`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricRegistry {
+    pub counters: BTreeMap<String, u64>,
+    pub histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histograms.entry(name.to_string()).or_default().observe(v);
+    }
+
+    /// Merge `other` into `self` (associative and commutative, like every
+    /// constituent).
+    pub fn merge(&mut self, other: &MetricRegistry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, h) in &other.histograms {
+            self.histograms.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    /// Build the run's metric snapshot from its committed trace: counters for
+    /// the run totals, histograms over sync latency, barrier-gate time,
+    /// per-round wire bytes, per-worker barrier waits, the batch-size trace,
+    /// and the norm-test statistic. Both the live engines' records and
+    /// journal-replayed records feed through here, so the expositions match.
+    pub fn from_record(rec: &RunRecord) -> MetricRegistry {
+        let mut reg = MetricRegistry::new();
+        reg.inc("adaloco_rounds_total", rec.trace.len() as u64);
+        reg.inc("adaloco_steps_total", rec.total_steps);
+        reg.inc("adaloco_samples_total", rec.total_samples);
+        reg.inc("adaloco_evals_total", rec.points.len() as u64);
+        reg.inc("adaloco_checkpoints_total", rec.checkpoints.len() as u64);
+        reg.inc(
+            "adaloco_wire_bytes_total",
+            rec.trace.iter().map(|rt| rt.wire_bytes).sum(),
+        );
+        reg.inc(
+            "adaloco_logical_bytes_total",
+            rec.trace.iter().map(|rt| rt.logical_bytes).sum(),
+        );
+        for rt in &rec.trace {
+            reg.observe("adaloco_sync_seconds", rt.sync_s);
+            reg.observe("adaloco_round_gate_seconds", rt.compute_s);
+            reg.observe("adaloco_round_wire_bytes", rt.wire_bytes as f64);
+            reg.observe("adaloco_local_batch", rt.b_eff as f64);
+            if let Some(stat) = rt.norm_test_stat() {
+                reg.observe("adaloco_norm_test_stat", stat);
+            }
+            for wt in &rt.workers {
+                let wait = rt.compute_s - wt.ready_s();
+                if wait > 0.0 {
+                    reg.observe("adaloco_barrier_wait_seconds", wait);
+                }
+            }
+        }
+        reg
+    }
+
+    /// Prometheus text exposition. No `_sum` series (see module docs): each
+    /// histogram exports cumulative `_bucket{le=...}` lines for its non-empty
+    /// buckets, `_count`, and exact `_min`/`_max` gauges.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        for (name, h) in &self.histograms {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut last = h.negatives + h.zeros + h.underflow;
+            if last > 0 {
+                out.push_str(&format!(
+                    "{name}_bucket{{le=\"{}\"}} {last}\n",
+                    Histogram::bucket_upper(0) / 2.0
+                ));
+            }
+            for i in 0..HIST_BUCKETS {
+                let c = h.cumulative(i);
+                if c != last {
+                    out.push_str(&format!(
+                        "{name}_bucket{{le=\"{}\"}} {c}\n",
+                        Histogram::bucket_upper(i)
+                    ));
+                    last = c;
+                }
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+            out.push_str(&format!("{name}_count {}\n", h.count));
+            if let (Some(mn), Some(mx)) = (h.min(), h.max()) {
+                out.push_str(&format!("{name}_min {mn}\n{name}_max {mx}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_cover_powers_of_two() {
+        let mut h = Histogram::new();
+        h.observe(1.0); // [2^0, 2^1) -> bucket 32
+        h.observe(1.5);
+        h.observe(2.0); // bucket 33
+        h.observe(0.25); // bucket 30
+        assert_eq!(h.buckets[32], 2);
+        assert_eq!(h.buckets[33], 1);
+        assert_eq!(h.buckets[30], 1);
+        assert_eq!(h.count, 4);
+        assert_eq!(h.min(), Some(0.25));
+        assert_eq!(h.max(), Some(2.0));
+    }
+
+    #[test]
+    fn special_values_have_dedicated_counters() {
+        let mut h = Histogram::new();
+        h.observe(0.0);
+        h.observe(-0.0);
+        h.observe(-3.0);
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        h.observe(f64::NEG_INFINITY);
+        h.observe(1e-300); // below 2^-32
+        h.observe(1e300); // above 2^32
+        assert_eq!(h.zeros, 2);
+        assert_eq!(h.negatives, 2);
+        assert_eq!(h.nans, 1);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 2);
+        assert_eq!(h.count, 8);
+        assert_eq!(h.min(), Some(f64::NEG_INFINITY));
+        assert_eq!(h.max(), Some(f64::INFINITY));
+    }
+
+    #[test]
+    fn min_max_are_exact_not_bucketed() {
+        let mut h = Histogram::new();
+        h.observe(3.141592653589793);
+        h.observe(2.718281828459045);
+        assert_eq!(h.min().unwrap().to_bits(), 2.718281828459045f64.to_bits());
+        assert_eq!(h.max().unwrap().to_bits(), 3.141592653589793f64.to_bits());
+    }
+
+    /// Deterministic pseudo-random observation stream (no RNG dependency).
+    fn obs_stream(seed: u64, n: usize) -> Vec<f64> {
+        let mut x = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                // spread across ~2^-20 .. 2^40 plus occasional specials
+                let m = (x % 61) as i32 - 20;
+                let frac = 1.0 + (x % 1000) as f64 / 1000.0;
+                match x % 97 {
+                    0 => 0.0,
+                    1 => -frac,
+                    _ => frac * 2f64.powi(m),
+                }
+            })
+            .collect()
+    }
+
+    /// The tentpole guarantee: merging per-thread histograms yields the exact
+    /// state of a single serial pass, bit for bit, regardless of how the
+    /// observations were partitioned.
+    #[test]
+    fn threaded_merge_is_bit_identical_to_serial() {
+        let vals = obs_stream(7, 40_000);
+        let mut serial = Histogram::new();
+        for &v in &vals {
+            serial.observe(v);
+        }
+
+        let chunks: Vec<Vec<f64>> = vals.chunks(7_919).map(|c| c.to_vec()).collect();
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .map(|chunk| {
+                std::thread::spawn(move || {
+                    let mut h = Histogram::new();
+                    for v in chunk {
+                        h.observe(v);
+                    }
+                    h
+                })
+            })
+            .collect();
+        let parts: Vec<Histogram> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+        // Left fold and right fold must agree with each other and with the
+        // serial pass (associativity + commutativity on integer state).
+        let mut left = Histogram::new();
+        for p in &parts {
+            left.merge(p);
+        }
+        let mut right = Histogram::new();
+        for p in parts.iter().rev() {
+            right.merge(p);
+        }
+        assert_eq!(serial, left, "threaded left-fold merge diverged from serial");
+        assert_eq!(serial, right, "merge is not commutative");
+        assert_eq!(
+            serial.min().map(f64::to_bits),
+            left.min().map(f64::to_bits)
+        );
+        assert_eq!(
+            serial.max().map(f64::to_bits),
+            left.max().map(f64::to_bits)
+        );
+    }
+
+    #[test]
+    fn registry_merge_is_associative() {
+        let mut a = MetricRegistry::new();
+        a.inc("rounds", 3);
+        a.observe("lat", 0.5);
+        let mut b = MetricRegistry::new();
+        b.inc("rounds", 2);
+        b.observe("lat", 8.0);
+        b.observe("bytes", 1024.0);
+        let mut c = MetricRegistry::new();
+        c.observe("lat", 0.5);
+
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc);
+        assert_eq!(ab_c.counters["rounds"], 5);
+        assert_eq!(ab_c.histograms["lat"].count, 3);
+    }
+
+    #[test]
+    fn prometheus_exposition_is_cumulative_and_deterministic() {
+        let mut reg = MetricRegistry::new();
+        reg.inc("adaloco_rounds_total", 4);
+        for v in [0.5, 1.5, 1.7, 100.0] {
+            reg.observe("adaloco_sync_seconds", v);
+        }
+        let text = reg.prometheus();
+        assert!(text.contains("# TYPE adaloco_rounds_total counter"));
+        assert!(text.contains("adaloco_rounds_total 4"));
+        assert!(text.contains("adaloco_sync_seconds_bucket{le=\"1\"} 1"));
+        assert!(text.contains("adaloco_sync_seconds_bucket{le=\"2\"} 3"));
+        assert!(text.contains("adaloco_sync_seconds_bucket{le=\"128\"} 4"));
+        assert!(text.contains("adaloco_sync_seconds_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("adaloco_sync_seconds_count 4"));
+        assert!(text.contains("adaloco_sync_seconds_min 0.5"));
+        assert!(text.contains("adaloco_sync_seconds_max 100"));
+        assert_eq!(text, reg.prometheus(), "exposition must be deterministic");
+    }
+}

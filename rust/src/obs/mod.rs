@@ -1,0 +1,41 @@
+//! Structured observability: span timelines, metric histograms, exporters,
+//! and straggler attribution.
+//!
+//! Everything in this module is **zero-dependency** and **deterministic**:
+//! spans are stamped on the simulated clock (`sim::TimeModel` seconds), the
+//! histogram state is pure integers (bucket counts keyed by IEEE-754
+//! exponent), and every artifact is derived from journaled per-round facts —
+//! so a trace re-derived from a PR-4 event journal (`adaloco trace`) is
+//! byte-identical to the live engine's, even across a kill/resume.
+//!
+//! Layout:
+//!
+//! * [`span`] — typed spans (`local_compute`, `uplink`, `barrier_wait`,
+//!   `reduce`, `eval`, `checkpoint`, …), per-worker [`SpanBuffer`]s, the
+//!   per-round [`RoundTrace`] fact record, and [`derive_spans`] which expands
+//!   round facts into per-worker timelines. The engines' hot loops only ever
+//!   append to round-local state; buffers merge at sync commit, so no shared
+//!   lock is taken mid-round. Workers additionally ship wall-clock
+//!   [`WallSpan`]s on uplink (cluster engine), which fold into the
+//!   *nondeterministic* `wall_compute_s` stat only — never into artifacts.
+//! * [`metrics`] — counters + log-bucketed [`Histogram`]s with
+//!   merge-associative semantics matching `collective::CommCounters`
+//!   (threaded merge is bit-identical to serial), and the Prometheus-style
+//!   text exposition.
+//! * [`export`] — Chrome trace-event JSON (one track per worker + a
+//!   coordinator track, loadable in Perfetto), per-round and per-worker CSVs.
+//! * [`attribution`] — per-committed-sync critical-path decomposition (which
+//!   worker gated the barrier, by how much, compute vs. injected latency)
+//!   and the per-worker stall ranking.
+
+pub mod attribution;
+pub mod export;
+pub mod metrics;
+pub mod span;
+
+pub use attribution::{Attribution, RoundAttribution, WorkerStall};
+pub use export::{chrome_trace, rounds_csv, stalls_csv, trace_workers};
+pub use metrics::{Histogram, MetricRegistry, HIST_BUCKETS};
+pub use span::{
+    derive_spans, RoundTrace, RoundWorkerTiming, Span, SpanBuffer, SpanKind, WallSpan,
+};

@@ -1,0 +1,404 @@
+//! Typed spans on the simulated clock, the per-worker buffers they are
+//! recorded into, and the per-round trace records both engines commit.
+//!
+//! A [`Span`] is a `(kind, worker, round, start, end)` tuple **in simulated
+//! seconds** — the same α–β clock ([`crate::sim::TimeModel`]) that drives the
+//! paper's wall-clock tables, so traces from the sequential and cluster
+//! engines (and traces re-derived from an event journal) are directly
+//! comparable and bit-for-bit identical for the same run.
+//!
+//! The hot loop never takes a shared lock: spans accumulate in per-worker
+//! [`SpanBuffer`]s and merge only at sync commit, in ascending worker order
+//! (the same deterministic merge discipline as the parameter average).
+//! [`derive_spans`] is the single derivation path from committed
+//! [`RoundTrace`] records to the span timeline, shared by the live engines
+//! and `adaloco trace` journal replay — which is what makes the two traces
+//! event-identical.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// The typed phases of a training round, from a worker's local compute to the
+/// coordinator's reduce. `Eval` and `Checkpoint` are instant marks (zero
+/// duration) on the coordinator track.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// A worker's H local gradient steps (simulated: the α–β compute time).
+    LocalCompute,
+    /// Encoding the round contribution into a wire payload (wall-clock only:
+    /// the simulated clock folds encode time into the sync term).
+    GradEncode,
+    /// Shipping the contribution to the coordinator — carries a worker's
+    /// injected `extra_latency` fault, which gates the barrier but is not
+    /// compute.
+    Uplink,
+    /// Idle time between a worker's contribution arriving and the slowest
+    /// contributor releasing the barrier (the straggler cost).
+    BarrierWait,
+    /// The coordinator's gather → average → broadcast (the sync term of the
+    /// α–β model).
+    Reduce,
+    /// Decoding the broadcast consensus (wall-clock only, like `GradEncode`).
+    DownlinkDecode,
+    /// An evaluation pass committed at this sim time (instant mark).
+    Eval,
+    /// A run snapshot written at this sim time (instant mark).
+    Checkpoint,
+}
+
+impl SpanKind {
+    /// Every kind, in track-layout order.
+    pub const ALL: [SpanKind; 8] = [
+        SpanKind::LocalCompute,
+        SpanKind::GradEncode,
+        SpanKind::Uplink,
+        SpanKind::BarrierWait,
+        SpanKind::Reduce,
+        SpanKind::DownlinkDecode,
+        SpanKind::Eval,
+        SpanKind::Checkpoint,
+    ];
+
+    /// The stable wire/export name (`local_compute`, `barrier_wait`, ...).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::LocalCompute => "local_compute",
+            SpanKind::GradEncode => "grad_encode",
+            SpanKind::Uplink => "uplink",
+            SpanKind::BarrierWait => "barrier_wait",
+            SpanKind::Reduce => "reduce",
+            SpanKind::DownlinkDecode => "downlink_decode",
+            SpanKind::Eval => "eval",
+            SpanKind::Checkpoint => "checkpoint",
+        }
+    }
+
+    /// Inverse of [`SpanKind::name`].
+    pub fn parse(s: &str) -> Option<SpanKind> {
+        Self::ALL.into_iter().find(|k| k.name() == s)
+    }
+}
+
+impl fmt::Display for SpanKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One timed phase on the simulated clock. `worker == None` is the
+/// coordinator track.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub worker: Option<usize>,
+    pub round: u64,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+impl Span {
+    pub fn dur_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+
+    /// Instant marks (eval, checkpoint) have zero extent.
+    pub fn is_instant(&self) -> bool {
+        self.start_s == self.end_s
+    }
+}
+
+/// A worker-measured **wall-clock** phase duration, shipped to the
+/// coordinator inside a `RoundDone` message. Wall spans are measured, not
+/// derived, so they are nondeterministic and never enter the deterministic
+/// trace artifacts — the coordinator folds them into the per-worker
+/// `wall_compute_s` metric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WallSpan {
+    pub kind: SpanKind,
+    pub dur_s: f64,
+}
+
+/// An append-only span buffer. Each worker (and the coordinator) owns one;
+/// buffers merge at sync commit so recording never contends on a shared
+/// structure.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SpanBuffer {
+    pub spans: Vec<Span>,
+}
+
+impl SpanBuffer {
+    pub fn record(
+        &mut self,
+        kind: SpanKind,
+        worker: Option<usize>,
+        round: u64,
+        start_s: f64,
+        end_s: f64,
+    ) {
+        self.spans.push(Span { kind, worker, round, start_s, end_s });
+    }
+
+    /// Append `other`'s spans (the sync-commit merge; order-preserving).
+    pub fn merge(&mut self, mut other: SpanBuffer) {
+        self.spans.append(&mut other.spans);
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+}
+
+/// Per-worker timing of one committed sync round: the worker's simulated
+/// compute seconds and any injected uplink latency. Journaled on every
+/// `sync_committed` event, so a replayed trace carries the exact bits the
+/// engine computed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundWorkerTiming {
+    pub worker: usize,
+    /// Simulated compute seconds (straggle factor applied; latency excluded).
+    pub compute_s: f64,
+    /// Injected uplink latency in simulated seconds (gates the barrier but is
+    /// not compute).
+    pub latency_s: f64,
+}
+
+impl RoundWorkerTiming {
+    /// When this worker's contribution reached the coordinator, relative to
+    /// the round start — the quantity the barrier max ranges over.
+    pub fn ready_s(&self) -> f64 {
+        self.compute_s + self.latency_s
+    }
+}
+
+/// Everything the observability layer records about one committed sync: the
+/// round's position on the simulated clock, its per-worker timing, the bytes
+/// its sync moved, and the norm-test statistics the policy observed.
+///
+/// Invariants (shared by engine-built and journal-replayed traces):
+/// `start_s` is the simulated clock when the round's compute began (the
+/// previous round's `end_s`); `compute_s` is the barrier-gating time — the
+/// max over contributors of compute + injected latency — and `end_s` is the
+/// clock after the sync commit, i.e. the `sim_time_s` of the journal's
+/// `sync_committed` event. No field is ever re-derived by subtraction from
+/// the running clock, so both construction paths see identical bits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundTrace {
+    pub round: u64,
+    /// `"warmup"`, `"round"`, or `"cooldown"`.
+    pub phase: String,
+    pub h: u32,
+    pub b_eff: u64,
+    pub start_s: f64,
+    /// Barrier-gating seconds: `max_w(compute_w + latency_w)`.
+    pub compute_s: f64,
+    pub sync_s: f64,
+    pub end_s: f64,
+    /// Bytes this round's model sync put on the wire.
+    pub wire_bytes: u64,
+    /// Dense ring-all-reduce bytes the same sync would have moved.
+    pub logical_bytes: u64,
+    /// Σ_m ‖g_m − ḡ‖² over the contributors (`None` on pre-trace journals).
+    pub worker_scatter: Option<f64>,
+    /// ‖ḡ‖² of the averaged gradient (`None` on pre-trace journals).
+    pub gbar_norm_sq: Option<f64>,
+    /// Mean per-sample gradient variance, when the substrate provides it.
+    pub per_sample_var: Option<f64>,
+    /// Contributors' timing, ascending worker order.
+    pub workers: Vec<RoundWorkerTiming>,
+}
+
+impl RoundTrace {
+    /// Simulated clock at which the barrier released (reduce start).
+    pub fn barrier_s(&self) -> f64 {
+        self.start_s + self.compute_s
+    }
+
+    /// The norm-test statistic the batch controllers threshold:
+    /// scatter / ((k−1)·‖ḡ‖²), for rounds with ≥2 contributors and recorded
+    /// stats.
+    pub fn norm_test_stat(&self) -> Option<f64> {
+        let k = self.workers.len();
+        match (self.worker_scatter, self.gbar_norm_sq) {
+            (Some(scatter), Some(nsq)) if k > 1 && nsq > 0.0 => {
+                Some(scatter / ((k - 1) as f64 * nsq))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Derive the full span timeline from a run's committed rounds plus its eval
+/// and checkpoint marks (`(round, sim_time_s)` pairs, round-ascending).
+///
+/// This is the **single** derivation path: the live engines and `adaloco
+/// trace` journal replay both feed their `RoundTrace` records through it, so
+/// an engine-built trace and a journal-replayed trace of the same run are
+/// identical span for span, bit for bit. Per-worker spans accumulate in
+/// per-worker buffers and merge in ascending worker order, then the
+/// coordinator track (reduce spans + instant marks, chronological).
+pub fn derive_spans(
+    trace: &[RoundTrace],
+    evals: &[(u64, f64)],
+    checkpoints: &[(u64, f64)],
+) -> SpanBuffer {
+    let mut per_worker: BTreeMap<usize, SpanBuffer> = BTreeMap::new();
+    let mut coord = SpanBuffer::default();
+    let (mut ei, mut ci) = (0usize, 0usize);
+    for rt in trace {
+        let barrier = rt.barrier_s();
+        for wt in &rt.workers {
+            let buf = per_worker.entry(wt.worker).or_default();
+            let compute_end = rt.start_s + wt.compute_s;
+            buf.record(SpanKind::LocalCompute, Some(wt.worker), rt.round, rt.start_s, compute_end);
+            let mut ready = compute_end;
+            if wt.latency_s > 0.0 {
+                ready = compute_end + wt.latency_s;
+                buf.record(SpanKind::Uplink, Some(wt.worker), rt.round, compute_end, ready);
+            }
+            if ready < barrier {
+                buf.record(SpanKind::BarrierWait, Some(wt.worker), rt.round, ready, barrier);
+            }
+        }
+        coord.record(SpanKind::Reduce, None, rt.round, barrier, rt.end_s);
+        while ei < evals.len() && evals[ei].0 <= rt.round {
+            let (r, t) = evals[ei];
+            coord.record(SpanKind::Eval, None, r, t, t);
+            ei += 1;
+        }
+        while ci < checkpoints.len() && checkpoints[ci].0 <= rt.round {
+            let (r, t) = checkpoints[ci];
+            coord.record(SpanKind::Checkpoint, None, r, t, t);
+            ci += 1;
+        }
+    }
+    // Marks past the last committed round (defensive; should not happen).
+    for &(r, t) in &evals[ei..] {
+        coord.record(SpanKind::Eval, None, r, t, t);
+    }
+    for &(r, t) in &checkpoints[ci..] {
+        coord.record(SpanKind::Checkpoint, None, r, t, t);
+    }
+    let mut out = SpanBuffer::default();
+    for (_, buf) in per_worker {
+        out.merge(buf);
+    }
+    out.merge(coord);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt(round: u64, start: f64, workers: &[(usize, f64, f64)]) -> RoundTrace {
+        let gate = workers
+            .iter()
+            .map(|&(_, c, l)| c + l)
+            .fold(0.0f64, f64::max);
+        RoundTrace {
+            round,
+            phase: "round".into(),
+            h: 2,
+            b_eff: 16,
+            start_s: start,
+            compute_s: gate,
+            sync_s: 0.5,
+            end_s: start + gate + 0.5,
+            wire_bytes: 100,
+            logical_bytes: 100,
+            worker_scatter: Some(1.0),
+            gbar_norm_sq: Some(2.0),
+            per_sample_var: None,
+            workers: workers
+                .iter()
+                .map(|&(w, c, l)| RoundWorkerTiming { worker: w, compute_s: c, latency_s: l })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for k in SpanKind::ALL {
+            assert_eq!(SpanKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(SpanKind::parse("no_such_kind"), None);
+    }
+
+    #[test]
+    fn derive_emits_compute_wait_and_reduce() {
+        let trace = vec![rt(0, 0.0, &[(0, 1.0, 0.0), (1, 3.0, 0.0)])];
+        let spans = derive_spans(&trace, &[], &[]).spans;
+        // worker 0: compute + wait; worker 1 (the gater): compute only;
+        // coordinator: reduce.
+        let w0: Vec<_> = spans.iter().filter(|s| s.worker == Some(0)).collect();
+        assert_eq!(w0.len(), 2);
+        assert_eq!(w0[0].kind, SpanKind::LocalCompute);
+        assert_eq!(w0[1].kind, SpanKind::BarrierWait);
+        assert_eq!(w0[1].start_s, 1.0);
+        assert_eq!(w0[1].end_s, 3.0);
+        let w1: Vec<_> = spans.iter().filter(|s| s.worker == Some(1)).collect();
+        assert_eq!(w1.len(), 1, "the gating worker never waits");
+        let coord: Vec<_> = spans.iter().filter(|s| s.worker.is_none()).collect();
+        assert_eq!(coord.len(), 1);
+        assert_eq!(coord[0].kind, SpanKind::Reduce);
+        assert_eq!(coord[0].start_s, 3.0);
+        assert_eq!(coord[0].end_s, 3.5);
+    }
+
+    #[test]
+    fn injected_latency_becomes_an_uplink_span() {
+        let trace = vec![rt(0, 0.0, &[(0, 1.0, 0.0), (1, 1.0, 0.25)])];
+        let spans = derive_spans(&trace, &[], &[]).spans;
+        let up: Vec<_> = spans.iter().filter(|s| s.kind == SpanKind::Uplink).collect();
+        assert_eq!(up.len(), 1);
+        assert_eq!(up[0].worker, Some(1));
+        assert_eq!(up[0].start_s, 1.0);
+        assert_eq!(up[0].end_s, 1.25);
+        // and worker 0 waits for the latency-gated barrier
+        let w0_wait = spans
+            .iter()
+            .find(|s| s.worker == Some(0) && s.kind == SpanKind::BarrierWait)
+            .unwrap();
+        assert_eq!(w0_wait.end_s, 1.25);
+    }
+
+    #[test]
+    fn marks_land_on_the_coordinator_track_in_order() {
+        let trace = vec![
+            rt(0, 0.0, &[(0, 1.0, 0.0)]),
+            rt(1, 1.5, &[(0, 1.0, 0.0)]),
+        ];
+        let evals = vec![(1, trace[1].end_s)];
+        let ckpts = vec![(0, trace[0].end_s), (1, trace[1].end_s)];
+        let spans = derive_spans(&trace, &evals, &ckpts).spans;
+        let coord: Vec<_> = spans.iter().filter(|s| s.worker.is_none()).collect();
+        let kinds: Vec<_> = coord.iter().map(|s| s.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                SpanKind::Reduce,
+                SpanKind::Checkpoint,
+                SpanKind::Reduce,
+                SpanKind::Eval,
+                SpanKind::Checkpoint
+            ]
+        );
+        // chronological within the track
+        for w in coord.windows(2) {
+            assert!(w[0].start_s <= w[1].start_s, "coordinator track not monotone");
+        }
+        assert!(coord[1].is_instant());
+    }
+
+    #[test]
+    fn norm_test_stat_needs_two_contributors() {
+        let one = rt(0, 0.0, &[(0, 1.0, 0.0)]);
+        assert_eq!(one.norm_test_stat(), None);
+        let two = rt(0, 0.0, &[(0, 1.0, 0.0), (1, 1.0, 0.0)]);
+        assert_eq!(two.norm_test_stat(), Some(0.5));
+    }
+}

@@ -131,6 +131,15 @@ pub struct RoundSignals {
     pub sync_s: f64,
 }
 
+/// The gradient-statistics subset of [`RoundSignals`] that rides the journal's
+/// sync event and the per-round trace — the "why" behind each decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SignalAnnotations {
+    pub worker_scatter: f64,
+    pub gbar_norm_sq: f64,
+    pub per_sample_var: Option<f64>,
+}
+
 impl RoundSignals {
     /// The legacy controller view of this round (what [`LegacyPolicy`] feeds
     /// the wrapped [`crate::batch::BatchSizeController`], field for field).
@@ -145,6 +154,18 @@ impl RoundSignals {
             per_sample_var: self.per_sample_var,
             mean_worker_norm_sq: self.mean_worker_norm_sq,
             inner_product_var: self.inner_product_var,
+        }
+    }
+
+    /// The norm-test statistics this decision observed, in the shape the
+    /// observability layer journals on the sync event
+    /// ([`crate::obs::RoundTrace`]) — so every policy decision span is
+    /// annotated with the exact signals that produced it.
+    pub fn annotations(&self) -> SignalAnnotations {
+        SignalAnnotations {
+            worker_scatter: self.worker_scatter,
+            gbar_norm_sq: self.gbar_norm_sq,
+            per_sample_var: self.per_sample_var,
         }
     }
 

@@ -264,7 +264,7 @@ mod tests {
     #[test]
     fn load_and_roundtrip_tinylm() {
         if !have_artifacts("tinylm") {
-            eprintln!("skipping: artifacts/tinylm not built");
+            crate::log_info!("skipping: artifacts/tinylm not built");
             return;
         }
         let mut rt = PjrtRuntime::cpu().unwrap();
@@ -299,7 +299,7 @@ mod tests {
     #[test]
     fn pallas_norm_stat_matches_native() {
         if !have_artifacts("tinylm") {
-            eprintln!("skipping: artifacts/tinylm not built");
+            crate::log_info!("skipping: artifacts/tinylm not built");
             return;
         }
         let mut rt = PjrtRuntime::cpu().unwrap();
@@ -322,7 +322,7 @@ mod tests {
     #[test]
     fn grad_descends_on_mlp_artifact() {
         if !have_artifacts("mlp_s") {
-            eprintln!("skipping: artifacts/mlp_s not built");
+            crate::log_info!("skipping: artifacts/mlp_s not built");
             return;
         }
         let mut rt = PjrtRuntime::cpu().unwrap();

@@ -15,6 +15,14 @@
 //! - **Stragglers**: per-round compute time is the max over workers
 //!   (speed-scaled), so heterogeneous topologies surface the effect §4.2's
 //!   equalized batch rule avoids.
+//!
+//! The observability layer ([`crate::obs`]) stamps every span on THIS clock:
+//! span start/end values are simulated seconds accumulated from
+//! [`TimeModel::worker_round_time`] / [`TimeModel::sync_time_compressed`],
+//! never process wall-clock — which is what makes traces deterministic,
+//! journal-replayable, and bit-comparable across engines. (Workers do measure
+//! wall-clock [`crate::obs::WallSpan`]s, but those only feed the
+//! nondeterministic `wall_compute_s` stat.)
 
 use crate::collective::Topology;
 

@@ -1,0 +1,104 @@
+//! Minimal leveled logger for CLI diagnostics.
+//!
+//! Gated by the `ADALOCO_LOG` environment variable (`error`, `info`, or
+//! `debug`; default `info`), read once per process. Diagnostics go to stderr
+//! so product output — tables, summary lines, usage — stays clean on stdout
+//! and pipelines keep working. Zero dependencies, no timestamps: log lines
+//! must stay deterministic so CI can diff runs.
+//!
+//! Use the crate-level macros:
+//!
+//! ```ignore
+//! log_error!("scenario '{}' diverged", name);
+//! log_info!("running '{}' ...", label);
+//! log_debug!("uplink {} bytes", n);
+//! ```
+
+use std::sync::OnceLock;
+
+/// Severity, ordered so that `Level::Error < Level::Info < Level::Debug`:
+/// a message is emitted when its level is at or below the configured one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Info = 1,
+    Debug = 2,
+}
+
+impl Level {
+    /// Parse an `ADALOCO_LOG` value; unknown strings fall back to `Info`
+    /// (a typo should never silence errors or crash the CLI).
+    pub fn parse(s: &str) -> Level {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "debug" => Level::Debug,
+            _ => Level::Info,
+        }
+    }
+}
+
+static LEVEL: OnceLock<Level> = OnceLock::new();
+
+/// The process-wide level: `ADALOCO_LOG` read once, default `info`.
+pub fn level() -> Level {
+    *LEVEL.get_or_init(|| {
+        std::env::var("ADALOCO_LOG")
+            .map(|v| Level::parse(&v))
+            .unwrap_or(Level::Info)
+    })
+}
+
+/// Would a message at `l` be emitted?
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// `log_error!`: always-on diagnostics (level `error` and up).
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Error) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// `log_info!`: progress lines (default level).
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Info) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// `log_debug!`: chatty detail, off unless `ADALOCO_LOG=debug`.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Debug) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_is_lenient() {
+        assert_eq!(Level::parse("error"), Level::Error);
+        assert_eq!(Level::parse(" DEBUG "), Level::Debug);
+        assert_eq!(Level::parse("info"), Level::Info);
+        assert_eq!(Level::parse("warn"), Level::Info, "unknown falls back to info");
+        assert_eq!(Level::parse(""), Level::Info);
+    }
+
+    #[test]
+    fn ordering_matches_verbosity() {
+        assert!(Level::Error < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+}

@@ -2,6 +2,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod log;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -125,6 +125,20 @@ fn assert_same_record(what: &str, a: &RunRecord, b: &RunRecord) {
     }
     assert_eq!(a.batch_trace, b.batch_trace, "{what}: batch trace");
     assert_eq!(a.policy_trace, b.policy_trace, "{what}: policy trace");
+    // The observability trace is deterministic state like everything else
+    // here: round timings, per-worker spans, and checkpoint marks must
+    // survive kill/resume and journal replay bit-for-bit.
+    assert_eq!(a.trace.len(), b.trace.len(), "{what}: trace length");
+    for (x, y) in a.trace.iter().zip(&b.trace) {
+        assert_eq!(x, y, "{what}: round {} trace", x.round);
+        assert_eq!(
+            (x.start_s.to_bits(), x.end_s.to_bits()),
+            (y.start_s.to_bits(), y.end_s.to_bits()),
+            "{what}: round {} trace clock bits",
+            x.round
+        );
+    }
+    assert_eq!(a.checkpoints, b.checkpoints, "{what}: checkpoint marks");
     assert_eq!(a.comm, b.comm, "{what}: comm counters");
     assert_eq!(a.total_steps, b.total_steps, "{what}: total_steps");
     assert_eq!(a.total_rounds, b.total_rounds, "{what}: total_rounds");

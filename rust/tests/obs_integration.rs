@@ -1,0 +1,177 @@
+//! Observability integration on the real `straggler8` scenario: the
+//! attribution report must name the configured straggler, the Chrome trace
+//! must be well-formed (one track per worker + the coordinator, monotone span
+//! timestamps per track), and a trace re-derived from the journal of a
+//! killed-and-resumed run must be byte-identical to the uninterrupted run's.
+
+use adaloco::cluster::run_scenario_durable;
+use adaloco::config::ScenarioSpec;
+use adaloco::journal::{replay_events, scan_journal_file, Durability, JournalEvent, RunSnapshot};
+use adaloco::metrics::RunRecord;
+use adaloco::obs::{chrome_trace, trace_workers, Attribution};
+use adaloco::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn straggler8() -> ScenarioSpec {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../scenarios/straggler8.json");
+    let text = std::fs::read_to_string(path).expect("scenarios/straggler8.json");
+    ScenarioSpec::from_json(&Json::parse(&text).unwrap()).unwrap()
+}
+
+fn temp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("adaloco_obs_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn journal_dur(dir: &Path) -> Durability {
+    Durability {
+        journal: Some(dir.join("run.journal")),
+        checkpoint_dir: Some(dir.to_path_buf()),
+        checkpoint_every: 4,
+        exit_at: None,
+        resume: None,
+    }
+}
+
+fn scan_clean(path: &Path) -> Vec<JournalEvent> {
+    let scan = scan_journal_file(path).unwrap();
+    assert!(scan.corruption.is_none(), "journal corrupt: {:?}", scan.corruption);
+    scan.events
+}
+
+/// Per-track duration-event timestamps must be non-decreasing (instant marks
+/// are appended per track too, but policy-decision instants form their own
+/// chronological tail, so the monotonicity contract is on "X" events).
+fn assert_tracks_monotone(events: &[Json]) {
+    let mut last: std::collections::BTreeMap<u64, f64> = Default::default();
+    for e in events {
+        if e.get("ph").as_str() != Some("X") {
+            continue;
+        }
+        let tid = e.get("tid").as_u64().unwrap();
+        let ts = e.get("ts").as_f64().unwrap();
+        if let Some(prev) = last.get(&tid) {
+            assert!(ts >= *prev, "track {tid}: ts {ts} after {prev}");
+        }
+        last.insert(tid, ts);
+    }
+    assert!(!last.is_empty(), "no duration events at all");
+}
+
+fn run_straggler8(dir: &Path) -> RunRecord {
+    run_scenario_durable(&straggler8(), journal_dur(dir)).unwrap()
+}
+
+#[test]
+fn straggler8_attribution_names_the_configured_straggler() {
+    let dir = temp_dir("attr");
+    let rec = run_straggler8(&dir);
+    assert!(!rec.trace.is_empty(), "cluster run must record a trace");
+
+    let attr = Attribution::from_trace(&rec.trace);
+    // Worker 7 runs at speed 0.5: it gates every barrier it contributes to.
+    assert_eq!(attr.top_gater(), Some(7), "{}", attr.report());
+    assert!(
+        attr.report().contains("top barrier-gater: worker 7"),
+        "{}",
+        attr.report()
+    );
+    let top = &attr.ranking[0];
+    assert_eq!(top.worker, 7);
+    assert_eq!(
+        top.gated_rounds, top.rounds,
+        "a 2x straggler should gate every round it contributes to"
+    );
+    assert!(top.gated_margin_s > 0.0);
+
+    // The injected dropout keeps worker 7 out of round 12's contributors.
+    let r12 = rec.trace.iter().find(|rt| rt.round == 12).expect("round 12 committed");
+    assert!(r12.workers.iter().all(|wt| wt.worker != 7), "dropout round still lists worker 7");
+
+    // The extra-latency window is recorded as latency, not compute.
+    if let Some(rt) = rec.trace.iter().find(|rt| rt.round == 20) {
+        let w7 = rt.workers.iter().find(|wt| wt.worker == 7).unwrap();
+        assert_eq!(w7.latency_s, 0.05, "injected latency must surface in the timing");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn straggler8_chrome_trace_is_well_formed() {
+    let dir = temp_dir("chrome");
+    let rec = run_straggler8(&dir);
+
+    assert_eq!(trace_workers(&rec.trace), (0..8).collect::<Vec<_>>());
+    let text = chrome_trace(&rec).to_string();
+    // Valid trace-event JSON, stable under a parse/serialize round trip.
+    let parsed = Json::parse(&text).expect("chrome trace must be valid JSON");
+    assert_eq!(parsed.to_string(), text, "serialization must be canonical");
+    let events = parsed.get("traceEvents").as_arr().expect("traceEvents array");
+
+    // One thread_name track per worker plus the coordinator.
+    let names: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").as_str() == Some("M"))
+        .map(|e| e.get("args").get("name").as_str().unwrap())
+        .collect();
+    assert_eq!(names.len(), 9, "8 worker tracks + coordinator: {names:?}");
+    assert!(names.contains(&"coordinator"));
+    for w in 0..8 {
+        assert!(names.contains(&format!("worker {w}").as_str()), "missing worker {w} track");
+    }
+    assert_tracks_monotone(events);
+
+    // The straggler surfaces as barrier_wait time on the OTHER workers.
+    let waits = events
+        .iter()
+        .filter(|e| e.get("name").as_str() == Some("barrier_wait"))
+        .count();
+    assert!(waits > 0, "a straggler scenario must produce barrier_wait spans");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trace_from_replayed_journal_is_byte_identical_even_across_kill_resume() {
+    let spec = straggler8();
+    let ref_dir = temp_dir("replay_ref");
+    let reference = run_scenario_durable(&spec, journal_dur(&ref_dir)).unwrap();
+    assert!(!reference.interrupted);
+
+    // Replay of the uninterrupted journal reconstructs trace + checkpoint
+    // marks bit-for-bit, so every derived artifact is byte-identical.
+    let replayed = replay_events(&scan_clean(&ref_dir.join("run.journal"))).unwrap();
+    assert_eq!(reference.trace, replayed.trace);
+    assert_eq!(reference.checkpoints, replayed.checkpoints);
+    let ref_chrome = chrome_trace(&reference).to_string();
+    assert_eq!(ref_chrome, chrome_trace(&replayed).to_string());
+
+    // Kill at a natural checkpoint boundary (cadence 4 → rounds 3, 7, ...),
+    // resume, and demand the resumed journal replays to the same trace — the
+    // `adaloco trace` acceptance criterion. A non-cadence kill round would
+    // write an extra exit snapshot (and checkpoint mark) the uninterrupted
+    // reference does not have.
+    let kill_round = 7;
+    let dir = temp_dir("replay_kill");
+    let mut d = journal_dur(&dir);
+    d.exit_at = Some(kill_round);
+    let killed = run_scenario_durable(&spec, d).unwrap();
+    assert!(killed.interrupted);
+    let snap_path = journal_dur(&dir).snapshot_path(&spec.name, kill_round).unwrap();
+    let mut d = journal_dur(&dir);
+    d.resume = Some(RunSnapshot::load(&snap_path).unwrap());
+    let resumed = run_scenario_durable(&spec, d).unwrap();
+    assert!(!resumed.interrupted);
+
+    let resumed_replay = replay_events(&scan_clean(&dir.join("run.journal"))).unwrap();
+    assert_eq!(reference.trace, resumed_replay.trace, "trace after kill/resume");
+    assert_eq!(reference.checkpoints, resumed_replay.checkpoints);
+    assert_eq!(
+        ref_chrome,
+        chrome_trace(&resumed_replay).to_string(),
+        "chrome trace must be byte-identical from a killed-and-resumed journal"
+    );
+    std::fs::remove_dir_all(&ref_dir).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}

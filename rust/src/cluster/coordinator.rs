@@ -31,10 +31,12 @@ use super::messages::{FromWorker, RoundResult, ToWorker};
 use super::worker::{spawn_worker, WorkerResume};
 use crate::collective::CommCounters;
 use crate::comm::{ErrorFeedback, Payload};
-use crate::config::WorkerSpec;
+use crate::config::{SyncMode, WorkerSpec};
 use crate::data::Dataset;
 use crate::engine::{EngineOpts, TrainEngine};
-use crate::journal::{ClusterSnapshot, JournalEvent, JournalWriter, RunSnapshot, WorkerSnapshot};
+use crate::journal::{
+    ClusterSnapshot, JournalEvent, JournalWriter, PendingUplink, RunSnapshot, WorkerSnapshot,
+};
 use crate::metrics::{EvalPoint, PolicyPoint, RunRecord};
 use crate::model::GradModel;
 use crate::obs::{RoundTrace, RoundWorkerTiming};
@@ -53,6 +55,10 @@ pub enum Phase {
     Warmup,
     Round,
     Sync,
+    /// Bounded-staleness commit: merging in-flight contributions from earlier
+    /// rounds into the current consensus (observability only — the trace
+    /// phase string stays `"round"`).
+    LateMerge,
     Cooldown,
     Done,
 }
@@ -69,6 +75,10 @@ pub struct ClusterEngine {
     pub workers: Vec<WorkerSpec>,
     pub warmup_rounds: u64,
     pub cooldown_rounds: u64,
+    /// How a sync commits: full barrier (default), quorum gate, or bounded
+    /// staleness. All deadlines run on the simulated clock, so every mode is
+    /// exactly as deterministic as the barrier.
+    pub sync_mode: SyncMode,
     /// Observability: the phase after `run` returns (always `Done`).
     pub phase: Phase,
 }
@@ -80,6 +90,7 @@ impl ClusterEngine {
             workers: vec![WorkerSpec::default(); m],
             warmup_rounds: 0,
             cooldown_rounds: 0,
+            sync_mode: SyncMode::FullBarrier,
             phase: Phase::WaitingForWorkers,
         }
     }
@@ -90,6 +101,7 @@ impl ClusterEngine {
             workers: spec.workers.clone(),
             warmup_rounds: spec.warmup_rounds,
             cooldown_rounds: spec.cooldown_rounds,
+            sync_mode: spec.sync_mode.clone(),
             phase: Phase::WaitingForWorkers,
         }
     }
@@ -310,6 +322,12 @@ impl TrainEngine for ClusterEngine {
         // H decided at the previous live sync (None: bootstrap from the
         // policy, mirroring the legacy top-of-loop scheduler call).
         let mut pending_h: Option<u32> = None;
+        let sync_mode = self.sync_mode.clone();
+        // In-flight bounded-staleness contributions, in (origin round, worker)
+        // order — the deterministic late-merge order. Always empty under the
+        // barrier modes. Restored from the snapshot so a kill at a late-merge
+        // boundary replays the exact merge the uninterrupted run commits.
+        let mut pending: Vec<PendingUplink> = Vec::new();
 
         let mut warmup_left = self.warmup_rounds;
         let mut cooldown_left = self.cooldown_rounds;
@@ -326,6 +344,7 @@ impl TrainEngine for ClusterEngine {
             let c = snap.cluster.as_ref().unwrap();
             warmup_left = c.warmup_left;
             cooldown_left = c.cooldown_left;
+            pending = c.pending.clone();
             round = snap.round + 1;
         }
         // The phase a just-synced coordinator would carry into this round —
@@ -467,7 +486,13 @@ impl TrainEngine for ClusterEngine {
             // ---- assign the round -----------------------------------------
             // The sample-indexed lr stride uses the planned contributor count
             // (== M with full participation, matching the sequential engine).
-            let contributors = roster.contributors(round);
+            // Under bounded staleness a worker whose uplink is still in flight
+            // on the simulated clock is busy and skips assignment.
+            let contributors: Vec<usize> = roster
+                .contributors(round)
+                .into_iter()
+                .filter(|&w| !pending.iter().any(|p| p.worker == w))
+                .collect();
             let k_planned = contributors.len() as u64;
             let lrs: Vec<f64> = (0..h)
                 .map(|hs| opts.lr.at(samples + hs as u64 * k_planned * b_eff))
@@ -497,9 +522,10 @@ impl TrainEngine for ClusterEngine {
                     }
                 }
             }
-            if assigned.is_empty() {
-                // every contributor dropped or crashed this round: skip it
-                // (hand the undecided H back so the next live round reuses it)
+            if assigned.is_empty() && pending.is_empty() {
+                // every contributor dropped or crashed this round and nothing
+                // is in flight: skip it (hand the undecided H back so the next
+                // live round reuses it)
                 if policy_live {
                     pending_h = Some(h);
                 }
@@ -509,118 +535,57 @@ impl TrainEngine for ClusterEngine {
 
             // ---- Sync: gather contributions -------------------------------
             self.phase = Phase::Sync;
+            // Injected message loss: journaled BEFORE the gather in ascending
+            // worker order (like dropouts) so replay sees the fault sequence
+            // deterministically. The lost copy is dropped on arrival, the
+            // worker is NACKed with `ResendRound`, and the bit-identical
+            // resend is kept; the retry cost is charged on the simulated
+            // latency axis in the timing loop below.
+            let mut lost: Vec<bool> = vec![false; m];
+            for &w in &assigned {
+                if roster.spec(w).loses_message(round) {
+                    lost[w] = true;
+                    if let Some(jw) = journal.as_mut() {
+                        jw.append(&JournalEvent::FaultInjected {
+                            round,
+                            worker: w as u64,
+                            kind: "message_loss".to_string(),
+                        })
+                        .unwrap_or_else(|e| panic!("{e}"));
+                    }
+                }
+            }
             let mut results: Vec<Option<RoundResult>> = (0..m).map(|_| None).collect();
             let mut outstanding = assigned.len();
             while outstanding > 0 {
                 match Self::recv(&from_rx) {
                     FromWorker::RoundDone(r) if r.round == round => {
                         let w = r.worker;
-                        assert!(results[w].is_none(), "duplicate RoundDone");
-                        results[w] = Some(r);
-                        outstanding -= 1;
+                        if lost[w] {
+                            lost[w] = false;
+                            Self::try_send(
+                                &txs,
+                                &mut roster,
+                                w,
+                                round,
+                                ToWorker::ResendRound { round },
+                            );
+                        } else {
+                            assert!(results[w].is_none(), "duplicate RoundDone");
+                            results[w] = Some(r);
+                            outstanding -= 1;
+                        }
                     }
                     other => panic!("unexpected message during sync: {other:?}"),
                 }
             }
-            let k = assigned.len();
 
-            // ---- bookkeeping (identical order to the sequential engine) ---
-            steps += h as u64;
-            samples += h as u64 * k as u64 * b_eff;
-            weighted_b += h as f64 * b_eff as f64;
-            total_local_steps += h as f64;
-
-            // ---- parameter average over contributors (eq. 3, re-weighted) --
-            // Contributions arrive as payloads encoded against the previous
-            // consensus; decode them in ascending worker order and reduce with
-            // the same float-op sequence as the sequential engine (both run
-            // through collective::mean_reduce_into). For lossy methods the new
-            // consensus is re-encoded for the downlink, so the broadcast wire
-            // is compressed too, and decoded here exactly as every worker will
-            // decode it; dense (identity) payloads are averaged straight from
-            // the received buffers — no decode clones, the legacy dataflow.
-            let round_logical = CommCounters::ring_bytes(d, k);
-            let mut round_wire = round_logical;
-            let mut wire_frac = 1.0f64;
-            let down = if comp_spec.is_dense() {
-                let first = results[assigned[0]].as_ref().unwrap();
-                params.copy_from_slice(first.payload.as_dense().expect("dense payload"));
-                let rest_refs: Vec<&[f32]> = assigned[1..]
-                    .iter()
-                    .map(|&w| {
-                        results[w].as_ref().unwrap().payload.as_dense().expect("dense payload")
-                    })
-                    .collect();
-                crate::collective::mean_reduce_into(&mut params, &rest_refs);
-                rec.comm.charge_allreduce(d, k);
-                Payload::Dense { values: params.clone() }
-            } else {
-                let reference = params.clone();
-                let uplink: u64 = assigned
-                    .iter()
-                    .map(|&w| results[w].as_ref().unwrap().payload.wire_bytes())
-                    .sum();
-                let decoded: Vec<Vec<f32>> = assigned
-                    .iter()
-                    .map(|&w| results[w].as_ref().unwrap().payload.decode(&reference))
-                    .collect();
-                params.copy_from_slice(&decoded[0]);
-                {
-                    let rest_refs: Vec<&[f32]> =
-                        decoded[1..].iter().map(|v| v.as_slice()).collect();
-                    crate::collective::mean_reduce_into(&mut params, &rest_refs);
-                }
-                let down = compressor.encode(&params, &reference, downlink_ef.as_mut());
-                down.decode_into(&reference, &mut params);
-                round_wire = CommCounters::compressed_wire_bytes(k, uplink, down.wire_bytes());
-                if round_logical > 0 {
-                    wire_frac = round_wire as f64 / round_logical as f64;
-                }
-                rec.comm.charge_compressed_allreduce(d, k, uplink, down.wire_bytes());
-                down
-            };
-            rec.comm.rounds += 1;
-            for w in roster.active() {
-                Self::try_send(
-                    &txs,
-                    &mut roster,
-                    w,
-                    round,
-                    ToWorker::SetParams { payload: down.clone() },
-                );
-            }
-
-            // ---- norm-test statistics over the contributors' gradients ----
-            let grad_refs: Vec<&[f32]> = assigned
-                .iter()
-                .map(|&w| results[w].as_ref().unwrap().grad.as_slice())
-                .collect();
-            let (scatter, nsq) = tensor::norm_test_stats(&grad_refs, &mut gbar);
-            if needs_grad_ar {
-                rec.comm.charge_allreduce(d, k);
-            }
-            let mean_worker_norm_sq =
-                grad_refs.iter().map(|g| tensor::norm_sq(g)).sum::<f64>() / k as f64;
-            let ip_var = if k > 1 {
-                let dots: Vec<f64> = grad_refs.iter().map(|g| tensor::dot(g, &gbar)).collect();
-                let mean_dot = dots.iter().sum::<f64>() / k as f64;
-                dots.iter().map(|t| (t - mean_dot).powi(2)).sum::<f64>() / (k - 1) as f64
-            } else {
-                0.0
-            };
-            let psv = {
-                let vals: Vec<f64> = assigned
-                    .iter()
-                    .filter_map(|&w| results[w].as_ref().unwrap().per_sample_var)
-                    .collect();
-                if vals.len() == k {
-                    Some(vals.iter().sum::<f64>() / k as f64)
-                } else {
-                    None
-                }
-            };
-
-            // ---- simulated wall-clock (straggler max over contributors) ---
+            // ---- per-worker simulated timing (compute + uplink delays) ----
+            // The physical gather above always collects every assigned uplink;
+            // everything from here on is pure simulated-time accounting over
+            // that complete set, which is what keeps the quorum and
+            // bounded-staleness commits exactly as deterministic as the
+            // barrier.
             let round_start_s = sim_time;
             let mut worst = 0f64;
             let mut timing: Vec<RoundWorkerTiming> = Vec::with_capacity(assigned.len());
@@ -629,86 +594,550 @@ impl TrainEngine for ClusterEngine {
                 let compute =
                     opts.time_model
                         .worker_round_time(b_eff, h, w, spec.straggle_factor(round), 0.0);
-                // Injected latency gates the round barrier but is not compute:
-                // only the compute share lands in the per-worker metric. The
-                // trace keeps the two apart so attribution can tell a slow
-                // worker from a slow link; `ready_s` (compute + latency) uses
-                // exactly this `t` expression, so the attribution's
-                // reconstructed gate is bit-equal to `worst`.
-                let t = compute + spec.extra_latency(round);
-                timing.push(RoundWorkerTiming {
-                    worker: w,
-                    compute_s: compute,
-                    latency_s: spec.extra_latency(round),
-                });
+                // Injected latency gates the commit but is not compute: only
+                // the compute share lands in the per-worker metric, and a lost
+                // uplink pays its resend penalty on the same axis (`+ 0.0`
+                // when no loss fires — IEEE-exact, so fault-free rounds keep
+                // their bits). The trace keeps compute and latency apart so
+                // attribution can tell a slow worker from a slow link;
+                // `ready_s` (compute + latency) uses exactly this `t`
+                // expression, so a reconstructed gate is bit-equal to the
+                // committed one.
+                let latency = spec.extra_latency(round) + spec.resend_penalty(round);
+                let t = compute + latency;
+                timing.push(RoundWorkerTiming { worker: w, compute_s: compute, latency_s: latency });
                 roster.stats[w].sim_compute_s += compute;
                 worst = worst.max(t);
             }
-            let sync_s = opts.time_model.sync_time_compressed(d, needs_grad_ar, wire_frac);
-            sim_time += worst;
-            sim_time += sync_s;
 
-            // Signals are built for every committed round (not just live ones)
-            // so the journal event and trace carry the policy-facing
-            // statistics; the policy itself is only consulted when live.
-            let signals = RoundSignals {
-                round,
-                samples,
-                b_local: b_eff,
-                h,
-                m_workers: k,
-                active_workers: roster.active().len(),
-                worker_scatter: scatter,
-                gbar_norm_sq: nsq,
-                per_sample_var: psv,
-                mean_worker_norm_sq,
-                inner_product_var: ip_var,
-                lr_next: opts.lr.at(samples),
-                wire_bytes: round_wire,
-                logical_bytes: round_logical,
-                compression: comp_spec.clone(),
-                round_compute_s: worst,
-                sync_s,
-            };
-            let ann = signals.annotations();
-            if let Some(jw) = journal.as_mut() {
-                jw.append(&JournalEvent::SyncCommitted {
+            // ---- commit under the configured sync mode --------------------
+            // Each branch fully accounts its own commit (counters, average,
+            // broadcast, journal, trace) and leaves the policy-facing signals
+            // plus the round's mean train loss for the shared tail below.
+            let signals: RoundSignals;
+            let wire_frac: f64;
+            let round_train_loss: f64;
+            if let SyncMode::BoundedStaleness { max_staleness, discount } = &sync_mode {
+                let (max_staleness, discount) = (*max_staleness, *discount);
+                self.phase = Phase::LateMerge;
+                // This round's gathered uplinks become in-flight contributions
+                // stamped with an absolute simulated arrival time. The pending
+                // queue is pushed in ascending worker order every round, so it
+                // always holds (origin round, worker) order — the
+                // deterministic late-merge order.
+                for t in &timing {
+                    let r = results[t.worker].take().unwrap();
+                    let values = r
+                        .payload
+                        .as_dense()
+                        .expect("bounded_staleness is identity-only (config validation)")
+                        .to_vec();
+                    // Wall-clock spans fold in at physical receipt — the one
+                    // nondeterministic stat, never part of the trace.
+                    roster.stats[t.worker].wall_compute_s +=
+                        r.spans.iter().map(|sp| sp.dur_s).sum::<f64>();
+                    pending.push(PendingUplink {
+                        worker: t.worker,
+                        origin_round: round,
+                        h,
+                        b_eff,
+                        ready_s: round_start_s + t.compute_s + t.latency_s,
+                        compute_s: t.compute_s,
+                        latency_s: t.latency_s,
+                        loss: r.loss,
+                        per_sample_var: r.per_sample_var,
+                        params: values,
+                        grad: r.grad,
+                    });
+                }
+                // The commit fires when this round's earliest assignment lands
+                // (or, if every contributor was already in flight, when the
+                // next in-flight uplink lands) — never before the round start.
+                let t_commit = {
+                    let newest = pending
+                        .iter()
+                        .filter(|p| p.origin_round == round)
+                        .map(|p| p.ready_s)
+                        .fold(f64::INFINITY, f64::min);
+                    let raw = if newest.is_finite() {
+                        newest
+                    } else {
+                        pending.iter().map(|p| p.ready_s).fold(f64::INFINITY, f64::min)
+                    };
+                    raw.max(round_start_s)
+                };
+                // Merge everything that has arrived by the commit point; both
+                // halves of the drain keep the (origin round, worker) order.
+                let mut merge_set: Vec<PendingUplink> = Vec::new();
+                let mut still_pending: Vec<PendingUplink> = Vec::new();
+                for p in pending.drain(..) {
+                    if p.ready_s <= t_commit {
+                        merge_set.push(p);
+                    } else {
+                        still_pending.push(p);
+                    }
+                }
+                pending = still_pending;
+                let k = merge_set.len();
+                assert!(k > 0, "bounded-staleness commit with nothing ready");
+
+                // ---- staleness-discounted average: Σ λ^s·x / Σ λ^s --------
+                // f64 accumulation per element in merge order — a fixed,
+                // deterministic float sequence like mean_reduce_into's.
+                let mut weights: Vec<f64> = Vec::with_capacity(k);
+                let mut weight_sum = 0.0f64;
+                let mut stale_sum = 0u64;
+                let mut stale_max = 0u64;
+                for p in &merge_set {
+                    let s = round - p.origin_round;
+                    let lambda = discount.powi(s as i32);
+                    weights.push(lambda);
+                    weight_sum += lambda;
+                    stale_sum += s;
+                    stale_max = stale_max.max(s);
+                }
+                let mut acc = vec![0.0f64; d];
+                for (p, &lw) in merge_set.iter().zip(&weights) {
+                    for (a, &x) in acc.iter_mut().zip(&p.params) {
+                        *a += lw * x as f64;
+                    }
+                }
+                for (dst, &a) in params.iter_mut().zip(&acc) {
+                    *dst = (a / weight_sum) as f32;
+                }
+                let round_logical = CommCounters::ring_bytes(d, k);
+                let round_wire = round_logical;
+                wire_frac = 1.0;
+                rec.comm.charge_allreduce(d, k);
+                rec.comm.rounds += 1;
+
+                // ---- bookkeeping: merged contributions enter the counters --
+                // Samples count each contribution at its ORIGIN round's
+                // (h, b_eff) — work done is work counted, discounted or not.
+                steps += h as u64;
+                for p in &merge_set {
+                    samples += p.h as u64 * p.b_eff;
+                }
+                weighted_b += h as f64 * b_eff as f64;
+                total_local_steps += h as f64;
+
+                // ---- norm-test statistics over the merged gradients -------
+                let grad_refs: Vec<&[f32]> =
+                    merge_set.iter().map(|p| p.grad.as_slice()).collect();
+                let (scatter, nsq) = tensor::norm_test_stats(&grad_refs, &mut gbar);
+                if needs_grad_ar {
+                    rec.comm.charge_allreduce(d, k);
+                }
+                let mean_worker_norm_sq =
+                    grad_refs.iter().map(|g| tensor::norm_sq(g)).sum::<f64>() / k as f64;
+                let ip_var = if k > 1 {
+                    let dots: Vec<f64> =
+                        grad_refs.iter().map(|g| tensor::dot(g, &gbar)).collect();
+                    let mean_dot = dots.iter().sum::<f64>() / k as f64;
+                    dots.iter().map(|t| (t - mean_dot).powi(2)).sum::<f64>() / (k - 1) as f64
+                } else {
+                    0.0
+                };
+                let psv = {
+                    let vals: Vec<f64> =
+                        merge_set.iter().filter_map(|p| p.per_sample_var).collect();
+                    if vals.len() == k {
+                        Some(vals.iter().sum::<f64>() / k as f64)
+                    } else {
+                        None
+                    }
+                };
+
+                // ---- clock: commit point + sync cost ----------------------
+                let gate = t_commit - round_start_s;
+                let sync_s = opts.time_model.sync_time_compressed(d, needs_grad_ar, wire_frac);
+                sim_time = t_commit + sync_s;
+
+                // ---- quarantine ------------------------------------------
+                // A contribution still in flight at staleness >= max can only
+                // merge even staler, so it is discarded like a failed
+                // admission: the worker goes idle and rejoins from the fresh
+                // consensus next round.
+                let mut quarantined: Vec<usize> = Vec::new();
+                let mut kept: Vec<PendingUplink> = Vec::new();
+                for p in pending.drain(..) {
+                    if round - p.origin_round >= max_staleness {
+                        quarantined.push(p.worker);
+                    } else {
+                        kept.push(p);
+                    }
+                }
+                pending = kept;
+                quarantined.sort_unstable();
+                for &w in &quarantined {
+                    if let Some(jw) = journal.as_mut() {
+                        jw.append(&JournalEvent::FaultInjected {
+                            round,
+                            worker: w as u64,
+                            kind: "quarantined".to_string(),
+                        })
+                        .unwrap_or_else(|e| panic!("{e}"));
+                    }
+                }
+
+                // ---- merge accounting + trace shapes ----------------------
+                let merges: Vec<(usize, u64)> =
+                    merge_set.iter().map(|p| (p.worker, round - p.origin_round)).collect();
+                let mut trace_timing: Vec<RoundWorkerTiming> = merge_set
+                    .iter()
+                    .map(|p| RoundWorkerTiming {
+                        worker: p.worker,
+                        compute_s: p.compute_s,
+                        latency_s: p.latency_s,
+                    })
+                    .collect();
+                trace_timing.sort_by_key(|t| t.worker);
+                for p in &merge_set {
+                    let s = &mut roster.stats[p.worker];
+                    s.rounds_contributed += 1;
+                    s.local_steps += p.h as u64;
+                    s.samples += p.h as u64 * p.b_eff;
+                    s.last_loss = p.loss;
+                }
+                round_train_loss = merge_set.iter().map(|p| p.loss).sum::<f64>() / k as f64;
+
+                // ---- consensus broadcast to idle workers only -------------
+                // An in-flight worker is still computing on the simulated
+                // clock; it picks up the consensus when it next goes idle
+                // (merge or quarantine). Dense payload: bounded staleness is
+                // identity-compressed by config validation.
+                for w in roster.active() {
+                    if pending.iter().any(|p| p.worker == w) {
+                        continue;
+                    }
+                    Self::try_send(
+                        &txs,
+                        &mut roster,
+                        w,
+                        round,
+                        ToWorker::SetParams {
+                            payload: Payload::Dense { values: params.clone() },
+                        },
+                    );
+                }
+
+                signals = RoundSignals {
+                    round,
+                    samples,
+                    b_local: b_eff,
+                    h,
+                    m_workers: k,
+                    active_workers: roster.active().len(),
+                    worker_scatter: scatter,
+                    gbar_norm_sq: nsq,
+                    per_sample_var: psv,
+                    mean_worker_norm_sq,
+                    inner_product_var: ip_var,
+                    lr_next: opts.lr.at(samples),
+                    wire_bytes: round_wire,
+                    logical_bytes: round_logical,
+                    compression: comp_spec.clone(),
+                    round_compute_s: gate,
+                    sync_s,
+                    quorum_fraction_met: if assigned.is_empty() {
+                        1.0
+                    } else {
+                        merges.iter().filter(|(_, s)| *s == 0).count() as f64
+                            / assigned.len() as f64
+                    },
+                    mean_staleness: stale_sum as f64 / k as f64,
+                    max_staleness: stale_max,
+                    discounted_contributors: weight_sum,
+                };
+                let ann = signals.annotations();
+                if let Some(jw) = journal.as_mut() {
+                    jw.append(&JournalEvent::SyncCommitted {
+                        round,
+                        phase: phase_name.to_string(),
+                        h,
+                        b_eff,
+                        contributors: k as u64,
+                        samples,
+                        steps,
+                        comm: rec.comm,
+                        compute_s: gate,
+                        sync_s,
+                        sim_time_s: sim_time,
+                        wire_bytes: round_wire,
+                        logical_bytes: round_logical,
+                        timing: trace_timing.clone(),
+                        worker_scatter: Some(ann.worker_scatter),
+                        gbar_norm_sq: Some(ann.gbar_norm_sq),
+                        per_sample_var: ann.per_sample_var,
+                        merges: merges.clone(),
+                        quorum_missed: quarantined.clone(),
+                    })
+                    .unwrap_or_else(|e| panic!("{e}"));
+                }
+                rec.trace.push(RoundTrace {
                     round,
                     phase: phase_name.to_string(),
                     h,
                     b_eff,
-                    contributors: k as u64,
-                    samples,
-                    steps,
-                    comm: rec.comm,
-                    compute_s: worst,
+                    start_s: round_start_s,
+                    compute_s: gate,
                     sync_s,
-                    sim_time_s: sim_time,
+                    end_s: sim_time,
                     wire_bytes: round_wire,
                     logical_bytes: round_logical,
-                    timing: timing.clone(),
                     worker_scatter: Some(ann.worker_scatter),
                     gbar_norm_sq: Some(ann.gbar_norm_sq),
                     per_sample_var: ann.per_sample_var,
-                })
-                .unwrap_or_else(|e| panic!("{e}"));
+                    workers: trace_timing,
+                    merges,
+                    quorum_missed: quarantined,
+                });
+            } else {
+                // ---- full-barrier / quorum commit -------------------------
+                // The gate is the simulated instant this sync commits: the
+                // slowest arrival under the barrier; under quorum, the later
+                // of the first uplink and the earlier of the
+                // `ceil(fraction·assigned)`-th uplink and the round deadline —
+                // Psyche's witness-quorum / max-round-time rule. Uplinks past
+                // the gate are discarded for the round and their workers
+                // reassigned next round.
+                let (on_time, missed, gate) = match &sync_mode {
+                    SyncMode::Quorum { fraction, max_round_time } => {
+                        let mut order: Vec<(f64, usize)> =
+                            timing.iter().map(|t| (t.ready_s(), t.worker)).collect();
+                        order.sort_by(|a, b| {
+                            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+                        });
+                        let q = ((fraction * assigned.len() as f64).ceil() as usize)
+                            .clamp(1, assigned.len());
+                        let gate = order[q - 1].0.min(*max_round_time).max(order[0].0);
+                        let mut on_time = Vec::new();
+                        let mut missed = Vec::new();
+                        for t in &timing {
+                            if t.ready_s() <= gate {
+                                on_time.push(t.worker);
+                            } else {
+                                missed.push(t.worker);
+                            }
+                        }
+                        (on_time, missed, gate)
+                    }
+                    _ => (assigned.clone(), Vec::new(), worst),
+                };
+                let k = on_time.len();
+
+                // ---- bookkeeping (identical order to the sequential engine)
+                steps += h as u64;
+                samples += h as u64 * k as u64 * b_eff;
+                weighted_b += h as f64 * b_eff as f64;
+                total_local_steps += h as f64;
+
+                // ---- parameter average over committed contributors (eq. 3) -
+                // Contributions arrive as payloads encoded against the
+                // previous consensus; decode them in ascending worker order
+                // and reduce with the same float-op sequence as the sequential
+                // engine (both run through collective::mean_reduce_into). For
+                // lossy methods the new consensus is re-encoded for the
+                // downlink, so the broadcast wire is compressed too, and
+                // decoded here exactly as every worker will decode it; dense
+                // (identity) payloads are averaged straight from the received
+                // buffers — no decode clones, the legacy dataflow. A quorum
+                // miss discards the uplink entirely: it is neither averaged
+                // nor charged to the wire.
+                let round_logical = CommCounters::ring_bytes(d, k);
+                let mut round_wire = round_logical;
+                let mut wf = 1.0f64;
+                let down = if comp_spec.is_dense() {
+                    let first = results[on_time[0]].as_ref().unwrap();
+                    params.copy_from_slice(first.payload.as_dense().expect("dense payload"));
+                    let rest_refs: Vec<&[f32]> = on_time[1..]
+                        .iter()
+                        .map(|&w| {
+                            results[w].as_ref().unwrap().payload.as_dense().expect("dense payload")
+                        })
+                        .collect();
+                    crate::collective::mean_reduce_into(&mut params, &rest_refs);
+                    rec.comm.charge_allreduce(d, k);
+                    Payload::Dense { values: params.clone() }
+                } else {
+                    let reference = params.clone();
+                    let uplink: u64 = on_time
+                        .iter()
+                        .map(|&w| results[w].as_ref().unwrap().payload.wire_bytes())
+                        .sum();
+                    let decoded: Vec<Vec<f32>> = on_time
+                        .iter()
+                        .map(|&w| results[w].as_ref().unwrap().payload.decode(&reference))
+                        .collect();
+                    params.copy_from_slice(&decoded[0]);
+                    {
+                        let rest_refs: Vec<&[f32]> =
+                            decoded[1..].iter().map(|v| v.as_slice()).collect();
+                        crate::collective::mean_reduce_into(&mut params, &rest_refs);
+                    }
+                    let down = compressor.encode(&params, &reference, downlink_ef.as_mut());
+                    down.decode_into(&reference, &mut params);
+                    round_wire = CommCounters::compressed_wire_bytes(k, uplink, down.wire_bytes());
+                    if round_logical > 0 {
+                        wf = round_wire as f64 / round_logical as f64;
+                    }
+                    rec.comm.charge_compressed_allreduce(d, k, uplink, down.wire_bytes());
+                    down
+                };
+                wire_frac = wf;
+                rec.comm.rounds += 1;
+                // Broadcast to EVERY active worker, quorum misses included —
+                // that is what keeps the payload references in lockstep and
+                // lets quorum compose with compression.
+                for w in roster.active() {
+                    Self::try_send(
+                        &txs,
+                        &mut roster,
+                        w,
+                        round,
+                        ToWorker::SetParams { payload: down.clone() },
+                    );
+                }
+
+                // ---- norm-test statistics over the committed gradients ----
+                let grad_refs: Vec<&[f32]> = on_time
+                    .iter()
+                    .map(|&w| results[w].as_ref().unwrap().grad.as_slice())
+                    .collect();
+                let (scatter, nsq) = tensor::norm_test_stats(&grad_refs, &mut gbar);
+                if needs_grad_ar {
+                    rec.comm.charge_allreduce(d, k);
+                }
+                let mean_worker_norm_sq =
+                    grad_refs.iter().map(|g| tensor::norm_sq(g)).sum::<f64>() / k as f64;
+                let ip_var = if k > 1 {
+                    let dots: Vec<f64> =
+                        grad_refs.iter().map(|g| tensor::dot(g, &gbar)).collect();
+                    let mean_dot = dots.iter().sum::<f64>() / k as f64;
+                    dots.iter().map(|t| (t - mean_dot).powi(2)).sum::<f64>() / (k - 1) as f64
+                } else {
+                    0.0
+                };
+                let psv = {
+                    let vals: Vec<f64> = on_time
+                        .iter()
+                        .filter_map(|&w| results[w].as_ref().unwrap().per_sample_var)
+                        .collect();
+                    if vals.len() == k {
+                        Some(vals.iter().sum::<f64>() / k as f64)
+                    } else {
+                        None
+                    }
+                };
+
+                let sync_s = opts.time_model.sync_time_compressed(d, needs_grad_ar, wire_frac);
+                sim_time += gate;
+                sim_time += sync_s;
+
+                // ---- per-worker metrics -----------------------------------
+                // Wall spans fold in for every gathered uplink (the physical
+                // work happened either way); contribution stats only for
+                // uplinks that made the gate.
+                for &w in &assigned {
+                    let r = results[w].as_ref().unwrap();
+                    // Wall-clock spans measured on the worker thread fold into
+                    // the one nondeterministic stat only — never the trace.
+                    roster.stats[w].wall_compute_s +=
+                        r.spans.iter().map(|sp| sp.dur_s).sum::<f64>();
+                }
+                for &w in &on_time {
+                    let r = results[w].as_ref().unwrap();
+                    let s = &mut roster.stats[w];
+                    s.rounds_contributed += 1;
+                    s.local_steps += h as u64;
+                    s.samples += h as u64 * b_eff;
+                    s.last_loss = r.loss;
+                }
+                round_train_loss = on_time
+                    .iter()
+                    .map(|&w| results[w].as_ref().unwrap().loss)
+                    .sum::<f64>()
+                    / k as f64;
+
+                // Empty merge list is the full-barrier convention, which keeps
+                // pre-sync-mode journals and snapshots byte-identical; quorum
+                // records every committed contribution as same-round.
+                let merges: Vec<(usize, u64)> = if sync_mode.is_full_barrier() {
+                    Vec::new()
+                } else {
+                    on_time.iter().map(|&w| (w, 0)).collect()
+                };
+
+                // Signals are built for every committed round (not just live
+                // ones) so the journal event and trace carry the policy-facing
+                // statistics; the policy itself is only consulted when live.
+                signals = RoundSignals {
+                    round,
+                    samples,
+                    b_local: b_eff,
+                    h,
+                    m_workers: k,
+                    active_workers: roster.active().len(),
+                    worker_scatter: scatter,
+                    gbar_norm_sq: nsq,
+                    per_sample_var: psv,
+                    mean_worker_norm_sq,
+                    inner_product_var: ip_var,
+                    lr_next: opts.lr.at(samples),
+                    wire_bytes: round_wire,
+                    logical_bytes: round_logical,
+                    compression: comp_spec.clone(),
+                    round_compute_s: gate,
+                    sync_s,
+                    quorum_fraction_met: k as f64 / assigned.len() as f64,
+                    mean_staleness: 0.0,
+                    max_staleness: 0,
+                    discounted_contributors: k as f64,
+                };
+                let ann = signals.annotations();
+                if let Some(jw) = journal.as_mut() {
+                    jw.append(&JournalEvent::SyncCommitted {
+                        round,
+                        phase: phase_name.to_string(),
+                        h,
+                        b_eff,
+                        contributors: k as u64,
+                        samples,
+                        steps,
+                        comm: rec.comm,
+                        compute_s: gate,
+                        sync_s,
+                        sim_time_s: sim_time,
+                        wire_bytes: round_wire,
+                        logical_bytes: round_logical,
+                        timing: timing.clone(),
+                        worker_scatter: Some(ann.worker_scatter),
+                        gbar_norm_sq: Some(ann.gbar_norm_sq),
+                        per_sample_var: ann.per_sample_var,
+                        merges: merges.clone(),
+                        quorum_missed: missed.clone(),
+                    })
+                    .unwrap_or_else(|e| panic!("{e}"));
+                }
+                rec.trace.push(RoundTrace {
+                    round,
+                    phase: phase_name.to_string(),
+                    h,
+                    b_eff,
+                    start_s: round_start_s,
+                    compute_s: gate,
+                    sync_s,
+                    end_s: sim_time,
+                    wire_bytes: round_wire,
+                    logical_bytes: round_logical,
+                    worker_scatter: Some(ann.worker_scatter),
+                    gbar_norm_sq: Some(ann.gbar_norm_sq),
+                    per_sample_var: ann.per_sample_var,
+                    workers: timing,
+                    merges,
+                    quorum_missed: missed,
+                });
             }
-            rec.trace.push(RoundTrace {
-                round,
-                phase: phase_name.to_string(),
-                h,
-                b_eff,
-                start_s: round_start_s,
-                compute_s: worst,
-                sync_s,
-                end_s: sim_time,
-                wire_bytes: round_wire,
-                logical_bytes: round_logical,
-                worker_scatter: Some(ann.worker_scatter),
-                gbar_norm_sq: Some(ann.gbar_norm_sq),
-                per_sample_var: ann.per_sample_var,
-                workers: timing,
-            });
 
             // ---- the joint policy decision --------------------------------
             if policy_live {
@@ -767,28 +1196,16 @@ impl TrainEngine for ClusterEngine {
             }
             rec.batch_trace.push((round, samples, b_eff));
 
-            // ---- per-worker metrics ---------------------------------------
-            for &w in &assigned {
-                let r = results[w].as_ref().unwrap();
-                let s = &mut roster.stats[w];
-                s.rounds_contributed += 1;
-                s.local_steps += h as u64;
-                s.samples += h as u64 * b_eff;
-                // Wall-clock spans measured on the worker thread fold into the
-                // one nondeterministic stat only — never into the trace.
-                s.wall_compute_s += r.spans.iter().map(|sp| sp.dur_s).sum::<f64>();
-                s.last_loss = r.loss;
-            }
-
-            // ---- evaluation on the lowest-id active worker ----------------
+            // ---- evaluation on the lowest-id idle active worker -----------
             if samples >= next_eval || samples >= opts.total_samples {
-                let train_loss = assigned
-                    .iter()
-                    .map(|&w| results[w].as_ref().unwrap().loss)
-                    .sum::<f64>()
-                    / k as f64;
+                let train_loss = round_train_loss;
                 let mut evs = None;
                 for w in roster.active() {
+                    // An in-flight worker (bounded staleness) holds mid-round
+                    // params; evaluate on one that just applied the consensus.
+                    if pending.iter().any(|p| p.worker == w) {
+                        continue;
+                    }
                     if Self::try_send(&txs, &mut roster, w, round, ToWorker::Evaluate { round }) {
                         loop {
                             match Self::recv(&from_rx) {
@@ -931,6 +1348,7 @@ impl TrainEngine for ClusterEngine {
                         micro,
                         members: roster.member_states(),
                         stats: roster.stats.clone(),
+                        pending: pending.clone(),
                     }),
                     journal_bytes: journal.as_ref().map(|j| j.bytes()).unwrap_or(0),
                     journal_seq: journal.as_ref().map(|j| j.seq()).unwrap_or(0),

@@ -33,6 +33,12 @@ pub enum ToWorker {
     RunRound { round: u64, h: u32, b_eff: u64, lrs: Vec<f64> },
     /// Evaluate the current parameters on the worker's held-out set.
     Evaluate { round: u64 },
+    /// NACK: the coordinator saw this worker's round-`round` uplink lost in
+    /// transit (an injected [`crate::config::FaultSpec::MessageLoss`]) and
+    /// asks for a resend. The worker replies with a bit-identical clone of
+    /// its cached last [`RoundResult`]; the simulated retry cost is charged
+    /// by the coordinator's time model, not measured here.
+    ResendRound { round: u64 },
     /// Report the worker-held durable state (optimizer, error-feedback
     /// residual, model/dataset internals) for a [`crate::journal::RunSnapshot`].
     /// Read-only on the worker side: a checkpoint must not perturb the run.

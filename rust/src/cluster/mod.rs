@@ -326,6 +326,7 @@ mod tests {
             warmup_rounds: 0,
             cooldown_rounds: 0,
             compression: crate::comm::CompressionSpec::identity(),
+            sync_mode: crate::config::SyncMode::FullBarrier,
             workers: vec![
                 WorkerSpec::default(),
                 WorkerSpec { speed: 0.5, ..Default::default() },
@@ -364,6 +365,7 @@ mod tests {
             warmup_rounds: 0,
             cooldown_rounds: 0,
             compression: crate::comm::CompressionSpec::identity(),
+            sync_mode: crate::config::SyncMode::FullBarrier,
             workers: vec![WorkerSpec::default(); 4],
         };
         assert!(spec.is_homogeneous());
@@ -573,6 +575,7 @@ mod tests {
                 method: crate::comm::CompressMethod::SignSgd,
                 error_feedback: true,
             },
+            sync_mode: crate::config::SyncMode::FullBarrier,
             workers: vec![WorkerSpec::default(), WorkerSpec::default()],
         };
         let rec = run_scenario(&spec).unwrap();

@@ -58,6 +58,10 @@ pub(crate) fn spawn_worker(
             let mut reference = vec![0.0f32; dim];
             let mut grad = vec![0.0f32; dim];
             let mut opt = optim.build(dim);
+            // Cache of the last RoundDone sent, for message-loss NACKs: a
+            // resend must be a bit-identical clone of the lost uplink, so the
+            // worker never recomputes — it replays the cached result.
+            let mut last_result: Option<RoundResult> = None;
             if let Some(r) = resume {
                 opt.load_state(&r.opt_state)
                     .unwrap_or_else(|e| panic!("worker {id} resume: {e}"));
@@ -97,7 +101,7 @@ pub(crate) fn spawn_worker(
                         let t1 = std::time::Instant::now();
                         let payload = compressor.encode(&params, &reference, ef.as_mut());
                         let encode_wall = t1.elapsed().as_secs_f64();
-                        let done = FromWorker::RoundDone(RoundResult {
+                        let result = RoundResult {
                             worker: id,
                             round,
                             payload,
@@ -108,8 +112,22 @@ pub(crate) fn spawn_worker(
                                 WallSpan { kind: SpanKind::LocalCompute, dur_s: compute_wall },
                                 WallSpan { kind: SpanKind::GradEncode, dur_s: encode_wall },
                             ],
-                        });
-                        if out.send(done).is_err() {
+                        };
+                        last_result = Some(result.clone());
+                        if out.send(FromWorker::RoundDone(result)).is_err() {
+                            break;
+                        }
+                    }
+                    ToWorker::ResendRound { round } => {
+                        let cached = last_result
+                            .clone()
+                            .unwrap_or_else(|| panic!("worker {id}: resend with no cached round"));
+                        assert_eq!(
+                            cached.round, round,
+                            "worker {id}: resend round mismatch (cached {}, asked {round})",
+                            cached.round
+                        );
+                        if out.send(FromWorker::RoundDone(cached)).is_err() {
                             break;
                         }
                     }

@@ -649,6 +649,132 @@ pub enum FaultSpec {
     /// Additional per-round latency (network jitter, checkpoint stall) in
     /// simulated seconds while the round is in `[from_round, until_round)`.
     ExtraLatency { from_round: u64, until_round: u64, seconds: f64 },
+    /// The worker's round-`round` uplink is lost in transit: the coordinator
+    /// NACKs it and the worker resends the identical payload, paying
+    /// `retry_s` extra simulated seconds on top of its compute + latency.
+    MessageLoss { round: u64, retry_s: f64 },
+}
+
+/// How the coordinator commits a sync round (see `cluster/coordinator.rs`).
+/// All deadlines run on the **simulated clock**, so every mode stays
+/// deterministic; `FullBarrier` is bit-for-bit the pre-sync-mode engine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SyncMode {
+    /// Wait for every assigned worker (today's behavior, the default).
+    FullBarrier,
+    /// Commit once `ceil(fraction × assigned)` uplinks are ready on the
+    /// simulated clock, or at `max_round_time` simulated seconds after the
+    /// round starts, whichever gate closes first (but never before the first
+    /// uplink). Workers that miss the gate are discarded for the round and
+    /// re-assigned next round — modeled on Psyche's `witness_nodes` quorum
+    /// and `max_round_train_time` deadline knobs.
+    Quorum { fraction: f64, max_round_time: f64 },
+    /// Fully asynchronous: each sync commits when the earliest outstanding
+    /// uplink becomes ready; a contribution from round k merging at round
+    /// k+s is weighted by `discount^s`, and a worker more than
+    /// `max_staleness` rounds behind is quarantined to catch-up admission
+    /// (fresh consensus, contribution dropped) like a late joiner.
+    BoundedStaleness { max_staleness: u64, discount: f64 },
+}
+
+impl SyncMode {
+    pub fn is_full_barrier(&self) -> bool {
+        matches!(self, SyncMode::FullBarrier)
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            SyncMode::FullBarrier => "full_barrier".into(),
+            SyncMode::Quorum { fraction, max_round_time } => {
+                format!("quorum{fraction}@{max_round_time}s")
+            }
+            SyncMode::BoundedStaleness { max_staleness, discount } => {
+                format!("stale{max_staleness}x{discount}")
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            SyncMode::FullBarrier => Json::obj(vec![("mode", Json::str("full_barrier"))]),
+            SyncMode::Quorum { fraction, max_round_time } => Json::obj(vec![
+                ("mode", Json::str("quorum")),
+                ("fraction", Json::num(*fraction)),
+                ("max_round_time", Json::num(*max_round_time)),
+            ]),
+            SyncMode::BoundedStaleness { max_staleness, discount } => Json::obj(vec![
+                ("mode", Json::str("bounded_staleness")),
+                ("max_staleness", Json::num(*max_staleness as f64)),
+                ("discount", Json::num(*discount)),
+            ]),
+        }
+    }
+
+    /// Strict parse: absent/null = full barrier, but a present section with an
+    /// unknown mode, an unknown key, or an out-of-range value is a hard error
+    /// (same convention as the compression section).
+    pub fn from_json(j: &Json) -> Result<SyncMode, String> {
+        let o = match j {
+            Json::Null => return Ok(SyncMode::FullBarrier),
+            Json::Obj(o) => o,
+            _ => return Err("sync_mode: must be an object".into()),
+        };
+        let known: &[&str] = match j.get("mode").as_str() {
+            Some("full_barrier") => &["mode"],
+            Some("quorum") => &["mode", "fraction", "max_round_time"],
+            Some("bounded_staleness") => &["mode", "max_staleness", "discount"],
+            other => return Err(format!("sync_mode: unknown mode {other:?}")),
+        };
+        for k in o.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(format!(
+                    "sync_mode: unknown key '{k}' (known keys for this mode: {})",
+                    known.join(", ")
+                ));
+            }
+        }
+        let req_f64 = |key: &str| {
+            j.get(key)
+                .as_f64()
+                .ok_or_else(|| format!("sync_mode: {key} must be a number"))
+        };
+        match j.get("mode").as_str() {
+            Some("full_barrier") => Ok(SyncMode::FullBarrier),
+            Some("quorum") => {
+                let fraction = req_f64("fraction")?;
+                let max_round_time = req_f64("max_round_time")?;
+                if !(fraction > 0.0 && fraction <= 1.0) {
+                    return Err(format!("sync_mode: fraction {fraction} must be in (0,1]"));
+                }
+                if !(max_round_time > 0.0) {
+                    return Err(format!(
+                        "sync_mode: max_round_time {max_round_time} must be positive \
+                         (simulated seconds)"
+                    ));
+                }
+                Ok(SyncMode::Quorum { fraction, max_round_time })
+            }
+            Some("bounded_staleness") => {
+                let max_staleness = j
+                    .get("max_staleness")
+                    .as_u64()
+                    .ok_or("sync_mode: max_staleness must be a non-negative integer")?;
+                let discount = req_f64("discount")?;
+                if max_staleness == 0 {
+                    return Err(
+                        "sync_mode: max_staleness must be >= 1 (0 would quarantine every \
+                         contribution)"
+                            .into(),
+                    );
+                }
+                if !(discount > 0.0 && discount <= 1.0) {
+                    return Err(format!("sync_mode: discount {discount} must be in (0,1]"));
+                }
+                Ok(SyncMode::BoundedStaleness { max_staleness, discount })
+            }
+            _ => unreachable!("mode checked above"),
+        }
+    }
 }
 
 /// One worker's declarative description inside a [`ScenarioSpec`].
@@ -704,6 +830,29 @@ impl WorkerSpec {
             .iter()
             .any(|f| matches!(f, FaultSpec::Dropout { round: r } if *r == round))
     }
+
+    /// Total simulated retry penalty for uplinks lost at `round` (0.0 when no
+    /// `MessageLoss` fault matches — and `x + 0.0` is IEEE-754-exact for the
+    /// positive times the clock produces, so fault-free rounds keep their
+    /// bits).
+    pub fn resend_penalty(&self, round: u64) -> f64 {
+        let mut s = 0.0;
+        for fault in &self.faults {
+            if let FaultSpec::MessageLoss { round: r, retry_s } = fault {
+                if *r == round {
+                    s += retry_s;
+                }
+            }
+        }
+        s
+    }
+
+    /// Whether this worker's round-`round` uplink is lost and must be resent.
+    pub fn loses_message(&self, round: u64) -> bool {
+        self.faults
+            .iter()
+            .any(|f| matches!(f, FaultSpec::MessageLoss { round: r, .. } if *r == round))
+    }
 }
 
 /// A full cluster scenario: the underlying training run plus the worker
@@ -728,6 +877,11 @@ pub struct ScenarioSpec {
     /// (identity), so every pre-existing scenario file stays valid and any of
     /// them turns into a compressed run with a one-key edit.
     pub compression: CompressionSpec,
+    /// How the coordinator commits each sync (full barrier / quorum /
+    /// bounded staleness). The JSON key is optional; absent = full barrier,
+    /// so every pre-existing scenario file parses unchanged AND serializes
+    /// unchanged (the section is only written when non-default).
+    pub sync_mode: SyncMode,
     pub workers: Vec<WorkerSpec>,
 }
 
@@ -771,6 +925,11 @@ impl ScenarioSpec {
                     ("until_round", Json::num(*until_round as f64)),
                     ("seconds", Json::num(*seconds)),
                 ]),
+                FaultSpec::MessageLoss { round, retry_s } => Json::obj(vec![
+                    ("type", Json::str("message_loss")),
+                    ("round", Json::num(*round as f64)),
+                    ("retry_s", Json::num(*retry_s)),
+                ]),
             });
             Json::obj(vec![
                 ("speed", Json::num(w.speed)),
@@ -782,14 +941,20 @@ impl ScenarioSpec {
                 ("faults", Json::arr(faults)),
             ])
         });
-        Json::obj(vec![
+        let mut pairs = vec![
             ("name", Json::str(&self.name)),
             ("run", self.run.to_json()),
             ("warmup_rounds", Json::num(self.warmup_rounds as f64)),
             ("cooldown_rounds", Json::num(self.cooldown_rounds as f64)),
             ("compression", self.compression.to_json()),
-            ("workers", Json::arr(workers)),
-        ])
+        ];
+        // Only written when non-default so pre-sync-mode scenario files
+        // round-trip byte-identically.
+        if !self.sync_mode.is_full_barrier() {
+            pairs.push(("sync_mode", self.sync_mode.to_json()));
+        }
+        pairs.push(("workers", Json::arr(workers)));
+        Json::obj(pairs)
     }
 
     /// Parse from JSON. Optional keys may be absent (or explicit `null`) and
@@ -855,6 +1020,12 @@ impl ScenarioSpec {
                                 seconds: opt_f64(f, "seconds", &ctx)?
                                     .ok_or_else(|| format!("{ctx}: extra_latency seconds"))?,
                             },
+                            Some("message_loss") => FaultSpec::MessageLoss {
+                                round: opt_u64(f, "round", &ctx)?
+                                    .ok_or_else(|| format!("{ctx}: message_loss round"))?,
+                                retry_s: opt_f64(f, "retry_s", &ctx)?
+                                    .ok_or_else(|| format!("{ctx}: message_loss retry_s"))?,
+                            },
                             other => return Err(format!("{ctx}: unknown fault type {other:?}")),
                         };
                         spec.faults.push(fault);
@@ -873,6 +1044,7 @@ impl ScenarioSpec {
             warmup_rounds: opt_u64(j, "warmup_rounds", "scenario")?.unwrap_or(0),
             cooldown_rounds: opt_u64(j, "cooldown_rounds", "scenario")?.unwrap_or(0),
             compression,
+            sync_mode: SyncMode::from_json(j.get("sync_mode"))?,
             workers,
         })
     }
@@ -941,7 +1113,34 @@ impl ScenarioSpec {
                         }
                     }
                     FaultSpec::Dropout { .. } => {}
+                    FaultSpec::MessageLoss { retry_s, .. } => {
+                        if !(*retry_s >= 0.0) {
+                            errs.push(format!("worker {i}: negative message_loss retry_s"));
+                        }
+                    }
                 }
+            }
+        }
+        if let SyncMode::BoundedStaleness { .. } = &self.sync_mode {
+            // A late merge re-averages raw parameter vectors from different
+            // rounds; compressed payloads are deltas against a consensus the
+            // coordinator has since moved past, so the references would
+            // diverge. Keep the wire dense under bounded staleness.
+            if !self.compression.is_dense() {
+                errs.push(format!(
+                    "sync_mode bounded_staleness is incompatible with the static \
+                     `compression` section ({}) — stale uplinks decode against a consensus \
+                     that has moved on; remove the compression section",
+                    self.compression.label(),
+                ));
+            }
+            if self.run.policy.as_ref().is_some_and(|p| p.controls_compression()) {
+                errs.push(format!(
+                    "sync_mode bounded_staleness is incompatible with the \
+                     compression-scheduling `{}` policy — two owners for the wire format \
+                     and stale references; use a non-compressing policy",
+                    self.run.policy.as_ref().unwrap().label(),
+                ));
             }
         }
         errs
@@ -1071,6 +1270,7 @@ mod tests {
             warmup_rounds: 2,
             cooldown_rounds: 1,
             compression: CompressionSpec::identity(),
+            sync_mode: SyncMode::FullBarrier,
             workers: vec![
                 WorkerSpec::default(),
                 WorkerSpec {
@@ -1187,6 +1387,117 @@ mod tests {
     }
 
     #[test]
+    fn scenario_sync_mode_roundtrips_and_defaults_to_full_barrier() {
+        let mut s = scenario_fixture();
+        for mode in [
+            SyncMode::Quorum { fraction: 0.75, max_round_time: 2.0 },
+            SyncMode::BoundedStaleness { max_staleness: 3, discount: 0.5 },
+        ] {
+            s.sync_mode = mode;
+            assert!(s.validate().is_empty(), "{:?}", s.validate());
+            let j = s.to_json().to_string();
+            let s2 = ScenarioSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+            assert_eq!(s, s2);
+        }
+        // the key is optional: scenarios written before sync modes parse
+        // unchanged as full barrier, and a full-barrier spec never writes it
+        s.sync_mode = SyncMode::FullBarrier;
+        let text = s.to_json().to_string();
+        assert!(!text.contains("sync_mode"), "full barrier must omit the section: {text}");
+        let s2 = ScenarioSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(s2.sync_mode, SyncMode::FullBarrier);
+        // an explicit full_barrier section also parses
+        let s3 = SyncMode::from_json(&Json::parse(r#"{"mode":"full_barrier"}"#).unwrap());
+        assert_eq!(s3.unwrap(), SyncMode::FullBarrier);
+    }
+
+    #[test]
+    fn scenario_sync_mode_malformed_values_error_instead_of_defaulting() {
+        let mut s = scenario_fixture();
+        s.sync_mode = SyncMode::Quorum { fraction: 0.75, max_round_time: 2.0 };
+        let base = s.to_json().to_string();
+        s.sync_mode = SyncMode::BoundedStaleness { max_staleness: 3, discount: 0.5 };
+        let stale = s.to_json().to_string();
+        let corruptions = [
+            // (source, good, bad, must-mention)
+            (&base, r#""mode":"quorum""#, r#""mode":"qourum""#, "unknown mode"),
+            (&base, r#""fraction":0.75"#, r#""fraction":0.75,"witnesses":3"#, "unknown key"),
+            (&base, r#""fraction":0.75"#, r#""fraction":0"#, "(0,1]"),
+            (&base, r#""fraction":0.75"#, r#""fraction":1.5"#, "(0,1]"),
+            (&base, r#""fraction":0.75"#, r#""fraction":"most""#, "must be a number"),
+            (&base, r#""max_round_time":2"#, r#""max_round_time":0"#, "positive"),
+            (&base, r#""max_round_time":2"#, r#""max_round_time":-1"#, "positive"),
+            (&stale, r#""max_staleness":3"#, r#""max_staleness":0"#, ">= 1"),
+            (&stale, r#""max_staleness":3"#, r#""max_staleness":2.5"#, "integer"),
+            (&stale, r#""discount":0.5"#, r#""discount":1.5"#, "(0,1]"),
+            (&stale, r#""discount":0.5"#, r#""discount":0.5,"lambda":0.5"#, "unknown key"),
+        ];
+        for (src, good, bad, needle) in corruptions {
+            assert!(src.contains(good), "fixture lost the field behind {good:?}");
+            let text = src.replacen(good, bad, 1);
+            let err = ScenarioSpec::from_json(&Json::parse(&text).unwrap());
+            assert!(err.is_err(), "malformed {bad:?} was silently accepted");
+            let msg = err.unwrap_err();
+            assert!(msg.contains(needle), "error for {bad:?} must mention {needle:?}: {msg}");
+        }
+    }
+
+    #[test]
+    fn scenario_rejects_bounded_staleness_plus_incompatible_knobs() {
+        // static lossy compression: stale deltas decode against a moved-on
+        // consensus, so validation refuses the combination outright
+        let mut s = scenario_fixture();
+        s.sync_mode = SyncMode::BoundedStaleness { max_staleness: 2, discount: 0.5 };
+        s.compression = CompressionSpec {
+            method: crate::comm::CompressMethod::TopK { k_frac: 0.125 },
+            error_feedback: true,
+        };
+        let errs = s.validate();
+        assert!(
+            errs.iter().any(|e| e.contains("incompatible") && e.contains("compression")),
+            "bounded staleness + lossy compression must be rejected: {errs:?}"
+        );
+        // a compression-scheduling policy is the same conflict, one level up
+        let mut s = scenario_fixture();
+        s.run = policy_cfg();
+        s.run.m_workers = 3;
+        s.sync_mode = SyncMode::BoundedStaleness { max_staleness: 2, discount: 0.5 };
+        let errs = s.validate();
+        assert!(
+            errs.iter().any(|e| e.contains("incompatible") && e.contains("policy")),
+            "bounded staleness + compressing policy must be rejected: {errs:?}"
+        );
+        // quorum mode composes with compression (references stay in lockstep)
+        let mut s = scenario_fixture();
+        s.sync_mode = SyncMode::Quorum { fraction: 0.5, max_round_time: 10.0 };
+        s.compression = CompressionSpec {
+            method: crate::comm::CompressMethod::TopK { k_frac: 0.125 },
+            error_feedback: true,
+        };
+        assert!(s.validate().is_empty(), "{:?}", s.validate());
+    }
+
+    #[test]
+    fn scenario_message_loss_fault_parses_and_queries() {
+        let mut s = scenario_fixture();
+        s.workers[0].faults.push(FaultSpec::MessageLoss { round: 3, retry_s: 0.5 });
+        assert!(s.validate().is_empty(), "{:?}", s.validate());
+        let j = s.to_json().to_string();
+        assert!(j.contains(r#""type":"message_loss""#), "{j}");
+        let s2 = ScenarioSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(s, s2);
+        let w = &s2.workers[0];
+        assert!(w.loses_message(3) && !w.loses_message(4));
+        assert_eq!(w.resend_penalty(3), 0.5);
+        assert_eq!(w.resend_penalty(2), 0.0);
+        // malformed: retry_s must be present and numeric, negatives rejected
+        let bad = j.replacen(r#""retry_s":0.5"#, r#""retry_s":"slow""#, 1);
+        assert!(ScenarioSpec::from_json(&Json::parse(&bad).unwrap()).is_err());
+        s.workers[0].faults.push(FaultSpec::MessageLoss { round: 4, retry_s: -1.0 });
+        assert!(s.validate().iter().any(|e| e.contains("retry_s")));
+    }
+
+    #[test]
     fn scenario_negative_latency_rejected() {
         let mut s = scenario_fixture();
         s.workers[0].faults.push(FaultSpec::ExtraLatency {
@@ -1253,6 +1564,7 @@ mod tests {
             warmup_rounds: 0,
             cooldown_rounds: 0,
             compression: CompressionSpec::identity(),
+            sync_mode: SyncMode::FullBarrier,
             workers: vec![WorkerSpec::default(), WorkerSpec::default()],
         };
         assert!(hom.is_homogeneous());

@@ -420,6 +420,12 @@ pub fn run_local_sgd(
             compression: comp_spec.clone(),
             round_compute_s,
             sync_s,
+            // The sequential engine is always a full barrier: every worker
+            // commits fresh, at full weight.
+            quorum_fraction_met: 1.0,
+            mean_staleness: 0.0,
+            max_staleness: 0,
+            discounted_contributors: m as f64,
         };
         let ann = signals.annotations();
         if let Some(jw) = journal.as_mut() {
@@ -441,6 +447,8 @@ pub fn run_local_sgd(
                 worker_scatter: Some(ann.worker_scatter),
                 gbar_norm_sq: Some(ann.gbar_norm_sq),
                 per_sample_var: ann.per_sample_var,
+                merges: Vec::new(),
+                quorum_missed: Vec::new(),
             })
             .unwrap_or_else(|e| panic!("{e}"));
         }
@@ -459,6 +467,8 @@ pub fn run_local_sgd(
             gbar_norm_sq: Some(ann.gbar_norm_sq),
             per_sample_var: ann.per_sample_var,
             workers: timing,
+            merges: Vec::new(),
+            quorum_missed: Vec::new(),
         });
 
         // ---- the joint policy decision -------------------------------------

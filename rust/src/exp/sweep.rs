@@ -219,6 +219,7 @@ mod tests {
             warmup_rounds: 0,
             cooldown_rounds: 0,
             compression: CompressionSpec::identity(),
+            sync_mode: crate::config::SyncMode::FullBarrier,
             workers: vec![WorkerSpec::default(), WorkerSpec::default()],
         }
     }

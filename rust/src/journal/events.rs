@@ -85,6 +85,17 @@ pub enum JournalEvent {
         worker_scatter: Option<f64>,
         gbar_norm_sq: Option<f64>,
         per_sample_var: Option<f64>,
+        /// Contributions committed at this sync as `(worker, staleness)`
+        /// pairs in (origin round, worker) order — the deterministic
+        /// late-merge order. Empty is the full-barrier convention (every
+        /// timing entry contributed same-round); absent in pre-sync-mode
+        /// journals, read as empty, and omitted on serialization so
+        /// full-barrier journals stay byte-identical to pre-sync-mode ones.
+        merges: Vec<(usize, u64)>,
+        /// Workers whose uplink missed the quorum gate (quorum mode) or was
+        /// quarantined past `max_staleness` (bounded-staleness mode) — their
+        /// contribution was discarded. Absent/empty under full barrier.
+        quorum_missed: Vec<usize>,
     },
     /// A live policy decision (the engine-clamped values the next round runs
     /// with) — exactly the [`PolicyPoint`] the run record traces.
@@ -183,6 +194,8 @@ impl JournalEvent {
                 worker_scatter,
                 gbar_norm_sq,
                 per_sample_var,
+                merges,
+                quorum_missed,
             } => {
                 pairs.extend(vec![
                     ("round", Json::num(*round as f64)),
@@ -219,6 +232,26 @@ impl JournalEvent {
                 }
                 if let Some(v) = per_sample_var {
                     pairs.push(("per_sample_var", f64_bits_json(*v)));
+                }
+                // Sync-mode fields: serialized only when non-empty, so
+                // full-barrier journals stay byte-identical to pre-sync-mode
+                // ones (and old journals parse with the empty default).
+                if !merges.is_empty() {
+                    pairs.push((
+                        "merges",
+                        Json::arr(merges.iter().map(|(w, s)| {
+                            Json::obj(vec![
+                                ("w", Json::num(*w as f64)),
+                                ("s", Json::num(*s as f64)),
+                            ])
+                        })),
+                    ));
+                }
+                if !quorum_missed.is_empty() {
+                    pairs.push((
+                        "quorum_missed",
+                        Json::arr(quorum_missed.iter().map(|w| Json::num(*w as f64))),
+                    ));
                 }
             }
             JournalEvent::PolicyDecision { point } => {
@@ -306,6 +339,8 @@ impl JournalEvent {
                 worker_scatter: opt_f64_bits(j, "worker_scatter", w)?,
                 gbar_norm_sq: opt_f64_bits(j, "gbar_norm_sq", w)?,
                 per_sample_var: opt_f64_bits(j, "per_sample_var", w)?,
+                merges: merges_from_json(j.get("merges"), w)?,
+                quorum_missed: missed_from_json(j.get("quorum_missed"), w)?,
             },
             "policy_decision" => JournalEvent::PolicyDecision {
                 point: policy_point_from_json(j.get("point"))?,
@@ -357,6 +392,44 @@ fn opt_u64_hex(j: &Json, key: &str, what: &str) -> Result<u64, String> {
         return Ok(0);
     }
     u64_from_hex_json(v, &format!("{what}.{key}"))
+}
+
+/// `(worker, staleness)` merge list: empty when absent (pre-sync-mode
+/// journal, or a full-barrier round — the empty-merges convention).
+fn merges_from_json(j: &Json, what: &str) -> Result<Vec<(usize, u64)>, String> {
+    if j.is_null() {
+        return Ok(Vec::new());
+    }
+    let arr = j.as_arr().ok_or_else(|| format!("{what}: merges must be an array"))?;
+    arr.iter()
+        .map(|t| {
+            let w = t
+                .get("w")
+                .as_usize()
+                .ok_or_else(|| format!("{what}: merges entry missing worker id"))?;
+            let s = t
+                .get("s")
+                .as_u64()
+                .ok_or_else(|| format!("{what}: merges entry missing staleness"))?;
+            Ok((w, s))
+        })
+        .collect()
+}
+
+/// Missed-quorum worker list: empty when absent.
+fn missed_from_json(j: &Json, what: &str) -> Result<Vec<usize>, String> {
+    if j.is_null() {
+        return Ok(Vec::new());
+    }
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| format!("{what}: quorum_missed must be an array"))?;
+    arr.iter()
+        .map(|t| {
+            t.as_usize()
+                .ok_or_else(|| format!("{what}: quorum_missed entry must be a worker id"))
+        })
+        .collect()
 }
 
 /// Per-worker timing array: empty when absent (pre-trace journal).
@@ -568,6 +641,8 @@ pub fn replay_events(events: &[JournalEvent]) -> Result<RunRecord, String> {
                 worker_scatter,
                 gbar_norm_sq,
                 per_sample_var,
+                merges,
+                quorum_missed,
                 ..
             } => {
                 rec.batch_trace.push((*round, *samples, *b_eff));
@@ -586,6 +661,8 @@ pub fn replay_events(events: &[JournalEvent]) -> Result<RunRecord, String> {
                     gbar_norm_sq: *gbar_norm_sq,
                     per_sample_var: *per_sample_var,
                     workers: timing.clone(),
+                    merges: merges.clone(),
+                    quorum_missed: quorum_missed.clone(),
                 });
                 clock = *sim_time_s;
                 rec.comm = *comm;
@@ -676,6 +753,8 @@ mod tests {
                 worker_scatter: Some(3.5),
                 gbar_norm_sq: Some(0.125),
                 per_sample_var: None, // absent keys must survive the round-trip
+                merges: vec![(0, 0), (2, 1)],
+                quorum_missed: vec![4],
             },
             JournalEvent::PolicyDecision {
                 point: crate::metrics::PolicyPoint {
@@ -819,6 +898,31 @@ mod tests {
     }
 
     #[test]
+    fn sync_mode_fields_are_optional_and_omitted_when_empty() {
+        let events = all_events();
+        let JournalEvent::SyncCommitted { merges, quorum_missed, .. } = &events[4] else {
+            panic!("fixture order changed");
+        };
+        assert!(!merges.is_empty() && !quorum_missed.is_empty(), "fixture must exercise them");
+        // A full-barrier event (empty merges/quorum_missed) serializes WITHOUT
+        // the keys — byte-identical to a pre-sync-mode journal line.
+        let mut ev = events[4].clone();
+        if let JournalEvent::SyncCommitted { merges, quorum_missed, .. } = &mut ev {
+            merges.clear();
+            quorum_missed.clear();
+        }
+        let text = ev.to_json().to_string();
+        assert!(!text.contains("merges"), "{text}");
+        assert!(!text.contains("quorum_missed"), "{text}");
+        // ... and a pre-sync-mode line (no keys) parses back to the empty default.
+        let back = JournalEvent::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(ev.to_json().to_string(), back.to_json().to_string());
+        if let JournalEvent::SyncCommitted { merges, quorum_missed, .. } = &back {
+            assert!(merges.is_empty() && quorum_missed.is_empty());
+        }
+    }
+
+    #[test]
     fn replay_rebuilds_metrics_from_the_log_alone() {
         let rec = replay_events(&all_events()).unwrap();
         assert_eq!(rec.label, "prop test");
@@ -834,6 +938,8 @@ mod tests {
         assert_eq!(rt.workers[1].worker, 2);
         assert_eq!(rt.worker_scatter, Some(3.5));
         assert_eq!(rt.per_sample_var, None);
+        assert_eq!(rt.merges, vec![(0, 0), (2, 1)]);
+        assert_eq!(rt.quorum_missed, vec![4]);
         // the checkpoint mark lands at the clock of the sync it follows
         assert_eq!(rec.checkpoints, vec![(7, 12.0625)]);
         assert_eq!(rec.policy_trace.len(), 1);

@@ -65,7 +65,7 @@ pub mod snapshot;
 pub use events::{
     replay_events, scan_journal, scan_journal_file, JournalEvent, JournalScan, JournalWriter,
 };
-pub use snapshot::{ClusterSnapshot, RunSnapshot, WorkerSnapshot, SNAPSHOT_VERSION};
+pub use snapshot::{ClusterSnapshot, PendingUplink, RunSnapshot, WorkerSnapshot, SNAPSHOT_VERSION};
 
 use crate::collective::CommCounters;
 use crate::metrics::{EvalPoint, PolicyPoint, WorkerSummary};

@@ -63,6 +63,30 @@ pub struct WorkerSnapshot {
     pub data_state: Json,
 }
 
+/// One in-flight contribution under `bounded_staleness` sync: a worker's
+/// round-`origin_round` uplink that has been physically gathered but whose
+/// simulated arrival (`ready_s`, absolute clock) is still in the future. The
+/// coordinator carries these across sync boundaries, so they are snapshot
+/// state: a kill/resume mid-late-merge must replay the exact merge.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PendingUplink {
+    pub worker: usize,
+    pub origin_round: u64,
+    pub h: u32,
+    pub b_eff: u64,
+    /// Absolute simulated clock at which this uplink reaches the coordinator.
+    pub ready_s: f64,
+    pub compute_s: f64,
+    pub latency_s: f64,
+    pub loss: f64,
+    pub per_sample_var: Option<f64>,
+    /// The contribution's post-round parameters, decoded dense (bounded
+    /// staleness runs are identity-compressed by config validation).
+    pub params: Vec<f32>,
+    /// The last local batch gradient (norm-test input at merge time).
+    pub grad: Vec<f32>,
+}
+
 /// Cluster-engine extras: the coordinator's phase counters and the membership
 /// roster with its per-worker metric accumulators.
 #[derive(Debug, Clone, PartialEq)]
@@ -74,6 +98,10 @@ pub struct ClusterSnapshot {
     /// Per-worker membership: `"pending"`, `"active"`, or `"left"`.
     pub members: Vec<String>,
     pub stats: Vec<WorkerSummary>,
+    /// In-flight `bounded_staleness` contributions, (origin round, worker)
+    /// order. Serialized only when non-empty, so full-barrier/quorum
+    /// snapshots stay byte-identical to pre-sync-mode ones (absent: empty).
+    pub pending: Vec<PendingUplink>,
 }
 
 /// The full run state at the boundary of committed round `round`. Resume
@@ -153,15 +181,71 @@ impl WorkerSnapshot {
     }
 }
 
+impl PendingUplink {
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("worker", Json::num(self.worker as f64)),
+            ("origin_round", u64_hex_json(self.origin_round)),
+            ("h", Json::num(self.h as f64)),
+            ("b_eff", u64_hex_json(self.b_eff)),
+            ("ready_s", f64_bits_json(self.ready_s)),
+            ("compute_s", f64_bits_json(self.compute_s)),
+            ("latency_s", f64_bits_json(self.latency_s)),
+            ("loss", f64_bits_json(self.loss)),
+            ("params", Json::str(&f32s_to_hex(&self.params))),
+            ("grad", Json::str(&f32s_to_hex(&self.grad))),
+        ];
+        if let Some(v) = self.per_sample_var {
+            pairs.push(("per_sample_var", f64_bits_json(v)));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> Result<PendingUplink, String> {
+        let w = "pending uplink";
+        let psv = {
+            let v = j.get("per_sample_var");
+            if v.is_null() {
+                None
+            } else {
+                Some(f64_from_bits_json(v, &format!("{w}: per_sample_var"))?)
+            }
+        };
+        Ok(PendingUplink {
+            worker: need_usize(j, "worker", w)?,
+            origin_round: u64_from_hex_json(j.get("origin_round"), w)?,
+            h: need_u32(j, "h", w)?,
+            b_eff: u64_from_hex_json(j.get("b_eff"), w)?,
+            ready_s: need_f64_bits(j, "ready_s", w)?,
+            compute_s: need_f64_bits(j, "compute_s", w)?,
+            latency_s: need_f64_bits(j, "latency_s", w)?,
+            loss: need_f64_bits(j, "loss", w)?,
+            per_sample_var: psv,
+            params: f32s_from_hex(
+                j.get("params").as_str().ok_or_else(|| format!("{w}: missing params"))?,
+                &format!("{w}: params"),
+            )?,
+            grad: f32s_from_hex(
+                j.get("grad").as_str().ok_or_else(|| format!("{w}: missing grad"))?,
+                &format!("{w}: grad"),
+            )?,
+        })
+    }
+}
+
 impl ClusterSnapshot {
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("warmup_left", u64_hex_json(self.warmup_left)),
             ("cooldown_left", u64_hex_json(self.cooldown_left)),
             ("micro", u64_hex_json(self.micro)),
             ("members", Json::arr(self.members.iter().map(|m| Json::str(m)))),
             ("stats", Json::arr(self.stats.iter().map(worker_summary_to_json))),
-        ])
+        ];
+        if !self.pending.is_empty() {
+            pairs.push(("pending", Json::arr(self.pending.iter().map(|p| p.to_json()))));
+        }
+        Json::obj(pairs)
     }
 
     fn from_json(j: &Json) -> Result<ClusterSnapshot, String> {
@@ -186,12 +270,22 @@ impl ClusterSnapshot {
             .iter()
             .map(worker_summary_from_json)
             .collect::<Result<Vec<_>, String>>()?;
+        // Absent in pre-sync-mode snapshots (and in full-barrier/quorum
+        // runs, which never carry in-flight contributions): empty.
+        let pending = match j.get("pending").as_arr() {
+            Some(arr) => arr
+                .iter()
+                .map(PendingUplink::from_json)
+                .collect::<Result<Vec<_>, String>>()?,
+            None => Vec::new(),
+        };
         Ok(ClusterSnapshot {
             warmup_left: u64_from_hex_json(j.get("warmup_left"), w)?,
             cooldown_left: u64_from_hex_json(j.get("cooldown_left"), w)?,
             micro: u64_from_hex_json(j.get("micro"), w)?,
             members,
             stats,
+            pending,
         })
     }
 }
@@ -236,6 +330,22 @@ fn round_trace_to_json(rt: &RoundTrace) -> Json {
     if let Some(v) = rt.per_sample_var {
         pairs.push(("per_sample_var", f64_bits_json(v)));
     }
+    // Sync-mode fields: only when non-empty (the full-barrier convention),
+    // so full-barrier snapshots stay byte-identical to pre-sync-mode ones.
+    if !rt.merges.is_empty() {
+        pairs.push((
+            "merges",
+            Json::arr(rt.merges.iter().map(|&(w, s)| {
+                Json::obj(vec![("w", Json::num(w as f64)), ("s", Json::num(s as f64))])
+            })),
+        ));
+    }
+    if !rt.quorum_missed.is_empty() {
+        pairs.push((
+            "quorum_missed",
+            Json::arr(rt.quorum_missed.iter().map(|&w| Json::num(w as f64))),
+        ));
+    }
     Json::obj(pairs)
 }
 
@@ -265,6 +375,33 @@ fn round_trace_from_json(j: &Json) -> Result<RoundTrace, String> {
             })
         })
         .collect::<Result<Vec<_>, String>>()?;
+    let merges = match j.get("merges").as_arr() {
+        Some(arr) => arr
+            .iter()
+            .map(|t| {
+                let wk = t
+                    .get("w")
+                    .as_usize()
+                    .ok_or_else(|| format!("{w}: merges entry missing worker id"))?;
+                let s = t
+                    .get("s")
+                    .as_u64()
+                    .ok_or_else(|| format!("{w}: merges entry missing staleness"))?;
+                Ok((wk, s))
+            })
+            .collect::<Result<Vec<_>, String>>()?,
+        None => Vec::new(),
+    };
+    let quorum_missed = match j.get("quorum_missed").as_arr() {
+        Some(arr) => arr
+            .iter()
+            .map(|t| {
+                t.as_usize()
+                    .ok_or_else(|| format!("{w}: quorum_missed entry must be a worker id"))
+            })
+            .collect::<Result<Vec<_>, String>>()?,
+        None => Vec::new(),
+    };
     Ok(RoundTrace {
         round: u64_from_hex_json(j.get("round"), w)?,
         phase: need_str(j, "phase", w)?,
@@ -280,6 +417,8 @@ fn round_trace_from_json(j: &Json) -> Result<RoundTrace, String> {
         gbar_norm_sq: opt("gbar_norm_sq")?,
         per_sample_var: opt("per_sample_var")?,
         workers,
+        merges,
+        quorum_missed,
     })
 }
 
@@ -596,6 +735,8 @@ mod tests {
                 gbar_norm_sq: None, // absent key must survive
                 per_sample_var: Some(0.0625),
                 workers: vec![RoundWorkerTiming { worker: 1, compute_s: 0.5, latency_s: 0.05 }],
+                merges: vec![(1, 0), (0, 2)],
+                quorum_missed: vec![3],
             }],
             checkpoints: vec![(3, 1.125), (7, 2.75)],
             diverged: false,
@@ -638,6 +779,19 @@ mod tests {
                     wall_compute_s: 0.125,
                     last_loss: 0.375,
                 }],
+                pending: vec![PendingUplink {
+                    worker: 1,
+                    origin_round: 6,
+                    h: 8,
+                    b_eff: 64,
+                    ready_s: 3.0625,
+                    compute_s: f64::from_bits(0x3fe8_0000_0000_0001), // 0.75 + 1 ulp
+                    latency_s: 0.05,
+                    loss: 0.4375,
+                    per_sample_var: None, // absent key must survive
+                    params: vec![0.5, -0.0, f32::from_bits(0x7fc0_5678)],
+                    grad: vec![-1.0, 0.25, 0.0],
+                }],
             }),
             journal_bytes: 5311,
             journal_seq: 23,
@@ -664,6 +818,49 @@ mod tests {
         assert_eq!(back.trace[0].gbar_norm_sq, None);
         assert_eq!(back.trace[0].workers[0].latency_s, 0.05);
         assert_eq!(back.checkpoints, vec![(3, 1.125), (7, 2.75)]);
+        assert_eq!(back.trace[0].merges, vec![(1, 0), (0, 2)]);
+        assert_eq!(back.trace[0].quorum_missed, vec![3]);
+        let pending = &back.cluster.as_ref().unwrap().pending;
+        assert_eq!(pending.len(), 1);
+        assert_eq!(pending[0].origin_round, 6);
+        assert_eq!(pending[0].compute_s.to_bits(), 0x3fe8_0000_0000_0001);
+        assert_eq!(pending[0].params[2].to_bits(), 0x7fc0_5678);
+        assert_eq!(pending[0].per_sample_var, None);
+    }
+
+    #[test]
+    fn pre_sync_mode_snapshot_reads_with_empty_pending_and_merges() {
+        // simulate a snapshot from before sync modes existed: strip the new
+        // keys from the cluster section and the round trace
+        let snap = sample_snapshot();
+        let text = snap.to_json().to_string();
+        let mut j = Json::parse(&text).unwrap();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(c)) = o.get_mut("cluster") {
+                c.remove("pending");
+            }
+            if let Some(Json::Arr(trace)) = o.get_mut("trace") {
+                for rt in trace.iter_mut() {
+                    if let Json::Obj(r) = rt {
+                        r.remove("merges");
+                        r.remove("quorum_missed");
+                    }
+                }
+            }
+        }
+        let back = RunSnapshot::from_json(&j).unwrap();
+        assert!(back.cluster.as_ref().unwrap().pending.is_empty());
+        assert!(back.trace[0].merges.is_empty());
+        assert!(back.trace[0].quorum_missed.is_empty());
+        // and a run that never leaves full barrier serializes WITHOUT the keys
+        let mut fb = sample_snapshot();
+        fb.cluster.as_mut().unwrap().pending.clear();
+        fb.trace[0].merges.clear();
+        fb.trace[0].quorum_missed.clear();
+        let text = fb.to_json().to_string();
+        assert!(!text.contains("pending\""), "{text}");
+        assert!(!text.contains("merges"), "{text}");
+        assert!(!text.contains("quorum_missed"), "{text}");
     }
 
     #[test]

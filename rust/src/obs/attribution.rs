@@ -1,18 +1,27 @@
 //! Straggler attribution: who gated each barrier, by how much, and where the
 //! roster's time went.
 //!
-//! Every committed sync is a barrier: the round's simulated duration is
-//! `max_w(compute_w + latency_w) + sync_s`, so exactly one contributor sets
-//! the critical path while everyone else waits. This module decomposes that
-//! per round — the gating worker, its margin over the runner-up, and the
-//! compute vs. injected-latency split of its gate time — and aggregates a
-//! per-worker stall ranking, making fault-injection scenarios
-//! (`straggler8`, `int8_straggler`, `elastic4to8`) *explainable* rather than
-//! just survivable. Built purely from the deterministic
-//! [`crate::obs::RoundTrace`] records, so a journal-replayed attribution is
-//! identical to the live run's.
+//! Under the full barrier every committed sync is a barrier: the round's
+//! simulated duration is `max_w(compute_w + latency_w) + sync_s`, so exactly
+//! one contributor sets the critical path while everyone else waits. This
+//! module decomposes that per round — the gating worker, its margin over the
+//! runner-up, and the compute vs. injected-latency split of its gate time —
+//! and aggregates a per-worker stall ranking, making fault-injection
+//! scenarios (`straggler8`, `int8_straggler`, `elastic4to8`) *explainable*
+//! rather than just survivable.
+//!
+//! The semi-synchronous modes split the roster further: a worker can **gate**
+//! the commit (it raced the gate and arrived last among the committed), **miss
+//! quorum** (its uplink arrived past the gate and was discarded, or its
+//! contribution was quarantined past the staleness bound), or **merge late**
+//! (bounded staleness: its round-k contribution committed at round k+s). The
+//! gate race is decided among the fresh committed contributions only — a
+//! missed or stale uplink never gated anything. Built purely from the
+//! deterministic [`crate::obs::RoundTrace`] records (`merges` /
+//! `quorum_missed`), so a journal-replayed attribution is identical to the
+//! live run's.
 
-use super::span::RoundTrace;
+use super::span::{RoundTrace, RoundWorkerTiming};
 
 /// The critical-path decomposition of one committed sync.
 #[derive(Debug, Clone, PartialEq)]
@@ -46,6 +55,14 @@ pub struct WorkerStall {
     pub stall_s: f64,
     pub compute_s: f64,
     pub latency_s: f64,
+    /// Rounds where this worker's uplink missed the quorum gate (discarded),
+    /// or its in-flight contribution was quarantined past the staleness
+    /// bound. These rounds do not count toward `rounds`.
+    pub missed_quorum_rounds: u64,
+    /// Rounds where this worker's contribution merged late — committed at
+    /// staleness s > 0 under bounded staleness. Counted in `rounds` too (the
+    /// work landed), but never in the gate race.
+    pub late_merge_rounds: u64,
 }
 
 /// The full attribution: per-round critical paths plus the per-worker stall
@@ -61,14 +78,39 @@ impl Attribution {
     pub fn from_trace(trace: &[RoundTrace]) -> Attribution {
         let mut rounds = Vec::with_capacity(trace.len());
         let mut per_worker: std::collections::BTreeMap<usize, WorkerStall> = Default::default();
+        let blank = |worker: usize| WorkerStall {
+            worker,
+            rounds: 0,
+            gated_rounds: 0,
+            gated_margin_s: 0.0,
+            stall_s: 0.0,
+            compute_s: 0.0,
+            latency_s: 0.0,
+            missed_quorum_rounds: 0,
+            late_merge_rounds: 0,
+        };
         for rt in trace {
             if rt.workers.is_empty() {
                 continue; // pre-trace journal: no per-worker timing recorded
             }
-            let mut gater = rt.workers[0].worker;
+            // The gate race runs over the fresh committed contributions only:
+            // with an empty merge list (full barrier) that is every timed
+            // worker; otherwise the same-round merges. A quorum miss or a
+            // stale merge never gated the commit.
+            let fresh: Vec<&RoundWorkerTiming> = if rt.merges.is_empty() {
+                rt.workers.iter().collect()
+            } else {
+                rt.workers
+                    .iter()
+                    .filter(|wt| rt.merges.iter().any(|&(w, s)| w == wt.worker && s == 0))
+                    .collect()
+            };
+            let all: Vec<&RoundWorkerTiming> = rt.workers.iter().collect();
+            let racers = if fresh.is_empty() { &all } else { &fresh };
+            let mut gater = racers[0].worker;
             let (mut best, mut second) = (f64::NEG_INFINITY, f64::NEG_INFINITY);
             let (mut g_compute, mut g_latency) = (0.0, 0.0);
-            for wt in &rt.workers {
+            for wt in racers {
                 let t = wt.ready_s();
                 if t > best {
                     second = best;
@@ -80,26 +122,43 @@ impl Attribution {
                     second = t;
                 }
             }
-            let margin_s = if rt.workers.len() > 1 { best - second } else { 0.0 };
+            let margin_s = if racers.len() > 1 { best - second } else { 0.0 };
             let mut wait_total_s = 0.0;
             for wt in &rt.workers {
-                let entry = per_worker.entry(wt.worker).or_insert_with(|| WorkerStall {
-                    worker: wt.worker,
-                    rounds: 0,
-                    gated_rounds: 0,
-                    gated_margin_s: 0.0,
-                    stall_s: 0.0,
-                    compute_s: 0.0,
-                    latency_s: 0.0,
-                });
-                entry.rounds += 1;
+                let entry =
+                    per_worker.entry(wt.worker).or_insert_with(|| blank(wt.worker));
                 entry.compute_s += wt.compute_s;
                 entry.latency_s += wt.latency_s;
+                if rt.quorum_missed.contains(&wt.worker) {
+                    entry.missed_quorum_rounds += 1;
+                    continue; // discarded: gated nothing, contributed nothing
+                }
+                entry.rounds += 1;
+                let staleness = rt
+                    .merges
+                    .iter()
+                    .find(|&&(w, _)| w == wt.worker)
+                    .map(|&(_, s)| s);
+                if let Some(s) = staleness {
+                    if s > 0 {
+                        // merged at round k+s: out of this round's gate race
+                        entry.late_merge_rounds += 1;
+                        continue;
+                    }
+                }
                 let wait = rt.compute_s - wt.ready_s();
                 if wait > 0.0 {
                     entry.stall_s += wait;
                     wait_total_s += wait;
                 }
+            }
+            // Quarantined workers under bounded staleness carry no timing row
+            // in the merge-set trace: record the miss from the side list.
+            for &w in &rt.quorum_missed {
+                if rt.workers.iter().any(|wt| wt.worker == w) {
+                    continue;
+                }
+                per_worker.entry(w).or_insert_with(|| blank(w)).missed_quorum_rounds += 1;
             }
             let g = per_worker.get_mut(&gater).unwrap();
             g.gated_rounds += 1;
@@ -147,14 +206,30 @@ impl Attribution {
                 top.latency_s,
             ));
         }
+        let missed_total: u64 = self.ranking.iter().map(|w| w.missed_quorum_rounds).sum();
+        let late_total: u64 = self.ranking.iter().map(|w| w.late_merge_rounds).sum();
+        if missed_total > 0 || late_total > 0 {
+            out.push_str(&format!(
+                "  semi-sync: {late_total} contributions merged late, {missed_total} \
+                 missed quorum (merged at k+s or discarded)\n",
+            ));
+        }
         out.push_str(
-            "  worker  rounds  gated  gated_margin_s  stall_s  compute_s  latency_s\n",
+            "  worker  rounds  gated  gated_margin_s  stall_s  compute_s  latency_s  \
+             missed_q  late\n",
         );
         for w in &self.ranking {
             out.push_str(&format!(
-                "  {:>6}  {:>6}  {:>5}  {:>14.6}  {:>7.4}  {:>9.4}  {:>9.4}\n",
-                w.worker, w.rounds, w.gated_rounds, w.gated_margin_s, w.stall_s, w.compute_s,
+                "  {:>6}  {:>6}  {:>5}  {:>14.6}  {:>7.4}  {:>9.4}  {:>9.4}  {:>8}  {:>4}\n",
+                w.worker,
+                w.rounds,
+                w.gated_rounds,
+                w.gated_margin_s,
+                w.stall_s,
+                w.compute_s,
                 w.latency_s,
+                w.missed_quorum_rounds,
+                w.late_merge_rounds,
             ));
         }
         out
@@ -186,6 +261,8 @@ mod tests {
                 .iter()
                 .map(|&(w, c, l)| RoundWorkerTiming { worker: w, compute_s: c, latency_s: l })
                 .collect(),
+            merges: vec![],
+            quorum_missed: vec![],
         }
     }
 
@@ -243,5 +320,46 @@ mod tests {
         let a = Attribution::from_trace(&[r]);
         assert!(a.rounds.is_empty());
         assert_eq!(a.top_gater(), None);
+    }
+
+    #[test]
+    fn quorum_miss_is_not_the_gater_and_is_attributed_separately() {
+        // Worker 2 is the slowest arrival but missed the quorum gate (1.0s):
+        // the gate race runs over the committed pair only.
+        let mut r = rt(0, &[(0, 0.5, 0.0), (1, 1.0, 0.0), (2, 9.0, 0.0)]);
+        r.compute_s = 1.0;
+        r.end_s = 1.0 + r.sync_s;
+        r.merges = vec![(0, 0), (1, 0)];
+        r.quorum_missed = vec![2];
+        let a = Attribution::from_trace(&[r]);
+        assert_eq!(a.rounds[0].gater, 1, "the gate race excludes the miss");
+        assert_eq!(a.rounds[0].margin_s, 0.5);
+        let w2 = a.ranking.iter().find(|w| w.worker == 2).unwrap();
+        assert_eq!(w2.missed_quorum_rounds, 1);
+        assert_eq!(w2.rounds, 0, "a discarded uplink contributed nothing");
+        assert_eq!(w2.gated_rounds, 0);
+        let rep = a.report();
+        assert!(rep.contains("missed quorum"), "{rep}");
+    }
+
+    #[test]
+    fn late_merges_count_but_never_gate() {
+        // Bounded staleness: worker 3's round-k contribution merged here at
+        // staleness 2; worker 0 committed fresh and gates by definition.
+        let mut r = rt(5, &[(0, 0.5, 0.0), (3, 4.0, 0.0)]);
+        r.compute_s = 0.5;
+        r.end_s = 0.5 + r.sync_s;
+        r.merges = vec![(3, 2), (0, 0)];
+        r.quorum_missed = vec![7]; // quarantined: no timing row in the trace
+        let a = Attribution::from_trace(&[r]);
+        assert_eq!(a.rounds[0].gater, 0);
+        let w3 = a.ranking.iter().find(|w| w.worker == 3).unwrap();
+        assert_eq!(w3.late_merge_rounds, 1);
+        assert_eq!(w3.rounds, 1, "a late merge still contributed");
+        assert_eq!(w3.gated_rounds, 0);
+        let w7 = a.ranking.iter().find(|w| w.worker == 7).unwrap();
+        assert_eq!(w7.missed_quorum_rounds, 1);
+        let rep = a.report();
+        assert!(rep.contains("1 contributions merged late"), "{rep}");
     }
 }

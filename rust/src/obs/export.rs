@@ -142,13 +142,21 @@ pub fn rounds_csv(trace: &[RoundTrace]) -> String {
 /// Per-worker stall-ranking CSV (`<label>.stalls.csv`), worst gater first.
 pub fn stalls_csv(attr: &Attribution) -> String {
     let mut out = String::from(
-        "worker,rounds,gated_rounds,gated_margin_s,stall_s,compute_s,latency_s\n",
+        "worker,rounds,gated_rounds,gated_margin_s,stall_s,compute_s,latency_s,\
+         missed_quorum_rounds,late_merge_rounds\n",
     );
     for w in &attr.ranking {
         out.push_str(&format!(
-            "{},{},{},{},{},{},{}\n",
-            w.worker, w.rounds, w.gated_rounds, w.gated_margin_s, w.stall_s, w.compute_s,
+            "{},{},{},{},{},{},{},{},{}\n",
+            w.worker,
+            w.rounds,
+            w.gated_rounds,
+            w.gated_margin_s,
+            w.stall_s,
+            w.compute_s,
             w.latency_s,
+            w.missed_quorum_rounds,
+            w.late_merge_rounds,
         ));
     }
     out
@@ -182,6 +190,8 @@ mod tests {
                     RoundWorkerTiming { worker: 0, compute_s: 1.0, latency_s: 0.0 },
                     RoundWorkerTiming { worker: 1, compute_s: 0.5, latency_s: 0.0 },
                 ],
+                merges: vec![],
+                quorum_missed: vec![],
             });
         }
         rec.checkpoints.push((2, rec.trace[2].end_s));

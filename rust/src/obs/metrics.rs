@@ -226,6 +226,14 @@ impl MetricRegistry {
                     reg.observe("adaloco_barrier_wait_seconds", wait);
                 }
             }
+            // Semi-sync modes: staleness per committed contribution (all
+            // zeros under quorum, where every commit is fresh; empty merge
+            // lists — the full-barrier convention — observe nothing) and a
+            // counter of discarded/quarantined uplinks.
+            for &(_, s) in &rt.merges {
+                reg.observe("adaloco_round_staleness", s as f64);
+            }
+            reg.inc("adaloco_quorum_missed_total", rt.quorum_missed.len() as u64);
         }
         reg
     }

@@ -209,6 +209,16 @@ pub struct RoundTrace {
     pub per_sample_var: Option<f64>,
     /// Contributors' timing, ascending worker order.
     pub workers: Vec<RoundWorkerTiming>,
+    /// Contributions committed at this sync as `(worker, staleness)` pairs,
+    /// ordered by (origin round, worker). **Empty is the full-barrier
+    /// convention**: every worker in `workers` contributed same-round
+    /// (staleness 0) — which keeps pre-sync-mode artifacts parseable and
+    /// full-barrier artifacts byte-identical to before this field existed.
+    pub merges: Vec<(usize, u64)>,
+    /// Workers whose uplink missed the quorum gate this round (their
+    /// contribution was discarded, not merged late). Empty under full
+    /// barrier and bounded staleness.
+    pub quorum_missed: Vec<usize>,
 }
 
 impl RoundTrace {
@@ -317,6 +327,8 @@ mod tests {
                 .iter()
                 .map(|&(w, c, l)| RoundWorkerTiming { worker: w, compute_s: c, latency_s: l })
                 .collect(),
+            merges: vec![],
+            quorum_missed: vec![],
         }
     }
 

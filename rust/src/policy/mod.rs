@@ -129,6 +129,19 @@ pub struct RoundSignals {
     pub round_compute_s: f64,
     /// Simulated communication seconds of this round's sync.
     pub sync_s: f64,
+    /// Fraction of this round's assigned workers whose uplinks made the
+    /// commit gate (1.0 under `full_barrier`, which waits for everyone).
+    pub quorum_fraction_met: f64,
+    /// Mean staleness s (in rounds) over the contributions merged at this
+    /// sync: 0.0 when every contribution is same-round (full barrier, quorum).
+    pub mean_staleness: f64,
+    /// Largest staleness s merged at this sync (0 under full barrier/quorum).
+    pub max_staleness: u64,
+    /// Σ λ^s over the merged contributions — the *effective* contributor
+    /// count after the staleness discount. Equals `m_workers as f64` when
+    /// every contribution is fresh; policies trading batch growth against
+    /// staleness should read this, not `m_workers`.
+    pub discounted_contributors: f64,
 }
 
 /// The gradient-statistics subset of [`RoundSignals`] that rides the journal's
@@ -303,6 +316,10 @@ pub(crate) mod tests {
             compression: CompressionSpec::identity(),
             round_compute_s: 1.0,
             sync_s: 0.01,
+            quorum_fraction_met: 1.0,
+            mean_staleness: 0.0,
+            max_staleness: 0,
+            discounted_contributors: m as f64,
         }
     }
 

@@ -4,7 +4,7 @@
 //! anchor for all future scaling work).
 
 use adaloco::cluster::run_scenario;
-use adaloco::config::ScenarioSpec;
+use adaloco::config::{ScenarioSpec, SyncMode};
 use adaloco::exp::run_config;
 use adaloco::util::json::Json;
 use std::path::PathBuf;
@@ -34,6 +34,8 @@ fn all_committed_scenarios_parse_and_roundtrip() {
         "signsgd_elastic.json",
         "int8_straggler.json",
         "adaptive_policy.json",
+        "quorum8.json",
+        "stale_async4.json",
     ] {
         let spec = load(name);
         let j = spec.to_json().to_string();
@@ -235,6 +237,99 @@ fn int8_straggler_scenario_completes() {
     let slow = &rec.worker_stats[3];
     assert_eq!(slow.speed, 0.5);
     assert!(slow.sim_compute_s > rec.worker_stats[0].sim_compute_s);
+}
+
+/// Pins the full-barrier semantics of the committed heterogeneous scenarios
+/// now that the coordinator carries a sync-mode state machine: both must
+/// still declare (by omission) `full_barrier`, their traces must carry the
+/// full-barrier conventions (no merge list, nobody missed a gate), and a
+/// degenerate quorum of 1.0 — everyone is a witness — must reproduce the
+/// barrier bit-for-bit through the gate-partition code path.
+#[test]
+fn full_barrier_scenarios_are_pinned_bit_for_bit() {
+    for name in ["straggler8.json", "elastic4to8.json"] {
+        let spec = load(name);
+        assert!(spec.sync_mode.is_full_barrier(), "{name} must stay a full-barrier scenario");
+        let barrier = run_scenario(&spec).expect("full-barrier run");
+        for rt in &barrier.trace {
+            assert!(rt.merges.is_empty(), "{name} round {}: barrier trace grew merges", rt.round);
+            assert!(rt.quorum_missed.is_empty(), "{name} round {}: barrier missed a worker", rt.round);
+        }
+
+        let mut everyone = spec.clone();
+        everyone.sync_mode = SyncMode::Quorum { fraction: 1.0, max_round_time: 1e9 };
+        let quorum = run_scenario(&everyone).expect("quorum-of-everyone run");
+        assert_eq!(barrier.comm, quorum.comm, "{name}: comm diverged under quorum 1.0");
+        assert_eq!(barrier.batch_trace, quorum.batch_trace, "{name}: batch schedule diverged");
+        assert_eq!(
+            barrier.sim_time_s.to_bits(),
+            quorum.sim_time_s.to_bits(),
+            "{name}: quorum of everyone must cost exactly the barrier"
+        );
+        let (a, b) = (barrier.points.last().unwrap(), quorum.points.last().unwrap());
+        assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits(), "{name}: final loss not bit-equal");
+        // the only permitted difference: quorum mode records who committed
+        for (x, y) in barrier.trace.iter().zip(&quorum.trace) {
+            assert!(y.quorum_missed.is_empty(), "{name} round {}: quorum 1.0 dropped someone", x.round);
+            assert_eq!(y.merges.len(), x.workers.len(), "{name} round {}: merge roster", x.round);
+        }
+    }
+}
+
+/// Acceptance anchor for quorum sync: with a hard straggler (speed 0.25) and
+/// an injected message loss, `quorum8` must complete without stalling and in
+/// strictly fewer simulated seconds than the same scenario forced back to a
+/// full barrier, because the gate closes at the 6th uplink instead of the
+/// straggler's.
+#[test]
+fn quorum8_beats_the_full_barrier_on_sim_time() {
+    let spec = load("quorum8.json");
+    assert!(
+        matches!(spec.sync_mode, SyncMode::Quorum { fraction, .. } if fraction == 0.75),
+        "quorum8.json must stay a 0.75 quorum scenario"
+    );
+    let rec = run_scenario(&spec).expect("quorum8 run");
+    assert!(!rec.diverged);
+    assert!(rec.total_samples >= spec.run.total_samples, "quorum run stalled short of budget");
+    assert!(
+        rec.trace.iter().any(|rt| !rt.quorum_missed.is_empty()),
+        "the hard straggler never missed the gate"
+    );
+
+    let mut barrier = spec.clone();
+    barrier.sync_mode = SyncMode::FullBarrier;
+    let slow = run_scenario(&barrier).expect("full-barrier quorum8 run");
+    assert!(
+        rec.sim_time_s < slow.sim_time_s,
+        "quorum gate did not save simulated time: {} vs barrier {}",
+        rec.sim_time_s,
+        slow.sim_time_s
+    );
+}
+
+/// Bounded-staleness acceptance: the slow worker's uplinks commit a round
+/// late with the λ^s discount instead of gating anyone, the budget is still
+/// reached, and the model still learns.
+#[test]
+fn stale_async4_merges_late_and_still_learns() {
+    let spec = load("stale_async4.json");
+    assert!(
+        matches!(spec.sync_mode, SyncMode::BoundedStaleness { .. }),
+        "stale_async4.json must stay a bounded-staleness scenario"
+    );
+    let rec = run_scenario(&spec).expect("stale_async4 run");
+    assert!(!rec.diverged);
+    assert!(rec.total_samples >= spec.run.total_samples, "stale run stalled short of budget");
+    assert!(
+        rec.trace.iter().any(|rt| rt.merges.iter().any(|&(_, s)| s > 0)),
+        "the slow worker never merged late"
+    );
+    // the slow worker keeps contributing — late, not dropped
+    let slow = &rec.worker_stats[3];
+    assert!(slow.rounds_contributed > 0, "late merges must still count as contributions");
+    assert!(slow.samples > 0);
+    let acc = rec.best_val_acc();
+    assert!(acc > 0.4, "stale run failed to learn: best acc {acc} (chance = 0.125)");
 }
 
 #[test]

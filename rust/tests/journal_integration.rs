@@ -4,12 +4,16 @@
 //! journal events, and the final snapshot itself. Exercised on both engines,
 //! with the cluster scenario stacking stragglers, a dropout, elastic
 //! join/leave, and policy-driven mid-run compression switches (the EF-reset
-//! convention) on top.
+//! convention) on top — and on every sync mode: the full barrier, a quorum
+//! gate with injected message loss, and bounded staleness (including kills
+//! that land while a contribution is mid-late-merge, i.e. in the snapshot's
+//! `pending` queue).
 
 use adaloco::cluster::run_scenario_durable;
 use adaloco::comm::CompressionSpec;
 use adaloco::config::{
-    BatchStrategy, DataSpec, FaultSpec, ModelSpec, RunConfig, ScenarioSpec, SyncSpec, WorkerSpec,
+    BatchStrategy, DataSpec, FaultSpec, ModelSpec, RunConfig, ScenarioSpec, SyncMode, SyncSpec,
+    WorkerSpec,
 };
 use adaloco::exp::run_config_durable;
 use adaloco::journal::{
@@ -68,6 +72,7 @@ fn cluster_scenario() -> ScenarioSpec {
         warmup_rounds: 2,
         cooldown_rounds: 1,
         compression: CompressionSpec::identity(), // the policy owns the wire format
+        sync_mode: SyncMode::FullBarrier,
         workers: vec![
             WorkerSpec::default(),
             WorkerSpec { leave_round: Some(6), ..Default::default() },
@@ -81,6 +86,34 @@ fn cluster_scenario() -> ScenarioSpec {
             },
         ],
     }
+}
+
+/// The same elastic fault surface under a 0.75 quorum gate, plus an injected
+/// message loss (the NACK/resend axis): the straggler misses the gate while
+/// it straggles, so the journal carries real `quorum_missed` entries.
+fn quorum_scenario() -> ScenarioSpec {
+    let mut s = cluster_scenario();
+    s.name = "resume quorum".into();
+    s.run.label = "cluster quorum resume".into();
+    s.sync_mode = SyncMode::Quorum { fraction: 0.75, max_round_time: 1e6 };
+    s.workers[0].faults.push(FaultSpec::MessageLoss { round: 3, retry_s: 0.25 });
+    s
+}
+
+/// The elastic fault surface under bounded staleness. The paper policy
+/// manages compression, which validation rightly refuses to combine with
+/// late merges — so this fixture runs the legacy norm-test surface instead.
+/// The straggler's uplinks stay in flight across commits, so kills land with
+/// a non-empty `pending` queue (mid-late-merge) and merges commit at s > 0.
+fn stale_scenario() -> ScenarioSpec {
+    let mut s = cluster_scenario();
+    s.name = "resume stale".into();
+    s.run.label = "cluster stale resume".into();
+    s.run.policy = None;
+    s.run.strategy = BatchStrategy::NormTest { eta: 0.8, b0: 8, b_max: 256 };
+    s.run.sync = SyncSpec::FixedH { h: 2 };
+    s.sync_mode = SyncMode::BoundedStaleness { max_staleness: 3, discount: 0.5 };
+    s
 }
 
 // ----------------------------------------------------------------- helpers --
@@ -309,6 +342,78 @@ fn cluster_kill_at_every_boundary_resumes_bit_for_bit_under_faults() {
     assert_eq!(rec.batch_trace, reference.batch_trace);
     assert_eq!(rec.policy_trace, reference.policy_trace);
     assert_eq!(rec.comm, reference.comm);
+    std::fs::remove_dir_all(&ref_dir).ok();
+}
+
+#[test]
+fn quorum_kill_at_every_boundary_resumes_bit_for_bit() {
+    let spec = quorum_scenario();
+    let ref_dir = temp_dir("quorum_ref");
+    let reference = run_scenario_durable(&spec, dur(&ref_dir, 1)).unwrap();
+    assert!(!reference.interrupted);
+    let ref_events = scan_clean(&ref_dir.join("run.journal"), "quorum reference");
+    // The gate must really have been exercised: discarded uplinks on the log,
+    // and the lost message journaled as an injected fault before its NACK.
+    assert!(
+        ref_events.iter().any(|e| matches!(
+            e,
+            JournalEvent::SyncCommitted { quorum_missed, .. } if !quorum_missed.is_empty()
+        )),
+        "quorum fixture never missed the gate"
+    );
+    assert!(
+        ref_events.iter().any(|e| matches!(
+            e,
+            JournalEvent::FaultInjected { kind, .. } if kind == "message_loss"
+        )),
+        "message-loss fault missing from the journal"
+    );
+
+    check_every_boundary("quorum", &spec.name, &reference, &ref_events, &ref_dir, |d| {
+        run_scenario_durable(&spec, d).unwrap()
+    });
+
+    // Replay carries the miss lists into the rebuilt trace.
+    let rec = replay_events(&ref_events).unwrap();
+    assert_eq!(rec.comm, reference.comm);
+    assert_eq!(rec.trace.len(), reference.trace.len());
+    for (x, y) in rec.trace.iter().zip(&reference.trace) {
+        assert_eq!(x.quorum_missed, y.quorum_missed, "round {} replayed misses", x.round);
+        assert_eq!(x.merges, y.merges, "round {} replayed merges", x.round);
+    }
+    std::fs::remove_dir_all(&ref_dir).ok();
+}
+
+#[test]
+fn bounded_staleness_kill_at_every_boundary_resumes_bit_for_bit() {
+    let spec = stale_scenario();
+    let ref_dir = temp_dir("stale_ref");
+    let reference = run_scenario_durable(&spec, dur(&ref_dir, 1)).unwrap();
+    assert!(!reference.interrupted);
+    let ref_events = scan_clean(&ref_dir.join("run.journal"), "stale reference");
+    assert!(
+        ref_events.iter().any(|e| matches!(
+            e,
+            JournalEvent::SyncCommitted { merges, .. } if merges.iter().any(|&(_, s)| s > 0)
+        )),
+        "bounded-staleness fixture never committed a late merge"
+    );
+    // At least one checkpoint boundary must land mid-late-merge: an uplink
+    // still in flight in the snapshot's pending queue, so the kill matrix
+    // below provably resumes through it.
+    let mid_merge = (0..reference.total_rounds).any(|r| {
+        dur(&ref_dir, 1)
+            .snapshot_path(&spec.name, r)
+            .and_then(|p| RunSnapshot::load(&p).ok())
+            .and_then(|s| s.cluster)
+            .map(|c| !c.pending.is_empty())
+            .unwrap_or(false)
+    });
+    assert!(mid_merge, "no checkpoint caught an in-flight contribution");
+
+    check_every_boundary("stale", &spec.name, &reference, &ref_events, &ref_dir, |d| {
+        run_scenario_durable(&spec, d).unwrap()
+    });
     std::fs::remove_dir_all(&ref_dir).ok();
 }
 

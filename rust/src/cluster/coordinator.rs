@@ -29,7 +29,7 @@
 use super::membership::Roster;
 use super::messages::{FromWorker, RoundResult, ToWorker};
 use super::worker::{spawn_worker, WorkerResume};
-use crate::collective::CommCounters;
+use crate::collective::{CommCounters, ReductionPlan, StreamingReducer};
 use crate::comm::{ErrorFeedback, Payload};
 use crate::config::{SyncMode, WorkerSpec};
 use crate::data::Dataset;
@@ -81,6 +81,12 @@ pub struct ClusterEngine {
     pub sync_mode: SyncMode,
     /// Observability: the phase after `run` returns (always `Done`).
     pub phase: Phase,
+    /// High-water mark of coordinator-held accumulator f32s across the run
+    /// (consensus accumulator + streaming scratch). The streaming reduction
+    /// folds one contribution at a time through a bounded chunk buffer, so
+    /// this stays `O(d)` no matter how large the roster grows — the CI
+    /// large-roster smoke pins it equal across 256- and 1024-worker runs.
+    pub peak_acc_f32s: u64,
 }
 
 impl ClusterEngine {
@@ -92,6 +98,7 @@ impl ClusterEngine {
             cooldown_rounds: 0,
             sync_mode: SyncMode::FullBarrier,
             phase: Phase::WaitingForWorkers,
+            peak_acc_f32s: 0,
         }
     }
 
@@ -103,6 +110,7 @@ impl ClusterEngine {
             cooldown_rounds: spec.cooldown_rounds,
             sync_mode: spec.sync_mode.clone(),
             phase: Phase::WaitingForWorkers,
+            peak_acc_f32s: 0,
         }
     }
 
@@ -319,6 +327,14 @@ impl TrainEngine for ClusterEngine {
         let mut total_local_steps: f64 = 0.0;
         let needs_grad_ar = opts.policy.needs_grad_allreduce();
         let mut gbar = vec![0.0f32; d];
+        // Round-to-round sync scratch, allocated once: the streaming reducer's
+        // chunk buffer and the compressed path's payload reference (the
+        // accumulate path used to clone `params` into a fresh reference every
+        // compressed round). Reuse keeps the hot path allocation-free and the
+        // peak accumulator accounting roster-independent.
+        let mut reducer = StreamingReducer::new();
+        let mut reference_buf = vec![0.0f32; d];
+        self.peak_acc_f32s = 0;
         // H decided at the previous live sync (None: bootstrap from the
         // policy, mirroring the legacy top-of-loop scheduler call).
         let mut pending_h: Option<u32> = None;
@@ -345,6 +361,12 @@ impl TrainEngine for ClusterEngine {
             warmup_left = c.warmup_left;
             cooldown_left = c.cooldown_left;
             pending = c.pending.clone();
+            assert_eq!(
+                c.group_size,
+                opts.plan.group_size(),
+                "snapshot was taken under a different reduction topology"
+            );
+            self.peak_acc_f32s = c.peak_acc_f32s;
             round = snap.round + 1;
         }
         // The phase a just-synced coordinator would carry into this round —
@@ -934,56 +956,89 @@ impl TrainEngine for ClusterEngine {
 
                 // ---- parameter average over committed contributors (eq. 3) -
                 // Contributions arrive as payloads encoded against the
-                // previous consensus; decode them in ascending worker order
-                // and reduce with the same float-op sequence as the sequential
-                // engine (both run through collective::mean_reduce_into). For
+                // previous consensus; they stream through the
+                // [`StreamingReducer`] in ascending worker order — each uplink
+                // is decoded chunk-by-chunk and folded into the accumulator
+                // before the next is touched, so the coordinator never holds
+                // more than the consensus plus one bounded chunk buffer,
+                // regardless of roster size. The fold replays the exact
+                // float-op sequence of [`crate::collective::mean_reduce_into`]
+                // (copy first, axpy the rest, scale once), so the result is
+                // bit-identical to the old gather-then-reduce dataflow. For
                 // lossy methods the new consensus is re-encoded for the
                 // downlink, so the broadcast wire is compressed too, and
-                // decoded here exactly as every worker will decode it; dense
-                // (identity) payloads are averaged straight from the received
-                // buffers — no decode clones, the legacy dataflow. A quorum
-                // miss discards the uplink entirely: it is neither averaged
-                // nor charged to the wire.
+                // decoded here exactly as every worker will decode it. A
+                // quorum miss discards the uplink entirely: it is neither
+                // averaged nor charged to the wire.
+                //
+                // The reduction plan is rebuilt per round from the committed
+                // contributor count — a pure function of k, so elastic rosters
+                // regroup deterministically. It never touches the arithmetic
+                // above; it only decides how the wire bytes and the simulated
+                // sync clock are charged (flat ring vs. group rings + trunk).
+                let plan = ReductionPlan::build(opts.plan, k);
+                let mut two_level_comm: Option<(Vec<(usize, u64)>, u64)> = None;
                 let round_logical = CommCounters::ring_bytes(d, k);
                 let mut round_wire = round_logical;
                 let mut wf = 1.0f64;
                 let down = if comp_spec.is_dense() {
-                    let first = results[on_time[0]].as_ref().unwrap();
-                    params.copy_from_slice(first.payload.as_dense().expect("dense payload"));
-                    let rest_refs: Vec<&[f32]> = on_time[1..]
-                        .iter()
-                        .map(|&w| {
-                            results[w].as_ref().unwrap().payload.as_dense().expect("dense payload")
-                        })
-                        .collect();
-                    crate::collective::mean_reduce_into(&mut params, &rest_refs);
-                    rec.comm.charge_allreduce(d, k);
+                    reducer.begin();
+                    for &w in &on_time {
+                        let values =
+                            results[w].as_ref().unwrap().payload.as_dense().expect("dense payload");
+                        reducer.fold_dense(&mut params, values);
+                    }
+                    reducer.finish(&mut params);
+                    if plan.is_flat() {
+                        rec.comm.charge_allreduce(d, k);
+                    } else {
+                        // Dense rings conserve bytes across the hierarchy, so
+                        // this equals the flat charge — the identity contract.
+                        rec.comm.charge_two_level_allreduce(d, plan.group_sizes());
+                    }
                     Payload::Dense { values: params.clone() }
                 } else {
-                    let reference = params.clone();
+                    reference_buf.copy_from_slice(&params);
                     let uplink: u64 = on_time
                         .iter()
                         .map(|&w| results[w].as_ref().unwrap().payload.wire_bytes())
                         .sum();
-                    let decoded: Vec<Vec<f32>> = on_time
-                        .iter()
-                        .map(|&w| results[w].as_ref().unwrap().payload.decode(&reference))
-                        .collect();
-                    params.copy_from_slice(&decoded[0]);
-                    {
-                        let rest_refs: Vec<&[f32]> =
-                            decoded[1..].iter().map(|v| v.as_slice()).collect();
-                        crate::collective::mean_reduce_into(&mut params, &rest_refs);
+                    reducer.begin();
+                    for &w in &on_time {
+                        let payload = &results[w].as_ref().unwrap().payload;
+                        reducer.fold_payload(&mut params, payload, &reference_buf);
                     }
-                    let down = compressor.encode(&params, &reference, downlink_ef.as_mut());
-                    down.decode_into(&reference, &mut params);
-                    round_wire = CommCounters::compressed_wire_bytes(k, uplink, down.wire_bytes());
+                    reducer.finish(&mut params);
+                    let down = compressor.encode(&params, &reference_buf, downlink_ef.as_mut());
+                    down.decode_into(&reference_buf, &mut params);
+                    if plan.is_flat() {
+                        round_wire =
+                            CommCounters::compressed_wire_bytes(k, uplink, down.wire_bytes());
+                        rec.comm.charge_compressed_allreduce(d, k, uplink, down.wire_bytes());
+                    } else {
+                        let per: Vec<u64> = on_time
+                            .iter()
+                            .map(|&w| results[w].as_ref().unwrap().payload.wire_bytes())
+                            .collect();
+                        let groups = plan.group_uplinks(&per);
+                        round_wire = CommCounters::two_level_compressed_wire_bytes(
+                            d,
+                            &groups,
+                            down.wire_bytes(),
+                        );
+                        rec.comm.charge_two_level_compressed_allreduce(
+                            d,
+                            &groups,
+                            down.wire_bytes(),
+                        );
+                        two_level_comm = Some((groups, down.wire_bytes()));
+                    }
                     if round_logical > 0 {
                         wf = round_wire as f64 / round_logical as f64;
                     }
-                    rec.comm.charge_compressed_allreduce(d, k, uplink, down.wire_bytes());
                     down
                 };
+                self.peak_acc_f32s = self.peak_acc_f32s.max(reducer.peak_f32s() as u64);
                 wire_frac = wf;
                 rec.comm.rounds += 1;
                 // Broadcast to EVERY active worker, quorum misses included —
@@ -1030,7 +1085,23 @@ impl TrainEngine for ClusterEngine {
                     }
                 };
 
-                let sync_s = opts.time_model.sync_time_compressed(d, needs_grad_ar, wire_frac);
+                let sync_s = if plan.is_flat() {
+                    opts.time_model.sync_time_compressed(d, needs_grad_ar, wire_frac)
+                } else {
+                    let (groups, global_k, global_frac) = match &two_level_comm {
+                        Some((groups, down_wire)) => {
+                            plan.compressed_time_args(d, groups, *down_wire)
+                        }
+                        None => plan.dense_time_args(),
+                    };
+                    opts.time_model.sync_time_two_level(
+                        d,
+                        needs_grad_ar,
+                        &groups,
+                        global_k,
+                        global_frac,
+                    )
+                };
                 sim_time += gate;
                 sim_time += sync_s;
 
@@ -1349,6 +1420,8 @@ impl TrainEngine for ClusterEngine {
                         members: roster.member_states(),
                         stats: roster.stats.clone(),
                         pending: pending.clone(),
+                        group_size: opts.plan.group_size(),
+                        peak_acc_f32s: self.peak_acc_f32s,
                     }),
                     journal_bytes: journal.as_ref().map(|j| j.bytes()).unwrap_or(0),
                     journal_seq: journal.as_ref().map(|j| j.seq()).unwrap_or(0),
@@ -1385,6 +1458,17 @@ impl TrainEngine for ClusterEngine {
             0.0
         };
         rec.worker_stats = roster.stats;
+        // Machine-greppable memory accounting line (the CI large-roster smoke
+        // asserts this value is identical across roster sizes).
+        crate::log_info!(
+            "cluster '{}' peak_acc_f32s={} plan={}",
+            rec.label,
+            self.peak_acc_f32s,
+            match opts.plan.group_size() {
+                0 => "flat".to_string(),
+                g => format!("two_level:{g}"),
+            }
+        );
         if let Some(jw) = journal.as_mut() {
             jw.append(&JournalEvent::RunCompleted {
                 total_steps: rec.total_steps,

@@ -85,6 +85,7 @@ pub fn run_scenario_durable(
     opts.time_model.topo = spec.topology();
     opts.label = spec.name.clone();
     opts.compression = spec.compression.clone();
+    opts.plan = spec.plan_spec();
     opts.durability = durability;
     if opts.durability.checkpoint_every == 0 {
         opts.durability.checkpoint_every = spec.run.checkpoint_every;
@@ -327,6 +328,7 @@ mod tests {
             cooldown_rounds: 0,
             compression: crate::comm::CompressionSpec::identity(),
             sync_mode: crate::config::SyncMode::FullBarrier,
+            grouping: None,
             workers: vec![
                 WorkerSpec::default(),
                 WorkerSpec { speed: 0.5, ..Default::default() },
@@ -366,6 +368,7 @@ mod tests {
             cooldown_rounds: 0,
             compression: crate::comm::CompressionSpec::identity(),
             sync_mode: crate::config::SyncMode::FullBarrier,
+            grouping: None,
             workers: vec![WorkerSpec::default(); 4],
         };
         assert!(spec.is_homogeneous());
@@ -547,6 +550,110 @@ mod tests {
         assert!(last < first, "no convergence under compressed faults: {first} -> {last}");
     }
 
+    /// The tentpole contract at cluster level: a two-level identity reduction
+    /// is bit-for-bit the flat run — same trajectory, same comm counters
+    /// (dense rings conserve bytes across the hierarchy) — while the grouped
+    /// rings commit faster on the simulated clock.
+    #[test]
+    fn two_level_cluster_is_bitwise_flat_and_faster() {
+        use crate::collective::PlanSpec;
+        let run = |plan: PlanSpec| {
+            let (models, data) = quad_workers(4, 0.5);
+            let mut o = opts(4, 20_000);
+            o.set_scheduler(Box::new(FixedH::new(4)));
+            o.set_controller(Box::new(ApproxNormTest::new(0.8, 8, 256)));
+            o.plan = plan;
+            ClusterEngine::new(4).run(models, data, o)
+        };
+        let flat = run(PlanSpec::Flat);
+        let two = run(PlanSpec::TwoLevel { group_size: 2 });
+        assert_eq!(flat.batch_trace, two.batch_trace, "plan changed the schedule");
+        assert_eq!(flat.comm, two.comm, "identity two-level must conserve comm accounting");
+        assert_eq!(flat.points.len(), two.points.len());
+        for (a, b) in flat.points.iter().zip(&two.points) {
+            assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits(), "plan changed the arithmetic");
+        }
+        assert!(
+            two.sim_time_s < flat.sim_time_s,
+            "grouped rings must beat the flat latency: {} vs {}",
+            two.sim_time_s,
+            flat.sim_time_s
+        );
+    }
+
+    /// The streaming accumulator's high-water mark depends on the model
+    /// dimension and the chunk size only — never on the roster.
+    #[test]
+    fn peak_accumulator_is_roster_independent() {
+        use crate::comm::{CompressMethod, CompressionSpec};
+        let peak_for = |m: usize| {
+            let (models, data) = quad_workers(m, 0.2);
+            let mut o = opts(m, 4_000 * m as u64);
+            o.set_controller(Box::new(ConstantSchedule::new(16)));
+            o.compression = CompressionSpec {
+                method: CompressMethod::QuantizeInt8 { chunk: 8 },
+                error_feedback: true,
+            };
+            let mut eng = ClusterEngine::new(m);
+            eng.run(models, data, o);
+            eng.peak_acc_f32s
+        };
+        let p4 = peak_for(4);
+        let p8 = peak_for(8);
+        assert!(p4 > 0, "peak counter never armed");
+        assert_eq!(p4, p8, "peak accumulator memory grew with the roster");
+        // d=16 model: the payload fold holds the accumulator plus one
+        // (dimension-bounded) chunk of decode scratch
+        assert_eq!(p4, 32);
+    }
+
+    /// run_scenario honors the scenario's topology section: the plan reaches
+    /// the engine and the run completes under compression + elasticity.
+    #[test]
+    fn run_scenario_applies_topology() {
+        let mut run = RunConfig::default();
+        run.label = "hier_spec".into();
+        run.model = crate::config::ModelSpec::Logistic { feat: 8, classes: 3, l2: 1e-4 };
+        run.data = crate::config::DataSpec::GaussianMixture {
+            feat: 8,
+            classes: 3,
+            separation: 2.5,
+            noise: 1.0,
+            eval_size: 64,
+        };
+        run.m_workers = 5;
+        run.total_samples = 6_000;
+        run.eval_every_samples = 2_000;
+        run.strategy = crate::config::BatchStrategy::Constant { b: 16 };
+        run.b_max_local = 256;
+        run.sync = crate::config::SyncSpec::FixedH { h: 4 };
+        let mut spec = crate::config::ScenarioSpec {
+            name: "hier_scenario".into(),
+            run,
+            warmup_rounds: 0,
+            cooldown_rounds: 0,
+            compression: crate::comm::CompressionSpec {
+                method: crate::comm::CompressMethod::TopK { k_frac: 0.25 },
+                error_feedback: true,
+            },
+            sync_mode: crate::config::SyncMode::FullBarrier,
+            grouping: Some(crate::config::TopologySpec { group_size: 2 }),
+            workers: vec![WorkerSpec::default(); 5],
+        };
+        spec.workers[4].join_round = 2; // a 5th joiner rebalances the groups
+        assert_eq!(
+            spec.plan_spec(),
+            crate::collective::PlanSpec::TwoLevel { group_size: 2 }
+        );
+        let rec = run_scenario(&spec).unwrap();
+        assert!(!rec.diverged);
+        assert_eq!(rec.worker_stats.len(), 5);
+        assert!(rec.comm.wire_bytes > 0);
+        let first = rec.points.first().unwrap().val_loss;
+        let last = rec.points.last().unwrap().val_loss;
+        assert!(last < first, "no convergence under two-level + topk: {first} -> {last}");
+    }
+
     /// run_scenario honors the scenario's compression section.
     #[test]
     fn run_scenario_applies_compression() {
@@ -576,6 +683,7 @@ mod tests {
                 error_feedback: true,
             },
             sync_mode: crate::config::SyncMode::FullBarrier,
+            grouping: None,
             workers: vec![WorkerSpec::default(), WorkerSpec::default()],
         };
         let rec = run_scenario(&spec).unwrap();

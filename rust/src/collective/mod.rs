@@ -8,11 +8,13 @@
 //! process's memory bandwidth.
 
 pub mod allreduce;
+pub mod plan;
 pub mod topology;
 
 pub use allreduce::{
     allreduce_mean_serial, allreduce_mean_threaded, mean_reduce_into, RingAllReduce,
 };
+pub use plan::{PlanSpec, ReductionPlan, StreamingReducer, STREAM_CHUNK};
 pub use topology::Topology;
 
 /// Byte / round counters, the communication-efficiency bookkeeping behind the
@@ -98,6 +100,76 @@ impl CommCounters {
         self.allreduce_calls += 1;
         self.bytes_moved += Self::ring_bytes(elems, m);
         self.wire_bytes += Self::compressed_wire_bytes(m, uplink_total, downlink);
+    }
+
+    /// Wire bytes of one **two-level dense** sync: each group of `sizes[g]`
+    /// workers runs its own ring (Σ_g 2·(k_g−1)·4·elems), then the G group
+    /// aggregators ring-reduce the partials (2·(G−1)·4·elems). Because ring
+    /// bytes are linear in the participant count minus one,
+    /// Σ 2(k_g−1) + 2(G−1) = 2(k−1): dense two-level wire bytes equal the
+    /// flat ring exactly — hierarchy buys latency (see
+    /// [`Topology::allreduce_time_among`]), not dense bandwidth. With a
+    /// single group the global stage has one participant and charges 0, so
+    /// the formula reduces to [`CommCounters::ring_bytes`] identically.
+    pub fn two_level_ring_bytes(elems: usize, sizes: &[usize]) -> u64 {
+        let g = sizes.len();
+        sizes.iter().map(|&k| Self::ring_bytes(elems, k)).sum::<u64>()
+            + Self::ring_bytes(elems, g)
+    }
+
+    /// Wire bytes of one **two-level compressed** sync. Per group:
+    /// the flat formula over that group's members and uplink total (the group
+    /// aggregator broadcasts the same `downlink` consensus payload). Global
+    /// stage: the G aggregators ship **dense f32 partials** up (4·elems each —
+    /// re-encoding a decoded partial would be lossy and break the bit-for-bit
+    /// reduction contract) and receive the compressed consensus down:
+    ///
+    /// ```text
+    /// Σ_g (k_g−1)/k_g·(Σup_g + k_g·down)  +  (G−1)/G·(G·4·elems + G·down)
+    /// ```
+    ///
+    /// With group count 1 the global term is 0 (single participant) and the
+    /// group term **is** the flat `(M−1)/M·(Σup + M·down)` form — pinned by
+    /// `two_level_wire_reduces_to_flat_when_one_group`.
+    pub fn two_level_compressed_wire_bytes(
+        elems: usize,
+        groups: &[(usize, u64)],
+        downlink: u64,
+    ) -> u64 {
+        let g = groups.len();
+        let dense_partials = g as u64 * (elems as u64) * 4;
+        groups
+            .iter()
+            .map(|&(k, up)| Self::compressed_wire_bytes(k, up, downlink))
+            .sum::<u64>()
+            + Self::compressed_wire_bytes(g, dense_partials, downlink)
+    }
+
+    /// Charge one dense two-level sync over groups of `sizes` workers:
+    /// logical bytes stay the flat dense ring over all contributors (the
+    /// denominator is plan-independent), wire bytes from
+    /// [`CommCounters::two_level_ring_bytes`].
+    pub fn charge_two_level_allreduce(&mut self, elems: usize, sizes: &[usize]) {
+        self.allreduce_calls += 1;
+        let k: usize = sizes.iter().sum();
+        self.bytes_moved += Self::ring_bytes(elems, k);
+        self.wire_bytes += Self::two_level_ring_bytes(elems, sizes);
+    }
+
+    /// Charge one compressed two-level sync: `groups` are per-group
+    /// `(members, uplink_total)` pairs in plan order (see
+    /// [`ReductionPlan::group_uplinks`]); logical bytes stay the flat dense
+    /// ring over all contributors.
+    pub fn charge_two_level_compressed_allreduce(
+        &mut self,
+        elems: usize,
+        groups: &[(usize, u64)],
+        downlink: u64,
+    ) {
+        self.allreduce_calls += 1;
+        let k: usize = groups.iter().map(|g| g.0).sum();
+        self.bytes_moved += Self::ring_bytes(elems, k);
+        self.wire_bytes += Self::two_level_compressed_wire_bytes(elems, groups, downlink);
     }
 
     /// logical / wire — how many times smaller the wire traffic is than the
@@ -336,6 +408,71 @@ mod tests {
         assert_eq!(r, 4.0);
         assert_eq!(f, 0.25);
         assert_eq!(r * f, 1.0);
+    }
+
+    /// Satellite: the two-hop charge model degenerates EXACTLY to the flat
+    /// `(M−1)/M·(Σup + M·down)` form when the group count is 1 — both the
+    /// closed-form helpers and the stateful charge paths.
+    #[test]
+    fn two_level_wire_reduces_to_flat_when_one_group() {
+        crate::util::prop::check(50, |rng| {
+            let elems = 1 + rng.below(100_000) as usize;
+            let m = 1 + rng.below(64) as usize;
+            let down = rng.below(4 * elems as u64 + 1);
+            let up = m as u64 * rng.below(4 * elems as u64 + 1);
+
+            let flat_ring = CommCounters::ring_bytes(elems, m);
+            let flat_wire = CommCounters::compressed_wire_bytes(m, up, down);
+            let two_ring = CommCounters::two_level_ring_bytes(elems, &[m]);
+            let two_wire = CommCounters::two_level_compressed_wire_bytes(elems, &[(m, up)], down);
+
+            let mut a = CommCounters::default();
+            a.charge_allreduce(elems, m);
+            let mut b = CommCounters::default();
+            b.charge_two_level_allreduce(elems, &[m]);
+            let mut c = CommCounters::default();
+            c.charge_compressed_allreduce(elems, m, up, down);
+            let mut e = CommCounters::default();
+            e.charge_two_level_compressed_allreduce(elems, &[(m, up)], down);
+
+            crate::util::prop::assert_prop(
+                two_ring == flat_ring && two_wire == flat_wire && a == b && c == e,
+                format!(
+                    "m={m} elems={elems}: ring {two_ring}/{flat_ring} wire {two_wire}/{flat_wire}"
+                ),
+            )
+        });
+    }
+
+    #[test]
+    fn two_level_dense_ring_bytes_are_conserved() {
+        // Ring bytes are linear in (participants − 1), so chunking any roster
+        // into groups conserves total dense wire bytes exactly:
+        // Σ 2(k_g−1) + 2(G−1) = 2(k−1).
+        for (sizes, k) in [(vec![2usize, 2], 4usize), (vec![3, 2], 5), (vec![32; 32], 1024)] {
+            assert_eq!(
+                CommCounters::two_level_ring_bytes(1024, &sizes),
+                CommCounters::ring_bytes(1024, k),
+                "{sizes:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn two_level_compressed_charges_group_then_global_stages() {
+        // d=1024, two groups of 2, sign-sized payloads (132 B per endpoint):
+        // per group (2−1)/2·(264 + 2·132) = 264; global stage ships dense
+        // partials: (2−1)/2·(2·4096 + 2·132) = 4228. Total 264·2 + 4228.
+        let d = 1024usize;
+        let groups = [(2usize, 264u64), (2, 264)];
+        let got = CommCounters::two_level_compressed_wire_bytes(d, &groups, 132);
+        assert_eq!(got, 264 + 264 + 4228);
+        // and the stateful charge records it with the flat logical denominator
+        let mut c = CommCounters::default();
+        c.charge_two_level_compressed_allreduce(d, &groups, 132);
+        assert_eq!(c.bytes_moved, CommCounters::ring_bytes(d, 4));
+        assert_eq!(c.wire_bytes, got);
+        assert_eq!(c.allreduce_calls, 1);
     }
 
     #[test]

@@ -1,0 +1,498 @@
+//! Hierarchical reduction plans + streaming (chunked) aggregation.
+//!
+//! # The two-level reduction and why its arithmetic never branches
+//!
+//! A [`ReductionPlan`] describes *how* one sync round's contributions travel:
+//! flat (every worker talks to the coordinator directly) or two-level
+//! (workers → group aggregators → global, the shape that makes 1000-worker
+//! rosters affordable: the global stage sees G aggregator trunks instead of M
+//! worker uplinks, and the per-ring latency term `2·(k−1)·α` pays `max_g k_g`
+//! plus `G` instead of `M`).
+//!
+//! Crucially, the plan changes **only** the communication accounting (wire
+//! bytes in [`super::CommCounters`], simulated time in [`crate::sim::TimeModel`],
+//! per-group observability in [`crate::obs`]) — never the float-op sequence of
+//! the reduction itself. Per-group *partial sums* were considered and
+//! rejected: f32 addition is not associative, so `(d0+d1)+(d2+d3)` is not
+//! bit-equal to `((d0+d1)+d2)+d3`, and the repo's bit-for-bit contracts
+//! (sequential == cluster, identity compression == dense, kill/resume ==
+//! uninterrupted) would all break. Instead the groups are **consecutive
+//! chunks of the ascending contributor order**, and the aggregation is always
+//! executed as the one global in-order fold
+//! ([`super::mean_reduce_into`]'s sequence: copy the first contribution,
+//! `axpy(1.0, ..)` each subsequent one in ascending order, `scale(1/k)` once)
+//! — so concatenating the per-group folds in group order *is* the flat
+//! sequence, and two-level identity reduction is bit-identical to flat by
+//! construction. The test `two_level_identity_reduction_is_bitwise_flat`
+//! below pins this at the collective level.
+//!
+//! # Streaming aggregation
+//!
+//! [`StreamingReducer`] folds uplinks into the running accumulator
+//! chunk-by-chunk ([`STREAM_CHUNK`] elements at a time) through
+//! [`crate::comm::Payload::decode_chunk_into`], so the coordinator never
+//! materializes a decoded `Vec<f32>` per worker: peak accumulator memory is
+//! `d + min(STREAM_CHUNK, d)` f32s — O(model), independent of roster size.
+//! This is bit-safe because every payload decode and every fold op is
+//! element-local: element `i` of the accumulator sees exactly the same float
+//! ops in the same order whether the fold runs whole-vector or chunked, as
+//! long as each worker's full payload is folded before the next worker's
+//! (which [`StreamingReducer::fold_payload`] guarantees). The high-water mark
+//! is tracked in [`StreamingReducer::peak_f32s`] — the accounting counter the
+//! large-roster CI smoke asserts is roster-independent.
+
+use crate::comm::Payload;
+
+/// Elements decoded/folded per chunk by [`StreamingReducer::fold_payload`].
+/// 4096 f32 = 16 KiB of scratch — small enough to bound coordinator memory at
+/// O(model), large enough that chunking overhead is noise.
+pub const STREAM_CHUNK: usize = 4096;
+
+/// Which reduction topology a run uses. `Flat` is the default and preserves
+/// pre-hierarchy behavior bit for bit; `TwoLevel` groups the ascending
+/// contributor order into consecutive chunks of `group_size` (the tail group
+/// may be smaller).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlanSpec {
+    #[default]
+    Flat,
+    TwoLevel {
+        group_size: usize,
+    },
+}
+
+impl PlanSpec {
+    pub fn is_flat(&self) -> bool {
+        matches!(self, PlanSpec::Flat)
+    }
+
+    /// Group size for snapshots/config (0 encodes flat).
+    pub fn group_size(&self) -> usize {
+        match *self {
+            PlanSpec::Flat => 0,
+            PlanSpec::TwoLevel { group_size } => group_size,
+        }
+    }
+}
+
+/// One round's reduction shape: how many contributors, chunked into which
+/// groups. Built fresh every round as a **pure function of the contributor
+/// count** (contributors are always consumed in ascending id order, so chunk
+/// `i` of the plan is chunk `i` of that order) — this is what makes elastic
+/// join/leave rebalance deterministically: the same roster always produces
+/// the same groups, with no sticky assignment state to snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReductionPlan {
+    flat: bool,
+    total: usize,
+    sizes: Vec<usize>,
+}
+
+impl ReductionPlan {
+    /// Build the plan for `k` contributors. Flat plans keep a single group of
+    /// all `k`; two-level plans chunk into ceil(k / group_size) consecutive
+    /// groups. `group_size >= 1` is required for `TwoLevel` (config validation
+    /// enforces >= 2; 1-sized tails are still legal).
+    pub fn build(spec: PlanSpec, k: usize) -> Self {
+        match spec {
+            PlanSpec::Flat => {
+                ReductionPlan { flat: true, total: k, sizes: if k > 0 { vec![k] } else { vec![] } }
+            }
+            PlanSpec::TwoLevel { group_size } => {
+                assert!(group_size >= 1, "two-level plan needs group_size >= 1");
+                let mut sizes = Vec::with_capacity(k.div_ceil(group_size));
+                let mut left = k;
+                while left > 0 {
+                    let g = left.min(group_size);
+                    sizes.push(g);
+                    left -= g;
+                }
+                ReductionPlan { flat: false, total: k, sizes }
+            }
+        }
+    }
+
+    pub fn is_flat(&self) -> bool {
+        self.flat
+    }
+
+    /// Total contributors this round.
+    pub fn contributors(&self) -> usize {
+        self.total
+    }
+
+    pub fn group_count(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// Consecutive group sizes, in contributor order.
+    pub fn group_sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// Chunk per-contributor uplink wire bytes (ascending contributor order)
+    /// into per-group `(members, uplink_total)` pairs for the two-hop charge
+    /// model.
+    pub fn group_uplinks(&self, per_contributor: &[u64]) -> Vec<(usize, u64)> {
+        assert_eq!(per_contributor.len(), self.total, "uplink count != contributors");
+        let mut out = Vec::with_capacity(self.sizes.len());
+        let mut off = 0usize;
+        for &g in &self.sizes {
+            out.push((g, per_contributor[off..off + g].iter().sum()));
+            off += g;
+        }
+        out
+    }
+
+    /// Time-model arguments for a dense (uncompressed) round: every stage's
+    /// wire fraction is exactly 1.0.
+    pub fn dense_time_args(&self) -> (Vec<(usize, f64)>, usize, f64) {
+        (self.sizes.iter().map(|&g| (g, 1.0)).collect(), self.group_count(), 1.0)
+    }
+
+    /// Time-model arguments for a compressed round: per-group wire fraction
+    /// is that group's two-hop wire bytes over its dense ring bytes (neutral
+    /// 1.0 when the group moves nothing, i.e. k_g == 1); the global stage
+    /// ships dense aggregator partials up and the compressed consensus down.
+    pub fn compressed_time_args(
+        &self,
+        elems: usize,
+        groups: &[(usize, u64)],
+        downlink: u64,
+    ) -> (Vec<(usize, f64)>, usize, f64) {
+        use super::CommCounters;
+        let per_group = groups
+            .iter()
+            .map(|&(k, up)| {
+                let ring = CommCounters::ring_bytes(elems, k);
+                let frac = if ring == 0 {
+                    1.0
+                } else {
+                    CommCounters::compressed_wire_bytes(k, up, downlink) as f64 / ring as f64
+                };
+                (k, frac)
+            })
+            .collect();
+        let g = self.group_count();
+        let global_ring = CommCounters::ring_bytes(elems, g);
+        let dense_partials = g as u64 * (elems as u64) * 4;
+        let global_frac = if global_ring == 0 {
+            1.0
+        } else {
+            CommCounters::compressed_wire_bytes(g, dense_partials, downlink) as f64
+                / global_ring as f64
+        };
+        (per_group, g, global_frac)
+    }
+}
+
+/// Streaming mean-reduction into a running accumulator, preserving
+/// [`super::mean_reduce_into`]'s float-op sequence exactly (see the module
+/// doc for why chunking is bit-safe). One instance lives for the whole run so
+/// the decode scratch is allocated once and reused round to round (the
+/// ROADMAP raw-speed allocation-reuse item).
+#[derive(Debug, Default)]
+pub struct StreamingReducer {
+    scratch: Vec<f32>,
+    folded: usize,
+    peak_f32s: usize,
+}
+
+impl StreamingReducer {
+    pub fn new() -> Self {
+        StreamingReducer::default()
+    }
+
+    /// Start a new round's fold. The scratch allocation is kept.
+    pub fn begin(&mut self) {
+        self.folded = 0;
+    }
+
+    fn note_peak(&mut self, acc_len: usize, scratch_len: usize) {
+        let used = acc_len + scratch_len;
+        if used > self.peak_f32s {
+            self.peak_f32s = used;
+        }
+    }
+
+    /// Fold one dense contribution: copy for the first, `axpy(1.0, ..)` after
+    /// — byte for byte the legacy copy-then-`mean_reduce_into` sequence. No
+    /// scratch is used.
+    pub fn fold_dense(&mut self, acc: &mut [f32], values: &[f32]) {
+        assert_eq!(values.len(), acc.len(), "mean reduce length mismatch");
+        if self.folded == 0 {
+            acc.copy_from_slice(values);
+        } else {
+            crate::tensor::axpy(1.0, values, acc);
+        }
+        self.folded += 1;
+        self.note_peak(acc.len(), 0);
+    }
+
+    /// Fold one compressed contribution chunk-by-chunk: each [`STREAM_CHUNK`]
+    /// slice is decoded against `reference` into the reusable scratch and then
+    /// copied (first contribution) or `axpy`ed (subsequent ones) into the
+    /// accumulator. The whole payload is folded before the caller moves to the
+    /// next contributor, so per-element op order matches the whole-vector
+    /// decode-then-reduce path bit for bit.
+    pub fn fold_payload(&mut self, acc: &mut [f32], payload: &Payload, reference: &[f32]) {
+        let d = acc.len();
+        assert_eq!(payload.dim(), d, "payload dim != accumulator");
+        let chunk = STREAM_CHUNK.min(d.max(1));
+        if self.scratch.len() < chunk {
+            self.scratch.resize(chunk, 0.0);
+        }
+        let mut off = 0usize;
+        while off < d {
+            let n = chunk.min(d - off);
+            let scratch = &mut self.scratch[..n];
+            payload.decode_chunk_into(reference, off, scratch);
+            let dst = &mut acc[off..off + n];
+            if self.folded == 0 {
+                dst.copy_from_slice(scratch);
+            } else {
+                crate::tensor::axpy(1.0, scratch, dst);
+            }
+            self.note_peak(d, n);
+            off += n;
+        }
+        self.folded += 1;
+    }
+
+    /// Divide by the contributor count — [`super::mean_reduce_into`]'s final
+    /// `scale(1/k)`, applied once.
+    pub fn finish(&mut self, acc: &mut [f32]) {
+        assert!(self.folded > 0, "finish before any fold");
+        crate::tensor::scale(1.0 / self.folded as f32, acc);
+    }
+
+    /// High-water mark of accumulator + scratch f32s across the reducer's
+    /// lifetime — the accounting counter proving peak coordinator memory is
+    /// O(model): it depends only on the model dimension and [`STREAM_CHUNK`],
+    /// never on how many contributions were folded.
+    pub fn peak_f32s(&self) -> usize {
+        self.peak_f32s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::{allreduce_mean_serial, mean_reduce_into};
+    use crate::comm::{Compressor, Identity, QuantizeInt8, SignSgd, TopK};
+    use crate::util::prop::{self, gen_vec_n};
+
+    #[test]
+    fn plan_chunks_ascending_contributors_deterministically() {
+        let p = ReductionPlan::build(PlanSpec::TwoLevel { group_size: 3 }, 7);
+        assert!(!p.is_flat());
+        assert_eq!(p.group_sizes(), &[3, 3, 1]);
+        assert_eq!(p.group_count(), 3);
+        assert_eq!(p.contributors(), 7);
+        // elastic rebalance: one leave -> the same pure function, new chunks
+        let q = ReductionPlan::build(PlanSpec::TwoLevel { group_size: 3 }, 6);
+        assert_eq!(q.group_sizes(), &[3, 3]);
+        // and a rebuilt plan for the same roster is identical
+        assert_eq!(p, ReductionPlan::build(PlanSpec::TwoLevel { group_size: 3 }, 7));
+    }
+
+    #[test]
+    fn flat_plan_is_one_group() {
+        let p = ReductionPlan::build(PlanSpec::Flat, 5);
+        assert!(p.is_flat());
+        assert_eq!(p.group_sizes(), &[5]);
+        let empty = ReductionPlan::build(PlanSpec::Flat, 0);
+        assert_eq!(empty.group_count(), 0);
+    }
+
+    #[test]
+    fn group_uplinks_chunk_and_sum() {
+        let p = ReductionPlan::build(PlanSpec::TwoLevel { group_size: 2 }, 5);
+        let ups = p.group_uplinks(&[10, 20, 30, 40, 50]);
+        assert_eq!(ups, vec![(2, 30), (2, 70), (1, 50)]);
+    }
+
+    #[test]
+    fn streaming_dense_fold_matches_mean_reduce_into_bitwise() {
+        prop::check(20, |rng| {
+            let k = 1 + rng.below(8) as usize;
+            let d = 1 + rng.below(300) as usize;
+            let base: Vec<Vec<f32>> = (0..k).map(|_| gen_vec_n(rng, d, 4.0)).collect();
+
+            let mut want = base[0].clone();
+            let rest: Vec<&[f32]> = base[1..].iter().map(|b| b.as_slice()).collect();
+            mean_reduce_into(&mut want, &rest);
+
+            let mut red = StreamingReducer::new();
+            red.begin();
+            let mut acc = vec![0.0f32; d];
+            for b in &base {
+                red.fold_dense(&mut acc, b);
+            }
+            red.finish(&mut acc);
+
+            for j in 0..d {
+                if acc[j].to_bits() != want[j].to_bits() {
+                    return Err(format!("k={k} d={d} elem {j}: {} vs {}", acc[j], want[j]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn streaming_payload_fold_matches_full_decode_bitwise() {
+        // Every compressor's payload, folded chunk-by-chunk at several chunk
+        // boundaries (d spans multiples and non-multiples of the scratch
+        // size), must reproduce the decode-everything-then-reduce path bit for
+        // bit. Exercised through a small local chunk so the loop actually
+        // chunks (STREAM_CHUNK > the test dims would hide off-by-ones).
+        prop::check(10, |rng| {
+            let k = 1 + rng.below(5) as usize;
+            let d = 65 + rng.below(200) as usize;
+            let reference = gen_vec_n(rng, d, 4.0);
+            let base: Vec<Vec<f32>> = (0..k).map(|_| gen_vec_n(rng, d, 4.0)).collect();
+            let comps: Vec<Box<dyn Compressor>> = vec![
+                Box::new(Identity),
+                Box::new(QuantizeInt8::new(64)),
+                Box::new(SignSgd),
+                Box::new(TopK::new(0.25)),
+            ];
+            for comp in &comps {
+                let payloads: Vec<Payload> =
+                    base.iter().map(|b| comp.encode(b, &reference, None)).collect();
+
+                // legacy: decode whole vectors, copy first, mean-reduce rest
+                let decoded: Vec<Vec<f32>> =
+                    payloads.iter().map(|p| p.decode(&reference)).collect();
+                let mut want = decoded[0].clone();
+                let rest: Vec<&[f32]> = decoded[1..].iter().map(|v| v.as_slice()).collect();
+                mean_reduce_into(&mut want, &rest);
+
+                // streaming: chunked decode-accumulate
+                let mut red = StreamingReducer::new();
+                red.begin();
+                let mut acc = vec![0.0f32; d];
+                for p in &payloads {
+                    red.fold_payload(&mut acc, p, &reference);
+                }
+                red.finish(&mut acc);
+
+                for j in 0..d {
+                    if acc[j].to_bits() != want[j].to_bits() {
+                        return Err(format!(
+                            "{} k={k} d={d} elem {j}: {} vs {} not bit-equal",
+                            comp.name(),
+                            acc[j],
+                            want[j]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// THE collective-level acceptance test: a two-level plan over identity
+    /// payloads — contributions folded group by group in plan order through
+    /// the streaming reducer — is bit-for-bit identical to the flat
+    /// `allreduce_mean_serial`. Holds because the groups are consecutive
+    /// chunks of the contributor order and the fold never computes per-group
+    /// partial sums (see module doc).
+    #[test]
+    fn two_level_identity_reduction_is_bitwise_flat() {
+        prop::check(20, |rng| {
+            let k = 2 + rng.below(12) as usize;
+            let d = 1 + rng.below(200) as usize;
+            let group_size = 1 + rng.below(5) as usize;
+            let base: Vec<Vec<f32>> = (0..k).map(|_| gen_vec_n(rng, d, 4.0)).collect();
+            let reference = gen_vec_n(rng, d, 4.0);
+
+            let mut flat = base.clone();
+            {
+                let mut bufs: Vec<&mut [f32]> =
+                    flat.iter_mut().map(|b| b.as_mut_slice()).collect();
+                allreduce_mean_serial(&mut bufs);
+            }
+
+            let plan = ReductionPlan::build(PlanSpec::TwoLevel { group_size }, k);
+            assert_eq!(plan.group_sizes().iter().sum::<usize>(), k);
+            let payloads: Vec<Payload> =
+                base.iter().map(|b| Identity.encode(b, &reference, None)).collect();
+            let mut red = StreamingReducer::new();
+            red.begin();
+            let mut acc = vec![0.0f32; d];
+            let mut off = 0usize;
+            for &g in plan.group_sizes() {
+                // each group's members forwarded through its aggregator, in
+                // ascending order — arithmetically the one global fold
+                for p in &payloads[off..off + g] {
+                    red.fold_payload(&mut acc, p, &reference);
+                }
+                off += g;
+            }
+            red.finish(&mut acc);
+
+            for j in 0..d {
+                if acc[j].to_bits() != flat[0][j].to_bits() {
+                    return Err(format!(
+                        "k={k} d={d} g={group_size} elem {j}: two-level {} vs flat {}",
+                        acc[j], flat[0][j]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn peak_accumulator_memory_is_roster_independent() {
+        let d = 10_000usize; // > STREAM_CHUNK so the scratch actually chunks
+        let reference = vec![0.0f32; d];
+        let peaks: Vec<usize> = [2usize, 8, 64]
+            .iter()
+            .map(|&k| {
+                let comp = QuantizeInt8::new(256);
+                let mut red = StreamingReducer::new();
+                red.begin();
+                let mut acc = vec![0.0f32; d];
+                for w in 0..k {
+                    let v: Vec<f32> = (0..d).map(|i| ((i * (w + 1)) as f32).sin()).collect();
+                    let p = comp.encode(&v, &reference, None);
+                    red.fold_payload(&mut acc, &p, &reference);
+                }
+                red.finish(&mut acc);
+                red.peak_f32s()
+            })
+            .collect();
+        assert_eq!(peaks[0], d + STREAM_CHUNK, "peak must be acc + one scratch chunk");
+        assert!(peaks.iter().all(|&p| p == peaks[0]), "peak varies with roster: {peaks:?}");
+
+        // dense folds use no scratch at all
+        let mut red = StreamingReducer::new();
+        red.begin();
+        let mut acc = vec![0.0f32; 100];
+        for _ in 0..16 {
+            red.fold_dense(&mut acc, &vec![1.0f32; 100]);
+        }
+        red.finish(&mut acc);
+        assert_eq!(red.peak_f32s(), 100);
+    }
+
+    #[test]
+    fn compressed_time_args_degenerate_to_flat_when_one_group() {
+        // one group of all k: the global stage has 1 participant and charges
+        // nothing; the group fraction is the flat wire fraction exactly
+        let d = 1024usize;
+        let plan = ReductionPlan::build(PlanSpec::TwoLevel { group_size: 8 }, 4);
+        assert_eq!(plan.group_count(), 1);
+        let up = 4 * 132u64;
+        let down = 132u64;
+        let (groups, gk, gfrac) = plan.compressed_time_args(d, &[(4, up)], down);
+        let flat_frac = crate::collective::CommCounters::compressed_wire_bytes(4, up, down) as f64
+            / crate::collective::CommCounters::ring_bytes(d, 4) as f64;
+        assert_eq!(groups, vec![(4, flat_frac)]);
+        assert_eq!(gk, 1);
+        assert_eq!(gfrac, 1.0);
+    }
+}

@@ -64,9 +64,21 @@ impl Topology {
 
     /// Ring all-reduce time for `elems` f32 across this topology:
     /// α·(M−1)·2 (latency per ring step) + 2·(M−1)/M · bytes / bandwidth.
+    /// Delegates to [`Topology::allreduce_time_among`] over the full worker
+    /// set — the delegation is bit-identical (same arithmetic expression),
+    /// pinned by `allreduce_time_delegates_bitwise`.
     pub fn allreduce_time(&self, elems: usize) -> f64 {
-        let m = self.m_workers as f64;
-        if self.m_workers <= 1 {
+        self.allreduce_time_among(self.m_workers, elems)
+    }
+
+    /// Ring all-reduce time among an arbitrary subset of `k` participants on
+    /// this topology's links — the building block of the two-level time model
+    /// ([`crate::sim::TimeModel::sync_time_two_level`]): each group ring pays
+    /// `2·(k_g−1)` latency steps instead of `2·(M−1)`, which is where the
+    /// hierarchy wins at large rosters.
+    pub fn allreduce_time_among(&self, k: usize, elems: usize) -> f64 {
+        let m = k as f64;
+        if k <= 1 {
             return 0.0;
         }
         let bytes = (elems * 4) as f64;
@@ -79,11 +91,17 @@ impl Topology {
     /// size. `wire_frac = 1.0` returns [`Topology::allreduce_time`] bit for
     /// bit — the identity-compression sim-time contract.
     pub fn allreduce_time_scaled(&self, elems: usize, wire_frac: f64) -> f64 {
+        self.allreduce_time_among_scaled(self.m_workers, elems, wire_frac)
+    }
+
+    /// [`Topology::allreduce_time_among`] with the bandwidth term scaled by
+    /// `wire_frac`; the same `wire_frac = 1.0` bit-for-bit contract applies.
+    pub fn allreduce_time_among_scaled(&self, k: usize, elems: usize, wire_frac: f64) -> f64 {
         if wire_frac == 1.0 {
-            return self.allreduce_time(elems);
+            return self.allreduce_time_among(k, elems);
         }
-        let m = self.m_workers as f64;
-        if self.m_workers <= 1 {
+        let m = k as f64;
+        if k <= 1 {
             return 0.0;
         }
         let bytes = (elems * 4) as f64 * wire_frac;
@@ -123,6 +141,42 @@ mod tests {
         let a = Topology::homogeneous(4).allreduce_time(1 << 20);
         let b = Topology::multi_node(4).allreduce_time(1 << 20);
         assert!(b > a * 5.0);
+    }
+
+    #[test]
+    fn allreduce_time_delegates_bitwise() {
+        // full-roster delegation to the participant-parameterized form must
+        // be bit-identical — flat sim clocks are pinned on it
+        for t in [Topology::homogeneous(4), Topology::multi_node(8), Topology::homogeneous(1)] {
+            for elems in [1usize, 1000, 1 << 20] {
+                assert_eq!(
+                    t.allreduce_time(elems).to_bits(),
+                    t.allreduce_time_among(t.m_workers, elems).to_bits()
+                );
+                for frac in [1.0f64, 0.25, 0.031] {
+                    assert_eq!(
+                        t.allreduce_time_scaled(elems, frac).to_bits(),
+                        t.allreduce_time_among_scaled(t.m_workers, elems, frac).to_bits()
+                    );
+                }
+            }
+        }
+        // a single participant never pays ring time
+        assert_eq!(Topology::homogeneous(8).allreduce_time_among(1, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn grouped_rings_cut_the_latency_term() {
+        // 1024 workers on ethernet-class links: 32 groups of 32 pay
+        // 2·31·α (groups in parallel) + 2·31·α on the trunk — far below the
+        // flat 2·1023·α. Latency-dominated payloads make the win visible.
+        let t = Topology::multi_node(1024);
+        let flat = t.allreduce_time(256);
+        let grouped = t.allreduce_time_among(32, 256) + t.allreduce_time_among(32, 256);
+        assert!(
+            grouped < flat / 8.0,
+            "two-level latency {grouped} not well below flat {flat}"
+        );
     }
 
     #[test]

@@ -115,6 +115,55 @@ impl Payload {
         self.decode_into(reference, &mut out);
         out
     }
+
+    /// Decode elements `[offset, offset + out.len())` of this payload into
+    /// `out` — the streaming-aggregation primitive behind
+    /// [`crate::collective::StreamingReducer`], which folds uplinks into the
+    /// coordinator's accumulator one chunk at a time instead of materializing
+    /// a full decode per worker. Every decode op is element-local (quantized
+    /// blocks, sign bits, and sparse indices are all addressed by **global**
+    /// element index), so assembling the chunks reproduces
+    /// [`Payload::decode_into`] bit for bit — pinned by
+    /// `chunked_decode_assembles_to_full_decode_bitwise`.
+    pub fn decode_chunk_into(&self, reference: &[f32], offset: usize, out: &mut [f32]) {
+        let d = self.dim();
+        assert!(offset + out.len() <= d, "chunk out of payload bounds");
+        match self {
+            Payload::Dense { values } => {
+                out.copy_from_slice(&values[offset..offset + out.len()]);
+            }
+            Payload::QuantI8 { chunk, q, scales, .. } => {
+                assert_eq!(reference.len(), d, "reference/payload dim mismatch");
+                for (j, oi) in out.iter_mut().enumerate() {
+                    let i = offset + j;
+                    *oi = q[i] as f32 * scales[i / chunk] + reference[i];
+                }
+            }
+            Payload::Sign { scale, bits, .. } => {
+                assert_eq!(reference.len(), d, "reference/payload dim mismatch");
+                for (j, oi) in out.iter_mut().enumerate() {
+                    let i = offset + j;
+                    let set = (bits[i / 64] >> (i % 64)) & 1 == 1;
+                    let delta = if set { *scale } else { -scale };
+                    *oi = delta + reference[i];
+                }
+            }
+            Payload::Sparse { idx, val, .. } => {
+                assert_eq!(reference.len(), d, "reference/payload dim mismatch");
+                // mirror delta_into + add exactly: 0.0 + ref (not a plain
+                // copy — that would flip the sign of -0.0 references)
+                for (j, oi) in out.iter_mut().enumerate() {
+                    *oi = 0.0f32 + reference[offset + j];
+                }
+                // indices are ascending: binary-search the chunk's window
+                let lo = idx.partition_point(|&i| (i as usize) < offset);
+                let hi = idx.partition_point(|&i| (i as usize) < offset + out.len());
+                for (&i, &v) in idx[lo..hi].iter().zip(&val[lo..hi]) {
+                    out[i as usize - offset] = v + reference[i as usize];
+                }
+            }
+        }
+    }
 }
 
 /// A sync-boundary compressor. Implementations are stateless; all cross-round
@@ -443,6 +492,91 @@ mod tests {
         assert_eq!(t.k_for(10), 2); // ceil(1.25)
         assert_eq!(t.k_for(1), 1);
         assert_eq!(TopK::new(1.0).k_for(7), 7);
+    }
+
+    #[test]
+    fn chunked_decode_assembles_to_full_decode_bitwise() {
+        // decode_chunk_into at every chunk granularity — 1, a prime, a
+        // power of two, and the whole vector — must assemble to exactly the
+        // bytes decode() produces, for every payload variant. This is the
+        // contract the streaming reducer's O(model) memory bound rests on.
+        prop::check(10, |rng| {
+            let d = 65 + rng.below(300) as usize;
+            let (params, mut reference) = rand_pair(rng, d);
+            reference[0] = -0.0; // exercise the 0.0 + (-0.0) edge exactly
+            let comps: Vec<Box<dyn Compressor>> = vec![
+                Box::new(Identity),
+                Box::new(QuantizeInt8::new(64)),
+                Box::new(SignSgd),
+                Box::new(TopK::new(0.2)),
+            ];
+            for comp in &comps {
+                let p = comp.encode(&params, &reference, None);
+                let want = p.decode(&reference);
+                for chunk in [1usize, 7, 64, d] {
+                    let mut got = vec![0.0f32; d];
+                    let mut off = 0;
+                    while off < d {
+                        let n = chunk.min(d - off);
+                        p.decode_chunk_into(&reference, off, &mut got[off..off + n]);
+                        off += n;
+                    }
+                    for j in 0..d {
+                        if got[j].to_bits() != want[j].to_bits() {
+                            return Err(format!(
+                                "{} d={d} chunk={chunk} elem {j}: {} vs {} not bit-equal",
+                                comp.name(),
+                                got[j],
+                                want[j]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite regression pin: top-k selection via `select_nth_unstable_by`
+    /// (quickselect, O(d) expected) must pick exactly the set a full sort
+    /// under the same strict total order picks — including duplicated
+    /// magnitudes straddling the k-th position, where an unstable partition
+    /// without the index tie-break would be nondeterministic.
+    #[test]
+    fn topk_quickselect_matches_full_sort() {
+        prop::check(30, |rng| {
+            let d = 1 + rng.below(400) as usize;
+            let mut t = gen_vec_n(rng, d, 3.0);
+            // force magnitude ties across the selection boundary
+            for v in t.iter_mut() {
+                if rng.below(3) == 0 {
+                    *v = if rng.below(2) == 0 { 1.5 } else { -1.5 };
+                }
+            }
+            let reference = vec![0.0f32; d];
+            let params = t.clone();
+            let comp = TopK::new((1 + rng.below(100)) as f64 / 100.0);
+            let k = comp.k_for(d);
+
+            let p = comp.encode(&params, &reference, None);
+            let got = match &p {
+                Payload::Sparse { idx, .. } => idx.clone(),
+                _ => panic!("wrong payload variant"),
+            };
+
+            // reference selection: full sort under the identical total order
+            let mut order: Vec<u32> = (0..d as u32).collect();
+            order.sort_by(|&a, &b| {
+                t[b as usize].abs().total_cmp(&t[a as usize].abs()).then(a.cmp(&b))
+            });
+            let mut want = order[..k].to_vec();
+            want.sort_unstable();
+
+            if got != want {
+                return Err(format!("d={d} k={k}: quickselect {got:?} != sort {want:?}"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -777,6 +777,51 @@ impl SyncMode {
     }
 }
 
+/// Strict-parsed `topology` scenario section: the hierarchical reduction
+/// shape. Present = two-level aggregation (contributors chunked into
+/// consecutive groups of `group_size`, see
+/// [`crate::collective::ReductionPlan`]); absent = flat, bit-for-bit the
+/// pre-hierarchy sync path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TopologySpec {
+    /// Workers per aggregation group (>= 2; the tail group may be smaller).
+    pub group_size: usize,
+}
+
+impl TopologySpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("group_size", Json::num(self.group_size as f64))])
+    }
+
+    /// Strict parse: absent/null = flat (`None`), but a present section with
+    /// an unknown key or an out-of-range value is a hard error (same
+    /// convention as the sync_mode section).
+    pub fn from_json(j: &Json) -> Result<Option<TopologySpec>, String> {
+        let o = match j {
+            Json::Null => return Ok(None),
+            Json::Obj(o) => o,
+            _ => return Err("topology: must be an object".into()),
+        };
+        for k in o.keys() {
+            if k != "group_size" {
+                return Err(format!("topology: unknown key '{k}' (known keys: group_size)"));
+            }
+        }
+        let group_size = j
+            .get("group_size")
+            .as_u64()
+            .ok_or("topology: group_size must be a positive integer")?;
+        if group_size < 2 {
+            return Err(format!(
+                "topology: group_size {group_size} must be >= 2 (1-worker groups would \
+                 make every worker its own aggregator — that is the flat topology; \
+                 delete the section instead)"
+            ));
+        }
+        Ok(Some(TopologySpec { group_size: group_size as usize }))
+    }
+}
+
 /// One worker's declarative description inside a [`ScenarioSpec`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerSpec {
@@ -882,6 +927,12 @@ pub struct ScenarioSpec {
     /// so every pre-existing scenario file parses unchanged AND serializes
     /// unchanged (the section is only written when non-default).
     pub sync_mode: SyncMode,
+    /// Hierarchical reduction shape (JSON key `topology`; the Rust field is
+    /// named `grouping` because [`ScenarioSpec::topology`] already names the
+    /// speed/link topology accessor). Optional; absent = flat aggregation,
+    /// serialized only when set — pre-hierarchy scenario files round-trip
+    /// byte-identically.
+    pub grouping: Option<TopologySpec>,
     pub workers: Vec<WorkerSpec>,
 }
 
@@ -891,6 +942,14 @@ impl ScenarioSpec {
         crate::collective::Topology::heterogeneous(
             self.workers.iter().map(|w| w.speed).collect(),
         )
+    }
+
+    /// The reduction plan this scenario's engines should build each round.
+    pub fn plan_spec(&self) -> crate::collective::PlanSpec {
+        match self.grouping {
+            Some(t) => crate::collective::PlanSpec::TwoLevel { group_size: t.group_size },
+            None => crate::collective::PlanSpec::Flat,
+        }
     }
 
     /// True when the scenario is a plain homogeneous run — the case that must
@@ -952,6 +1011,10 @@ impl ScenarioSpec {
         // round-trip byte-identically.
         if !self.sync_mode.is_full_barrier() {
             pairs.push(("sync_mode", self.sync_mode.to_json()));
+        }
+        // Only written when set — flat scenarios stay byte-identical.
+        if let Some(t) = &self.grouping {
+            pairs.push(("topology", t.to_json()));
         }
         pairs.push(("workers", Json::arr(workers)));
         Json::obj(pairs)
@@ -1045,6 +1108,7 @@ impl ScenarioSpec {
             cooldown_rounds: opt_u64(j, "cooldown_rounds", "scenario")?.unwrap_or(0),
             compression,
             sync_mode: SyncMode::from_json(j.get("sync_mode"))?,
+            grouping: TopologySpec::from_json(j.get("topology"))?,
             workers,
         })
     }
@@ -1140,6 +1204,22 @@ impl ScenarioSpec {
                      compression-scheduling `{}` policy — two owners for the wire format \
                      and stale references; use a non-compressing policy",
                     self.run.policy.as_ref().unwrap().label(),
+                ));
+            }
+            if self.grouping.is_some() {
+                errs.push(
+                    "sync_mode bounded_staleness is incompatible with the two-level \
+                     `topology` section — late merges bypass the round's reduction plan; \
+                     remove one of the two sections"
+                        .into(),
+                );
+            }
+        }
+        if let Some(t) = &self.grouping {
+            if t.group_size < 2 {
+                errs.push(format!(
+                    "topology: group_size {} must be >= 2 (flat = omit the section)",
+                    t.group_size
                 ));
             }
         }
@@ -1271,6 +1351,7 @@ mod tests {
             cooldown_rounds: 1,
             compression: CompressionSpec::identity(),
             sync_mode: SyncMode::FullBarrier,
+            grouping: None,
             workers: vec![
                 WorkerSpec::default(),
                 WorkerSpec {
@@ -1478,6 +1559,72 @@ mod tests {
     }
 
     #[test]
+    fn scenario_topology_section_roundtrips_and_defaults_to_flat() {
+        let mut s = scenario_fixture();
+        s.grouping = Some(TopologySpec { group_size: 4 });
+        assert!(s.validate().is_empty(), "{:?}", s.validate());
+        assert_eq!(
+            s.plan_spec(),
+            crate::collective::PlanSpec::TwoLevel { group_size: 4 }
+        );
+        let j = s.to_json().to_string();
+        assert!(j.contains(r#""topology""#) && j.contains(r#""group_size":4"#), "{j}");
+        let s2 = ScenarioSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(s, s2);
+        // absent = flat, and flat specs never write the section, so every
+        // pre-hierarchy scenario file round-trips byte-identically
+        s.grouping = None;
+        assert_eq!(s.plan_spec(), crate::collective::PlanSpec::Flat);
+        let text = s.to_json().to_string();
+        assert!(!text.contains("topology"), "flat must omit the section: {text}");
+        let s2 = ScenarioSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(s2.grouping, None);
+    }
+
+    #[test]
+    fn scenario_topology_malformed_values_error_instead_of_defaulting() {
+        let mut s = scenario_fixture();
+        s.grouping = Some(TopologySpec { group_size: 4 });
+        let base = s.to_json().to_string();
+        let corruptions = [
+            (r#""group_size":4"#, r#""group_size":1"#, ">= 2"),
+            (r#""group_size":4"#, r#""group_size":0"#, ">= 2"),
+            (r#""group_size":4"#, r#""group_size":2.5"#, "positive integer"),
+            (r#""group_size":4"#, r#""group_size":"big""#, "positive integer"),
+            (r#""group_size":4"#, r#""group_size":4,"fanout":2"#, "unknown key"),
+        ];
+        for (good, bad, needle) in corruptions {
+            assert!(base.contains(good), "fixture lost the field behind {good:?}");
+            let text = base.replacen(good, bad, 1);
+            let err = ScenarioSpec::from_json(&Json::parse(&text).unwrap());
+            assert!(err.is_err(), "malformed {bad:?} was silently accepted");
+            let msg = err.unwrap_err();
+            assert!(msg.contains(needle), "error for {bad:?} must mention {needle:?}: {msg}");
+        }
+        // a non-object section is rejected too
+        let text = base.replacen(r#"{"group_size":4}"#, "8", 1);
+        let err = ScenarioSpec::from_json(&Json::parse(&text).unwrap());
+        assert!(err.unwrap_err().contains("must be an object"));
+    }
+
+    #[test]
+    fn scenario_rejects_two_level_plus_bounded_staleness() {
+        let mut s = scenario_fixture();
+        s.grouping = Some(TopologySpec { group_size: 2 });
+        s.sync_mode = SyncMode::BoundedStaleness { max_staleness: 2, discount: 0.5 };
+        let errs = s.validate();
+        assert!(
+            errs.iter().any(|e| e.contains("topology")),
+            "bounded staleness + two-level must be rejected: {errs:?}"
+        );
+        // quorum composes with the hierarchy (the plan is built per commit)
+        let mut s = scenario_fixture();
+        s.grouping = Some(TopologySpec { group_size: 2 });
+        s.sync_mode = SyncMode::Quorum { fraction: 0.5, max_round_time: 10.0 };
+        assert!(s.validate().is_empty(), "{:?}", s.validate());
+    }
+
+    #[test]
     fn scenario_message_loss_fault_parses_and_queries() {
         let mut s = scenario_fixture();
         s.workers[0].faults.push(FaultSpec::MessageLoss { round: 3, retry_s: 0.5 });
@@ -1565,6 +1712,7 @@ mod tests {
             cooldown_rounds: 0,
             compression: CompressionSpec::identity(),
             sync_mode: SyncMode::FullBarrier,
+            grouping: None,
             workers: vec![WorkerSpec::default(), WorkerSpec::default()],
         };
         assert!(hom.is_homogeneous());

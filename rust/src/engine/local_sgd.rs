@@ -22,7 +22,8 @@
 //! from a clean residual).
 
 use crate::collective::{
-    allreduce_mean_serial, allreduce_mean_threaded, mean_reduce_into, CommCounters,
+    allreduce_mean_serial, allreduce_mean_threaded, mean_reduce_into, CommCounters, PlanSpec,
+    ReductionPlan,
 };
 use crate::comm::{CompressionSpec, ErrorFeedback, Payload};
 use crate::data::Dataset;
@@ -72,6 +73,12 @@ pub struct EngineOpts {
     /// Journal / checkpoint / resume wiring ([`Durability::none`] by default:
     /// no journaling, no checkpoints — byte-identical to pre-journal runs).
     pub durability: Durability,
+    /// Reduction topology for the sync path ([`PlanSpec::Flat`] by default —
+    /// bit-identical to pre-plan runs). A two-level plan changes only the
+    /// wire-byte charges and the simulated sync clock; the float operation
+    /// sequence of the reduction never branches on it
+    /// ([`crate::collective::plan`] explains why).
+    pub plan: PlanSpec,
 }
 
 impl EngineOpts {
@@ -101,6 +108,7 @@ impl EngineOpts {
             threaded_allreduce: false,
             compression: CompressionSpec::identity(),
             durability: Durability::none(),
+            plan: PlanSpec::Flat,
         }
     }
 
@@ -183,6 +191,11 @@ pub fn run_local_sgd(
     let mut last_losses = vec![0f64; m];
     let mut last_psv: Vec<Option<f64>> = vec![None; m];
     let needs_grad_ar = opts.policy.needs_grad_allreduce();
+    // The reduction plan: worker count is fixed in this engine, so the plan is
+    // built once. Flat is the single-group degenerate case; a two-level plan
+    // only redirects wire-byte charges and the simulated sync clock below —
+    // the reduction arithmetic itself never consults it.
+    let plan = ReductionPlan::build(opts.plan, m);
     // H decided at the previous sync (None before round 0: bootstrap).
     let mut pending_h: Option<u32> = None;
     let mut round: u64 = 0;
@@ -316,6 +329,10 @@ pub fn run_local_sgd(
         let round_logical = CommCounters::ring_bytes(d, m);
         let mut round_wire = round_logical;
         let mut wire_frac = 1.0f64;
+        // Two-level compressed syncs carry their per-group uplink totals and
+        // the downlink payload size over to the time model below; flat and
+        // dense syncs leave this None.
+        let mut two_level_comm: Option<(Vec<(usize, u64)>, u64)> = None;
         if comp_spec.is_dense() {
             {
                 let mut bufs: Vec<&mut [f32]> =
@@ -327,7 +344,14 @@ pub fn run_local_sgd(
                 }
             }
             consensus.copy_from_slice(&params[0]);
-            rec.comm.charge_allreduce(d, m);
+            if plan.is_flat() {
+                rec.comm.charge_allreduce(d, m);
+            } else {
+                // Dense rings conserve bytes across the hierarchy
+                // (`two_level_dense_ring_bytes_are_conserved`), so this charge
+                // equals the flat one — the identity contract.
+                rec.comm.charge_two_level_allreduce(d, plan.group_sizes());
+            }
         } else {
             let reference = std::mem::take(&mut consensus);
             let payloads: Vec<Payload> = params
@@ -347,11 +371,20 @@ pub fn run_local_sgd(
             for p in params.iter_mut() {
                 p.copy_from_slice(&consensus);
             }
-            round_wire = CommCounters::compressed_wire_bytes(m, uplink, down.wire_bytes());
+            if plan.is_flat() {
+                round_wire = CommCounters::compressed_wire_bytes(m, uplink, down.wire_bytes());
+                rec.comm.charge_compressed_allreduce(d, m, uplink, down.wire_bytes());
+            } else {
+                let per: Vec<u64> = payloads.iter().map(|p| p.wire_bytes()).collect();
+                let groups = plan.group_uplinks(&per);
+                round_wire =
+                    CommCounters::two_level_compressed_wire_bytes(d, &groups, down.wire_bytes());
+                rec.comm.charge_two_level_compressed_allreduce(d, &groups, down.wire_bytes());
+                two_level_comm = Some((groups, down.wire_bytes()));
+            }
             if round_logical > 0 {
                 wire_frac = round_wire as f64 / round_logical as f64;
             }
-            rec.comm.charge_compressed_allreduce(d, m, uplink, down.wire_bytes());
         }
         rec.comm.rounds += 1;
 
@@ -386,7 +419,15 @@ pub fn run_local_sgd(
         // ---- simulated wall-clock ------------------------------------------
         let round_start_s = sim_time;
         let round_compute_s = opts.time_model.round_compute_time(b_eff, h);
-        let sync_s = opts.time_model.sync_time_compressed(d, needs_grad_ar, wire_frac);
+        let sync_s = if plan.is_flat() {
+            opts.time_model.sync_time_compressed(d, needs_grad_ar, wire_frac)
+        } else {
+            let (groups, global_k, global_frac) = match &two_level_comm {
+                Some((groups, down_wire)) => plan.compressed_time_args(d, groups, *down_wire),
+                None => plan.dense_time_args(),
+            };
+            opts.time_model.sync_time_two_level(d, needs_grad_ar, &groups, global_k, global_frac)
+        };
         sim_time += round_compute_s;
         sim_time += sync_s;
         // Per-worker timings for the trace: fault-free worker_round_time, whose
@@ -999,6 +1040,58 @@ mod tests {
             hs.iter().max() > hs.iter().min(),
             "H never moved under QSR: {hs:?}"
         );
+    }
+
+    /// The tentpole contract at engine level: a two-level plan changes only
+    /// the clock and the wire charges — the training trajectory is bit-for-bit
+    /// the flat run's, dense and lossy alike, because the reduction arithmetic
+    /// never branches on the plan.
+    #[test]
+    fn two_level_plan_keeps_training_bitwise_and_cuts_sync_time() {
+        let run = |plan: PlanSpec, spec: crate::comm::CompressionSpec| {
+            let (mut models, mut data) = quad_workers(4, 0.5);
+            let mut o = opts(4, 20_000);
+            o.set_scheduler(Box::new(FixedH::new(4)));
+            o.set_controller(Box::new(ConstantSchedule::new(16)));
+            o.compression = spec;
+            o.plan = plan;
+            run_local_sgd(&mut models, &mut data, o)
+        };
+        for method in [
+            crate::comm::CompressMethod::Identity,
+            crate::comm::CompressMethod::QuantizeInt8 { chunk: 8 },
+            crate::comm::CompressMethod::TopK { k_frac: 0.25 },
+        ] {
+            let spec = compressed(method, true);
+            let flat = run(PlanSpec::Flat, spec.clone());
+            let two = run(PlanSpec::TwoLevel { group_size: 2 }, spec.clone());
+            let label = spec.label();
+            assert_eq!(flat.batch_trace, two.batch_trace, "{label}: schedule diverged");
+            assert_eq!(flat.points.len(), two.points.len());
+            for (a, b) in flat.points.iter().zip(&two.points) {
+                assert_eq!(
+                    a.val_loss.to_bits(),
+                    b.val_loss.to_bits(),
+                    "{label}: plan changed the arithmetic"
+                );
+            }
+            // identical logical traffic; the clock differs because 2+2 rings
+            // plus a 2-ring trunk pay 4 latency steps against flat's 6
+            assert_eq!(flat.comm.bytes_moved, two.comm.bytes_moved, "{label}");
+            assert!(
+                two.sim_time_s < flat.sim_time_s,
+                "{label}: two-level clock {} not below flat {}",
+                two.sim_time_s,
+                flat.sim_time_s
+            );
+        }
+        // dense rings conserve wire bytes exactly across the hierarchy
+        let flat = run(PlanSpec::Flat, crate::comm::CompressionSpec::identity());
+        let two = run(
+            PlanSpec::TwoLevel { group_size: 2 },
+            crate::comm::CompressionSpec::identity(),
+        );
+        assert_eq!(flat.comm, two.comm, "identity two-level must not change comm accounting");
     }
 
     /// Mid-run compression switches are deterministic: the same seed replays

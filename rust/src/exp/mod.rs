@@ -142,6 +142,7 @@ pub fn engine_opts(cfg: &RunConfig) -> EngineOpts {
         threaded_allreduce: false,
         compression: crate::comm::CompressionSpec::identity(),
         durability: crate::journal::Durability::none(),
+        plan: crate::collective::PlanSpec::Flat,
     }
 }
 

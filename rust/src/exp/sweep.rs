@@ -220,6 +220,7 @@ mod tests {
             cooldown_rounds: 0,
             compression: CompressionSpec::identity(),
             sync_mode: crate::config::SyncMode::FullBarrier,
+            grouping: None,
             workers: vec![WorkerSpec::default(), WorkerSpec::default()],
         }
     }

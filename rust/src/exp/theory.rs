@@ -63,6 +63,7 @@ pub fn run_cell(h: u32, m: usize, eta: f64, mu: f64, l: f64, rounds: u64, seed: 
         threaded_allreduce: false,
         compression: crate::comm::CompressionSpec::identity(),
         durability: crate::journal::Durability::none(),
+        plan: crate::collective::PlanSpec::Flat,
     };
     let rec = run_local_sgd(&mut models, &mut datasets, opts);
     let losses: Vec<f64> = rec.points.iter().map(|p| p.val_loss.max(1e-300)).collect();

@@ -1,0 +1,313 @@
+//! Deterministic scenario synthesis: `adaloco gen-scenario`.
+//!
+//! Large-roster cluster scenarios (hundreds to thousands of workers) are
+//! impractical to hand-write as JSON, so this module synthesizes a full
+//! [`ScenarioSpec`] from a dozen knobs: roster size, aggregation group size,
+//! lognormal speed spread, and fractions of the roster receiving elastic
+//! churn (late joins / early leaves) and injected faults (stragglers,
+//! latency, dropouts). Everything is drawn from a single [`Pcg64`] stream
+//! seeded by the spec, so the same knobs always emit the byte-identical
+//! scenario file — the CI large-roster smoke regenerates its 1024-worker
+//! scenario on every run instead of vendoring a megabyte of JSON.
+//!
+//! The underlying training run is intentionally tiny (logistic regression on
+//! an 8-feature Gaussian mixture, constant batch, fixed H) so a 1024-worker
+//! roster completes in seconds of real time: the point of the generated
+//! scenarios is to exercise the *coordinator* — roster-independent peak
+//! accumulator memory, two-level reduction plans, kill/resume across churn —
+//! not the optimizer.
+
+use crate::comm::CompressionSpec;
+use crate::config::{
+    BatchStrategy, DataSpec, FaultSpec, ModelSpec, RunConfig, ScenarioSpec, SyncMode, SyncSpec,
+    TopologySpec, WorkerSpec,
+};
+use crate::util::rng::Pcg64;
+
+/// Local batch size of every generated run (constant strategy).
+const GEN_B: u64 = 4;
+/// Sync interval of every generated run.
+const GEN_H: u32 = 2;
+
+/// Knobs for one synthesized scenario. All randomness derives from `seed`,
+/// so equal specs generate byte-identical scenarios.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenSpec {
+    /// Scenario name (also the run label and the default output file stem).
+    pub name: String,
+    /// Roster size.
+    pub workers: usize,
+    /// Aggregation group size for the two-level reduction plan (0 = flat).
+    pub group_size: usize,
+    /// RNG seed for the roster draw AND the training run.
+    pub seed: u64,
+    /// σ of the lognormal worker-speed draw: `speed = exp(σ·N(0,1))`.
+    /// 0.0 = homogeneous roster.
+    pub speed_log_sigma: f64,
+    /// Fraction of the (non-founding) roster with elastic churn: alternating
+    /// late joins at rounds 1–3 and early leaves at rounds 4–6, chosen to
+    /// span the CI crash drill's kill-at-round-2 boundary.
+    pub churn_frac: f64,
+    /// Fraction receiving a `straggle` fault (factor 1.5–3.5, a few rounds).
+    pub straggle_frac: f64,
+    /// Fraction receiving an `extra_latency` fault (0.05–0.5 s, a few rounds).
+    pub latency_frac: f64,
+    /// Fraction receiving a single mid-run `dropout` round.
+    pub dropout_frac: f64,
+    /// Sync-payload compression for the generated scenario.
+    pub compression: CompressionSpec,
+    /// Target number of sync rounds on a full roster (the sample budget is
+    /// `rounds · workers · b · H`; churn and dropouts stretch the tail).
+    pub rounds: u64,
+}
+
+impl Default for GenSpec {
+    fn default() -> Self {
+        GenSpec {
+            name: "gen".into(),
+            workers: 8,
+            group_size: 0,
+            seed: 1,
+            speed_log_sigma: 0.25,
+            churn_frac: 0.0,
+            straggle_frac: 0.0,
+            latency_frac: 0.0,
+            dropout_frac: 0.0,
+            compression: CompressionSpec::identity(),
+            rounds: 8,
+        }
+    }
+}
+
+impl GenSpec {
+    fn validate(&self) -> Result<(), String> {
+        if self.workers == 0 {
+            return Err("workers must be >= 1".into());
+        }
+        if self.group_size == 1 {
+            return Err(
+                "group_size 1 would make every worker its own aggregator — that is the \
+                 flat topology; pass 0 (flat) or >= 2"
+                    .into(),
+            );
+        }
+        if self.rounds < 8 {
+            return Err(format!(
+                "rounds {} must be >= 8 (the churn timeline spans rounds 1-6 and the \
+                 crash drill checkpoints at round 2)",
+                self.rounds
+            ));
+        }
+        for (k, v) in [
+            ("churn", self.churn_frac),
+            ("straggle", self.straggle_frac),
+            ("latency", self.latency_frac),
+            ("dropout", self.dropout_frac),
+        ] {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("{k} fraction {v} must be in [0,1]"));
+            }
+        }
+        if !(self.speed_log_sigma >= 0.0) {
+            return Err(format!("speed_log_sigma {} must be >= 0", self.speed_log_sigma));
+        }
+        Ok(())
+    }
+}
+
+/// Synthesize the scenario. The emitted spec always passes
+/// [`ScenarioSpec::validate`]: worker 0 is a full-speed-distribution founding
+/// member, every leave round exceeds its join round, and fault windows are
+/// non-empty.
+pub fn generate(spec: &GenSpec) -> Result<ScenarioSpec, String> {
+    spec.validate()?;
+    let mut rng = Pcg64::new(spec.seed, 0);
+
+    let total_samples = spec.rounds * spec.workers as u64 * GEN_B * GEN_H as u64;
+    let run = RunConfig {
+        label: spec.name.clone(),
+        model: ModelSpec::Logistic { feat: 8, classes: 3, l2: 1e-4 },
+        data: DataSpec::GaussianMixture {
+            feat: 8,
+            classes: 3,
+            separation: 2.5,
+            noise: 1.0,
+            eval_size: 64,
+        },
+        strategy: BatchStrategy::Constant { b: GEN_B },
+        sync: SyncSpec::FixedH { h: GEN_H },
+        optim_kind: crate::optim::OptimKind::Sgd,
+        momentum: 0.0,
+        weight_decay: 0.0,
+        m_workers: spec.workers,
+        total_samples,
+        eval_every_samples: (total_samples / 4).max(1),
+        seed: spec.seed,
+        b_max_local: 1024,
+        checkpoint_every: 2,
+        ..RunConfig::default()
+    };
+
+    let mut workers = Vec::with_capacity(spec.workers);
+    for w in 0..spec.workers {
+        let mut ws = WorkerSpec {
+            speed: (spec.speed_log_sigma * rng.normal()).exp(),
+            ..WorkerSpec::default()
+        };
+        // Worker 0 never churns: the scenario needs a founding member, and a
+        // fixed anchor keeps kill/resume drills comparable across seeds.
+        if w > 0 && rng.next_f64() < spec.churn_frac {
+            if w % 2 == 1 {
+                ws.join_round = 1 + rng.below(3); // joins round 1..=3
+            } else {
+                ws.leave_round = Some(4 + rng.below(3)); // leaves round 4..=6
+            }
+        }
+        if rng.next_f64() < spec.straggle_frac {
+            let from = 1 + rng.below(2);
+            ws.faults.push(FaultSpec::Straggle {
+                from_round: from,
+                until_round: from + 1 + rng.below(3),
+                factor: 1.5 + 2.0 * rng.next_f64(),
+            });
+        }
+        if rng.next_f64() < spec.latency_frac {
+            let from = rng.below(3);
+            ws.faults.push(FaultSpec::ExtraLatency {
+                from_round: from,
+                until_round: from + 1 + rng.below(3),
+                seconds: 0.05 + 0.45 * rng.next_f64(),
+            });
+        }
+        if rng.next_f64() < spec.dropout_frac {
+            ws.faults.push(FaultSpec::Dropout { round: 1 + rng.below(spec.rounds - 2) });
+        }
+        workers.push(ws);
+    }
+
+    let scenario = ScenarioSpec {
+        name: spec.name.clone(),
+        run,
+        warmup_rounds: 0,
+        cooldown_rounds: 0,
+        compression: spec.compression.clone(),
+        sync_mode: SyncMode::FullBarrier,
+        grouping: match spec.group_size {
+            0 => None,
+            g => Some(TopologySpec { group_size: g }),
+        },
+        workers,
+    };
+    let errs = scenario.validate();
+    if !errs.is_empty() {
+        return Err(format!("generated scenario is invalid (a generator bug): {}", errs.join("; ")));
+    }
+    Ok(scenario)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_fault_spec(workers: usize) -> GenSpec {
+        GenSpec {
+            name: "t".into(),
+            workers,
+            group_size: 4,
+            seed: 9,
+            speed_log_sigma: 0.3,
+            churn_frac: 1.0,
+            straggle_frac: 0.3,
+            latency_frac: 0.3,
+            dropout_frac: 0.2,
+            compression: CompressionSpec::identity(),
+            rounds: 10,
+        }
+    }
+
+    #[test]
+    fn same_spec_generates_byte_identical_json() {
+        let spec = full_fault_spec(32);
+        let a = generate(&spec).unwrap().to_json().to_string();
+        let b = generate(&spec).unwrap().to_json().to_string();
+        assert_eq!(a, b);
+        let mut other = spec.clone();
+        other.seed = 10;
+        let c = generate(&other).unwrap().to_json().to_string();
+        assert_ne!(a, c, "different seeds must draw different rosters");
+    }
+
+    #[test]
+    fn generated_scenario_validates_and_round_trips() {
+        let s = generate(&full_fault_spec(64)).unwrap();
+        assert!(s.validate().is_empty());
+        assert_eq!(s.workers.len(), 64);
+        assert_eq!(s.run.m_workers, 64);
+        assert_eq!(
+            s.plan_spec(),
+            crate::collective::PlanSpec::TwoLevel { group_size: 4 }
+        );
+        let j = s.to_json().to_string();
+        let back =
+            ScenarioSpec::from_json(&crate::util::json::Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(s, back, "generated scenario must survive the JSON round trip");
+    }
+
+    #[test]
+    fn churn_spans_the_crash_drill_boundary() {
+        let s = generate(&full_fault_spec(16)).unwrap();
+        assert_eq!(s.workers[0].join_round, 0, "worker 0 is the founding anchor");
+        assert!(s.workers[0].leave_round.is_none());
+        let joins: Vec<u64> = s
+            .workers
+            .iter()
+            .filter(|w| w.join_round > 0)
+            .map(|w| w.join_round)
+            .collect();
+        let leaves: Vec<u64> =
+            s.workers.iter().filter_map(|w| w.leave_round).collect();
+        assert!(!joins.is_empty() && !leaves.is_empty(), "churn_frac 1.0 must churn");
+        assert!(joins.iter().all(|&r| (1..=3).contains(&r)), "{joins:?}");
+        assert!(leaves.iter().all(|&r| (4..=6).contains(&r)), "{leaves:?}");
+    }
+
+    #[test]
+    fn flat_spec_emits_no_topology_section() {
+        let mut spec = full_fault_spec(8);
+        spec.group_size = 0;
+        let s = generate(&spec).unwrap();
+        assert!(s.grouping.is_none());
+        assert_eq!(s.plan_spec(), crate::collective::PlanSpec::Flat);
+        assert!(!s.to_json().to_string().contains("topology"));
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let mut spec = GenSpec::default();
+        spec.workers = 0;
+        assert!(generate(&spec).is_err());
+        let mut spec = GenSpec::default();
+        spec.group_size = 1;
+        assert!(generate(&spec).is_err());
+        let mut spec = GenSpec::default();
+        spec.churn_frac = 1.5;
+        assert!(generate(&spec).is_err());
+        let mut spec = GenSpec::default();
+        spec.rounds = 4;
+        assert!(generate(&spec).is_err());
+    }
+
+    #[test]
+    fn generated_two_level_scenario_runs_to_completion() {
+        let mut spec = full_fault_spec(6);
+        spec.group_size = 2;
+        spec.straggle_frac = 0.5;
+        let s = generate(&spec).unwrap();
+        let rec =
+            crate::cluster::run_scenario_durable(&s, crate::journal::Durability::none())
+                .unwrap();
+        assert!(!rec.diverged);
+        assert!(rec.total_rounds >= 8, "rounds {}", rec.total_rounds);
+        assert!(rec.comm.wire_bytes > 0);
+    }
+}

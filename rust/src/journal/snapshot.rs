@@ -102,6 +102,14 @@ pub struct ClusterSnapshot {
     /// order. Serialized only when non-empty, so full-barrier/quorum
     /// snapshots stay byte-identical to pre-sync-mode ones (absent: empty).
     pub pending: Vec<PendingUplink>,
+    /// Aggregation-group size of the run's reduction plan (`0`: flat).
+    /// Serialized only when non-zero, so flat snapshots stay byte-identical
+    /// to pre-topology ones; resume refuses a plan mismatch.
+    pub group_size: usize,
+    /// High-water mark of coordinator accumulator f32s so far — carried so a
+    /// resumed run reports the same peak as the uninterrupted one. Serialized
+    /// only when non-zero (absent: 0).
+    pub peak_acc_f32s: u64,
 }
 
 /// The full run state at the boundary of committed round `round`. Resume
@@ -245,6 +253,12 @@ impl ClusterSnapshot {
         if !self.pending.is_empty() {
             pairs.push(("pending", Json::arr(self.pending.iter().map(|p| p.to_json()))));
         }
+        if self.group_size != 0 {
+            pairs.push(("group_size", Json::num(self.group_size as f64)));
+        }
+        if self.peak_acc_f32s != 0 {
+            pairs.push(("peak_acc_f32s", u64_hex_json(self.peak_acc_f32s)));
+        }
         Json::obj(pairs)
     }
 
@@ -279,6 +293,19 @@ impl ClusterSnapshot {
                 .collect::<Result<Vec<_>, String>>()?,
             None => Vec::new(),
         };
+        // Absent in pre-topology snapshots and in flat runs: 0 / flat.
+        let group_size = if j.get("group_size").is_null() {
+            0
+        } else {
+            j.get("group_size")
+                .as_u64()
+                .ok_or_else(|| format!("{w}: group_size must be an integer"))? as usize
+        };
+        let peak_acc_f32s = if j.get("peak_acc_f32s").is_null() {
+            0
+        } else {
+            u64_from_hex_json(j.get("peak_acc_f32s"), w)?
+        };
         Ok(ClusterSnapshot {
             warmup_left: u64_from_hex_json(j.get("warmup_left"), w)?,
             cooldown_left: u64_from_hex_json(j.get("cooldown_left"), w)?,
@@ -286,6 +313,8 @@ impl ClusterSnapshot {
             members,
             stats,
             pending,
+            group_size,
+            peak_acc_f32s,
         })
     }
 }
@@ -792,6 +821,8 @@ mod tests {
                     params: vec![0.5, -0.0, f32::from_bits(0x7fc0_5678)],
                     grad: vec![-1.0, 0.25, 0.0],
                 }],
+                group_size: 2,
+                peak_acc_f32s: 35,
             }),
             journal_bytes: 5311,
             journal_seq: 23,
@@ -861,6 +892,36 @@ mod tests {
         assert!(!text.contains("pending\""), "{text}");
         assert!(!text.contains("merges"), "{text}");
         assert!(!text.contains("quorum_missed"), "{text}");
+    }
+
+    #[test]
+    fn pre_topology_snapshot_reads_flat_with_zero_peak() {
+        // simulate a snapshot from before the topology section existed:
+        // strip the new cluster keys — they must read back as flat / 0
+        let snap = sample_snapshot();
+        let text = snap.to_json().to_string();
+        let mut j = Json::parse(&text).unwrap();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(c)) = o.get_mut("cluster") {
+                c.remove("group_size");
+                c.remove("peak_acc_f32s");
+            }
+        }
+        let back = RunSnapshot::from_json(&j).unwrap();
+        assert_eq!(back.cluster.as_ref().unwrap().group_size, 0);
+        assert_eq!(back.cluster.as_ref().unwrap().peak_acc_f32s, 0);
+        // roundtrip keeps the values when present
+        let back = RunSnapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(back.cluster.as_ref().unwrap().group_size, 2);
+        assert_eq!(back.cluster.as_ref().unwrap().peak_acc_f32s, 35);
+        // and a flat run with an unarmed counter serializes WITHOUT the keys,
+        // keeping its snapshots byte-identical to pre-topology ones
+        let mut flat = sample_snapshot();
+        flat.cluster.as_mut().unwrap().group_size = 0;
+        flat.cluster.as_mut().unwrap().peak_acc_f32s = 0;
+        let text = flat.to_json().to_string();
+        assert!(!text.contains("group_size"), "{text}");
+        assert!(!text.contains("peak_acc_f32s"), "{text}");
     }
 
     #[test]

@@ -85,6 +85,7 @@ pub mod config;
 pub mod data;
 pub mod engine;
 pub mod exp;
+pub mod gen;
 pub mod journal;
 pub mod metrics;
 pub mod model;

@@ -4,6 +4,10 @@
 //!   train    Run a single training run from a JSON config (or the default).
 //!   cluster  Run a cluster scenario (or a suite directory) through the
 //!            concurrent message-passing runtime.
+//!   gen-scenario
+//!            Synthesize a cluster scenario JSON (large rosters, lognormal
+//!            speeds, churn, faults, two-level topology) deterministically
+//!            from a seed.
 //!   sweep    Cross compression methods with sync intervals H over one
 //!            scenario and emit a paper-style comparison table.
 //!   table    Regenerate a paper table: t1 t2 t4 t6 t8 t1-pjrt t2-pjrt theory ab2 ab3.
@@ -39,6 +43,10 @@ USAGE:
                   [durability flags]
   adaloco cluster (--config scenario.json | --suite scenarios/)
                   [--seed N] [--out results] [durability flags]
+  adaloco gen-scenario --workers N [--group-size G] [--seed S] [--name NAME]
+                  [--rounds R] [--speed-sigma F] [--churn F] [--straggle F]
+                  [--latency F] [--dropout F] [--compression SPEC]
+                  [--out scenario.json]
   adaloco sweep   --config scenario.json [--methods identity,int8,signsgd,topk]
                   [--hs 1,4,16] [--seed N] [--out results]
   adaloco table   --id <t1|t2|t4|t6|t8|t1-pjrt|t2-pjrt|theory|ab2|ab3>
@@ -96,6 +104,7 @@ fn main() {
     let result = match cmd.as_str() {
         "train" => cmd_train(&args),
         "cluster" => cmd_cluster(&args),
+        "gen-scenario" => cmd_gen_scenario(&args),
         "sweep" => cmd_sweep(&args),
         "table" => cmd_table(&args),
         "figure" => cmd_figure(&args),
@@ -306,20 +315,35 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             rec.comm.compression_ratio(),
         );
         print_policy_line(&rec);
-        for w in &rec.worker_stats {
+        // Large rosters: per-worker lines would swamp the output — keep the
+        // aggregate summary plus the group-level report below.
+        if rec.worker_stats.len() <= 32 {
+            for w in &rec.worker_stats {
+                println!(
+                    "  worker {:>2}: speed={:.2} joined@r{}{} rounds={} dropped={} steps={} \
+                     samples={} sim_compute={}",
+                    w.worker,
+                    w.speed,
+                    w.joined_round,
+                    w.left_round.map(|r| format!(" left@r{r}")).unwrap_or_default(),
+                    w.rounds_contributed,
+                    w.dropped_rounds,
+                    w.local_steps,
+                    w.samples,
+                    stats::fmt_duration(w.sim_compute_s),
+                );
+            }
+        } else {
             println!(
-                "  worker {:>2}: speed={:.2} joined@r{}{} rounds={} dropped={} steps={} \
-                 samples={} sim_compute={}",
-                w.worker,
-                w.speed,
-                w.joined_round,
-                w.left_round.map(|r| format!(" left@r{r}")).unwrap_or_default(),
-                w.rounds_contributed,
-                w.dropped_rounds,
-                w.local_steps,
-                w.samples,
-                stats::fmt_duration(w.sim_compute_s),
+                "  ({} workers — per-worker lines elided; see <label>.stalls.csv)",
+                rec.worker_stats.len()
             );
+        }
+        if let Some(t) = &spec.grouping {
+            if !rec.trace.is_empty() {
+                let ga = adaloco::obs::GroupAttribution::from_trace(&rec.trace, t.group_size);
+                print!("{}", ga.report());
+            }
         }
         if rec.interrupted {
             println!(
@@ -332,6 +356,64 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         }
     }
     anyhow::ensure!(!any_diverged, "at least one scenario diverged");
+    Ok(())
+}
+
+/// Synthesize a cluster scenario from CLI knobs (see [`adaloco::gen`]). The
+/// draw is fully determined by the knobs, so re-running the command with the
+/// same flags regenerates the byte-identical file — CI builds its
+/// 1024-worker scenarios this way instead of vendoring them.
+fn cmd_gen_scenario(args: &Args) -> anyhow::Result<()> {
+    let workers: usize =
+        args.parse_or("workers", 0usize).map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(workers > 0, "gen-scenario: pass --workers N (>= 1)");
+    let d = adaloco::gen::GenSpec::default();
+    let group_size: usize =
+        args.parse_or("group-size", d.group_size).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut spec = adaloco::gen::GenSpec {
+        workers,
+        group_size,
+        seed: args.parse_or("seed", d.seed).map_err(|e| anyhow::anyhow!("{e}"))?,
+        rounds: args.parse_or("rounds", d.rounds).map_err(|e| anyhow::anyhow!("{e}"))?,
+        speed_log_sigma: args
+            .parse_or("speed-sigma", d.speed_log_sigma)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        churn_frac: args.parse_or("churn", d.churn_frac).map_err(|e| anyhow::anyhow!("{e}"))?,
+        straggle_frac: args
+            .parse_or("straggle", d.straggle_frac)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        latency_frac: args
+            .parse_or("latency", d.latency_frac)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        dropout_frac: args
+            .parse_or("dropout", d.dropout_frac)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        name: match args.get("name") {
+            Some(n) => n.to_string(),
+            None if group_size > 0 => format!("gen{workers}_g{group_size}"),
+            None => format!("gen{workers}"),
+        },
+        ..d
+    };
+    if let Some(c) = args.get("compression") {
+        spec.compression = adaloco::comm::CompressionSpec::parse(c)
+            .map_err(|e| anyhow::anyhow!("--compression '{c}': {e}"))?;
+    }
+    let scenario =
+        adaloco::gen::generate(&spec).map_err(|e| anyhow::anyhow!("gen-scenario: {e}"))?;
+    let out = match args.get("out") {
+        Some(p) => p.to_string(),
+        None => format!("{}.json", scenario.name),
+    };
+    std::fs::write(&out, scenario.to_json().to_string_pretty())?;
+    println!(
+        "scenario '{}' -> {out}: {} workers, group_size={}, ~{} rounds, compression={}",
+        scenario.name,
+        scenario.workers.len(),
+        spec.group_size,
+        spec.rounds,
+        scenario.compression.label(),
+    );
     Ok(())
 }
 

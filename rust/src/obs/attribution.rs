@@ -236,6 +236,117 @@ impl Attribution {
     }
 }
 
+/// One group's aggregate over a trace, under a two-level reduction plan.
+/// Groups are positional chunk indices over each round's committed roster
+/// (see [`RoundTrace::group_windows`]) — with an elastic roster the same
+/// index can seat different workers round to round, so this ranks *seats on
+/// the reduction tree*, not fixed machines.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupStall {
+    pub group: usize,
+    /// Rounds where this group index existed (had at least one member).
+    pub rounds: u64,
+    /// Rounds where this group's window released the global barrier last.
+    pub gated_rounds: u64,
+    /// Σ margin over the runner-up group, across the rounds it gated — the
+    /// time this group's window cost every other group.
+    pub gated_margin_s: f64,
+}
+
+/// Group-level gate attribution for a two-level plan: which aggregation
+/// group's window released the global barrier each round, and the per-group
+/// ranking. The flat analogue of [`Attribution`], one level up the tree —
+/// under a hierarchical plan the coordinator waits on the slowest *group
+/// ring*, so this names the window worth splitting or re-balancing.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct GroupAttribution {
+    /// The plan's group size (0 = flat: a single window per round).
+    pub group_size: usize,
+    /// `(round, gating group, margin over the runner-up group)` per
+    /// committed round with timing.
+    pub rounds: Vec<(u64, usize, f64)>,
+    /// Sorted by (gated rounds desc, gated margin desc, group asc).
+    pub ranking: Vec<GroupStall>,
+}
+
+impl GroupAttribution {
+    pub fn from_trace(trace: &[RoundTrace], group_size: usize) -> GroupAttribution {
+        let mut rounds = Vec::with_capacity(trace.len());
+        let mut per_group: std::collections::BTreeMap<usize, GroupStall> = Default::default();
+        for rt in trace {
+            let windows = rt.group_windows(group_size);
+            if windows.is_empty() {
+                continue; // pre-trace journal: no per-worker timing recorded
+            }
+            let mut gating = windows[0].group;
+            let (mut best, mut second) = (f64::NEG_INFINITY, f64::NEG_INFINITY);
+            for w in &windows {
+                let entry = per_group.entry(w.group).or_insert(GroupStall {
+                    group: w.group,
+                    rounds: 0,
+                    gated_rounds: 0,
+                    gated_margin_s: 0.0,
+                });
+                entry.rounds += 1;
+                if w.gate_s > best {
+                    second = best;
+                    best = w.gate_s;
+                    gating = w.group;
+                } else if w.gate_s > second {
+                    second = w.gate_s;
+                }
+            }
+            let margin_s = if windows.len() > 1 { best - second } else { 0.0 };
+            let g = per_group.get_mut(&gating).unwrap();
+            g.gated_rounds += 1;
+            g.gated_margin_s += margin_s;
+            rounds.push((rt.round, gating, margin_s));
+        }
+        let mut ranking: Vec<GroupStall> = per_group.into_values().collect();
+        ranking.sort_by(|a, b| {
+            b.gated_rounds
+                .cmp(&a.gated_rounds)
+                .then(b.gated_margin_s.total_cmp(&a.gated_margin_s))
+                .then(a.group.cmp(&b.group))
+        });
+        GroupAttribution { group_size, rounds, ranking }
+    }
+
+    /// The group whose window gated the most rounds.
+    pub fn top_group(&self) -> Option<usize> {
+        self.ranking.first().map(|g| g.group)
+    }
+
+    /// Human-readable report, appended to the attribution artifact when the
+    /// scenario runs a two-level plan.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "group gate attribution over {} committed rounds (group size {})\n",
+            self.rounds.len(),
+            self.group_size,
+        ));
+        if let Some(top) = self.ranking.first() {
+            out.push_str(&format!(
+                "  top gating group: group {} — gated {}/{} rounds, costing the \
+                 other groups {:.4}s\n",
+                top.group,
+                top.gated_rounds,
+                self.rounds.len(),
+                top.gated_margin_s,
+            ));
+        }
+        out.push_str("  group  rounds  gated  gated_margin_s\n");
+        for g in &self.ranking {
+            out.push_str(&format!(
+                "  {:>5}  {:>6}  {:>5}  {:>14.6}\n",
+                g.group, g.rounds, g.gated_rounds, g.gated_margin_s,
+            ));
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -340,6 +451,47 @@ mod tests {
         assert_eq!(w2.gated_rounds, 0);
         let rep = a.report();
         assert!(rep.contains("missed quorum"), "{rep}");
+    }
+
+    #[test]
+    fn group_attribution_names_the_slow_group() {
+        // workers 0,1 fast; 2,3 slow — under group size 2 the second window
+        // gates every round, by the margin over the first window's gate.
+        let trace = vec![
+            rt(0, &[(0, 1.0, 0.0), (1, 1.0, 0.0), (2, 3.0, 0.0), (3, 2.0, 0.0)]),
+            rt(1, &[(0, 1.0, 0.0), (1, 1.0, 0.0), (2, 3.0, 0.0), (3, 2.0, 0.0)]),
+        ];
+        let ga = GroupAttribution::from_trace(&trace, 2);
+        assert_eq!(ga.top_group(), Some(1));
+        assert_eq!(ga.rounds[0], (0, 1, 2.0)); // gate 3.0 over group 0's 1.0
+        let top = &ga.ranking[0];
+        assert_eq!(top.group, 1);
+        assert_eq!(top.rounds, 2);
+        assert_eq!(top.gated_rounds, 2);
+        assert_eq!(top.gated_margin_s, 4.0);
+        let g0 = ga.ranking.iter().find(|g| g.group == 0).unwrap();
+        assert_eq!(g0.gated_rounds, 0);
+        let rep = ga.report();
+        assert!(rep.contains("top gating group: group 1"), "{rep}");
+        assert!(rep.contains("gated 2/2 rounds"), "{rep}");
+    }
+
+    #[test]
+    fn flat_group_attribution_is_one_window_with_zero_margin() {
+        let ga =
+            GroupAttribution::from_trace(&[rt(0, &[(0, 1.0, 0.0), (1, 2.0, 0.0)])], 0);
+        assert_eq!(ga.rounds, vec![(0, 0, 0.0)]);
+        assert_eq!(ga.ranking.len(), 1);
+        assert_eq!(ga.top_group(), Some(0));
+    }
+
+    #[test]
+    fn group_gate_ties_break_to_the_lowest_group_index() {
+        let ga = GroupAttribution::from_trace(
+            &[rt(0, &[(0, 2.0, 0.0), (1, 1.0, 0.0), (2, 2.0, 0.0), (3, 1.0, 0.0)])],
+            2,
+        );
+        assert_eq!(ga.rounds[0], (0, 0, 0.0), "equal gates: lowest group wins");
     }
 
     #[test]

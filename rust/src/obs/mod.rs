@@ -26,16 +26,21 @@
 //!   coordinator track, loadable in Perfetto), per-round and per-worker CSVs.
 //! * [`attribution`] — per-committed-sync critical-path decomposition (which
 //!   worker gated the barrier, by how much, compute vs. injected latency)
-//!   and the per-worker stall ranking.
+//!   and the per-worker stall ranking. Under a two-level reduction plan,
+//!   [`GroupAttribution`] lifts the same analysis one level up the tree:
+//!   which aggregation-group window released the global barrier last.
 
 pub mod attribution;
 pub mod export;
 pub mod metrics;
 pub mod span;
 
-pub use attribution::{Attribution, RoundAttribution, WorkerStall};
+pub use attribution::{
+    Attribution, GroupAttribution, GroupStall, RoundAttribution, WorkerStall,
+};
 pub use export::{chrome_trace, rounds_csv, stalls_csv, trace_workers};
 pub use metrics::{Histogram, MetricRegistry, HIST_BUCKETS};
 pub use span::{
-    derive_spans, RoundTrace, RoundWorkerTiming, Span, SpanBuffer, SpanKind, WallSpan,
+    derive_spans, GroupWindow, RoundTrace, RoundWorkerTiming, Span, SpanBuffer, SpanKind,
+    WallSpan,
 };

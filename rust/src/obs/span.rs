@@ -221,10 +221,69 @@ pub struct RoundTrace {
     pub quorum_missed: Vec<usize>,
 }
 
+/// One aggregation group's barrier window within a committed round, under a
+/// two-level reduction plan. Groups are **positional**: the round's committed
+/// contributors are chunked consecutively in ascending worker order, exactly
+/// the way [`crate::collective::ReductionPlan::build`] seats contributors, so
+/// the window layout matches the plan the coordinator actually built that
+/// round — including the smaller tail group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupWindow {
+    /// Positional group index (chunk number over the committed roster).
+    pub group: usize,
+    /// Worker ids seated in this group, ascending.
+    pub members: Vec<usize>,
+    /// When the group's slowest member arrived, relative to the round start:
+    /// `max ready_s` over members — the release time of the group barrier.
+    pub gate_s: f64,
+    /// The member that released the group barrier last (ties: lowest id).
+    pub gater: usize,
+}
+
 impl RoundTrace {
     /// Simulated clock at which the barrier released (reduce start).
     pub fn barrier_s(&self) -> f64 {
         self.start_s + self.compute_s
+    }
+
+    /// Chunk this round's committed contributors into the consecutive
+    /// fixed-size groups a two-level [`crate::collective::ReductionPlan`]
+    /// would seat them in, and compute each group's barrier window.
+    /// Quorum-missed workers hold no seat (their contribution was discarded
+    /// before the reduction). `group_size == 0` is the flat convention: one
+    /// window spanning the whole committed roster, whose gate is the round's
+    /// barrier gate.
+    pub fn group_windows(&self, group_size: usize) -> Vec<GroupWindow> {
+        let committed: Vec<&RoundWorkerTiming> = self
+            .workers
+            .iter()
+            .filter(|wt| !self.quorum_missed.contains(&wt.worker))
+            .collect();
+        if committed.is_empty() {
+            return Vec::new();
+        }
+        let size = if group_size == 0 { committed.len() } else { group_size };
+        committed
+            .chunks(size)
+            .enumerate()
+            .map(|(group, members)| {
+                let mut gater = members[0].worker;
+                let mut gate_s = f64::NEG_INFINITY;
+                for wt in members {
+                    let t = wt.ready_s();
+                    if t > gate_s {
+                        gate_s = t;
+                        gater = wt.worker;
+                    }
+                }
+                GroupWindow {
+                    group,
+                    members: members.iter().map(|wt| wt.worker).collect(),
+                    gate_s,
+                    gater,
+                }
+            })
+            .collect()
     }
 
     /// The norm-test statistic the batch controllers threshold:
@@ -404,6 +463,51 @@ mod tests {
             assert!(w[0].start_s <= w[1].start_s, "coordinator track not monotone");
         }
         assert!(coord[1].is_instant());
+    }
+
+    #[test]
+    fn group_windows_chunk_committed_workers_with_a_smaller_tail() {
+        let r = rt(
+            0,
+            0.0,
+            &[(0, 1.0, 0.0), (1, 3.0, 0.0), (2, 2.0, 0.0), (3, 0.5, 0.0), (4, 1.5, 0.0)],
+        );
+        let gw = r.group_windows(2);
+        assert_eq!(gw.len(), 3);
+        assert_eq!(gw[0].members, vec![0, 1]);
+        assert_eq!(gw[0].gater, 1);
+        assert_eq!(gw[0].gate_s, 3.0);
+        assert_eq!(gw[1].members, vec![2, 3]);
+        assert_eq!(gw[1].gater, 2);
+        assert_eq!(gw[2].members, vec![4], "tail group is smaller");
+        assert_eq!(gw[2].gate_s, 1.5);
+        // flat (0) is one window whose gate is the round's barrier gate
+        let flat = r.group_windows(0);
+        assert_eq!(flat.len(), 1);
+        assert_eq!(flat[0].gate_s, r.compute_s);
+        assert_eq!(flat[0].gater, 1);
+        assert_eq!(flat[0].members, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn group_window_gate_ties_break_to_the_lowest_id() {
+        let r = rt(0, 0.0, &[(3, 2.0, 0.0), (5, 2.0, 0.0)]);
+        let gw = r.group_windows(2);
+        assert_eq!(gw[0].gater, 3);
+    }
+
+    #[test]
+    fn group_windows_skip_quorum_missed_workers() {
+        let mut r = rt(0, 0.0, &[(0, 1.0, 0.0), (1, 9.0, 0.0), (2, 2.0, 0.0)]);
+        r.compute_s = 2.0;
+        r.end_s = 2.0 + r.sync_s;
+        r.merges = vec![(0, 0), (2, 0)];
+        r.quorum_missed = vec![1];
+        let gw = r.group_windows(2);
+        assert_eq!(gw.len(), 1, "the discarded uplink holds no seat");
+        assert_eq!(gw[0].members, vec![0, 2]);
+        assert_eq!(gw[0].gater, 2);
+        assert_eq!(gw[0].gate_s, 2.0);
     }
 
     #[test]

@@ -127,6 +127,37 @@ impl TimeModel {
         }
         t
     }
+
+    /// Communication time per sync under a two-level
+    /// [`crate::collective::ReductionPlan`]: the per-group rings run in
+    /// parallel (max over `groups`, each a `(participants, wire_frac)` pair),
+    /// then the `global_k` group aggregators ring-reduce the partials at
+    /// `global_frac`. The norm-test gradient all-reduce stays dense and flat
+    /// — the controller needs the exact averaged gradient before any
+    /// hierarchy pays off.
+    ///
+    /// With a single group of all `topo.m_workers` the global stage has one
+    /// participant and contributes exactly `0.0`, so the result is bit-equal
+    /// to [`Self::sync_time_compressed`] — pinned by
+    /// `two_level_sync_time_with_one_group_is_bitwise_flat`.
+    pub fn sync_time_two_level(
+        &self,
+        dim: usize,
+        norm_test: bool,
+        groups: &[(usize, f64)],
+        global_k: usize,
+        global_frac: f64,
+    ) -> f64 {
+        let mut t = groups
+            .iter()
+            .map(|&(k, frac)| self.topo.allreduce_time_among_scaled(k, dim, frac))
+            .fold(0.0f64, f64::max);
+        t += self.topo.allreduce_time_among_scaled(global_k, dim, global_frac);
+        if norm_test {
+            t += self.topo.allreduce_time(dim) + self.norm_test_host_s;
+        }
+        t
+    }
 }
 
 #[cfg(test)]
@@ -172,6 +203,38 @@ mod tests {
         // the norm-test gradient all-reduce stays dense under compression
         let with_nt = t.sync_time_compressed(1_000_000, true, 0.125);
         assert!(with_nt > t.sync_time(1_000_000, false));
+    }
+
+    /// Satellite: the two-hop time model degenerates bit-for-bit to the flat
+    /// compressed sync time when the plan has a single group — the global
+    /// stage has one participant, charges exactly 0.0 seconds, and
+    /// `t + 0.0 == t` is exact for the non-negative times involved.
+    #[test]
+    fn two_level_sync_time_with_one_group_is_bitwise_flat() {
+        let t = tm();
+        let m = t.topo.m_workers;
+        for dim in [1usize, 1000, 1_000_000] {
+            for frac in [1.0f64, 0.25, 0.031] {
+                for nt in [false, true] {
+                    assert_eq!(
+                        t.sync_time_two_level(dim, nt, &[(m, frac)], 1, 1.0).to_bits(),
+                        t.sync_time_compressed(dim, nt, frac).to_bits(),
+                        "dim={dim} frac={frac} nt={nt}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn two_level_sync_time_cuts_latency_at_scale() {
+        // 1024 ethernet workers, latency-dominated payload: 32 groups of 32
+        // in parallel + a 32-trunk global ring beat the flat 1023-step ring.
+        let t = TimeModel::paper_vision(Topology::multi_node(1024));
+        let flat = t.sync_time_compressed(256, false, 1.0);
+        let groups: Vec<(usize, f64)> = vec![(32, 1.0); 32];
+        let two = t.sync_time_two_level(256, false, &groups, 32, 1.0);
+        assert!(two < flat / 8.0, "two-level {two} not well below flat {flat}");
     }
 
     #[test]

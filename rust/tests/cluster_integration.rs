@@ -36,6 +36,7 @@ fn all_committed_scenarios_parse_and_roundtrip() {
         "adaptive_policy.json",
         "quorum8.json",
         "stale_async4.json",
+        "hier16.json",
     ] {
         let spec = load(name);
         let j = spec.to_json().to_string();
@@ -274,6 +275,44 @@ fn full_barrier_scenarios_are_pinned_bit_for_bit() {
             assert_eq!(y.merges.len(), x.workers.len(), "{name} round {}: merge roster", x.round);
         }
     }
+}
+
+/// Acceptance anchor for the hierarchical plan at the scenario level: hier16
+/// declares `topology { group_size: 4 }` over 16 workers. Stripping the
+/// section must change NOTHING about the training arithmetic (bit-equal loss
+/// and batch schedule — the reduction never branches on the plan), while the
+/// two-level run finishes in strictly fewer simulated seconds: on the
+/// latency-dominated default interconnect, four 4-worker group rings in
+/// parallel plus a 4-trunk ring undercut the flat 16-worker ring every sync.
+#[test]
+fn hier16_two_level_matches_its_flat_twin_bitwise_and_is_faster() {
+    let spec = load("hier16.json");
+    assert_eq!(
+        spec.grouping.as_ref().map(|t| t.group_size),
+        Some(4),
+        "hier16.json must stay a group_size-4 scenario"
+    );
+    let two = run_scenario(&spec).expect("hier16 run");
+    assert!(!two.diverged);
+
+    let mut flat_spec = spec.clone();
+    flat_spec.grouping = None;
+    let flat = run_scenario(&flat_spec).expect("flat twin run");
+
+    assert_eq!(two.batch_trace, flat.batch_trace, "batch schedule diverged");
+    assert_eq!(
+        two.points.last().unwrap().val_loss.to_bits(),
+        flat.points.last().unwrap().val_loss.to_bits(),
+        "two-level arithmetic must be bit-identical to flat"
+    );
+    // identity compression: dense two-hop bytes equal flat bytes exactly
+    assert_eq!(two.comm.bytes_moved, flat.comm.bytes_moved, "dense byte accounting diverged");
+    assert!(
+        two.sim_time_s < flat.sim_time_s,
+        "two-level must cut the barrier latency: {} !< {}",
+        two.sim_time_s,
+        flat.sim_time_s
+    );
 }
 
 /// Acceptance anchor for quorum sync: with a hard straggler (speed 0.25) and

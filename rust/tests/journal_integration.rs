@@ -73,6 +73,7 @@ fn cluster_scenario() -> ScenarioSpec {
         cooldown_rounds: 1,
         compression: CompressionSpec::identity(), // the policy owns the wire format
         sync_mode: SyncMode::FullBarrier,
+        grouping: None,
         workers: vec![
             WorkerSpec::default(),
             WorkerSpec { leave_round: Some(6), ..Default::default() },

@@ -1,0 +1,245 @@
+//! Cross-file exhaustiveness checks (rule S1) — properties the compiler
+//! cannot express because they span files and string literals:
+//!
+//! - every `JournalEvent` variant that `kind()` names must have a
+//!   string-dispatch arm in `from_json` **and** an explicit match arm in
+//!   `replay_events` (a `_ => {}` catch-all there would let a new event
+//!   silently not replay);
+//! - every scenario config section name read by `ScenarioSpec::from_json`
+//!   must appear in the strict-parse rejection tests of `config/mod.rs`
+//!   (present-but-malformed input must be *proven* to error, not default).
+//!
+//! The checks parse the real sources with the same sanitized views the line
+//! rules use: brace matching runs on the string-blanked view (so `format!`
+//! braces inside strings cannot desynchronize it) while wire strings and
+//! config keys are read from the comments-only-blanked view at the same byte
+//! offsets — the views are length-preserving, so offsets are interchangeable.
+//!
+//! S1 findings are not suppressible by pragma: the fix is to extend the
+//! dispatch or the tests, never to silence the check. Each check also fails
+//! loudly when it cannot locate the function it audits, so a refactor that
+//! renames `kind()` or `replay_events` cannot make the check vacuously green.
+
+use std::collections::BTreeMap;
+
+use super::scan::{has_token, FileScan};
+
+pub struct CrossHit {
+    pub file: String,
+    /// 0-based line the finding anchors to.
+    pub line: usize,
+    pub message: String,
+}
+
+pub fn check(files: &BTreeMap<String, FileScan>) -> Vec<CrossHit> {
+    let mut hits = Vec::new();
+    if let Some(events) = files.get("journal/events.rs") {
+        check_journal_events(events, &mut hits);
+    }
+    if let Some(config) = files.get("config/mod.rs") {
+        check_config_sections(config, &mut hits);
+    }
+    hits
+}
+
+/// Byte span of the `{ ... }` body of the first function whose signature
+/// matches `sig` (and, when given, whose text before the opening brace
+/// contains `before_brace`). Returns `(body_start, body_end)` exclusive of
+/// the braces, located on the string-blanked view.
+fn fn_body_span(fs: &FileScan, sig: &str, before_brace: Option<&str>) -> Option<(usize, usize)> {
+    let text = &fs.code_text;
+    let bytes = text.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = text[from..].find(sig) {
+        let p = from + p;
+        let open = match text[p..].find('{') {
+            Some(o) => p + o,
+            None => return None,
+        };
+        if let Some(marker) = before_brace {
+            if !text[p..open].contains(marker) {
+                from = p + sig.len();
+                continue;
+            }
+        }
+        let mut depth = 0i64;
+        for (i, &c) in bytes.iter().enumerate().skip(open) {
+            if c == b'{' {
+                depth += 1;
+            } else if c == b'}' {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((open + 1, i));
+                }
+            }
+        }
+        return None;
+    }
+    None
+}
+
+/// 0-based line numbers covering a byte span.
+fn span_lines(fs: &FileScan, span: (usize, usize)) -> std::ops::RangeInclusive<usize> {
+    fs.line_of(span.0)..=fs.line_of(span.1)
+}
+
+fn check_journal_events(fs: &FileScan, hits: &mut Vec<CrossHit>) {
+    // 1. Harvest (variant, wire-string) pairs from kind()'s match arms. Each
+    //    arm sits on one line: `JournalEvent::RunStarted { .. } => "run_started",`
+    let Some(kind_span) = fn_body_span(fs, "fn kind(", None) else {
+        hits.push(CrossHit {
+            file: fs.rel.clone(),
+            line: 0,
+            message: "S1 scanner could not locate fn kind() in journal/events.rs; the \
+                      exhaustiveness check would be vacuous — fix the scanner or the rename"
+                .into(),
+        });
+        return;
+    };
+    let mut pairs: Vec<(String, String, usize)> = Vec::new(); // (variant, wire, line)
+    for line_no in span_lines(fs, kind_span) {
+        let (Some(code), Some(noc)) = (fs.code_lines.get(line_no), fs.noc_lines.get(line_no))
+        else {
+            continue;
+        };
+        let Some(vpos) = code.find("JournalEvent::") else { continue };
+        let after = &code[vpos + "JournalEvent::".len()..];
+        let variant: String = after
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        let Some(q0) = noc.find('"') else { continue };
+        let Some(q1) = noc[q0 + 1..].find('"') else { continue };
+        let wire = noc[q0 + 1..q0 + 1 + q1].to_string();
+        if !variant.is_empty() && !wire.is_empty() {
+            pairs.push((variant, wire, line_no));
+        }
+    }
+    if pairs.is_empty() {
+        hits.push(CrossHit {
+            file: fs.rel.clone(),
+            line: fs.line_of(kind_span.0),
+            message: "S1 scanner found no (variant, wire-string) arms inside kind(); the \
+                      exhaustiveness check would be vacuous"
+                .into(),
+        });
+        return;
+    }
+
+    // 2. Every wire string needs a `"wire" =>` dispatch arm (from_json). The
+    //    string-then-arrow shape distinguishes parse dispatch from kind()'s
+    //    own `=> "wire"` arms.
+    for (variant, wire, line_no) in &pairs {
+        let needle = format!("\"{wire}\"");
+        let dispatched = fs.noc_lines.iter().enumerate().any(|(i, noc)| {
+            if fs.is_test.get(i).copied().unwrap_or(false) {
+                return false;
+            }
+            match noc.find(&needle) {
+                Some(p) => noc[p + needle.len()..].trim_start().starts_with("=>"),
+                None => false,
+            }
+        });
+        if !dispatched {
+            hits.push(CrossHit {
+                file: fs.rel.clone(),
+                line: *line_no,
+                message: format!(
+                    "S1: JournalEvent::{variant} has wire kind \"{wire}\" but no \
+                     `\"{wire}\" =>` parse-dispatch arm; from_json would reject a \
+                     journal this build can write"
+                ),
+            });
+        }
+    }
+
+    // 3. Every variant needs an explicit arm in replay_events — no catch-all
+    //    may absorb a new event kind.
+    let Some(replay_span) = fn_body_span(fs, "fn replay_events", None) else {
+        hits.push(CrossHit {
+            file: fs.rel.clone(),
+            line: 0,
+            message: "S1 scanner could not locate fn replay_events in journal/events.rs; \
+                      the exhaustiveness check would be vacuous"
+                .into(),
+        });
+        return;
+    };
+    let replay_body = &fs.code_text[replay_span.0..replay_span.1];
+    for (variant, _, line_no) in &pairs {
+        let qualified = format!("JournalEvent::{variant}");
+        if !has_token(replay_body, &qualified) {
+            hits.push(CrossHit {
+                file: fs.rel.clone(),
+                line: *line_no,
+                message: format!(
+                    "S1: JournalEvent::{variant} has no explicit arm in replay_events; \
+                     replay must name every event kind (even to ignore it) so new events \
+                     cannot silently not replay"
+                ),
+            });
+        }
+    }
+}
+
+fn check_config_sections(fs: &FileScan, hits: &mut Vec<CrossHit>) {
+    // 1. Collect the section/field names ScenarioSpec::from_json reads:
+    //    `j.get("name")` and the `opt_*(j, "name", ...)` helper calls.
+    let Some(span) = fn_body_span(fs, "fn from_json", Some("ScenarioSpec")) else {
+        hits.push(CrossHit {
+            file: fs.rel.clone(),
+            line: 0,
+            message: "S1 scanner could not locate ScenarioSpec::from_json in config/mod.rs; \
+                      the strict-parse coverage check would be vacuous"
+                .into(),
+        });
+        return;
+    };
+    let body = &fs.noc_text[span.0..span.1];
+    let mut keys: Vec<(String, usize)> = Vec::new(); // (key, 0-based line)
+    for pat in ["j.get(\"", "(j, \""] {
+        let mut from = 0usize;
+        while let Some(p) = body[from..].find(pat) {
+            let start = from + p + pat.len();
+            let Some(end) = body[start..].find('"') else { break };
+            let key = body[start..start + end].to_string();
+            let line = fs.line_of(span.0 + from + p);
+            if !key.is_empty() && !keys.iter().any(|(k, _)| k == &key) {
+                keys.push((key, line));
+            }
+            from = start + end;
+        }
+    }
+    if keys.is_empty() {
+        hits.push(CrossHit {
+            file: fs.rel.clone(),
+            line: fs.line_of(span.0),
+            message: "S1 scanner found no `j.get(\"...\")` reads inside \
+                      ScenarioSpec::from_json; the coverage check would be vacuous"
+                .into(),
+        });
+        return;
+    }
+
+    // 2. Every key must be exercised by the strict-parse tests: some test
+    //    line in config/mod.rs must mention it as a quoted string.
+    for (key, line_no) in &keys {
+        let needle = format!("\"{key}\"");
+        let covered = fs
+            .noc_lines
+            .iter()
+            .enumerate()
+            .any(|(i, noc)| fs.is_test.get(i).copied().unwrap_or(false) && noc.contains(&needle));
+        if !covered {
+            hits.push(CrossHit {
+                file: fs.rel.clone(),
+                line: *line_no,
+                message: format!(
+                    "S1: scenario section '{key}' is read by ScenarioSpec::from_json but \
+                     never appears in the config strict-parse tests; present-but-malformed \
+                     input must be proven to error, not default"
+                ),
+            });
+        }
+    }
+}

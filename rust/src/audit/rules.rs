@@ -1,0 +1,112 @@
+//! Line-level determinism rules D1–D5.
+//!
+//! Each rule matches token patterns against the fully sanitized view of one
+//! line ([`super::scan::Sanitized::code`]), so comments and string literals
+//! never trigger findings. Test regions are filtered out by the caller.
+//! Rule IDs are stable: CI output, pragmas, and README documentation all
+//! refer to them by name.
+
+use super::scan::has_token;
+
+/// A single rule match on one line (file/line attached by the caller).
+pub struct RuleHit {
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Modules whose *job* is reading the wall clock (D2): the `obs` wall-span
+/// layer and the stderr logger timestamps.
+const D2_ALLOWED_FILES: &[&str] = &["obs/span.rs", "util/log.rs"];
+
+/// Modules that own float accumulation order (D4).
+const D4_ALLOWED_PREFIXES: &[&str] = &["tensor/", "collective/"];
+
+/// Modules whose message-handling paths must error instead of panicking (D5).
+const D5_CHECKED_PREFIXES: &[&str] = &["journal/", "cluster/"];
+
+/// Ambient-entropy tokens (D3). `rand::` is matched as a path prefix.
+const D3_TOKENS: &[&str] = &[
+    "thread_rng",
+    "from_entropy",
+    "OsRng",
+    "StdRng",
+    "SmallRng",
+    "getrandom",
+    "RandomState",
+];
+
+/// Run every line rule against one sanitized, non-test line.
+pub fn line_rules(rel: &str, code: &str) -> Vec<RuleHit> {
+    let mut hits = Vec::new();
+
+    // D1 — keyed std collections iterate in hash order, which varies run to
+    // run (RandomState) and across std versions. Every map/set whose contents
+    // are ever iterated, serialized, or reduced must be a BTreeMap/BTreeSet
+    // or a sorted Vec. Membership-only sets may carry audit:allow(D1).
+    if has_token(code, "HashMap") || has_token(code, "HashSet") {
+        hits.push(RuleHit {
+            rule: "D1",
+            message: "std Hash* collection: iteration order is nondeterministic; use \
+                      BTreeMap/BTreeSet or a sorted Vec (membership-only sets may carry \
+                      audit:allow(D1))"
+                .into(),
+        });
+    }
+
+    // D2 — wall-clock reads outside the obs wall-span layer leak real time
+    // into code that must run on the simulated clock only.
+    if !D2_ALLOWED_FILES.contains(&rel)
+        && (code.contains("Instant::now") || has_token(code, "SystemTime"))
+    {
+        hits.push(RuleHit {
+            rule: "D2",
+            message: "wall-clock read outside obs/span + util/log: route through \
+                      obs::WallTimer (wall time feeds stats only, never run state)"
+                .into(),
+        });
+    }
+
+    // D3 — ambient entropy makes runs unreplayable; every random draw must
+    // come from a seeded util::rng::Pcg64 stream.
+    if D3_TOKENS.iter().any(|t| has_token(code, t)) || code.contains("rand::") {
+        hits.push(RuleHit {
+            rule: "D3",
+            message: "ambient entropy source: all randomness flows through seeded \
+                      util::rng::Pcg64 streams"
+                .into(),
+        });
+    }
+
+    // D4 — f32 accumulation order decides the low bits; it must live in one
+    // place (tensor/collective) so both engines share it. f64 statistics
+    // (metrics, time model) are out of scope: they never feed model state.
+    let d4_exempt = D4_ALLOWED_PREFIXES.iter().any(|p| rel.starts_with(p));
+    if !d4_exempt
+        && (code.contains(".sum::<f32>")
+            || (code.contains(".fold(") && code.contains("f32"))
+            || (code.contains(".sum()") && code.contains(": f32")))
+    {
+        hits.push(RuleHit {
+            rule: "D4",
+            message: "f32 accumulation outside tensor/collective: accumulation order \
+                      must live in one place for bit-for-bit engine equality"
+                .into(),
+        });
+    }
+
+    // D5 — journal/cluster message paths consume bytes from disk and channel
+    // payloads from peers; torn input must surface as an error, not a panic.
+    if D5_CHECKED_PREFIXES.iter().any(|p| rel.starts_with(p))
+        && (code.contains(".unwrap()") || code.contains(".expect("))
+    {
+        hits.push(RuleHit {
+            rule: "D5",
+            message: "unwrap/expect in a journal/cluster path: torn or malformed input \
+                      must error, not panic (audit:allow(D5) only with an invariant \
+                      argument)"
+                .into(),
+        });
+    }
+
+    hits
+}

@@ -1,0 +1,376 @@
+//! Lexical source scanning: length-preserving sanitization, `#[cfg(test)]`
+//! region tracking, and `audit:allow` pragma parsing.
+//!
+//! The sanitizer produces two byte-length-preserving views of a file so that
+//! byte offsets are interchangeable between them and the raw text:
+//!
+//! - [`Sanitized::code`] — comments **and** string/char-literal contents
+//!   blanked to spaces. Rule patterns match against this view, so a comment
+//!   mentioning `HashMap` or a fixture string embedding a violation never
+//!   trips a rule (and the auditor can audit its own source).
+//! - [`Sanitized::no_comments`] — only comments blanked; string literals are
+//!   kept. The cross-file exhaustiveness checks ([`super::exhaustive`]) read
+//!   wire strings and config keys from this view.
+//!
+//! The scanner is deliberately token-level (no `syn`, matching the vendored
+//! `anyhow` zero-dependency philosophy). Known approximations, documented so
+//! nobody mistakes this for a type checker:
+//!
+//! - test regions are `#[cfg(test)]` / `#[test]` attributes followed by a
+//!   braced item (the repo's sole convention); `#[cfg(all(test, ...))]` is
+//!   not recognized;
+//! - aliased imports (`use std::time::Instant as T; T::now()`) evade the
+//!   token patterns — clippy's `disallowed_types`/`disallowed_methods`
+//!   (see the repo-root `clippy.toml`) close that hole at the type level.
+
+/// Two aligned views of one source file (see module docs).
+pub struct Sanitized {
+    pub code: String,
+    pub no_comments: String,
+}
+
+/// Blank comments and literal contents, preserving byte length exactly.
+pub fn sanitize(src: &str) -> Sanitized {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut code = b.to_vec();
+    let mut noc = b.to_vec();
+    // Blank position i in `code` only, or in both views, keeping newlines so
+    // line structure survives in both.
+    let blank_code = |code: &mut [u8], i: usize| {
+        if code[i] != b'\n' {
+            code[i] = b' ';
+        }
+    };
+    let blank_both = |code: &mut [u8], noc: &mut [u8], i: usize| {
+        if code[i] != b'\n' {
+            code[i] = b' ';
+        }
+        if noc[i] != b'\n' {
+            noc[i] = b' ';
+        }
+    };
+    let is_ident = |c: u8| c.is_ascii_alphanumeric() || c == b'_';
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        // ---- comments ----------------------------------------------------
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            while i < n && b[i] != b'\n' {
+                blank_both(&mut code, &mut noc, i);
+                i += 1;
+            }
+            continue;
+        }
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1u32; // Rust block comments nest
+            blank_both(&mut code, &mut noc, i);
+            blank_both(&mut code, &mut noc, i + 1);
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    blank_both(&mut code, &mut noc, i);
+                    blank_both(&mut code, &mut noc, i + 1);
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    blank_both(&mut code, &mut noc, i);
+                    blank_both(&mut code, &mut noc, i + 1);
+                    i += 2;
+                } else {
+                    blank_both(&mut code, &mut noc, i);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // ---- raw strings: r"..", r#".."#, br#".."# -----------------------
+        if c == b'r' && i + 1 < n && (b[i + 1] == b'"' || b[i + 1] == b'#') {
+            let prev_ok = i == 0
+                || !is_ident(b[i - 1])
+                || (b[i - 1] == b'b' && (i < 2 || !is_ident(b[i - 2])));
+            let mut hashes = 0usize;
+            while i + 1 + hashes < n && b[i + 1 + hashes] == b'#' {
+                hashes += 1;
+            }
+            if prev_ok && i + 1 + hashes < n && b[i + 1 + hashes] == b'"' {
+                // blank 'r' + hashes + opening quote in the code view
+                let body = i + 2 + hashes;
+                for k in i..body {
+                    blank_code(&mut code, k);
+                }
+                i = body;
+                'raw: while i < n {
+                    if b[i] == b'"' {
+                        let mut close = 0usize;
+                        while i + 1 + close < n && close < hashes && b[i + 1 + close] == b'#' {
+                            close += 1;
+                        }
+                        if close == hashes {
+                            for k in i..=i + hashes {
+                                blank_code(&mut code, k);
+                            }
+                            i += hashes + 1;
+                            break 'raw;
+                        }
+                    }
+                    blank_code(&mut code, i);
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // ---- ordinary strings (and b"...") -------------------------------
+        if c == b'"' {
+            blank_code(&mut code, i);
+            i += 1;
+            while i < n {
+                if b[i] == b'\\' && i + 1 < n {
+                    blank_code(&mut code, i);
+                    blank_code(&mut code, i + 1);
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'"' {
+                    blank_code(&mut code, i);
+                    i += 1;
+                    break;
+                }
+                blank_code(&mut code, i);
+                i += 1;
+            }
+            continue;
+        }
+        // ---- char literals vs lifetimes ----------------------------------
+        if c == b'\'' {
+            if i + 1 < n && b[i + 1] == b'\\' {
+                // escaped char literal: '\n', '\'', '\x41', '\u{1F600}'
+                blank_code(&mut code, i);
+                blank_code(&mut code, i + 1);
+                let mut j = i + 2;
+                while j < n && b[j] != b'\'' {
+                    blank_code(&mut code, j);
+                    j += 1;
+                }
+                if j < n {
+                    blank_code(&mut code, j);
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == b'\'' && b[i + 1] != b'\'' {
+                // plain char literal 'x'
+                blank_code(&mut code, i);
+                blank_code(&mut code, i + 1);
+                blank_code(&mut code, i + 2);
+                i += 3;
+                continue;
+            }
+            // lifetime — plain code, keep it
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+    // The views only ever replace bytes with ASCII spaces, so they stay valid
+    // UTF-8 unless a multi-byte char was partially kept — which cannot happen
+    // because blanking always covers whole constructs; lossy conversion is a
+    // belt-and-braces fallback, not an expected path.
+    Sanitized {
+        code: String::from_utf8_lossy(&code).into_owned(),
+        no_comments: String::from_utf8_lossy(&noc).into_owned(),
+    }
+}
+
+/// One `audit:allow(<rules>): <justification>` pragma comment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pragma {
+    /// 0-based line the pragma text sits on.
+    pub line: usize,
+    /// 0-based line the pragma suppresses: its own line when it shares the
+    /// line with code, the following line when it stands alone.
+    pub target: usize,
+    pub rules: Vec<String>,
+    pub justification: String,
+    /// Parse problems (missing justification, unknown rule id). Non-empty
+    /// problems make the pragma inert and produce a `P0` finding.
+    pub problems: Vec<String>,
+}
+
+/// Rules a pragma may suppress. `S1` is structural (fix the dispatch, don't
+/// silence it) and `P0` cannot vouch for itself, so neither is listed.
+pub const ALLOWED_PRAGMA_RULES: &[&str] = &["D1", "D2", "D3", "D4", "D5"];
+
+/// A scanned file: aligned line views plus per-line test flags.
+pub struct FileScan {
+    pub rel: String,
+    pub raw_lines: Vec<String>,
+    pub code_lines: Vec<String>,
+    pub noc_lines: Vec<String>,
+    /// Full sanitized texts, for the cross-file span searches.
+    pub code_text: String,
+    pub noc_text: String,
+    pub is_test: Vec<bool>,
+}
+
+impl FileScan {
+    pub fn new(rel: &str, src: &str) -> FileScan {
+        let s = sanitize(src);
+        let code_lines: Vec<String> = s.code.lines().map(str::to_string).collect();
+        let noc_lines: Vec<String> = s.no_comments.lines().map(str::to_string).collect();
+        let raw_lines: Vec<String> = src.lines().map(str::to_string).collect();
+        let is_test = mark_test_lines(&code_lines);
+        FileScan {
+            rel: rel.to_string(),
+            raw_lines,
+            code_lines,
+            noc_lines,
+            code_text: s.code,
+            noc_text: s.no_comments,
+            is_test,
+        }
+    }
+
+    /// 0-based line number containing byte `offset` of the sanitized texts.
+    pub fn line_of(&self, offset: usize) -> usize {
+        self.code_text.as_bytes()[..offset.min(self.code_text.len())]
+            .iter()
+            .filter(|&&c| c == b'\n')
+            .count()
+    }
+
+    /// Parse every pragma in the file (from raw lines, validated against the
+    /// sanitized views so pragmas quoted inside string literals are ignored).
+    pub fn pragmas(&self) -> Vec<Pragma> {
+        let mut out = Vec::new();
+        for (i, raw) in self.raw_lines.iter().enumerate() {
+            let Some(pos) = raw.find("audit:allow(") else { continue };
+            // Only a pragma when it lives in a comment: comments are blanked
+            // in BOTH views, strings only in `code`.
+            let in_comment = self
+                .noc_lines
+                .get(i)
+                .map(|l| l.as_bytes().get(pos).map_or(true, |&c| c == b' '))
+                .unwrap_or(false);
+            if !in_comment {
+                continue;
+            }
+            // The pragma must BE the comment, not appear mid-prose: the text
+            // before it may only be the comment opener. This keeps doc
+            // comments free to mention the syntax without parsing as pragmas.
+            let opener = raw[..pos].trim_end();
+            if !(opener.ends_with("//") || opener.ends_with("//!")) {
+                continue;
+            }
+            let mut problems = Vec::new();
+            let after = &raw[pos + "audit:allow(".len()..];
+            let Some(close) = after.find(')') else {
+                out.push(Pragma {
+                    line: i,
+                    target: i,
+                    rules: Vec::new(),
+                    justification: String::new(),
+                    problems: vec!["unterminated rule list".into()],
+                });
+                continue;
+            };
+            let rules: Vec<String> =
+                after[..close].split(',').map(|r| r.trim().to_string()).collect();
+            for r in &rules {
+                if !ALLOWED_PRAGMA_RULES.contains(&r.as_str()) {
+                    problems.push(format!(
+                        "unknown rule '{r}' (pragmas cover {})",
+                        ALLOWED_PRAGMA_RULES.join(", ")
+                    ));
+                }
+            }
+            let rest = after[close + 1..].trim_start();
+            let justification = match rest.strip_prefix(':') {
+                Some(j) if !j.trim().is_empty() => j.trim().to_string(),
+                _ => {
+                    problems.push(
+                        "missing justification (write `audit:allow(<rule>): <why>`)".into(),
+                    );
+                    String::new()
+                }
+            };
+            // Own-line pragma (no code before the comment) covers the next line.
+            let own_line =
+                self.code_lines.get(i).map(|l| l.trim().is_empty()).unwrap_or(true);
+            let target = if own_line { i + 1 } else { i };
+            out.push(Pragma { line: i, target, rules, justification, problems });
+        }
+        out
+    }
+}
+
+/// Mark lines inside `#[cfg(test)]` / `#[test]` item bodies. Brace depth is
+/// tracked over the fully sanitized view, so braces inside strings, chars,
+/// and comments never desynchronize the tracker.
+fn mark_test_lines(code_lines: &[String]) -> Vec<bool> {
+    let mut depth: i64 = 0;
+    let mut test_stack: Vec<i64> = Vec::new();
+    let mut pending = false;
+    let mut out = Vec::with_capacity(code_lines.len());
+    for line in code_lines {
+        let mut is_test = !test_stack.is_empty();
+        if line.contains("#[cfg(test)]") || line.contains("#[test]") {
+            pending = true;
+        }
+        for ch in line.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        test_stack.push(depth);
+                        pending = false;
+                    }
+                }
+                '}' => {
+                    if test_stack.last() == Some(&depth) {
+                        test_stack.pop();
+                    }
+                    depth -= 1;
+                }
+                // A braceless item (e.g. `#[cfg(test)] use x;`) consumes the
+                // pending attribute without opening a region.
+                ';' => {
+                    if pending && test_stack.is_empty() {
+                        pending = false;
+                    }
+                }
+                _ => {}
+            }
+            if !test_stack.is_empty() {
+                is_test = true;
+            }
+        }
+        // Attribute and header lines between `#[cfg(test)]` and its `{`.
+        if pending {
+            is_test = true;
+        }
+        out.push(is_test);
+    }
+    out
+}
+
+/// True when `tok` occurs in `code` delimited by non-identifier characters
+/// (so `HashMap` does not match `MyHashMapLike`).
+pub fn has_token(code: &str, tok: &str) -> bool {
+    let bytes = code.as_bytes();
+    let is_ident = |c: u8| c.is_ascii_alphanumeric() || c == b'_';
+    let mut start = 0usize;
+    while let Some(p) = code[start..].find(tok) {
+        let p = start + p;
+        let before_ok = p == 0 || !is_ident(bytes[p - 1]);
+        let end = p + tok.len();
+        let after_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = p + 1;
+    }
+    false
+}

@@ -102,17 +102,18 @@ impl Bencher {
     }
 
     /// Time `f`, which performs ONE logical iteration per call.
+    #[allow(clippy::disallowed_methods)] // measuring wall time IS the bench harness's job
     pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
         // Warmup
-        let start = Instant::now();
+        let start = Instant::now(); // audit:allow(D2): bench harness measures wall time by design
         while start.elapsed() < self.warmup {
             f();
         }
         // Timed samples
         let mut samples_ns: Vec<f64> = Vec::new();
-        let start = Instant::now();
+        let start = Instant::now(); // audit:allow(D2): bench harness measures wall time by design
         while start.elapsed() < self.budget || (samples_ns.len() as u64) < self.min_iters {
-            let t = Instant::now();
+            let t = Instant::now(); // audit:allow(D2): per-iteration wall sample, bench only
             f();
             samples_ns.push(t.elapsed().as_nanos() as f64);
             if samples_ns.len() > 5_000_000 {

@@ -9,7 +9,7 @@
 
 use super::messages::{FromWorker, RoundResult, ToWorker};
 use crate::comm::{CompressionSpec, ErrorFeedback};
-use crate::obs::{SpanKind, WallSpan};
+use crate::obs::{SpanKind, WallSpan, WallTimer};
 use crate::data::Dataset;
 use crate::model::GradModel;
 use crate::optim::OptimParams;
@@ -87,7 +87,7 @@ pub(crate) fn spawn_worker(
                         // Wall-clock spans are measured here on the worker's
                         // own thread and shipped with the uplink — the hot
                         // loop never touches a shared buffer or lock.
-                        let t0 = std::time::Instant::now();
+                        let t0 = WallTimer::start();
                         let mut loss = 0.0;
                         let mut per_sample_var = None;
                         for &lr in &lrs {
@@ -97,10 +97,10 @@ pub(crate) fn spawn_worker(
                             loss = stats.loss;
                             per_sample_var = stats.per_sample_var;
                         }
-                        let compute_wall = t0.elapsed().as_secs_f64();
-                        let t1 = std::time::Instant::now();
+                        let compute_wall = t0.elapsed_s();
+                        let t1 = WallTimer::start();
                         let payload = compressor.encode(&params, &reference, ef.as_mut());
-                        let encode_wall = t1.elapsed().as_secs_f64();
+                        let encode_wall = t1.elapsed_s();
                         let result = RoundResult {
                             worker: id,
                             round,
@@ -154,6 +154,7 @@ pub(crate) fn spawn_worker(
                 }
             }
         })
+        // audit:allow(D5): OS spawn failure at startup, not a message-path input
         .expect("spawning worker thread");
     (cmd_tx, handle)
 }

@@ -243,7 +243,7 @@ impl Compressor for QuantizeInt8 {
         let mut residual = vec![0.0f32; d];
         for (c, block) in t.chunks(self.chunk).enumerate() {
             let lo = c * self.chunk;
-            let amax = block.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let amax = crate::tensor::max_abs(block);
             let scale = if amax > 0.0 { amax / 127.0 } else { 0.0 };
             scales.push(scale);
             for (i, &v) in block.iter().enumerate() {

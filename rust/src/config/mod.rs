@@ -1524,6 +1524,30 @@ mod tests {
     }
 
     #[test]
+    fn scenario_scalar_sections_malformed_values_error_instead_of_defaulting() {
+        // Every top-level section ScenarioSpec::from_json reads must be
+        // proven to hard-error when present-but-malformed (the audit S1
+        // check cross-references these quoted section names).
+        let base = scenario_fixture().to_json().to_string();
+        let corruptions = [
+            // (good, bad, must-mention)
+            (r#""run":{"#, r#""run":3,"run_shadow":{"#, "run"),
+            (r#""workers":["#, r#""workers":0,"workers_shadow":["#, "missing workers array"),
+            (r#""name":"fixture""#, r#""name":7"#, "name must be a string"),
+            (r#""warmup_rounds":2"#, r#""warmup_rounds":"three""#, "non-negative integer"),
+            (r#""cooldown_rounds":1"#, r#""cooldown_rounds":-1"#, "non-negative integer"),
+        ];
+        for (good, bad, needle) in corruptions {
+            assert!(base.contains(good), "fixture lost the field behind {good:?}");
+            let text = base.replacen(good, bad, 1);
+            let err = ScenarioSpec::from_json(&Json::parse(&text).unwrap());
+            assert!(err.is_err(), "malformed {bad:?} was silently accepted");
+            let msg = err.unwrap_err();
+            assert!(msg.contains(needle), "error for {bad:?} must mention {needle:?}: {msg}");
+        }
+    }
+
+    #[test]
     fn scenario_rejects_bounded_staleness_plus_incompatible_knobs() {
         // static lossy compression: stale deltas decode against a moved-on
         // consensus, so validation refuses the combination outright

@@ -149,7 +149,7 @@ pub fn run_local_sgd(
     }
     let micro = models.iter().map(|mm| mm.micro_batch()).max().unwrap().max(1) as u64;
 
-    let wall_start = std::time::Instant::now();
+    let wall_start = crate::obs::WallTimer::start();
     let mut rng = Pcg64::new(opts.seed, 0);
     // Same x_0 on every worker (Algorithm A.2 input).
     let x0 = models[0].init_params(&mut rng);
@@ -662,7 +662,7 @@ pub fn run_local_sgd(
     rec.total_rounds = round;
     rec.total_samples = samples;
     rec.sim_time_s = sim_time;
-    rec.wall_time_s = wall_start.elapsed().as_secs_f64();
+    rec.wall_time_s = wall_start.elapsed_s();
     rec.avg_local_batch = if total_local_steps > 0.0 {
         weighted_b / total_local_steps
     } else {

@@ -693,7 +693,15 @@ pub fn replay_events(events: &[JournalEvent]) -> Result<RunRecord, String> {
                 rec.diverged = *diverged;
                 rec.interrupted = *interrupted;
             }
-            _ => {}
+            // Roster and fault events shape the run as it executes but carry
+            // no run-record state of their own — the per-round metrics they
+            // influence are journaled in SyncCommitted. Named explicitly (not
+            // a catch-all) so the audit S1 check can prove a future event
+            // kind cannot silently not replay.
+            JournalEvent::WorkerJoined { .. }
+            | JournalEvent::WorkerLeft { .. }
+            | JournalEvent::FaultInjected { .. }
+            | JournalEvent::CompressionSwitched { .. } => {}
         }
     }
     if !started {

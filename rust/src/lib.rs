@@ -72,10 +72,20 @@
 //! so `adaloco trace <journal>` re-derives the identical artifacts from a
 //! crashed or resumed run.
 //!
+//! ## Determinism auditing
+//!
+//! Every bit-for-bit guarantee above is mechanically enforced by the [`audit`]
+//! module — a zero-dependency static-analysis pass (`adaloco audit --deny`)
+//! whose numbered rules (D1–D5, S1) forbid nondeterministic collections,
+//! wall-clock reads, ambient entropy, scattered f32 accumulation, and
+//! panicking message paths, and cross-check journal/config exhaustiveness.
+//! See the README "Static analysis & invariants" section.
+//!
 //! See DESIGN.md for the system inventory, README.md for the cluster scenario
 //! format, and EXPERIMENTS.md for the paper-vs-measured results of every table
 //! and figure.
 
+pub mod audit;
 pub mod batch;
 pub mod bench;
 pub mod cluster;

@@ -17,6 +17,8 @@
 //!            Prometheus snapshot, CSVs, straggler attribution) from its
 //!            journal alone.
 //!   bench    Run the built-in micro-benchmark suite, write BENCH_<n>.json.
+//!   audit    Run the determinism auditor (static-analysis rules D1–D5, S1)
+//!            over rust/src; --deny exits nonzero on unsuppressed findings.
 //!   inspect  Show artifact manifests and runtime info.
 //!
 //! Common flags: --scale <f64> (sample-budget multiplier), --out <dir>,
@@ -55,6 +57,7 @@ USAGE:
   adaloco replay  <run.journal> [--out results]
   adaloco trace   <run.journal | rundir> [--out results]
   adaloco bench   [--out results]
+  adaloco audit   [--root rust/src] [--deny] [--json]
   adaloco inspect [--model name]
 
 LOGGING:
@@ -111,6 +114,7 @@ fn main() {
         "replay" => cmd_replay(&args),
         "trace" => cmd_trace(&args),
         "bench" => cmd_bench(&args),
+        "audit" => cmd_audit(&args),
         "inspect" => cmd_inspect(&args),
         "" | "help" | "--help" => {
             println!("{USAGE}");
@@ -625,6 +629,41 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let path = adaloco::bench::next_bench_path(&out);
     std::fs::write(&path, adaloco::bench::suite_json(&results, fast).to_string_pretty())?;
     println!("bench results written to {}", path.display());
+    Ok(())
+}
+
+/// Run the determinism auditor over the Rust source tree. The default root
+/// auto-detects whether the CLI runs from the repo root (`rust/src`) or from
+/// inside `rust/` (`src`); `--root` overrides. `--deny` turns findings into a
+/// nonzero exit (the CI gate); `--json` emits the machine-readable report.
+fn cmd_audit(args: &Args) -> anyhow::Result<()> {
+    let root = match args.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => {
+            let repo_root = PathBuf::from("rust/src");
+            if repo_root.is_dir() {
+                repo_root
+            } else {
+                PathBuf::from("src")
+            }
+        }
+    };
+    if !root.is_dir() {
+        anyhow::bail!("audit root {} is not a directory (pass --root)", root.display());
+    }
+    let report = adaloco::audit::audit_tree(&root).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.has("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        print!("{}", report.render());
+    }
+    if args.has("deny") && !report.clean() {
+        anyhow::bail!(
+            "audit --deny: {} unsuppressed finding(s) (rules documented in README \
+             'Static analysis & invariants')",
+            report.findings.len()
+        );
+    }
     Ok(())
 }
 

@@ -27,7 +27,7 @@ impl BigramLm {
     fn softmax_row(&mut self, params: &[f32], cur: usize) -> f64 {
         let v = self.vocab;
         let row = &params[cur * v..(cur + 1) * v];
-        let maxv = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let maxv = crate::tensor::max_val(row);
         let mut z = 0f64;
         for (p, &x) in self.probs.iter_mut().zip(row) {
             let e = ((x - maxv) as f64).exp();

@@ -108,7 +108,7 @@ pub(crate) fn softmax_xent_grad(
     dlogits: &mut [f32],
 ) -> f64 {
     debug_assert_eq!(logits.len(), classes);
-    let maxv = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let maxv = crate::tensor::max_val(logits);
     let mut z = 0f64;
     for &v in logits {
         z += ((v - maxv) as f64).exp();

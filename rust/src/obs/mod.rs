@@ -42,5 +42,5 @@ pub use export::{chrome_trace, rounds_csv, stalls_csv, trace_workers};
 pub use metrics::{Histogram, MetricRegistry, HIST_BUCKETS};
 pub use span::{
     derive_spans, GroupWindow, RoundTrace, RoundWorkerTiming, Span, SpanBuffer, SpanKind,
-    WallSpan,
+    WallSpan, WallTimer,
 };

@@ -118,6 +118,32 @@ pub struct WallSpan {
     pub dur_s: f64,
 }
 
+/// The repo's single authorized wall-clock read point (audit rule D2).
+///
+/// Everything that wants real elapsed time — worker compute phases, engine
+/// wall totals — starts a `WallTimer` and reads `elapsed_s()`; no other
+/// module touches `std::time` directly, so the auditor can mechanically
+/// prove wall time only ever feeds measured statistics (`WallSpan`,
+/// `wall_compute_s`) and never run state or the simulated clock.
+#[derive(Debug, Clone, Copy)]
+pub struct WallTimer {
+    start: std::time::Instant,
+}
+
+impl WallTimer {
+    #[allow(clippy::disallowed_methods)] // the one sanctioned Instant::now
+    pub fn start() -> WallTimer {
+        WallTimer { start: std::time::Instant::now() }
+    }
+
+    /// Wall seconds since `start()`. Nondeterministic by nature — callers
+    /// must only feed this into measured-stat fields, never into anything
+    /// replayed or compared bit-for-bit.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
 /// An append-only span buffer. Each worker (and the coordinator) owns one;
 /// buffers merge at sync commit so recording never contends on a shared
 /// structure.

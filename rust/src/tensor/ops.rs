@@ -199,6 +199,14 @@ pub fn max_abs(x: &[f32]) -> f32 {
     x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
 }
 
+/// max_i x_i (NEG_INFINITY on empty input). The softmax shift and every
+/// other f32 reduction live here so accumulation/comparison order has one
+/// owner (audit rule D4); `f32::max` is order-independent, but centralizing
+/// it keeps the rule mechanical.
+pub fn max_val(x: &[f32]) -> f32 {
+    x.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v))
+}
+
 /// Any NaN/Inf check (guards the engine against diverged runs).
 pub fn all_finite(x: &[f32]) -> bool {
     x.iter().all(|v| v.is_finite())

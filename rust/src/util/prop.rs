@@ -66,6 +66,7 @@ pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
 /// Max elementwise |a - b| over two slices (must be equal length).
 pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len());
+    // audit:allow(D4): elementwise max is order-independent; test-harness diff metric
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
 }
 

@@ -133,10 +133,12 @@ impl Pcg64 {
     /// appended in draw order. This is the crate's sole `HashSet` use outside
     /// tests, so sampling — and therefore every checkpointed RNG stream — is
     /// byte-stable across runs and across checkpoint/restore.
+    #[allow(clippy::disallowed_types)] // membership-only HashSet, see doc comment
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
         assert!(k <= n, "sample_indices: k={k} > n={n}");
         // For small k relative to n, use a set-based approach; else shuffle prefix.
         if k * 4 < n {
+            // audit:allow(D1): membership-only rejection filter, never iterated (PR-4 audit)
             let mut seen = std::collections::HashSet::with_capacity(k * 2);
             let mut out = Vec::with_capacity(k);
             while out.len() < k {
@@ -259,6 +261,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(clippy::disallowed_types)] // uniqueness check via a throwaway set
     fn sample_indices_unique() {
         let mut r = Pcg64::new(5, 0);
         for (n, k) in [(100, 5), (10, 10), (50, 40)] {
